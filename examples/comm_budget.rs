@@ -1,0 +1,65 @@
+//! Communication budget to reach a target accuracy — a miniature of the
+//! paper's Table IV. Trains logreg under an iid base environment (the
+//! setting that *most favours* FedAvg, §VI-D) and reports the bits each
+//! method uploads/downloads before first hitting the target.
+//!
+//!     cargo run --release --example comm_budget
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::sim::run_logreg;
+use fedstc::util::benchkit::Table;
+use fedstc::util::bits_to_mb;
+
+fn main() -> anyhow::Result<()> {
+    let target = 0.70;
+    let methods: Vec<(&str, Method)> = vec![
+        ("baseline", Method::Baseline),
+        ("signSGD", Method::SignSgd { delta: 0.002 }),
+        ("FedAvg n=25", Method::FedAvg { n: 25 }),
+        ("FedAvg n=100", Method::FedAvg { n: 100 }),
+        ("STC p=1/25", Method::Stc { p_up: 1.0 / 25.0, p_down: 1.0 / 25.0 }),
+        ("STC p=1/100", Method::Stc { p_up: 0.01, p_down: 0.01 }),
+        ("STC p=1/400", Method::Stc { p_up: 0.0025, p_down: 0.0025 }),
+    ];
+
+    println!("== communication to reach {:.0}% accuracy (logreg, iid) ==\n", target * 100.0);
+    let mut table = Table::new(&["method", "iters", "upload", "download"]);
+    for (name, method) in methods {
+        let cfg = FedConfig {
+            model: "logreg".into(),
+            num_clients: 50,
+            participation: 0.2,
+            classes_per_client: 10,
+            batch_size: 20,
+            method,
+            lr: 0.04,
+            momentum: 0.0,
+            iterations: 1200,
+            eval_every: 20,
+            seed: 5,
+            ..Default::default()
+        };
+        let log = run_logreg(cfg)?;
+        match log.first_reaching(target) {
+            Some((iters, up, down)) => table.row(&[
+                name.to_string(),
+                iters.to_string(),
+                format!("{:.4} MB", bits_to_mb(up)),
+                format!("{:.4} MB", bits_to_mb(down)),
+            ]),
+            None => table.row(&[
+                name.to_string(),
+                "n.a.".into(),
+                format!("(max acc {:.3})", log.max_accuracy()),
+                "n.a.".into(),
+            ]),
+        }
+    }
+    table.print();
+    println!(
+        "\nExpected shape (paper Tab. IV): STC achieves the target within \
+         the smallest upload budget even on iid data; FedAvg needs orders \
+         of magnitude more bits at equal iteration budgets."
+    );
+    Ok(())
+}

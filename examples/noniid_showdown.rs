@@ -1,0 +1,57 @@
+//! The paper's headline claim, live: STC distinctively outperforms
+//! Federated Averaging and signSGD when client data is non-iid
+//! (Figs. 2 & 6). Sweeps classes-per-client ∈ {1, 2, 10} for all three
+//! methods (plus top-k and the uncompressed baseline) on the logistic
+//! regression task and prints the Fig. 6-style accuracy matrix.
+//!
+//!     cargo run --release --example noniid_showdown
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::sim::run_logreg;
+use fedstc::util::benchkit::Table;
+
+fn main() -> anyhow::Result<()> {
+    let methods: Vec<(&str, Method)> = vec![
+        ("baseline", Method::Baseline),
+        ("signSGD", Method::SignSgd { delta: 0.002 }),
+        ("top-k p=1/50", Method::TopK { p: 0.02 }),
+        ("FedAvg n=50", Method::FedAvg { n: 50 }),
+        ("STC p=1/50", Method::Stc { p_up: 0.02, p_down: 0.02 }),
+    ];
+    let classes = [1usize, 2, 10];
+
+    println!("== non-iid showdown: logreg, 10 clients, full participation ==");
+    println!("   (max accuracy after 500 iterations; paper Figs. 2 & 6)\n");
+
+    let mut table = Table::new(&["method", "non-iid(1)", "non-iid(2)", "iid(10)"]);
+    for (name, method) in &methods {
+        let mut row = vec![name.to_string()];
+        for &c in &classes {
+            let cfg = FedConfig {
+                model: "logreg".into(),
+                num_clients: 10,
+                participation: 1.0,
+                classes_per_client: c,
+                batch_size: 20,
+                method: method.clone(),
+                lr: 0.04,
+                momentum: 0.0,
+                iterations: 500,
+                eval_every: 25,
+                seed: 3,
+                ..Default::default()
+            };
+            let log = run_logreg(cfg)?;
+            row.push(format!("{:.3}", log.max_accuracy()));
+        }
+        table.row(&row);
+    }
+    table.print();
+
+    println!(
+        "\nExpected shape (paper): all methods fine on iid; FedAvg and \
+         signSGD degrade sharply as classes/client drops; STC and top-k \
+         stay robust, with STC also compressing the downstream."
+    );
+    Ok(())
+}

@@ -1,0 +1,60 @@
+//! Quickstart: federated training of the MNIST-style logistic regression
+//! with Sparse Ternary Compression in the paper's Table III base
+//! environment (scaled), next to a FedAvg run with an equivalent
+//! compression rate — the 60-second tour of the crate.
+//!
+//!     cargo run --release --example quickstart
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::sim::run_logreg;
+use fedstc::util::bits_to_mb;
+
+fn main() -> anyhow::Result<()> {
+    // Table III base config, iteration budget scaled to one CPU core.
+    let base = FedConfig {
+        model: "logreg".into(),
+        num_clients: 50,
+        participation: 0.2,
+        classes_per_client: 10,
+        batch_size: 20,
+        lr: 0.04,
+        momentum: 0.0,
+        iterations: 600,
+        eval_every: 50,
+        seed: 42,
+        ..Default::default()
+    };
+
+    println!("== fedstc quickstart: logreg @ synthetic MNIST ==\n");
+    for method in [
+        Method::Stc { p_up: 1.0 / 100.0, p_down: 1.0 / 100.0 },
+        Method::FedAvg { n: 100 },
+    ] {
+        let cfg = FedConfig { method: method.clone(), ..base.clone() };
+        println!("--- {} ---", cfg.describe());
+        let log = run_logreg(cfg)?;
+        println!("iter   acc     loss    upMB     downMB");
+        for p in &log.points {
+            println!(
+                "{:>5}  {:.4}  {:.4}  {:>7.4}  {:>7.4}",
+                p.iteration,
+                p.accuracy,
+                p.loss,
+                bits_to_mb(p.up_bits),
+                bits_to_mb(p.down_bits)
+            );
+        }
+        let last = log.points.last().unwrap();
+        println!(
+            "=> max accuracy {:.4} with {:.4} MB up / {:.4} MB down per client\n",
+            log.max_accuracy(),
+            bits_to_mb(last.up_bits),
+            bits_to_mb(last.down_bits)
+        );
+    }
+    println!(
+        "STC reaches comparable/better accuracy within the same iteration \
+         budget at a fraction of the communicated bits (paper Fig. 10)."
+    );
+    Ok(())
+}

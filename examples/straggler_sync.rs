@@ -1,0 +1,79 @@
+//! The §V-B partial-sum cache in action: with 5/100 client participation
+//! a client skips ~20 rounds between contributions; on rejoin it
+//! downloads the cached partial sum P^(s) instead of the full model.
+//! This example traces real sync events and compares the measured
+//! download cost against eq. (13) (linear growth, sparse methods) and
+//! eq. (14) (logarithmic growth, signSGD).
+//!
+//!     cargo run --release --example straggler_sync
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::coordinator::FederatedRun;
+use fedstc::data::synth::task_dataset;
+use fedstc::models::{native::NativeLogreg, ModelSpec};
+use fedstc::util::benchkit::Table;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = FedConfig {
+        model: "logreg".into(),
+        num_clients: 100,
+        participation: 0.05,
+        classes_per_client: 10,
+        batch_size: 20,
+        method: Method::Stc { p_up: 0.01, p_down: 0.01 },
+        lr: 0.04,
+        momentum: 0.0,
+        iterations: 120,
+        eval_every: 20,
+        seed: 9,
+        ..Default::default()
+    };
+    let (train, _) = task_dataset("mnist", cfg.seed);
+    let spec = ModelSpec::by_name("logreg");
+    let dim = spec.dim();
+    let mut run = FederatedRun::new(cfg.clone(), &train, spec.init_flat(9))?;
+    let mut trainer = NativeLogreg::new(cfg.batch_size);
+
+    println!("== straggler synchronisation (§V-B cache) ==");
+    println!("   100 clients, 5% participation, STC p=1/100, |W| = {dim}\n");
+
+    // After every few rounds, price what a client that missed s rounds
+    // would pay to rejoin: (round, rounds_missed, download_bits).
+    let mut events: Vec<(usize, usize, usize)> = Vec::new();
+    for _ in 0..cfg.rounds() {
+        run.run_round(&mut trainer, &train);
+        if run.server.round % 4 == 0 {
+            for s in [1usize, 5, 20, 50] {
+                if run.server.round >= s {
+                    let bits = run.server.straggler_download_bits(run.server.round - s);
+                    events.push((run.server.round, s, bits));
+                }
+            }
+        }
+    }
+
+    let dense_bits = 32 * dim;
+    let mut table = Table::new(&["rounds missed", "download (bits)", "vs dense model", "per round"]);
+    for s in [1usize, 5, 20, 50] {
+        let rows: Vec<&(usize, usize, usize)> = events.iter().filter(|e| e.1 == s).collect();
+        if rows.is_empty() {
+            continue;
+        }
+        let avg = rows.iter().map(|e| e.2 as f64).sum::<f64>() / rows.len() as f64;
+        table.row(&[
+            s.to_string(),
+            format!("{:.0}", avg),
+            format!("{:.1}%", 100.0 * avg / dense_bits as f64),
+            format!("{:.0}", avg / s as f64),
+        ]);
+    }
+    table.print();
+
+    println!(
+        "\nSparse cached sums grow ≈ linearly in rounds missed (eq. 13) and \
+         stay far below the {dense_bits}-bit dense download until the \
+         cache horizon; eq. 14 would apply to signSGD instead."
+    );
+    println!("\nmean client residual norm: {:.4}", run.mean_residual_norm());
+    Ok(())
+}

@@ -1,0 +1,196 @@
+"""AOT lowering: JAX → HLO text artifacts + manifest.json.
+
+This is the ONLY place Python touches the training stack; it runs once at
+build time (``make artifacts``) and the rust binary is self-contained
+afterwards.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax ≥ 0.5 emits
+protos with 64-bit instruction ids which the image's xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the HLO text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md). Lowering goes
+through stablehlo → XlaComputation with ``return_tuple=True``; the rust
+side unwraps the single tuple output.
+
+Artifacts produced (see DESIGN.md §4):
+  train_<model>_b<batch>   (params…, x, y) → (grads…, loss)
+  eval_<model>_b<batch>    (params…, x, y, w) → (loss_sum, correct)
+  stc_<n>_p<p>             (flat,) → (ternary, mu)  [L1 Pallas kernel]
+
+Usage: python -m compile.aot [--out-dir ../artifacts] [--quick]
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import models
+from .kernels import stc as stc_kernel
+
+# batch-size grid per model: every batch size any bench sweeps over must
+# be listed here (HLO shapes are static). Fig 7 sweeps cnn batch sizes.
+BATCH_SIZES = {
+    "logreg": [1, 2, 4, 8, 16, 20, 32, 40],
+    "cnn": [1, 2, 4, 8, 20, 40],
+    "kws": [20],
+    "lstm": [20],
+}
+EVAL_BATCH = {"logreg": 200, "cnn": 100, "kws": 100, "lstm": 100}
+
+# STC kernel artifacts: one per (model dim, sparsity)
+STC_SPARSITIES = [1.0 / 25.0, 1.0 / 100.0, 1.0 / 400.0]
+
+QUICK_BATCHES = {"logreg": [4, 20], "cnn": [4], "kws": [4], "lstm": [4]}
+
+# fused multi-step artifacts (lax.fori_loop over `chunk` SGD steps per
+# PJRT dispatch) — only at the base batch size; see EXPERIMENTS.md §Perf
+MULTI_CHUNK = 10
+MULTI_BATCH = 20
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (see module docs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def tensor_meta(name, shape):
+    return {"name": name, "shape": [int(d) for d in shape]}
+
+
+def lower_train(model: str, batch: int, out_dir: str):
+    step = models.make_train_step(model)
+    args = models.example_args(model, batch, "train")
+    lowered = jax.jit(step).lower(*args)
+    name = f"train_{model}_b{batch}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    schema = models.SCHEMAS[model]
+    inputs = [tensor_meta(n, s) for n, s in schema]
+    inputs.append(tensor_meta("x", (batch, *models.INPUT_SHAPES[model])))
+    inputs.append(tensor_meta("y", (batch,)))
+    outputs = [tensor_meta(f"grad_{n}", s) for n, s in schema]
+    outputs.append(tensor_meta("loss", ()))
+    return {
+        "name": name, "file": f"{name}.hlo.txt", "kind": "train",
+        "model": model, "batch": batch,
+        "inputs": inputs, "outputs": outputs,
+    }
+
+
+def lower_eval(model: str, batch: int, out_dir: str):
+    step = models.make_eval_step(model)
+    args = models.example_args(model, batch, "eval")
+    lowered = jax.jit(step).lower(*args)
+    name = f"eval_{model}_b{batch}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    schema = models.SCHEMAS[model]
+    inputs = [tensor_meta(n, s) for n, s in schema]
+    inputs.append(tensor_meta("x", (batch, *models.INPUT_SHAPES[model])))
+    inputs.append(tensor_meta("y", (batch,)))
+    inputs.append(tensor_meta("w", (batch,)))
+    outputs = [tensor_meta("loss_sum", ()), tensor_meta("correct", ())]
+    return {
+        "name": name, "file": f"{name}.hlo.txt", "kind": "eval",
+        "model": model, "batch": batch,
+        "inputs": inputs, "outputs": outputs,
+    }
+
+
+def lower_multi(model: str, batch: int, chunk: int, out_dir: str):
+    step = models.make_multi_train_step(model, chunk)
+    args = models.example_args_multi(model, batch, chunk)
+    lowered = jax.jit(step).lower(*args)
+    name = f"multi_{model}_b{batch}_n{chunk}"
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    schema = models.SCHEMAS[model]
+    inputs = [tensor_meta(n_, s) for n_, s in schema]
+    inputs.append(tensor_meta("xs", (chunk, batch, *models.INPUT_SHAPES[model])))
+    inputs.append(tensor_meta("ys", (chunk, batch)))
+    inputs.append(tensor_meta("lr", ()))
+    outputs = [tensor_meta(f"new_{n_}", s) for n_, s in schema]
+    outputs.append(tensor_meta("mean_loss", ()))
+    return {
+        "name": name, "file": f"{name}.hlo.txt", "kind": "multi",
+        "model": model, "batch": batch, "n": chunk,
+        "inputs": inputs, "outputs": outputs,
+    }
+
+
+def lower_stc(n: int, p: float, out_dir: str):
+    # round-half-away-from-zero to match rust's f64::round() in
+    # compression::stc::k_for (python's round() is banker's rounding and
+    # disagrees at .5 boundaries, e.g. 7850·0.01 = 78.5)
+    k = max(int(n * p + 0.5), 1)
+
+    def fn(flat):
+        return stc_kernel.stc_compress(flat, k)
+
+    spec = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = jax.jit(fn).lower(spec)
+    name = f"stc_{n}_p{p:.6f}".rstrip("0")
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    return {
+        "name": name, "file": f"{name}.hlo.txt", "kind": "stc",
+        "model": "", "batch": 0, "n": n, "p": p,
+        "inputs": [tensor_meta("flat", (n,))],
+        "outputs": [tensor_meta("ternary", (n,)), tensor_meta("mu", ())],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join(os.path.dirname(__file__), "..", "..", "artifacts"))
+    ap.add_argument("--quick", action="store_true",
+                    help="small artifact set for fast CI-style runs")
+    args = ap.parse_args()
+    out_dir = os.path.abspath(args.out_dir)
+    os.makedirs(out_dir, exist_ok=True)
+
+    batches = QUICK_BATCHES if args.quick else BATCH_SIZES
+    entries = []
+    for model, sizes in batches.items():
+        for b in sizes:
+            print(f"lowering train_{model}_b{b} ...", flush=True)
+            entries.append(lower_train(model, b, out_dir))
+        eb = EVAL_BATCH[model]
+        print(f"lowering eval_{model}_b{eb} ...", flush=True)
+        entries.append(lower_eval(model, eb, out_dir))
+
+    if not args.quick:
+        for model in batches:
+            print(f"lowering multi_{model}_b{MULTI_BATCH}_n{MULTI_CHUNK} ...", flush=True)
+            entries.append(lower_multi(model, MULTI_BATCH, MULTI_CHUNK, out_dir))
+        dims = sorted({models.param_count(m) for m in batches})
+        for n in dims:
+            for p in STC_SPARSITIES:
+                print(f"lowering stc n={n} p={p:.6f} ...", flush=True)
+                entries.append(lower_stc(n, p, out_dir))
+    else:
+        entries.append(lower_stc(models.param_count("logreg"), 0.01, out_dir))
+
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    total = sum(
+        os.path.getsize(os.path.join(out_dir, e["file"])) for e in entries
+    )
+    print(f"wrote {len(entries)} artifacts ({total/1e6:.1f} MB) to {out_dir}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

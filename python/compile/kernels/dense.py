@@ -1,0 +1,97 @@
+"""L1 Pallas kernel: blocked matmul + bias — the dense-layer hot spot.
+
+Used by every model's fully-connected layers (and the whole of the
+logistic-regression model), so both the forward *and* backward passes of
+the AOT train-step artifacts run through this kernel. ``pallas_call`` has
+no automatic differentiation rule, so the layer is wrapped in
+``jax.custom_vjp`` whose backward pass reuses the same blocked-matmul
+kernel for dx = dy·wᵀ and dw = xᵀ·dy.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): classic (bm × bk) · (bk ×
+bn) tiling with the K-loop innermost in the grid so each output tile
+accumulates in VMEM while A/B tiles stream HBM→VMEM; the inner
+``jnp.dot`` is the MXU op. Block sizes are multiples of the 128-lane MXU
+edge. ``interpret=True`` for CPU-PJRT executability.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned tile sizes (128 lanes); bm kept small because federated
+# batch sizes are small.
+BM, BK, BN = 32, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, out_ref):
+    """Grid (M/bm, N/bn, K/bk): accumulate one K-slice into the out tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=out_ref.dtype
+    )
+
+
+def _pad_to(x: jnp.ndarray, m0: int, m1: int) -> jnp.ndarray:
+    p0 = -x.shape[0] % m0
+    p1 = -x.shape[1] % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Blocked Pallas matmul a @ b for arbitrary (padded) shapes."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims {k} vs {k2}"
+    ap = _pad_to(a, BM, BK)
+    bp = _pad_to(b, BK, BN)
+    mp, kp = ap.shape
+    _, np_ = bp.shape
+    grid = (mp // BM, np_ // BN, kp // BK)
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, BK), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((BK, BN), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((BM, BN), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), a.dtype),
+        interpret=True,
+    )(ap, bp)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fully-connected layer y = x @ w + b through the Pallas matmul."""
+    return matmul(x, w) + b
+
+
+def _dense_fwd(x, w, b):
+    return dense(x, w, b), (x, w)
+
+
+def _dense_bwd(res, dy):
+    x, w = res
+    dx = matmul(dy, w.T)
+    dw = matmul(x.T, dy)
+    db = jnp.sum(dy, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+@functools.partial(jax.jit)
+def dense_jit(x, w, b):
+    """Jitted wrapper for direct kernel tests."""
+    return dense(x, w, b)

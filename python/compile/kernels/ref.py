@@ -1,0 +1,42 @@
+"""Pure-jnp reference implementations (correctness oracles).
+
+Every Pallas kernel in this package has a reference here; pytest pins the
+kernel against the reference under hypothesis-driven shape/value sweeps
+(python/tests/test_kernels.py). The rust native implementations are
+validated against the same formulas on the rust side, and an integration
+test pins rust-native STC against the lowered kernel artifact bit-for-bit.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def stc_ref(flat: jnp.ndarray, k: int):
+    """Sparse Ternary Compression, Algorithm 1 of the paper.
+
+    ``k = max(round(n*p), 1)`` is resolved statically by the caller.
+    Returns ``(ternary tensor in {-mu, 0, +mu}, mu)``.
+    """
+    mags = jnp.abs(flat)
+    top = jax.lax.top_k(mags, k)[0]
+    thresh = top[-1]
+    mask = mags >= thresh
+    masked = jnp.where(mask, flat, 0.0)
+    mu = jnp.sum(jnp.abs(masked)) / k
+    return mu * jnp.sign(masked), mu
+
+
+def ternarize_ref(flat: jnp.ndarray, thresh) -> jnp.ndarray:
+    """The masking stage of STC given a precomputed threshold:
+    ``t = where(|x| >= thresh, x, 0)`` (mu scaling happens outside)."""
+    return jnp.where(jnp.abs(flat) >= thresh, flat, 0.0)
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Fully-connected layer: ``y = x @ w + b``."""
+    return x @ w + b
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain matrix product (backward-pass building block)."""
+    return a @ b

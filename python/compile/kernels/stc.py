@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: the ternarisation stage of Sparse Ternary Compression.
+
+The STC hot spot is a masked ternarisation over the flattened update
+tensor. The global top-k *threshold* is computed in L2 with
+``jax.lax.top_k`` (a global selection does not tile; broadcasting the
+scalar threshold does), then this kernel sweeps the tensor blockwise:
+
+    t_i = x_i        if |x_i| >= thresh else 0        (mask stage)
+
+and a second tiny kernel reduces ``sum(|t|)`` per block for the mu
+computation. Everything is fused back together by ``stc_compress`` below.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the flat tensor is tiled
+into VMEM-resident blocks via ``BlockSpec``; the compare+select runs on
+the VPU; the magnitude reduction accumulates per-block partial sums that
+L2 combines. ``interpret=True`` everywhere — the CPU PJRT plugin cannot
+execute Mosaic custom-calls; on a real TPU only the ``interpret`` flag
+changes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block length for the 1-D sweeps. 2048 f32 = 8 KiB per ref — three live
+# refs (in, out, partial) stay far under a TPU core's ~16 MiB VMEM even
+# with double buffering.
+BLOCK = 2048
+
+
+def _ternarize_kernel(x_ref, thresh_ref, out_ref, mag_ref):
+    """One block: masked copy + partial |t| sum."""
+    x = x_ref[...]
+    thresh = thresh_ref[0]
+    keep = jnp.abs(x) >= thresh
+    t = jnp.where(keep, x, 0.0)
+    out_ref[...] = t
+    mag_ref[0] = jnp.sum(jnp.abs(t))
+
+
+def ternarize(flat: jnp.ndarray, thresh: jnp.ndarray):
+    """Blockwise mask stage; returns (masked tensor, sum of kept |x|).
+
+    ``flat`` is padded to a BLOCK multiple with zeros; zero padding is
+    inert for any thresh > 0 and contributes sign(0) = 0 afterwards, so
+    the unpadded slice is exact either way.
+    """
+    n = flat.shape[0]
+    nblocks = max(1, -(-n // BLOCK))
+    padded = nblocks * BLOCK
+    xp = jnp.pad(flat, (0, padded - n))
+    thresh_arr = jnp.reshape(thresh, (1,))
+
+    out, mags = pl.pallas_call(
+        _ternarize_kernel,
+        grid=(nblocks,),
+        in_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((padded,), flat.dtype),
+            jax.ShapeDtypeStruct((nblocks,), flat.dtype),
+        ],
+        interpret=True,
+    )(xp, thresh_arr)
+    return out[:n], jnp.sum(mags)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def stc_compress(flat: jnp.ndarray, k: int):
+    """Full STC (Algorithm 1) with the Pallas mask stage.
+
+    Returns (ternary tensor in {-mu, 0, +mu}, mu). Matches
+    ``kernels.ref.stc_ref`` exactly (pytest pins them against each other).
+
+    The k-th-largest threshold uses ``jnp.sort`` rather than
+    ``lax.top_k``: recent jax lowers top_k to a ``topk(..., largest=true)``
+    HLO instruction whose attribute the image's xla_extension 0.5.1 text
+    parser rejects; ``sort`` round-trips cleanly and the threshold value
+    is identical.
+    """
+    mags = jnp.abs(flat)
+    thresh = jnp.sort(mags)[flat.shape[0] - k]
+    masked, mag_sum = ternarize(flat, thresh)
+    mu = mag_sum / k
+    return mu * jnp.sign(masked), mu

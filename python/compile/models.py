@@ -1,0 +1,269 @@
+"""L2 JAX model definitions — the paper's four benchmark tasks, scaled.
+
+Parameter schemas here are THE contract with the rust coordinator:
+``rust/src/models/mod.rs`` mirrors every tensor name/shape in the same
+order, and the runtime validates the AOT manifest against that mirror at
+load time. If you change a shape here, change the mirror.
+
+All fully-connected layers route through the L1 Pallas ``dense`` kernel
+(``kernels/dense.py``) so the AOT-lowered train steps exercise the kernel
+in both the forward and backward pass. Convolutions use
+``lax.conv_general_dilated`` (NHWC/HWIO), pooling is 2×2 max.
+
+| name   | paper analogue            | input        | params |
+|--------|---------------------------|--------------|--------|
+| logreg | Logistic Reg. @ MNIST     | [b, 784]     | 7,850  |
+| cnn    | VGG11* @ CIFAR            | [b,16,16,3]  | 38,570 |
+| kws    | 4-layer CNN @ KWS         | [b,32,32,1]  | 24,042 |
+| lstm   | LSTM @ Fashion-MNIST      | [b,28,28]    | 15,274 |
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels.dense import dense
+
+# ---------------------------------------------------------------------------
+# parameter schemas (name, shape) in rust-mirror order
+
+
+SCHEMAS = {
+    "logreg": [("w", (784, 10)), ("b", (10,))],
+    "cnn": [
+        ("conv1_w", (3, 3, 3, 16)),
+        ("conv1_b", (16,)),
+        ("conv2_w", (3, 3, 16, 32)),
+        ("conv2_b", (32,)),
+        ("fc1_w", (512, 64)),
+        ("fc1_b", (64,)),
+        ("fc2_w", (64, 10)),
+        ("fc2_b", (10,)),
+    ],
+    "kws": [
+        ("conv1_w", (3, 3, 1, 8)),
+        ("conv1_b", (8,)),
+        ("conv2_w", (3, 3, 8, 16)),
+        ("conv2_b", (16,)),
+        ("conv3_w", (3, 3, 16, 32)),
+        ("conv3_b", (32,)),
+        ("conv4_w", (3, 3, 32, 32)),
+        ("conv4_b", (32,)),
+        ("fc1_w", (128, 64)),
+        ("fc1_b", (64,)),
+        ("fc2_w", (64, 10)),
+        ("fc2_b", (10,)),
+    ],
+    "lstm": [
+        ("wx", (28, 192)),
+        ("wh", (48, 192)),
+        ("bias", (192,)),
+        ("fc_w", (48, 10)),
+        ("fc_b", (10,)),
+    ],
+}
+
+# input feature shape per model (without the batch dimension)
+INPUT_SHAPES = {
+    "logreg": (784,),
+    "cnn": (16, 16, 3),
+    "kws": (32, 32, 1),
+    "lstm": (28, 28),
+}
+
+NUM_CLASSES = 10
+
+
+def param_count(model: str) -> int:
+    return sum(
+        int(jnp.prod(jnp.array(shape))) for _, shape in SCHEMAS[model]
+    )
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+
+
+def _conv(x, w, b):
+    """3×3 SAME conv, NHWC/HWIO, + bias, relu."""
+    y = lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + b)
+
+
+def _maxpool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def forward_logreg(params, x):
+    w, b = params
+    return dense(x, w, b)
+
+
+def forward_cnn(params, x):
+    c1w, c1b, c2w, c2b, f1w, f1b, f2w, f2b = params
+    h = _maxpool2(_conv(x, c1w, c1b))     # 16→8
+    h = _maxpool2(_conv(h, c2w, c2b))     # 8→4
+    h = h.reshape(h.shape[0], -1)          # [b, 512]
+    h = jax.nn.relu(dense(h, f1w, f1b))
+    return dense(h, f2w, f2b)
+
+
+def forward_kws(params, x):
+    c1w, c1b, c2w, c2b, c3w, c3b, c4w, c4b, f1w, f1b, f2w, f2b = params
+    h = _maxpool2(_conv(x, c1w, c1b))     # 32→16
+    h = _maxpool2(_conv(h, c2w, c2b))     # 16→8
+    h = _maxpool2(_conv(h, c3w, c3b))     # 8→4
+    h = _maxpool2(_conv(h, c4w, c4b))     # 4→2
+    h = h.reshape(h.shape[0], -1)          # [b, 128]
+    h = jax.nn.relu(dense(h, f1w, f1b))
+    return dense(h, f2w, f2b)
+
+
+def forward_lstm(params, x):
+    """Single-layer LSTM (h=48) over the 28 rows of a 28×28 input,
+    gate order [i f g o] (the rust mirror inits the f-quarter bias to 1)."""
+    wx, wh, bias, fc_w, fc_b = params
+    b = x.shape[0]
+    hdim = 48
+
+    def step(carry, xt):
+        h, c = carry
+        z = xt @ wx + h @ wh + bias          # [b, 192]
+        i = jax.nn.sigmoid(z[:, 0 * hdim:1 * hdim])
+        f = jax.nn.sigmoid(z[:, 1 * hdim:2 * hdim])
+        g = jnp.tanh(z[:, 2 * hdim:3 * hdim])
+        o = jax.nn.sigmoid(z[:, 3 * hdim:4 * hdim])
+        c2 = f * c + i * g
+        h2 = o * jnp.tanh(c2)
+        return (h2, c2), None
+
+    h0 = jnp.zeros((b, hdim), x.dtype)
+    c0 = jnp.zeros((b, hdim), x.dtype)
+    xs = jnp.transpose(x, (1, 0, 2))         # [t, b, 28]
+    (h, _), _ = lax.scan(step, (h0, c0), xs)
+    return dense(h, fc_w, fc_b)
+
+
+FORWARDS = {
+    "logreg": forward_logreg,
+    "cnn": forward_cnn,
+    "kws": forward_kws,
+    "lstm": forward_lstm,
+}
+
+
+# ---------------------------------------------------------------------------
+# loss / train / eval steps (shared across models)
+
+
+def ce_loss(logits, y):
+    """Mean softmax cross-entropy; y is f32 class ids (the rust runtime
+    marshals everything as f32 literals)."""
+    labels = y.astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits)
+    picked = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+    return -jnp.mean(picked)
+
+
+def make_train_step(model: str):
+    """(params..., x, y) → (grads..., loss) — the artifact body."""
+    fwd = FORWARDS[model]
+
+    def train_step(*args):
+        nparams = len(SCHEMAS[model])
+        params = args[:nparams]
+        x, y = args[nparams], args[nparams + 1]
+
+        def loss_fn(ps):
+            return ce_loss(fwd(ps, x), y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(tuple(params))
+        return (*grads, loss)
+
+    return train_step
+
+
+def make_eval_step(model: str):
+    """(params..., x, y, w) → (weighted loss sum, weighted correct count).
+
+    ``w`` masks padding rows so the static-batch artifact can evaluate a
+    dataset whose size is not a batch multiple.
+    """
+    fwd = FORWARDS[model]
+
+    def eval_step(*args):
+        nparams = len(SCHEMAS[model])
+        params = args[:nparams]
+        x, y, w = args[nparams], args[nparams + 1], args[nparams + 2]
+        logits = fwd(tuple(params), x)
+        labels = y.astype(jnp.int32)
+        logp = jax.nn.log_softmax(logits)
+        picked = jnp.take_along_axis(logp, labels[:, None], axis=1)[:, 0]
+        loss_sum = -jnp.sum(picked * w)
+        pred = jnp.argmax(logits, axis=1)
+        correct = jnp.sum((pred == labels).astype(jnp.float32) * w)
+        return loss_sum, correct
+
+    return eval_step
+
+
+def example_args(model: str, batch: int, kind: str = "train"):
+    """ShapeDtypeStructs for lowering the artifact."""
+    f32 = jnp.float32
+    params = [jax.ShapeDtypeStruct(s, f32) for _, s in SCHEMAS[model]]
+    x = jax.ShapeDtypeStruct((batch, *INPUT_SHAPES[model]), f32)
+    y = jax.ShapeDtypeStruct((batch,), f32)
+    if kind == "train":
+        return (*params, x, y)
+    w = jax.ShapeDtypeStruct((batch,), f32)
+    return (*params, x, y, w)
+
+
+def make_multi_train_step(model: str, chunk: int):
+    """(params..., X[chunk,b,...], Y[chunk,b], lr) → (params'..., mean_loss).
+
+    Runs `chunk` plain-SGD steps inside one HLO module via
+    ``lax.fori_loop`` — amortises the PJRT dispatch cost (~1.8 ms/call on
+    this box) across local iterations for delay-based methods (FedAvg,
+    hybrid). Momentum is NOT folded in: the rust client falls back to the
+    per-step artifact when momentum > 0 so the buffer stays client-side.
+    """
+    fwd = FORWARDS[model]
+    nparams = len(SCHEMAS[model])
+
+    def multi_step(*args):
+        params = tuple(args[:nparams])
+        xs, ys, lr = args[nparams], args[nparams + 1], args[nparams + 2]
+
+        def body(i, carry):
+            params, loss_acc = carry
+            x = lax.dynamic_index_in_dim(xs, i, axis=0, keepdims=False)
+            y = lax.dynamic_index_in_dim(ys, i, axis=0, keepdims=False)
+
+            def loss_fn(ps):
+                return ce_loss(fwd(ps, x), y)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            new_params = tuple(p - lr * g for p, g in zip(params, grads))
+            return (new_params, loss_acc + loss)
+
+        (final_params, loss_sum) = lax.fori_loop(
+            0, chunk, body, (params, jnp.float32(0.0))
+        )
+        return (*final_params, loss_sum / chunk)
+
+    return multi_step
+
+
+def example_args_multi(model: str, batch: int, chunk: int):
+    f32 = jnp.float32
+    params = [jax.ShapeDtypeStruct(s, f32) for _, s in SCHEMAS[model]]
+    xs = jax.ShapeDtypeStruct((chunk, batch, *INPUT_SHAPES[model]), f32)
+    ys = jax.ShapeDtypeStruct((chunk, batch), f32)
+    lr = jax.ShapeDtypeStruct((), f32)
+    return (*params, xs, ys, lr)

@@ -1,0 +1,86 @@
+"""Build-path tests: HLO text lowering and manifest generation."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, models
+
+
+def test_to_hlo_text_roundtrippable_header():
+    lowered = jax.jit(lambda x: (x * 2.0,)).lower(
+        jax.ShapeDtypeStruct((4,), jnp.float32)
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_lower_train_writes_file_and_schema(tmp_path):
+    entry = aot.lower_train("logreg", 4, str(tmp_path))
+    path = tmp_path / entry["file"]
+    assert path.exists() and path.stat().st_size > 100
+    assert entry["kind"] == "train"
+    assert entry["inputs"][0] == {"name": "w", "shape": [784, 10]}
+    assert entry["inputs"][-2]["shape"] == [4, 784]
+    assert entry["outputs"][-1] == {"name": "loss", "shape": []}
+    # grads mirror params
+    for (n, s), g in zip(models.SCHEMAS["logreg"], entry["outputs"]):
+        assert g["shape"] == list(s)
+
+
+def test_lower_eval_schema(tmp_path):
+    entry = aot.lower_eval("logreg", 8, str(tmp_path))
+    assert entry["inputs"][-1]["name"] == "w"
+    assert [o["name"] for o in entry["outputs"]] == ["loss_sum", "correct"]
+
+
+def test_lower_stc_schema_and_numerics(tmp_path):
+    entry = aot.lower_stc(1000, 0.01, str(tmp_path))
+    assert entry["kind"] == "stc"
+    assert entry["n"] == 1000 and entry["p"] == 0.01
+    assert (tmp_path / entry["file"]).exists()
+
+
+def test_quick_manifest_end_to_end(tmp_path):
+    """Run the full aot main in --quick mode into a temp dir and check
+    the manifest parses and references existing files."""
+    import sys
+    from unittest import mock
+
+    argv = ["aot", "--out-dir", str(tmp_path), "--quick"]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["version"] == 1
+    assert len(manifest["artifacts"]) >= 6
+    for e in manifest["artifacts"]:
+        assert (tmp_path / e["file"]).exists(), e["file"]
+        assert e["kind"] in ("train", "eval", "stc")
+
+
+def test_repo_manifest_is_current():
+    """If artifacts/ exists at the repo root, its manifest must match the
+    current model schemas (drift check in the python direction; the rust
+    runtime performs the mirror check on its side)."""
+    root = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    path = os.path.join(root, "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    manifest = json.loads(open(path).read())
+    by_name = {e["name"]: e for e in manifest["artifacts"]}
+    for model in models.SCHEMAS:
+        train = [
+            e for e in manifest["artifacts"]
+            if e["kind"] == "train" and e["model"] == model
+        ]
+        assert train, f"no train artifacts for {model}"
+        for e in train:
+            for (name, shape), meta in zip(models.SCHEMAS[model], e["inputs"]):
+                assert meta["name"] == name
+                assert meta["shape"] == list(shape)
+    assert by_name  # sanity

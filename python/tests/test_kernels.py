@@ -1,0 +1,139 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp references.
+
+hypothesis sweeps shapes and value distributions; assert_allclose against
+ref.py is THE build-time correctness signal for the kernels that end up
+inside every AOT artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, ref, stc
+
+
+# ---------------------------------------------------------------------------
+# STC ternarisation kernel
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n=st.integers(min_value=1, max_value=5000),
+    p_mil=st.integers(min_value=1, max_value=1000),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_stc_matches_ref(n, p_mil, seed):
+    k = max(int(round(n * p_mil / 1000.0)), 1)
+    x = jnp.asarray(
+        np.random.RandomState(seed).randn(n).astype(np.float32)
+    )
+    t_kernel, mu_kernel = stc.stc_compress(x, k)
+    t_ref, mu_ref = ref.stc_ref(x, k)
+    np.testing.assert_allclose(t_kernel, t_ref, rtol=1e-6, atol=1e-7)
+    np.testing.assert_allclose(mu_kernel, mu_ref, rtol=1e-6)
+
+
+def test_stc_selects_exactly_k_for_distinct_magnitudes():
+    x = jnp.asarray(np.linspace(-3.0, 3.0, 601).astype(np.float32))
+    t, mu = stc.stc_compress(x, 10)
+    assert int(jnp.sum(t != 0)) == 10
+    assert float(mu) > 0
+
+
+def test_stc_keeps_largest_magnitudes():
+    x = jnp.asarray(np.array([0.1, -9.0, 0.2, 7.0, -0.3, 5.0], np.float32))
+    t, mu = stc.stc_compress(x, 3)
+    nz = np.nonzero(np.asarray(t))[0]
+    np.testing.assert_array_equal(nz, [1, 3, 5])
+    expected_mu = (9.0 + 7.0 + 5.0) / 3.0
+    np.testing.assert_allclose(mu, expected_mu, rtol=1e-6)
+    # signs preserved
+    assert t[1] < 0 and t[3] > 0 and t[5] > 0
+
+
+def test_stc_values_are_ternary():
+    x = jnp.asarray(np.random.RandomState(7).randn(4096).astype(np.float32))
+    t, mu = stc.stc_compress(x, 41)
+    vals = np.unique(np.asarray(t))
+    mu = float(mu)
+    for v in vals:
+        assert v in (0.0,) or abs(abs(v) - mu) < 1e-6
+
+
+def test_stc_k_equals_n_is_pure_ternarisation():
+    x = jnp.asarray(np.array([1.0, -2.0, 3.0], np.float32))
+    t, mu = stc.stc_compress(x, 3)
+    np.testing.assert_allclose(mu, 2.0, rtol=1e-6)
+    np.testing.assert_allclose(t, [2.0, -2.0, 2.0], rtol=1e-6)
+
+
+def test_ternarize_padding_is_inert():
+    # n deliberately NOT a multiple of the kernel BLOCK
+    n = stc.BLOCK + 37
+    x = jnp.asarray(np.random.RandomState(3).randn(n).astype(np.float32))
+    masked, mag = stc.ternarize(x, jnp.float32(0.5))
+    expect = ref.ternarize_ref(x, 0.5)
+    np.testing.assert_allclose(masked, expect, rtol=1e-6)
+    np.testing.assert_allclose(mag, jnp.sum(jnp.abs(expect)), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# dense (blocked matmul) kernel
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(min_value=1, max_value=70),
+    k=st.integers(min_value=1, max_value=300),
+    n=st.integers(min_value=1, max_value=200),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_dense_forward_matches_ref(m, k, n, seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(m, k).astype(np.float32))
+    w = jnp.asarray(rng.randn(k, n).astype(np.float32))
+    b = jnp.asarray(rng.randn(n).astype(np.float32))
+    got = dense.dense_jit(x, w, b)
+    want = ref.dense_ref(x, w, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dense_gradients_match_autodiff_reference():
+    rng = np.random.RandomState(11)
+    x = jnp.asarray(rng.randn(20, 784).astype(np.float32))
+    w = jnp.asarray(rng.randn(784, 10).astype(np.float32) * 0.1)
+    b = jnp.asarray(rng.randn(10).astype(np.float32) * 0.1)
+
+    def loss_kernel(w, b):
+        return jnp.sum(jnp.tanh(dense.dense(x, w, b)))
+
+    def loss_ref(w, b):
+        return jnp.sum(jnp.tanh(ref.dense_ref(x, w, b)))
+
+    gw, gb = jax.grad(loss_kernel, argnums=(0, 1))(w, b)
+    gw_r, gb_r = jax.grad(loss_ref, argnums=(0, 1))(w, b)
+    np.testing.assert_allclose(gw, gw_r, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(gb, gb_r, rtol=1e-3, atol=1e-4)
+
+
+def test_dense_input_gradient_flows():
+    rng = np.random.RandomState(12)
+    x = jnp.asarray(rng.randn(4, 32).astype(np.float32))
+    w = jnp.asarray(rng.randn(32, 8).astype(np.float32))
+    b = jnp.zeros(8, jnp.float32)
+    gx = jax.grad(lambda x: jnp.sum(dense.dense(x, w, b) ** 2))(x)
+    gx_r = jax.grad(lambda x: jnp.sum(ref.dense_ref(x, w, b) ** 2))(x)
+    np.testing.assert_allclose(gx, gx_r, rtol=1e-3, atol=1e-3)
+
+
+def test_matmul_nonsquare_blocks():
+    # shapes straddling the BM/BK/BN tile boundaries
+    for (m, k, n) in [(1, 1, 1), (32, 128, 128), (33, 129, 129), (31, 127, 1)]:
+        rng = np.random.RandomState(m * 1000 + k + n)
+        a = jnp.asarray(rng.randn(m, k).astype(np.float32))
+        b = jnp.asarray(rng.randn(k, n).astype(np.float32))
+        np.testing.assert_allclose(
+            dense.matmul(a, b), ref.matmul_ref(a, b), rtol=1e-4, atol=1e-4
+        )

@@ -1,0 +1,49 @@
+//! Eqs. (15)–(17) — the analytic entropy/encoding table, cross-checked
+//! against *measured* encoded message sizes: H_sparse, H_STC, the
+//! ternarisation gain, the Golomb bits-per-position b̄_pos, and the
+//! end-to-end compression rate, across sparsity levels.
+//!
+//! Expected shape: ternarisation gain ≈ 4.4 at p = 0.01 (paper §V-C);
+//! measured Golomb payloads within a few % of eq. (17).
+
+use fedstc::compression::{entropy, golomb, StcCompressor, Compressor};
+use fedstc::util::benchkit::{banner, Table};
+use fedstc::util::rng::Pcg64;
+
+fn main() {
+    banner("eqs. 15–17", "entropy & encoding formulas vs measured message sizes");
+
+    let mut table = Table::new(&[
+        "p", "H_sparse", "H_STC", "gain", "b̄_pos (eq17)", "b̄_pos (measured)", "STC rate",
+    ]);
+    let mut rng = Pcg64::seeded(30);
+    let n = 200_000;
+    let update: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+
+    for &p in &[0.1f64, 0.04, 0.01, 0.0025, 0.001] {
+        // measured: really encode an STC message at this sparsity
+        let mut comp = StcCompressor::new(p);
+        let msg = comp.compress(&update);
+        let (nnz, payload_bits) = match &msg {
+            fedstc::compression::Message::Ternary(t) => (t.nnz(), t.encode().len_bits),
+            _ => unreachable!(),
+        };
+        let measured = (payload_bits as f64 - nnz as f64) / nnz as f64; // minus sign bits
+        table.row(&[
+            format!("{p}"),
+            format!("{:.3}", entropy::h_sparse(p)),
+            format!("{:.3}", entropy::h_stc(p)),
+            format!("{:.3}", entropy::ternarisation_gain(p)),
+            format!("{:.2}", golomb::expected_bits_per_position(p)),
+            format!("{:.2}", measured),
+            format!("×{:.0}", entropy::stc_compression_rate(p)),
+        ]);
+    }
+    println!();
+    table.print();
+    println!(
+        "\nNote: paper §V-C prints b̄_pos(0.01) = 8.38 (b* = 7); the true \
+         eq.-17 optimum is b* = 6 → 8.11, which we use. Gain 4.414 at \
+         p = 0.01 reproduces exactly."
+    );
+}

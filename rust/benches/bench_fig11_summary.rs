@@ -1,0 +1,87 @@
+//! Fig. 11 — the paper's summary figure: (left) FedAvg vs STC accuracy in
+//! three characteristic environments — non-iid clients, batch size 1, and
+//! very low participation — and (right) the upstream/downstream traffic
+//! to a fixed target accuracy under iid data.
+//!
+//! Expected shape: STC wins all three environments on accuracy and needs
+//! roughly an order of magnitude less upload traffic to the target.
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::sim::run_logreg;
+use fedstc::util::benchkit::{banner, Table};
+use fedstc::util::bits_to_mb;
+
+fn base() -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 50,
+        participation: 0.2,
+        classes_per_client: 10,
+        batch_size: 20,
+        lr: 0.04,
+        momentum: 0.0,
+        iterations: 500,
+        eval_every: 25,
+        seed: 20,
+        ..Default::default()
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig. 11", "summary: three environments + traffic to target");
+    let fedavg = Method::FedAvg { n: 50 };
+    let stc = Method::Stc { p_up: 0.02, p_down: 0.02 };
+
+    // left panel: three characteristic environments. The logistic
+    // regression substitute saturates in mild settings, so each
+    // environment uses the paper's *extreme* end (c = 1, b = 1 at a
+    // short budget, 5/400 participation) where the method gap shows.
+    let mut envs: Vec<(&str, FedConfig)> = Vec::new();
+    let mut e1 = base();
+    e1.classes_per_client = 1;
+    envs.push(("non-iid (c=1)", e1));
+    let mut e2 = base();
+    e2.batch_size = 1;
+    e2.classes_per_client = 2;
+    e2.iterations = 200;
+    envs.push(("batch size 1", e2));
+    let mut e3 = base();
+    e3.num_clients = 400;
+    e3.participation = 5.0 / 400.0;
+    e3.classes_per_client = 2;
+    envs.push(("5/400 clients", e3));
+
+    let mut table = Table::new(&["environment", "FedAvg", "STC"]);
+    for (name, cfg) in envs {
+        let a = run_logreg(FedConfig { method: fedavg.clone(), ..cfg.clone() })?;
+        let b = run_logreg(FedConfig { method: stc.clone(), ..cfg })?;
+        table.row(&[
+            name.to_string(),
+            format!("{:.3}", a.max_accuracy()),
+            format!("{:.3}", b.max_accuracy()),
+        ]);
+    }
+    println!();
+    table.print();
+
+    // right panel: traffic to target under iid
+    let target = 0.70;
+    println!("\ntraffic to {:.0}% accuracy (iid):", target * 100.0);
+    let mut t2 = Table::new(&["method", "up MB", "down MB"]);
+    for (name, m) in [("FedAvg n=50", fedavg), ("STC p=1/50", stc)] {
+        let mut cfg = base();
+        cfg.method = m;
+        cfg.iterations = 1000;
+        let log = run_logreg(cfg)?;
+        match log.first_reaching(target) {
+            Some((_, up, down)) => t2.row(&[
+                name.to_string(),
+                format!("{:.4}", bits_to_mb(up)),
+                format!("{:.4}", bits_to_mb(down)),
+            ]),
+            None => t2.row(&[name.to_string(), "n.a.".into(), "n.a.".into()]),
+        }
+    }
+    t2.print();
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Fig. 3 — gradient sign congruence α_w(k) (eqs. 5–7): the histogram of
+//! per-parameter congruence at batch size 1 (left panel) and the growth
+//! of the mean congruence α(k) with batch size for iid vs single-class
+//! batches (right panel).
+//!
+//! Expected shape: α(1) ≈ 0.5; iid α(k) rises clearly with k; the
+//! single-class curve stays flat near chance — the mechanism behind
+//! signSGD's non-iid failure.
+
+use fedstc::data::synth::task_dataset;
+use fedstc::sim::alpha::{AlphaAnalysis, BatchRegime};
+use fedstc::util::benchkit::{banner, Table};
+
+fn main() {
+    banner("Fig. 3", "gradient sign congruence α(k), iid vs single-class batches");
+    let (train, _) = task_dataset("mnist", 1);
+    let mut analysis = AlphaAnalysis::new(&train, 1);
+
+    // left panel: histogram of α_w(1)
+    let p1 = analysis.alpha(&train, 1, BatchRegime::Iid, 80, 11);
+    println!("\nhistogram of α_w(1) over all {} parameters:", 7850);
+    for (i, h) in p1.histogram.iter().enumerate() {
+        let stars = "#".repeat((h * 120.0).round() as usize);
+        println!("  [{:.1},{:.1})  {:>6.3}  {}", i as f64 / 10.0, (i + 1) as f64 / 10.0, h, stars);
+    }
+    println!("  mean α(1) = {:.4} (paper: 0.51)", p1.alpha_mean);
+
+    // right panel: α(k) for growing k
+    let mut table = Table::new(&["k", "iid", "non-iid (single class)"]);
+    for k in [1usize, 2, 4, 8, 16, 32, 64, 128, 256] {
+        let iid = analysis.alpha(&train, k, BatchRegime::Iid, 60, 13).alpha_mean;
+        let nid = analysis.alpha(&train, k, BatchRegime::SingleClass, 60, 13).alpha_mean;
+        table.row(&[k.to_string(), format!("{iid:.4}"), format!("{nid:.4}")]);
+    }
+    println!();
+    table.print();
+    println!(
+        "\nExpected shape: iid congruence grows towards 1 with k; \
+         single-class batches stay near 0.5 regardless of k."
+    );
+}

@@ -1,0 +1,62 @@
+//! Fig. 4 — accuracy over the upload × download sparsity grid (5 clients,
+//! full participation, eq. (10) sparse-both-ways protocol without
+//! ternarisation).
+//!
+//! Expected shape: as long as download sparsity is of the same order as
+//! upload sparsity, sparsifying the download costs at most a few points
+//! of accuracy, in both iid and non-iid settings.
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::sim::run_logreg;
+use fedstc::util::benchkit::{banner, Table};
+
+const PS: [(f64, &str); 4] =
+    [(1.0, "dense"), (0.1, "1/10"), (0.02, "1/50"), (0.005, "1/200")];
+
+fn run_grid(classes: usize) -> anyhow::Result<()> {
+    println!(
+        "\n[{} — rows: upload sparsity, cols: download sparsity]",
+        if classes == 10 { "iid" } else { "non-iid(2)" }
+    );
+    let header: Vec<String> =
+        std::iter::once("p_up \\ p_down".to_string())
+            .chain(PS.iter().map(|(_, l)| l.to_string()))
+            .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+    for &(p_up, l_up) in &PS {
+        let mut row = vec![l_up.to_string()];
+        for &(p_down, _) in &PS {
+            let cfg = FedConfig {
+                model: "logreg".into(),
+                num_clients: 5,
+                participation: 1.0,
+                classes_per_client: classes,
+                batch_size: 20,
+                method: Method::SparseUpDown { p_up, p_down },
+                lr: 0.04,
+                momentum: 0.0,
+                iterations: 400,
+                eval_every: 50,
+                seed: 4,
+                ..Default::default()
+            };
+            let log = run_logreg(cfg)?;
+            row.push(format!("{:.3}", log.max_accuracy()));
+        }
+        table.row(&row);
+    }
+    table.print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig. 4", "upload × download sparsity grid (sparse updates, no ternarisation)");
+    run_grid(10)?;
+    run_grid(2)?;
+    println!(
+        "\nExpected shape: accuracy is roughly constant along the diagonal; \
+         only extreme download sparsity under much denser uploads hurts."
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Fig. 8 (and appendix Fig. 14) — client participation: 5 participating
+//! clients out of N ∈ {5, 10, 25, 100, 200} total (participation fraction
+//! 100% … 2.5%), batch 40, non-iid(2) and iid panels.
+//!
+//! Expected shape: both FedAvg and STC degrade as participation falls but
+//! STC stays ahead throughout; signSGD is least affected (only the
+//! absolute participant count matters to a majority vote).
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::runtime::{Engine, HloTrainer};
+use fedstc::sim::{run_logreg, Experiment};
+use fedstc::util::benchkit::{banner, Table};
+
+fn panel(classes: usize) -> anyhow::Result<()> {
+    println!("\n[{}]", if classes == 10 { "iid" } else { "non-iid(2)" });
+    let methods: Vec<(&str, Method)> = vec![
+        ("FedAvg n=50", Method::FedAvg { n: 50 }),
+        ("signSGD", Method::SignSgd { delta: 0.002 }),
+        ("STC p=1/50", Method::Stc { p_up: 0.02, p_down: 0.02 }),
+    ];
+    let totals = [5usize, 10, 25, 100, 200];
+    let header: Vec<String> = std::iter::once("method".to_string())
+        .chain(totals.iter().map(|n| format!("5/{n}")))
+        .collect();
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+    for (name, method) in &methods {
+        let mut row = vec![name.to_string()];
+        for &n in &totals {
+            let cfg = FedConfig {
+                model: "logreg".into(),
+                num_clients: n,
+                participation: 5.0 / n as f64,
+                classes_per_client: classes,
+                batch_size: 40,
+                method: method.clone(),
+                lr: 0.04,
+                momentum: 0.0,
+                iterations: 400,
+                eval_every: 50,
+                seed: 12,
+                train_examples: 4000,
+                ..Default::default()
+            };
+            let log = run_logreg(cfg)?;
+            row.push(format!("{:.3}", log.max_accuracy()));
+        }
+        table.row(&row);
+    }
+    table.print();
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    banner("Fig. 8 / Fig. 14", "accuracy vs participation fraction (5 of N clients)");
+    panel(2)?;
+    panel(10)?;
+    println!(
+        "\nExpected shape: monotone degradation with 1/N for FedAvg and \
+         STC (residual staleness), STC ahead everywhere; signSGD flat-ish. \
+         (Convex logreg softens FedAvg's forgetting; the CNN panel shows \
+         the paper's deep-model behaviour.)"
+    );
+
+    if std::env::var("FEDSTC_BENCH_HLO").as_deref() == Ok("1") {
+        if let Ok(engine) = Engine::load_default() {
+            println!("\n[cnn @ synth-cifar via PJRT, non-iid(2), b=40]");
+            let totals = [5usize, 25, 100];
+            let header: Vec<String> = std::iter::once("method".to_string())
+                .chain(totals.iter().map(|n| format!("5/{n}")))
+                .collect();
+            let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+            let mut t = Table::new(&header_refs);
+            let methods: Vec<(&str, Method)> = vec![
+                ("FedAvg n=25", Method::FedAvg { n: 25 }),
+                ("STC p=1/25", Method::Stc { p_up: 0.04, p_down: 0.04 }),
+            ];
+            for (name, method) in &methods {
+                let mut row = vec![name.to_string()];
+                for &n in &totals {
+                    let mut cfg = FedConfig::for_model("cnn");
+                    cfg.num_clients = n;
+                    cfg.participation = 5.0 / n as f64;
+                    cfg.classes_per_client = 2;
+                    cfg.batch_size = 40;
+                    cfg.method = method.clone();
+                    cfg.momentum = 0.0;
+                    cfg.iterations = 100;
+                    cfg.eval_every = 25;
+                    cfg.seed = 12;
+                    cfg.train_examples = 2000;
+                    cfg.test_examples = 400;
+                    let exp = Experiment::new(cfg)?;
+                    let mut trainer = HloTrainer::new(&engine, "cnn", 40)?;
+                    let log = exp.run(&mut trainer)?;
+                    row.push(format!("{:.3}", log.max_accuracy()));
+                }
+                t.row(&row);
+            }
+            t.print();
+        }
+    } else {
+        println!("[set FEDSTC_BENCH_HLO=1 for the CNN panel]");
+    }
+    Ok(())
+}

@@ -1,0 +1,128 @@
+//! μ-benchmarks of the L3 hot paths (the §Perf deliverable): STC
+//! compression (quickselect + ternarise), Golomb encode/decode, server
+//! aggregation, residual arithmetic, the native gradient step, and — when
+//! artifacts are present — the PJRT train-step and the HLO STC kernel.
+//!
+//! Run: cargo bench --bench bench_micro_hotpath
+//! Targets (DESIGN.md §6): STC ≥ 200 MB/s @ n=1e6; Golomb ≥ 20M nnz/s.
+
+use fedstc::compression::{golomb, stc, Compressor, Message, StcCompressor};
+use fedstc::config::Method;
+use fedstc::coordinator::Server;
+use fedstc::data::synth::task_dataset;
+use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
+use fedstc::runtime::{Engine, HloTrainer};
+use fedstc::util::benchkit::{banner, bench_throughput, black_box};
+use fedstc::util::rng::Pcg64;
+
+fn main() {
+    banner("μ-bench", "hot-path throughput (see EXPERIMENTS.md §Perf)");
+    let mut rng = Pcg64::seeded(40);
+
+    // --- STC compress at three scales -------------------------------
+    for &n in &[10_000usize, 100_000, 1_000_000] {
+        let update: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        let mut scratch = stc::StcScratch::default();
+        let r = bench_throughput(
+            &format!("stc_compress n={n} p=1/100"),
+            n as f64 * 4.0, // bytes
+            3,
+            15,
+            || {
+                black_box(stc::compress_with(&update, 0.01, &mut scratch));
+            },
+        );
+        println!("{}", r.report());
+    }
+
+    // --- Golomb codec ------------------------------------------------
+    let n = 1_000_000;
+    let update: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+    let tern = stc::compress(&update, 0.01);
+    let r = bench_throughput(
+        &format!("golomb_encode nnz={}", tern.nnz()),
+        tern.nnz() as f64,
+        3,
+        15,
+        || {
+            black_box(tern.encode());
+        },
+    );
+    println!("{}", r.report());
+    let enc = tern.encode();
+    let r = bench_throughput(
+        &format!("golomb_decode nnz={}", tern.nnz()),
+        tern.nnz() as f64,
+        3,
+        15,
+        || {
+            black_box(golomb::decode(&enc, tern.nnz(), n).unwrap());
+        },
+    );
+    println!("{}", r.report());
+
+    // --- server aggregation (10 ternary messages, 100k params) -------
+    let dim = 100_000;
+    let msgs: Vec<Message> = (0..10)
+        .map(|i| {
+            let mut c = StcCompressor::new(0.01);
+            let u: Vec<f32> =
+                (0..dim).map(|j| ((i * 31 + j) % 97) as f32 * 0.01 - 0.5).collect();
+            c.compress(&u)
+        })
+        .collect();
+    let r = bench_throughput(
+        "server_aggregate 10 msgs, dim=100k (STC)",
+        dim as f64,
+        3,
+        15,
+        || {
+            let mut server =
+                Server::new(vec![0.0; dim], Method::Stc { p_up: 0.01, p_down: 0.01 }, 10);
+            black_box(server.aggregate_and_apply(&msgs));
+        },
+    );
+    println!("{}", r.report());
+
+    // --- native gradient step ----------------------------------------
+    let (train, _) = task_dataset("mnist", 1);
+    let spec = ModelSpec::by_name("logreg");
+    let params = spec.init_flat(1);
+    let mut trainer = NativeLogreg::new(20);
+    let mut x = vec![0.0f32; 20 * 784];
+    let mut y = vec![0.0f32; 20];
+    let idx: Vec<usize> = (0..20).collect();
+    train.gather_batch(&idx, &mut x, &mut y);
+    let mut grads = vec![0.0f32; spec.dim()];
+    let r = bench_throughput("native_logreg grad_loss b=20", 20.0, 3, 15, || {
+        black_box(trainer.grad_loss(&params, &x, &y, &mut grads));
+    });
+    println!("{}", r.report());
+
+    // --- PJRT paths (need artifacts) ----------------------------------
+    match Engine::load_default() {
+        Ok(engine) => {
+            let mut hlo = HloTrainer::new(&engine, "logreg", 20).expect("hlo trainer");
+            let r = bench_throughput("hlo_logreg grad_loss b=20 (PJRT)", 20.0, 3, 15, || {
+                black_box(hlo.grad_loss(&params, &x, &y, &mut grads));
+            });
+            println!("{}", r.report());
+
+            if let Ok(kern) = fedstc::runtime::trainer::HloStc::new(&engine, spec.dim(), 0.01)
+            {
+                let update: Vec<f32> = (0..spec.dim()).map(|_| rng.normal()).collect();
+                let r = bench_throughput(
+                    "hlo_stc_kernel n=7850 p=1/100 (Pallas via PJRT)",
+                    spec.dim() as f64 * 4.0,
+                    3,
+                    15,
+                    || {
+                        black_box(kern.compress(&update).unwrap());
+                    },
+                );
+                println!("{}", r.report());
+            }
+        }
+        Err(e) => println!("[PJRT rows skipped: {e}]"),
+    }
+}

@@ -1,0 +1,152 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `repro <subcommand> [--key value]... [--flag]...`
+//! Unknown keys are surfaced as errors by the consumers via
+//! [`Args::finish`], which reports any argument that was never read.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+pub struct Args {
+    pub subcommand: String,
+    kv: BTreeMap<String, String>,
+    read: std::cell::RefCell<Vec<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> anyhow::Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let subcommand = it.next().unwrap_or_else(|| "help".to_string());
+        let mut kv = BTreeMap::new();
+        while let Some(arg) = it.next() {
+            let key = arg
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow::anyhow!("expected --key, got '{arg}'"))?
+                .to_string();
+            // `--key=value` or `--key value` or bare flag `--key`
+            if let Some((k, v)) = key.split_once('=') {
+                kv.insert(k.to_string(), v.to_string());
+            } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                kv.insert(key, it.next().unwrap());
+            } else {
+                kv.insert(key, "true".to_string());
+            }
+        }
+        Ok(Args { subcommand, kv, read: std::cell::RefCell::new(Vec::new()) })
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> anyhow::Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Get a string value.
+    pub fn get(&self, key: &str) -> Option<String> {
+        self.read.borrow_mut().push(key.to_string());
+        self.kv.get(key).cloned()
+    }
+
+    /// Get with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or_else(|| default.to_string())
+    }
+
+    /// Parse a typed value.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("--{key} '{s}': {e}")),
+        }
+    }
+
+    /// Boolean flag (present or `--key true/false`).
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key).as_deref(), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// All `key=value` pairs (for forwarding into `FedConfig::apply_kv`).
+    pub fn pairs(&self) -> Vec<(String, String)> {
+        for k in self.kv.keys() {
+            self.read.borrow_mut().push(k.clone());
+        }
+        self.kv.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
+    }
+
+    /// Error if any provided argument was never consumed — catches typos.
+    pub fn finish(&self) -> anyhow::Result<()> {
+        let read = self.read.borrow();
+        let unused: Vec<&String> =
+            self.kv.keys().filter(|k| !read.contains(k)).collect();
+        anyhow::ensure!(unused.is_empty(), "unknown arguments: {unused:?}");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_kv() {
+        let a = parse(&["train", "--model", "cnn", "--iters", "100"]);
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("model").as_deref(), Some("cnn"));
+        assert_eq!(a.get_parse::<usize>("iters").unwrap(), Some(100));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let a = parse(&["train", "--model=lstm"]);
+        assert_eq!(a.get("model").as_deref(), Some("lstm"));
+    }
+
+    #[test]
+    fn bare_flag() {
+        let a = parse(&["bench", "--verbose", "--seed", "3"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        let _ = a.get("seed");
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["train"]);
+        assert_eq!(a.get_or("model", "logreg"), "logreg");
+    }
+
+    #[test]
+    fn unknown_args_detected() {
+        let a = parse(&["train", "--tpyo", "7"]);
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn bad_typed_value_errors() {
+        let a = parse(&["train", "--iters", "many"]);
+        assert!(a.get_parse::<usize>("iters").is_err());
+    }
+
+    #[test]
+    fn missing_subcommand_is_help() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand, "help");
+    }
+
+    #[test]
+    fn rejects_positional_noise() {
+        assert!(Args::parse(["train".to_string(), "oops".to_string()]).is_err());
+    }
+}

@@ -1,0 +1,370 @@
+//! Bit-level writer/reader — substrate for the Golomb position codec.
+//!
+//! Bits are packed MSB-first into bytes. The writer tracks the exact bit
+//! length (not rounded to bytes) because the communication accounting in
+//! the experiments is bit-exact.
+//!
+//! Perf note (EXPERIMENTS.md §Perf): both sides buffer through a 64-bit
+//! accumulator and emit/consume whole bytes, instead of indexing the byte
+//! array per bit. This took the Golomb encoder from ~18.5M to >100M
+//! positions/s on one core — it is on the per-message wire path of every
+//! client upload and server broadcast.
+
+/// Append-only bit sink.
+#[derive(Default, Clone)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// pending bits, right-aligned (newest in the low bits)
+    acc: u64,
+    /// number of valid pending bits in `acc` (< 8 after any public call)
+    nacc: u32,
+    /// total bits written (committed + pending)
+    len_bits: usize,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity_bits(bits: usize) -> Self {
+        BitWriter { buf: Vec::with_capacity(bits / 8 + 1), ..Default::default() }
+    }
+
+    /// Total number of bits written.
+    pub fn len_bits(&self) -> usize {
+        self.len_bits
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len_bits == 0
+    }
+
+    /// Drain full bytes out of the accumulator.
+    #[inline]
+    fn drain(&mut self) {
+        while self.nacc >= 8 {
+            self.nacc -= 8;
+            self.buf.push((self.acc >> self.nacc) as u8);
+        }
+        // keep only the live low bits (avoids stale high bits on shifts)
+        if self.nacc < 64 {
+            self.acc &= (1u64 << self.nacc) - 1;
+        }
+    }
+
+    /// Push a single bit.
+    #[inline]
+    pub fn push(&mut self, bit: bool) {
+        self.acc = (self.acc << 1) | bit as u64;
+        self.nacc += 1;
+        self.len_bits += 1;
+        if self.nacc >= 8 {
+            self.drain();
+        }
+    }
+
+    /// Push the lowest `n` bits of `value`, MSB of those first (n ≤ 64).
+    #[inline]
+    pub fn push_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return;
+        }
+        let masked = if n == 64 { value } else { value & ((1u64 << n) - 1) };
+        if self.nacc + n <= 56 {
+            // fast path: fits in the accumulator with headroom
+            // (nacc < 8 after every public call, so this covers n ≤ 48+)
+            self.acc = (self.acc << n) | masked;
+            self.nacc += n;
+            self.len_bits += n as usize;
+            self.drain();
+        } else {
+            // split into two halves that each fit
+            let hi = n / 2;
+            let lo = n - hi;
+            self.push_bits(masked >> lo, hi);
+            self.push_bits(masked, lo);
+        }
+    }
+
+    /// Push `n` one-bits followed by a zero (unary coding of n).
+    #[inline]
+    pub fn push_unary(&mut self, mut n: u64) {
+        // emit runs of ones 32 at a time, then the terminated remainder
+        while n >= 32 {
+            self.push_bits(0xFFFF_FFFF, 32);
+            n -= 32;
+        }
+        // n ones + one zero in a single write: value = (2^(n+1) - 2)
+        self.push_bits((1u64 << (n + 1)) - 2, n as u32 + 1);
+    }
+
+    /// Finish and return (bytes, exact bit length).
+    pub fn finish(mut self) -> (Vec<u8>, usize) {
+        if self.nacc > 0 {
+            // left-align the pending bits into a final byte
+            let byte = ((self.acc << (8 - self.nacc)) & 0xFF) as u8;
+            self.buf.push(byte);
+            self.nacc = 0;
+        }
+        (self.buf, self.len_bits)
+    }
+
+    /// Committed bytes so far (pending bits not included) — tests only.
+    pub fn as_bytes(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Sequential bit source over a byte slice.
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    len_bits: usize,
+    /// absolute bit position of the next unread bit
+    pos: usize,
+    /// prefetched bits, left-aligned: the next bit is the MSB of `acc`
+    acc: u64,
+    /// number of valid prefetched bits
+    nacc: u32,
+    /// next byte index to prefetch from
+    byte_pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8], len_bits: usize) -> Self {
+        debug_assert!(len_bits <= buf.len() * 8);
+        BitReader { buf, len_bits, pos: 0, acc: 0, nacc: 0, byte_pos: 0 }
+    }
+
+    /// Bits remaining.
+    pub fn remaining(&self) -> usize {
+        self.len_bits - self.pos
+    }
+
+    /// Refill the accumulator from the byte stream.
+    #[inline]
+    fn refill(&mut self) {
+        while self.nacc <= 56 && self.byte_pos < self.buf.len() {
+            self.acc |= (self.buf[self.byte_pos] as u64) << (56 - self.nacc);
+            self.nacc += 8;
+            self.byte_pos += 1;
+        }
+    }
+
+    /// Read one bit; None at end of stream.
+    #[inline]
+    pub fn read(&mut self) -> Option<bool> {
+        if self.pos >= self.len_bits {
+            return None;
+        }
+        if self.nacc == 0 {
+            self.refill();
+        }
+        let bit = self.acc >> 63 == 1;
+        self.acc <<= 1;
+        self.nacc -= 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Read `n` bits as an MSB-first integer; None if fewer remain.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        debug_assert!(n <= 64);
+        if self.remaining() < n as usize {
+            return None;
+        }
+        if n == 0 {
+            return Some(0);
+        }
+        if n <= 56 {
+            if self.nacc < n {
+                self.refill();
+            }
+            let v = self.acc >> (64 - n);
+            self.acc <<= n;
+            self.nacc -= n;
+            self.pos += n as usize;
+            Some(v)
+        } else {
+            let hi = self.read_bits(n / 2)?;
+            let lo_n = n - n / 2;
+            let lo = self.read_bits(lo_n)?;
+            Some((hi << lo_n) | lo)
+        }
+    }
+
+    /// Read a unary-coded count (number of ones before the terminating 0).
+    #[inline]
+    pub fn read_unary(&mut self) -> Option<u64> {
+        let mut n = 0u64;
+        loop {
+            if self.pos >= self.len_bits {
+                return None;
+            }
+            if self.nacc == 0 {
+                self.refill();
+            }
+            // count leading ones in the valid window of the accumulator
+            let valid = self.nacc.min((self.len_bits - self.pos) as u32);
+            if valid == 0 {
+                return None;
+            }
+            // force the bits below the valid window to 1 so they never
+            // look like the terminating zero
+            let window =
+                self.acc | if valid == 64 { 0 } else { (1u64 << (64 - valid)) - 1 };
+            let leading = (!window).leading_zeros().min(valid);
+            if leading < valid {
+                // found the zero bit inside the window
+                let consume = leading + 1;
+                self.acc = if consume == 64 { 0 } else { self.acc << consume };
+                self.nacc -= consume;
+                self.pos += consume as usize;
+                return Some(n + leading as u64);
+            }
+            // the whole window is ones — consume it and continue
+            // (shift-by-64 would be a wrapping no-op, hence the guard)
+            self.acc = if valid == 64 { 0 } else { self.acc << valid };
+            self.nacc -= valid;
+            self.pos += valid as usize;
+            n += valid as u64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn single_bits_roundtrip() {
+        let mut w = BitWriter::new();
+        let pattern = [true, false, true, true, false, false, true, false, true];
+        for &b in &pattern {
+            w.push(b);
+        }
+        assert_eq!(w.len_bits(), 9);
+        let (bytes, n) = w.finish();
+        let mut r = BitReader::new(&bytes, n);
+        for &b in &pattern {
+            assert_eq!(r.read(), Some(b));
+        }
+        assert_eq!(r.read(), None);
+    }
+
+    #[test]
+    fn multibit_roundtrip() {
+        let mut w = BitWriter::new();
+        w.push_bits(0b1011, 4);
+        w.push_bits(0xdead_beef, 32);
+        w.push_bits(1, 1);
+        w.push_bits(0x0123_4567_89ab_cdef, 64);
+        let (bytes, n) = w.finish();
+        let mut r = BitReader::new(&bytes, n);
+        assert_eq!(r.read_bits(4), Some(0b1011));
+        assert_eq!(r.read_bits(32), Some(0xdead_beef));
+        assert_eq!(r.read_bits(1), Some(1));
+        assert_eq!(r.read_bits(64), Some(0x0123_4567_89ab_cdef));
+        assert_eq!(r.read_bits(1), None);
+    }
+
+    #[test]
+    fn unary_roundtrip() {
+        let mut w = BitWriter::new();
+        for n in [0u64, 1, 2, 7, 13, 31, 32, 33, 100] {
+            w.push_unary(n);
+        }
+        let (bytes, len) = w.finish();
+        let mut r = BitReader::new(&bytes, len);
+        for n in [0u64, 1, 2, 7, 13, 31, 32, 33, 100] {
+            assert_eq!(r.read_unary(), Some(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn exact_bit_length_accounting() {
+        let mut w = BitWriter::new();
+        w.push_unary(5); // 6 bits
+        w.push_bits(3, 2); // 2 bits
+        assert_eq!(w.len_bits(), 8);
+        w.push(true);
+        assert_eq!(w.len_bits(), 9);
+        let (bytes, len) = w.finish();
+        assert_eq!(len, 9);
+        assert_eq!(bytes.len(), 2);
+    }
+
+    #[test]
+    fn randomized_roundtrip() {
+        let mut rng = Pcg64::seeded(11);
+        for _ in 0..50 {
+            let mut w = BitWriter::new();
+            let mut expect = Vec::new();
+            for _ in 0..rng.below(200) {
+                match rng.below(3) {
+                    0 => {
+                        let b = rng.below(2) == 1;
+                        w.push(b);
+                        expect.push((0u8, b as u64, 1u32));
+                    }
+                    1 => {
+                        let n = 1 + rng.below(63) as u32;
+                        let v = rng.next_u64() & (((1u128 << n) - 1) as u64);
+                        w.push_bits(v, n);
+                        expect.push((1, v, n));
+                    }
+                    _ => {
+                        let n = rng.below(80) as u64;
+                        w.push_unary(n);
+                        expect.push((2, n, 0));
+                    }
+                }
+            }
+            let (bytes, len) = w.finish();
+            let mut r = BitReader::new(&bytes, len);
+            for (kind, v, n) in expect {
+                match kind {
+                    0 => assert_eq!(r.read(), Some(v == 1)),
+                    1 => assert_eq!(r.read_bits(n), Some(v), "n={n}"),
+                    _ => assert_eq!(r.read_unary(), Some(v)),
+                }
+            }
+            assert_eq!(r.remaining(), 0);
+        }
+    }
+
+    #[test]
+    fn empty_reader() {
+        let mut r = BitReader::new(&[], 0);
+        assert_eq!(r.read(), None);
+        assert_eq!(r.read_unary(), None);
+        assert_eq!(r.read_bits(4), None);
+        assert_eq!(r.read_bits(0), Some(0));
+    }
+
+    #[test]
+    fn unary_truncated_run_is_none() {
+        // a stream of only ones must not loop forever or return a count
+        let mut w = BitWriter::new();
+        w.push_bits(0xFF, 8);
+        let (bytes, len) = w.finish();
+        let mut r = BitReader::new(&bytes, len);
+        assert_eq!(r.read_unary(), None);
+    }
+
+    #[test]
+    fn long_unary_runs_cross_accumulator_boundaries() {
+        for n in [55u64, 56, 63, 64, 65, 127, 128, 1000] {
+            let mut w = BitWriter::new();
+            w.push_unary(n);
+            w.push_bits(0b101, 3);
+            let (bytes, len) = w.finish();
+            let mut r = BitReader::new(&bytes, len);
+            assert_eq!(r.read_unary(), Some(n), "n={n}");
+            assert_eq!(r.read_bits(3), Some(0b101));
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Update-entropy and communication-cost formulas — eqs. (1), (13)–(17).
+//!
+//! These are the paper's *analytical* costs; the simulation additionally
+//! measures real encoded sizes (see `message.rs`) and the `bench_eq_entropy`
+//! bench prints both side by side.
+//!
+//! Note on eqs. (15)/(16): the paper's printed formulas contain a typo —
+//! the second term reads `(1−p) log2(p)` but must be `(1−p) log2(1−p)`
+//! (the binary entropy of the sparsity mask); we implement the corrected
+//! form, which also matches the paper's numeric example
+//! H_sparse/H_STC = 4.414 at p = 0.01.
+
+use super::golomb;
+
+/// Binary entropy H_b(p) in bits.
+pub fn binary_entropy(p: f64) -> f64 {
+    if p <= 0.0 || p >= 1.0 {
+        return 0.0;
+    }
+    -p * p.log2() - (1.0 - p) * (1.0 - p).log2()
+}
+
+/// Eq. (15): per-parameter entropy of a top-k sparsified update with
+/// 32-bit values: H_sparse = H_b(p) + 32p.
+pub fn h_sparse(p: f64) -> f64 {
+    binary_entropy(p) + 32.0 * p
+}
+
+/// Eq. (16): per-parameter entropy after additional ternarisation:
+/// H_STC = H_b(p) + p.
+pub fn h_stc(p: f64) -> f64 {
+    binary_entropy(p) + p
+}
+
+/// The gain of ternarisation over pure sparsification, H_sparse / H_STC.
+/// Paper: ≈ 4.414 at p = 0.01.
+pub fn ternarisation_gain(p: f64) -> f64 {
+    h_sparse(p) / h_stc(p)
+}
+
+/// Eq. (17): average Golomb bits per non-zero position.
+pub fn golomb_bits_per_position(p: f64) -> f64 {
+    golomb::expected_bits_per_position(p)
+}
+
+/// Per-parameter *encoded* cost of one STC message under Golomb coding:
+/// p · (b̄_pos + 1 sign bit). (Header excluded; it is O(1) per message.)
+pub fn stc_encoded_bits_per_param(p: f64) -> f64 {
+    p * (golomb_bits_per_position(p) + 1.0)
+}
+
+/// Compression rate of STC vs. 32-bit dense communication.
+pub fn stc_compression_rate(p: f64) -> f64 {
+    32.0 / stc_encoded_bits_per_param(p)
+}
+
+/// Compression rate of FedAvg with delay period n (communicates a full
+/// dense model every n iterations): ×n.
+pub fn fedavg_compression_rate(n: usize) -> f64 {
+    n as f64
+}
+
+/// Eq. (13): entropy bound for a τ-round cached partial sum of general
+/// sparse updates grows linearly: H(P^(τ)) ≤ τ · H(ΔW̃).
+pub fn cached_partial_sum_bits_bound(per_round_bits: f64, tau: usize) -> f64 {
+    per_round_bits * tau as f64
+}
+
+/// Eq. (14): for signSGD the cached sum needs only log2(2τ+1) bits per
+/// parameter.
+pub fn signsgd_cached_bits_per_param(tau: usize) -> f64 {
+    ((2 * tau + 1) as f64).log2()
+}
+
+/// Eq. (1): total up/down traffic for a full training run, in bits.
+/// `n_iter` = total SGD iterations, `freq` = communicated rounds per
+/// iteration (1 for STC/signSGD, 1/n for FedAvg), `model_size` = |W|,
+/// `bits_per_param` = H(ΔW) + η for the chosen encoding.
+pub fn total_traffic_bits(
+    n_iter: usize,
+    freq: f64,
+    model_size: usize,
+    bits_per_param: f64,
+) -> f64 {
+    n_iter as f64 * freq * model_size as f64 * bits_per_param
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binary_entropy_symmetric_and_peaked() {
+        assert!((binary_entropy(0.5) - 1.0).abs() < 1e-12);
+        assert!((binary_entropy(0.1) - binary_entropy(0.9)).abs() < 1e-12);
+        assert_eq!(binary_entropy(0.0), 0.0);
+        assert_eq!(binary_entropy(1.0), 0.0);
+    }
+
+    #[test]
+    fn paper_ternarisation_gain_example() {
+        // paper §V-C: at p = 0.01 the gain is 4.414
+        let g = ternarisation_gain(0.01);
+        assert!((g - 4.414).abs() < 5e-3, "gain {g}");
+    }
+
+    #[test]
+    fn paper_golomb_example() {
+        // paper §V-C prints 8.38 (b* = 7); the true eq.-17 optimum is
+        // b* = 6 → 8.11 bits. See golomb::tests::b_star_matches_paper_example.
+        let b = golomb_bits_per_position(0.01);
+        assert!((b - 8.108).abs() < 0.01, "b̄ {b}");
+    }
+
+    #[test]
+    fn stc_rate_at_paper_sparsity() {
+        // paper §VI: p = 1/400 compresses up+down by "roughly ×1050";
+        // with the corrected-optimal Golomb parameter we land at ×1151.
+        let r = stc_compression_rate(1.0 / 400.0);
+        assert!((900.0..1300.0).contains(&r), "rate {r}");
+    }
+
+    #[test]
+    fn h_sparse_dominates_h_stc() {
+        for &p in &[0.001, 0.0025, 0.01, 0.1, 0.5] {
+            assert!(h_sparse(p) > h_stc(p));
+        }
+    }
+
+    #[test]
+    fn signsgd_cache_grows_logarithmically() {
+        let one = signsgd_cached_bits_per_param(1);
+        let ten = signsgd_cached_bits_per_param(10);
+        let hundred = signsgd_cached_bits_per_param(100);
+        assert!((one - (3f64).log2()).abs() < 1e-12);
+        assert!(ten < 10.0 * one); // sub-linear
+        assert!(hundred < 100.0 * one); // strongly sub-linear at τ=100
+        assert!(hundred - ten < 10.0 * (ten - one)); // flattening growth
+    }
+
+    #[test]
+    fn traffic_eq1_fedavg_vs_stc_shape() {
+        // with equal budgets, STC at p=1/400 should beat FedAvg n=400
+        // (paper Table IV trend: ×1050 vs ×400 rate at same freq budget)
+        let model = 865_482;
+        let iters = 20_000;
+        let fedavg = total_traffic_bits(iters, 1.0 / 400.0, model, 32.0);
+        let stc = total_traffic_bits(iters, 1.0, model, stc_encoded_bits_per_param(1.0 / 400.0));
+        assert!(stc < fedavg, "stc {stc} vs fedavg {fedavg}");
+    }
+
+    #[test]
+    fn cached_bound_linear() {
+        assert_eq!(cached_partial_sum_bits_bound(100.0, 5), 500.0);
+    }
+}

@@ -1,0 +1,248 @@
+//! Golomb position coding of sparse ternary updates — the paper's
+//! Algorithms 3 (encode) and 4 (decode), plus the expected-bits formula
+//! eq. (17).
+//!
+//! A sparse ternary tensor is communicated as the *distances* between
+//! consecutive non-zero positions (geometric with success probability p
+//! for a random sparsity pattern) Golomb/Rice-coded with the optimal
+//! parameter b* = 1 + ⌊log2(log(φ−1)/log(1−p))⌋, plus one sign bit per
+//! non-zero element. The magnitude μ is carried once in the header.
+
+use super::bitio::{BitReader, BitWriter};
+use anyhow::{bail, Result};
+
+/// Golden ratio φ.
+const PHI: f64 = 1.618_033_988_749_895;
+
+/// Optimal Rice parameter b* for sparsity rate `p` (eq. 17's b*).
+///
+/// b* = 1 + ⌊log2( log(φ−1) / log(1−p) )⌋, clamped to ≥ 0. For p → 1 the
+/// distances are all 1 and b* = 0 (pure unary) is optimal.
+pub fn optimal_b_star(p: f64) -> u32 {
+    assert!(p > 0.0 && p < 1.0, "sparsity rate must be in (0,1), got {p}");
+    // log(φ−1) = log(0.618..) < 0 and log(1−p) < 0, ratio > 0.
+    let ratio = (PHI - 1.0).ln() / (1.0 - p).ln();
+    if ratio < 1.0 {
+        return 0;
+    }
+    1 + ratio.log2().floor() as u32
+}
+
+/// Expected bits per encoded position, b̄_pos of eq. (17):
+/// b̄_pos = b* + 1 / (1 − (1−p)^(2^b*)).
+pub fn expected_bits_per_position(p: f64) -> f64 {
+    let b = optimal_b_star(p) as f64;
+    b + 1.0 / (1.0 - (1.0 - p).powf(2f64.powf(b)))
+}
+
+/// Encoded sparse-ternary message payload (positions + signs), together
+/// with its exact bit length. The header (μ as f32, element count, tensor
+/// length) is accounted separately by [`header_bits`].
+pub struct GolombEncoded {
+    pub bytes: Vec<u8>,
+    pub len_bits: usize,
+    pub b_star: u32,
+}
+
+/// Fixed header cost of one sparse-ternary message: μ (f32) + non-zero
+/// count (u32) + b* (u8). The tensor length is part of the model schema
+/// and does not travel per message.
+pub const fn header_bits() -> usize {
+    32 + 32 + 8
+}
+
+/// Encode sorted non-zero positions + signs (true = +μ). Positions must be
+/// strictly increasing and < `len` of the flattened tensor.
+///
+/// Layout per element: unary(q) ++ binary_{b*}(r) ++ sign-bit, where
+/// q = (d−1) div 2^b*, r = (d−1) mod 2^b*, d = gap to previous index
+/// (previous = −1 initially) — exactly the paper's Algorithm 3 with the
+/// sign bit interleaved after each position.
+pub fn encode(indices: &[u32], signs: &[bool], p: f64) -> GolombEncoded {
+    assert_eq!(indices.len(), signs.len());
+    let b_star = optimal_b_star(p);
+    let mut w = BitWriter::with_capacity_bits(indices.len() * (b_star as usize + 3));
+    let mut prev: i64 = -1;
+    for (i, &idx) in indices.iter().enumerate() {
+        let d = idx as i64 - prev;
+        debug_assert!(d >= 1, "indices must be strictly increasing");
+        let dm1 = (d - 1) as u64;
+        let q = dm1 >> b_star;
+        let r = dm1 & ((1u64 << b_star) - 1).max(0);
+        w.push_unary(q);
+        if b_star > 0 {
+            w.push_bits(r, b_star);
+        }
+        w.push(signs[i]);
+        prev = idx as i64;
+    }
+    let (bytes, len_bits) = w.finish();
+    GolombEncoded { bytes, len_bits, b_star }
+}
+
+/// Decode `count` (position, sign) pairs; inverse of [`encode`]
+/// (the paper's Algorithm 4, with interleaved sign bits).
+pub fn decode(enc: &GolombEncoded, count: usize, tensor_len: usize) -> Result<(Vec<u32>, Vec<bool>)> {
+    let mut r = BitReader::new(&enc.bytes, enc.len_bits);
+    let mut indices = Vec::with_capacity(count);
+    let mut signs = Vec::with_capacity(count);
+    let mut prev: i64 = -1;
+    for _ in 0..count {
+        let q = match r.read_unary() {
+            Some(q) => q,
+            None => bail!("golomb stream truncated (unary)"),
+        };
+        let rem = if enc.b_star > 0 {
+            match r.read_bits(enc.b_star) {
+                Some(x) => x,
+                None => bail!("golomb stream truncated (remainder)"),
+            }
+        } else {
+            0
+        };
+        let d = (q << enc.b_star) + rem + 1;
+        let idx = prev + d as i64;
+        if idx < 0 || idx as usize >= tensor_len {
+            bail!("decoded index {idx} out of range 0..{tensor_len}");
+        }
+        let sign = match r.read() {
+            Some(s) => s,
+            None => bail!("golomb stream truncated (sign)"),
+        };
+        indices.push(idx as u32);
+        signs.push(sign);
+        prev = idx;
+    }
+    Ok((indices, signs))
+}
+
+/// Total wire bits for a sparse ternary tensor with `nnz` non-zeros:
+/// header + measured payload.
+pub fn message_bits(payload: &GolombEncoded) -> usize {
+    header_bits() + payload.len_bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn random_sparse(rng: &mut Pcg64, len: usize, p: f64) -> (Vec<u32>, Vec<bool>) {
+        let mut idx = Vec::new();
+        let mut signs = Vec::new();
+        for i in 0..len {
+            if rng.f64() < p {
+                idx.push(i as u32);
+                signs.push(rng.below(2) == 1);
+            }
+        }
+        (idx, signs)
+    }
+
+    #[test]
+    fn b_star_matches_paper_example() {
+        // The paper's §V-C example states b̄_pos(0.01) = 8.38, which
+        // corresponds to b* = 7. Evaluating eq. (17) over all b shows
+        // b* = 6 is the true optimum (8.11 bits < 8.38) — the paper's
+        // floor lands one off. We keep the genuinely optimal parameter
+        // and accept the slightly better rate.
+        let b = expected_bits_per_position(0.01);
+        assert!((b - 8.108).abs() < 0.01, "b̄_pos(0.01) = {b}");
+        assert_eq!(optimal_b_star(0.01), 6);
+        // paper's own parameter choice reproduces its printed number:
+        let paper_b = 7.0 + 1.0 / (1.0 - 0.99f64.powf(128.0));
+        assert!((paper_b - 8.38).abs() < 0.01, "paper b*=7 → {paper_b}");
+        // and ours is never worse
+        assert!(b < paper_b);
+    }
+
+    #[test]
+    fn b_star_monotone_in_sparsity() {
+        let mut last = u32::MAX;
+        for &p in &[0.001, 0.004, 0.01, 0.04, 0.1, 0.4] {
+            let b = optimal_b_star(p);
+            assert!(b <= last, "b* should shrink as p grows");
+            last = b;
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seeded(21);
+        for &p in &[0.0025, 0.01, 0.04, 0.25] {
+            for &len in &[1usize, 10, 1000, 20_000] {
+                let (idx, signs) = random_sparse(&mut rng, len, p);
+                let enc = encode(&idx, &signs, p);
+                let (idx2, signs2) = decode(&enc, idx.len(), len).unwrap();
+                assert_eq!(idx, idx2, "p={p} len={len}");
+                assert_eq!(signs, signs2);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_adversarial_patterns() {
+        // all positions set (p≈1 is not allowed; use p=0.5 parameterization)
+        let idx: Vec<u32> = (0..64).collect();
+        let signs = vec![true; 64];
+        let enc = encode(&idx, &signs, 0.5);
+        let (i2, s2) = decode(&enc, 64, 64).unwrap();
+        assert_eq!(idx, i2);
+        assert_eq!(signs, s2);
+
+        // single element at the very end of a large tensor (long unary run)
+        let enc = encode(&[99_999], &[false], 0.0001);
+        let (i2, s2) = decode(&enc, 1, 100_000).unwrap();
+        assert_eq!(i2, vec![99_999]);
+        assert_eq!(s2, vec![false]);
+
+        // empty message
+        let enc = encode(&[], &[], 0.01);
+        assert_eq!(enc.len_bits, 0);
+        let (i2, _) = decode(&enc, 0, 10).unwrap();
+        assert!(i2.is_empty());
+    }
+
+    #[test]
+    fn truncated_stream_errors() {
+        let enc = encode(&[5, 17, 40], &[true, false, true], 0.05);
+        let bad = GolombEncoded {
+            bytes: enc.bytes.clone(),
+            len_bits: enc.len_bits.saturating_sub(3),
+            b_star: enc.b_star,
+        };
+        assert!(decode(&bad, 3, 64).is_err());
+    }
+
+    #[test]
+    fn out_of_range_index_errors() {
+        let enc = encode(&[50], &[true], 0.05);
+        assert!(decode(&enc, 1, 40).is_err());
+    }
+
+    #[test]
+    fn measured_bits_close_to_formula() {
+        // For a genuinely geometric pattern, measured bits/position should
+        // be within a few percent of eq. (17).
+        let mut rng = Pcg64::seeded(22);
+        let p = 0.01;
+        let len = 200_000;
+        let (idx, signs) = random_sparse(&mut rng, len, p);
+        let enc = encode(&idx, &signs, p);
+        let per_pos = (enc.len_bits as f64 - idx.len() as f64) / idx.len() as f64; // minus sign bits
+        let expect = expected_bits_per_position(p);
+        assert!(
+            (per_pos - expect).abs() / expect < 0.05,
+            "measured {per_pos:.3} vs formula {expect:.3}"
+        );
+    }
+
+    #[test]
+    fn compression_beats_naive_16bit_distances() {
+        // paper: ×1.9 vs 16-bit distances at p = 0.01 (we get ×1.97 with
+        // the corrected-optimal b*, see b_star_matches_paper_example)
+        let expect = expected_bits_per_position(0.01);
+        let gain = 16.0 / expect;
+        assert!(gain >= 1.9 && gain < 2.1, "gain {gain}");
+    }
+}

@@ -1,0 +1,263 @@
+//! Compression codecs for communication-efficient federated learning.
+//!
+//! This module implements every method the paper compares (Table I):
+//!
+//! | codec | upstream | downstream | module |
+//! |---|---|---|---|
+//! | none (baseline SGD) | dense 32-bit | dense 32-bit | [`DenseCompressor`] |
+//! | Federated Averaging | dense, delayed n iters | dense, delayed | [`DenseCompressor`] + round-loop delay |
+//! | signSGD (majority vote) | 1 bit/param | 1 bit/param | [`SignCompressor`] |
+//! | top-k sparsification | sparse 32-bit values | — (dense) | [`TopKCompressor`] |
+//! | **STC (ours)** | sparse ternary + Golomb | sparse ternary + Golomb | [`StcCompressor`] |
+//!
+//! Every compressor maps an *accumulated* update (ΔW + residual A, summed
+//! by the caller) to a [`Message`]. Error feedback (residual update,
+//! eqs. 9/11/12) is the caller's single line:
+//! `msg.subtract_from(&mut acc); residual = acc;` — compressors that do
+//! not use error feedback (signSGD) report it via [`Compressor::error_feedback`].
+
+pub mod bitio;
+pub mod entropy;
+pub mod golomb;
+pub mod message;
+pub mod stc;
+
+pub use message::{Message, TernaryTensor};
+
+use crate::util::rng::Pcg64;
+
+/// A lossy update compressor: accumulated dense update → wire message.
+pub trait Compressor: Send {
+    /// Human-readable codec name (used in tables/CSV).
+    fn name(&self) -> String;
+
+    /// Compress the accumulated update into a wire message.
+    fn compress(&mut self, acc: &[f32]) -> Message;
+
+    /// Whether the protocol keeps an error-feedback residual for this
+    /// codec (true for top-k/STC per eqs. 9/11/12; false for signSGD and
+    /// dense communication).
+    fn error_feedback(&self) -> bool {
+        true
+    }
+}
+
+/// Identity "compression": full-precision dense update (baseline SGD and
+/// the per-round payload of Federated Averaging).
+pub struct DenseCompressor;
+
+impl Compressor for DenseCompressor {
+    fn name(&self) -> String {
+        "dense".into()
+    }
+    fn compress(&mut self, acc: &[f32]) -> Message {
+        Message::Dense { values: acc.to_vec() }
+    }
+    fn error_feedback(&self) -> bool {
+        false
+    }
+}
+
+/// Top-k sparsification at full value precision (Aji & Heafield 2017,
+/// DGC): keeps the p-fraction largest-magnitude entries, residual
+/// accumulates the rest.
+pub struct TopKCompressor {
+    pub p: f64,
+    scratch: stc::StcScratch,
+}
+
+impl TopKCompressor {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0);
+        TopKCompressor { p, scratch: stc::StcScratch::default() }
+    }
+}
+
+impl Compressor for TopKCompressor {
+    fn name(&self) -> String {
+        format!("topk(p={})", self.p)
+    }
+    fn compress(&mut self, acc: &[f32]) -> Message {
+        let tern = stc::compress_with(acc, self.p, &mut self.scratch);
+        let values = tern.indices.iter().map(|&i| acc[i as usize]).collect();
+        Message::Sparse { len: acc.len(), indices: tern.indices, values }
+    }
+}
+
+/// Sparse Ternary Compression (Algorithm 1) — the paper's contribution.
+pub struct StcCompressor {
+    pub p: f64,
+    scratch: stc::StcScratch,
+}
+
+impl StcCompressor {
+    pub fn new(p: f64) -> Self {
+        assert!(p > 0.0 && p <= 1.0, "sparsity rate must be in (0,1], got {p}");
+        StcCompressor { p, scratch: stc::StcScratch::default() }
+    }
+}
+
+impl Compressor for StcCompressor {
+    fn name(&self) -> String {
+        format!("stc(p={})", self.p)
+    }
+    fn compress(&mut self, acc: &[f32]) -> Message {
+        Message::Ternary(stc::compress_with(acc, self.p, &mut self.scratch))
+    }
+}
+
+/// signSGD: quantise to the coordinate-wise sign (no error feedback in
+/// Bernstein et al.'s formulation; the server majority-votes).
+pub struct SignCompressor;
+
+impl Compressor for SignCompressor {
+    fn name(&self) -> String {
+        "signsgd".into()
+    }
+    fn compress(&mut self, acc: &[f32]) -> Message {
+        Message::Sign { signs: acc.iter().map(|&x| x >= 0.0).collect() }
+    }
+    fn error_feedback(&self) -> bool {
+        false
+    }
+}
+
+/// Majority vote over sign messages (signSGD with majority vote,
+/// Bernstein et al. 2018): output is sign(Σ signs) scaled by δ. Ties
+/// (possible with an even number of voters) resolve to +1, matching the
+/// `>= 0` convention of [`SignCompressor`].
+pub fn majority_vote(messages: &[&Message], delta: f32) -> Vec<f32> {
+    assert!(!messages.is_empty());
+    let n = messages[0].tensor_len();
+    let mut votes = vec![0i32; n];
+    for m in messages {
+        match m {
+            Message::Sign { signs } => {
+                assert_eq!(signs.len(), n, "sign vote arity mismatch");
+                for (v, &s) in votes.iter_mut().zip(signs) {
+                    *v += if s { 1 } else { -1 };
+                }
+            }
+            _ => panic!("majority_vote over non-sign message"),
+        }
+    }
+    votes.iter().map(|&v| if v >= 0 { delta } else { -delta }).collect()
+}
+
+/// Apply error feedback after compression: `residual = acc − decode(msg)`,
+/// written in place into `acc` (which the caller then swaps into the
+/// stored residual). This is eqs. (9), (11) and (12) of the paper.
+pub fn residual_after(msg: &Message, acc: &mut [f32]) {
+    msg.subtract_from(acc);
+}
+
+/// Construct a compressor by config name. Supported:
+/// `dense`, `topk`, `stc`, `signsgd`.
+pub fn by_name(name: &str, p: f64) -> Box<dyn Compressor> {
+    match name {
+        "dense" => Box::new(DenseCompressor),
+        "topk" => Box::new(TopKCompressor::new(p)),
+        "stc" => Box::new(StcCompressor::new(p)),
+        "signsgd" => Box::new(SignCompressor),
+        other => panic!("unknown compressor '{other}'"),
+    }
+}
+
+/// Deterministic random dense update for tests/benches.
+pub fn random_update(rng: &mut Pcg64, n: usize, scale: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.normal() * scale).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stc_error_feedback_identity() {
+        // acc == decode(msg) + residual must hold exactly.
+        let mut rng = Pcg64::seeded(41);
+        let acc = random_update(&mut rng, 1000, 0.1);
+        let mut c = StcCompressor::new(0.01);
+        let msg = c.compress(&acc);
+        let mut resid = acc.clone();
+        residual_after(&msg, &mut resid);
+        let dense = msg.to_dense();
+        for i in 0..acc.len() {
+            assert!((dense[i] + resid[i] - acc[i]).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn topk_preserves_exact_values() {
+        let acc = vec![0.1f32, -9.0, 0.2, 7.0];
+        let mut c = TopKCompressor::new(0.5);
+        let msg = c.compress(&acc);
+        match &msg {
+            Message::Sparse { indices, values, .. } => {
+                assert_eq!(indices, &vec![1, 3]);
+                assert_eq!(values, &vec![-9.0, 7.0]);
+            }
+            _ => panic!("expected sparse"),
+        }
+    }
+
+    #[test]
+    fn sign_compressor_is_dense_signs() {
+        let mut c = SignCompressor;
+        let msg = c.compress(&[-1.0, 2.0, -0.0, 0.5]);
+        match msg {
+            Message::Sign { signs } => assert_eq!(signs, vec![false, true, true, true]),
+            _ => panic!(),
+        }
+        assert!(!c.error_feedback());
+    }
+
+    #[test]
+    fn majority_vote_basic() {
+        let a = Message::Sign { signs: vec![true, true, false] };
+        let b = Message::Sign { signs: vec![true, false, false] };
+        let c = Message::Sign { signs: vec![false, true, false] };
+        let out = majority_vote(&[&a, &b, &c], 0.1);
+        assert_eq!(out, vec![0.1, 0.1, -0.1]);
+    }
+
+    #[test]
+    fn majority_vote_tie_positive() {
+        let a = Message::Sign { signs: vec![true] };
+        let b = Message::Sign { signs: vec![false] };
+        assert_eq!(majority_vote(&[&a, &b], 1.0), vec![1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "non-sign")]
+    fn majority_vote_rejects_mixed() {
+        let a = Message::Sign { signs: vec![true] };
+        let b = Message::Dense { values: vec![1.0] };
+        majority_vote(&[&a, &b], 1.0);
+    }
+
+    #[test]
+    fn by_name_constructs_all() {
+        for name in ["dense", "topk", "stc", "signsgd"] {
+            let mut c = by_name(name, 0.1);
+            let msg = c.compress(&[1.0, -1.0, 2.0, -2.0, 3.0, -3.0, 4.0, -4.0, 5.0, -5.0]);
+            assert_eq!(msg.tensor_len(), 10);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown compressor")]
+    fn by_name_rejects_unknown() {
+        by_name("quantum", 0.1);
+    }
+
+    #[test]
+    fn stc_wire_cost_far_below_dense() {
+        let mut rng = Pcg64::seeded(42);
+        let acc = random_update(&mut rng, 100_000, 1.0);
+        let dense_bits = DenseCompressor.compress(&acc).wire_bits();
+        let stc_bits = StcCompressor::new(1.0 / 400.0).compress(&acc).wire_bits();
+        let rate = dense_bits as f64 / stc_bits as f64;
+        assert!(rate > 500.0, "measured compression rate {rate}");
+    }
+}

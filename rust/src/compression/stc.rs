@@ -1,0 +1,225 @@
+//! Sparse Ternary Compression — the paper's Algorithm 1.
+//!
+//! STC(T, p):  k ← max(⌊np⌉, 1);  v ← k-th largest |T|;
+//!             mask ← |T| ≥ v;  μ ← mean |T[mask]|;
+//!             T* ← μ · sign(T · mask)
+//!
+//! This is the L3 hot path: it runs on every client upload and once per
+//! round on the server download. The implementation is O(n) via
+//! quickselect (`select_nth_unstable`) on a scratch magnitude buffer —
+//! no full sort. The same computation exists as (a) a pure-jnp reference
+//! (`python/compile/kernels/ref.py`), (b) a Pallas kernel
+//! (`kernels/stc.py`) lowered into the AOT artifacts, and (c) this native
+//! implementation; integration tests pin all three against each other.
+//!
+//! Determinism note: the paper's mask `|T| ≥ v` can select more than k
+//! elements when magnitudes tie at the threshold. We select *exactly* k
+//! (ties broken towards lower flat index) so runs are reproducible; for
+//! float updates exact ties have measure zero, so the two definitions
+//! coincide in practice. `mu` is the mean magnitude of the selected k
+//! elements, matching the paper's 1/k normalisation.
+
+use super::message::TernaryTensor;
+
+/// Number of kept elements for tensor length `n` at sparsity rate `p`:
+/// k = max(round(n·p), 1), clamped to n.
+pub fn k_for(n: usize, p: f64) -> usize {
+    (((n as f64) * p).round() as usize).clamp(1, n.max(1))
+}
+
+/// Scratch buffers reused across compress calls to keep the hot path
+/// allocation-free after warm-up.
+#[derive(Default)]
+pub struct StcScratch {
+    mags: Vec<f32>,
+    idx: Vec<u32>,
+}
+
+/// Compress `t` (flattened update + residual, already summed by the
+/// caller) at sparsity `p`. Returns the sparse ternary tensor T*.
+pub fn compress(t: &[f32], p: f64) -> TernaryTensor {
+    let mut scratch = StcScratch::default();
+    compress_with(t, p, &mut scratch)
+}
+
+/// Allocation-reusing variant of [`compress`].
+pub fn compress_with(t: &[f32], p: f64, scratch: &mut StcScratch) -> TernaryTensor {
+    let n = t.len();
+    assert!(n > 0, "cannot compress empty tensor");
+    let k = k_for(n, p);
+
+    // threshold = k-th largest magnitude, found by quickselect.
+    scratch.mags.clear();
+    scratch.mags.extend(t.iter().map(|x| x.abs()));
+    let kth = {
+        let m = &mut scratch.mags;
+        // select_nth_unstable puts the (k-1)-th largest at position k-1
+        // when sorted descending; we sort ascending so use n-k.
+        let (_, kth, _) = m.select_nth_unstable_by(n - k, |a, b| a.partial_cmp(b).unwrap());
+        *kth
+    };
+
+    // Collect indices with |t| >= kth; may exceed k on ties → trim to
+    // exactly k keeping lowest flat indices (deterministic).
+    scratch.idx.clear();
+    // Fast path: strictly-greater first, then fill ties.
+    for (i, &x) in t.iter().enumerate() {
+        if x.abs() > kth {
+            scratch.idx.push(i as u32);
+        }
+    }
+    if scratch.idx.len() < k {
+        let need = k - scratch.idx.len();
+        let mut got = 0;
+        for (i, &x) in t.iter().enumerate() {
+            if x.abs() == kth {
+                scratch.idx.push(i as u32);
+                got += 1;
+                if got == need {
+                    break;
+                }
+            }
+        }
+    }
+    debug_assert!(scratch.idx.len() >= k);
+    scratch.idx.truncate(k);
+    scratch.idx.sort_unstable();
+
+    let mut signs = Vec::with_capacity(k);
+    let mut mag_sum = 0.0f64;
+    for &i in scratch.idx.iter() {
+        let x = t[i as usize];
+        signs.push(x >= 0.0);
+        mag_sum += x.abs() as f64;
+    }
+    let mu = (mag_sum / k as f64) as f32;
+
+    TernaryTensor { len: n, indices: scratch.idx.clone(), signs, mu, p }
+}
+
+/// Convenience used by tests and the Fig-5 ablation: top-k *without*
+/// ternarisation (full-precision surviving values).
+pub fn topk_sparse(t: &[f32], p: f64) -> (Vec<u32>, Vec<f32>) {
+    let tern = compress(t, p);
+    let values = tern.indices.iter().map(|&i| t[i as usize]).collect();
+    (tern.indices, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn k_for_bounds() {
+        assert_eq!(k_for(1000, 0.01), 10);
+        assert_eq!(k_for(10, 0.001), 1); // floor at 1 (Alg.1 line 3)
+        assert_eq!(k_for(10, 1.0), 10);
+        assert_eq!(k_for(7, 0.5), 4); // rounding
+    }
+
+    #[test]
+    fn selects_top_magnitudes() {
+        let t = [0.1f32, -5.0, 0.2, 3.0, -0.05, 4.0];
+        let c = compress(&t, 0.5); // k = 3
+        assert_eq!(c.indices, vec![1, 3, 5]);
+        assert_eq!(c.signs, vec![false, true, true]);
+        let expect_mu = (5.0 + 3.0 + 4.0) / 3.0;
+        assert!((c.mu - expect_mu).abs() < 1e-6);
+    }
+
+    #[test]
+    fn k_equals_one_keeps_global_max() {
+        let t = [0.0f32, 0.3, -0.9, 0.2];
+        let c = compress(&t, 1e-9);
+        assert_eq!(c.indices, vec![2]);
+        assert_eq!(c.signs, vec![false]);
+        assert!((c.mu - 0.9).abs() < 1e-7);
+    }
+
+    #[test]
+    fn full_density_is_pure_ternarisation() {
+        let t = [1.0f32, -2.0, 3.0];
+        let c = compress(&t, 1.0);
+        assert_eq!(c.nnz(), 3);
+        assert!((c.mu - 2.0).abs() < 1e-7);
+        assert_eq!(c.to_dense(), vec![2.0, -2.0, 2.0]);
+    }
+
+    #[test]
+    fn ties_trimmed_deterministically() {
+        let t = [1.0f32, 1.0, 1.0, 1.0];
+        let c = compress(&t, 0.5); // k=2, all tie
+        assert_eq!(c.indices, vec![0, 1]);
+        assert_eq!(c.nnz(), 2);
+    }
+
+    #[test]
+    fn zero_tensor_still_returns_k_elements() {
+        let t = [0.0f32; 8];
+        let c = compress(&t, 0.25);
+        assert_eq!(c.nnz(), 2);
+        assert_eq!(c.mu, 0.0);
+        assert_eq!(c.to_dense(), vec![0.0; 8]);
+    }
+
+    #[test]
+    fn indices_sorted_strictly_increasing() {
+        let mut rng = Pcg64::seeded(31);
+        for _ in 0..20 {
+            let t: Vec<f32> = (0..997).map(|_| rng.normal()).collect();
+            let c = compress(&t, 0.05);
+            assert!(c.indices.windows(2).all(|w| w[0] < w[1]));
+        }
+    }
+
+    #[test]
+    fn mu_is_mean_of_selected_magnitudes() {
+        let mut rng = Pcg64::seeded(32);
+        let t: Vec<f32> = (0..10_000).map(|_| rng.normal()).collect();
+        let c = compress(&t, 0.01);
+        let mean: f64 = c.indices.iter().map(|&i| t[i as usize].abs() as f64).sum::<f64>()
+            / c.nnz() as f64;
+        assert!((c.mu as f64 - mean).abs() < 1e-6);
+    }
+
+    #[test]
+    fn approximation_error_decreases_with_p() {
+        // ‖T − STC(T)‖ should shrink as p grows (better approximation).
+        let mut rng = Pcg64::seeded(33);
+        let t: Vec<f32> = (0..5000).map(|_| rng.normal()).collect();
+        let mut last = f64::INFINITY;
+        for &p in &[0.001, 0.01, 0.1, 0.5] {
+            let c = compress(&t, p);
+            let dense = c.to_dense();
+            let err: f64 = t
+                .iter()
+                .zip(&dense)
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt();
+            assert!(err < last, "err(p={p}) = {err} not < {last}");
+            last = err;
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh() {
+        let mut rng = Pcg64::seeded(34);
+        let mut scratch = StcScratch::default();
+        for _ in 0..10 {
+            let t: Vec<f32> = (0..503).map(|_| rng.normal()).collect();
+            let a = compress(&t, 0.02);
+            let b = compress_with(&t, 0.02, &mut scratch);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn topk_sparse_values_match_input() {
+        let t = [0.5f32, -3.0, 2.0, 0.1];
+        let (idx, vals) = topk_sparse(&t, 0.5);
+        assert_eq!(idx, vec![1, 2]);
+        assert_eq!(vals, vec![-3.0, 2.0]);
+    }
+}

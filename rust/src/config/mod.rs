@@ -1,0 +1,362 @@
+//! Experiment configuration: the five environment parameters of the
+//! paper's Table III, the compression method, and optimizer settings.
+//!
+//! Configs are constructed programmatically (benches/examples) or parsed
+//! from `key=value` CLI pairs / config files (one `key = value` per line,
+//! `#` comments) — see [`FedConfig::apply_kv`].
+
+use crate::models::ModelSpec;
+
+/// The compression method under test (Table I rows).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Method {
+    /// uncompressed distributed SGD, communicate every iteration
+    Baseline,
+    /// Federated Averaging: communicate full updates every n iterations
+    FedAvg { n: usize },
+    /// signSGD with majority vote and coordinate step δ
+    SignSgd { delta: f32 },
+    /// top-k sparsification (upload only; downstream stays dense)
+    TopK { p: f64 },
+    /// top-k sparsification of BOTH directions at full value precision —
+    /// the paper's eq. (10) protocol before ternarisation (Fig. 4), and
+    /// the "pure sparsity" arm of the Fig. 5 ablation
+    SparseUpDown { p_up: f64, p_down: f64 },
+    /// Sparse Ternary Compression (upload and download)
+    Stc { p_up: f64, p_down: f64 },
+    /// STC combined with FedAvg-style communication delay (n local
+    /// iterations per round) — appendix Fig. 12's sparsity×delay grid
+    Hybrid { p: f64, n: usize },
+}
+
+impl Method {
+    /// Local SGD iterations per communication round.
+    pub fn local_iters(&self) -> usize {
+        match self {
+            Method::FedAvg { n } => *n,
+            Method::Hybrid { n, .. } => *n,
+            _ => 1,
+        }
+    }
+
+    /// Whether the client keeps an error-feedback residual.
+    pub fn client_residual(&self) -> bool {
+        matches!(
+            self,
+            Method::TopK { .. }
+                | Method::Stc { .. }
+                | Method::SparseUpDown { .. }
+                | Method::Hybrid { .. }
+        )
+    }
+
+    /// Whether the server compresses the downstream update (R1).
+    pub fn downstream_compressed(&self) -> bool {
+        matches!(
+            self,
+            Method::Stc { .. }
+                | Method::SignSgd { .. }
+                | Method::SparseUpDown { .. }
+                | Method::Hybrid { .. }
+        )
+    }
+
+    /// Short display label matching the paper's figure legends.
+    pub fn label(&self) -> String {
+        match self {
+            Method::Baseline => "baseline".into(),
+            Method::FedAvg { n } => format!("fedavg(n={n})"),
+            Method::SignSgd { .. } => "signsgd".into(),
+            Method::TopK { p } => format!("topk(p={p})"),
+            Method::SparseUpDown { p_up, .. } => format!("sparse-ud(p={p_up})"),
+            Method::Stc { p_up, .. } => format!("stc(p={p_up})"),
+            Method::Hybrid { p, n } => format!("stc+delay(p={p},n={n})"),
+        }
+    }
+
+    /// Parse `baseline`, `fedavg:400`, `signsgd:0.0002`, `topk:0.01`,
+    /// `stc:0.0025` or `stc:0.0025:0.0025` (up:down).
+    pub fn parse(s: &str) -> anyhow::Result<Method> {
+        let parts: Vec<&str> = s.split(':').collect();
+        Ok(match parts[0] {
+            "baseline" => Method::Baseline,
+            "fedavg" => Method::FedAvg {
+                n: parts.get(1).unwrap_or(&"400").parse()?,
+            },
+            "signsgd" => Method::SignSgd {
+                delta: parts.get(1).unwrap_or(&"0.0002").parse()?,
+            },
+            "topk" => Method::TopK { p: parts.get(1).unwrap_or(&"0.0025").parse()? },
+            "stc" => {
+                let p_up: f64 = parts.get(1).unwrap_or(&"0.0025").parse()?;
+                let p_down: f64 = parts.get(2).map(|s| s.parse()).transpose()?.unwrap_or(p_up);
+                Method::Stc { p_up, p_down }
+            }
+            "sparse" => {
+                let p_up: f64 = parts.get(1).unwrap_or(&"0.0025").parse()?;
+                let p_down: f64 = parts.get(2).map(|s| s.parse()).transpose()?.unwrap_or(p_up);
+                Method::SparseUpDown { p_up, p_down }
+            }
+            "hybrid" => Method::Hybrid {
+                p: parts.get(1).unwrap_or(&"0.01").parse()?,
+                n: parts.get(2).unwrap_or(&"10").parse()?,
+            },
+            other => anyhow::bail!("unknown method '{other}'"),
+        })
+    }
+}
+
+/// Full federated-learning environment + training configuration.
+/// Defaults = the paper's Table III base configuration.
+#[derive(Clone, Debug)]
+pub struct FedConfig {
+    /// model name (logreg | cnn | kws | lstm); the dataset follows the model
+    pub model: String,
+    /// total number of clients N
+    pub num_clients: usize,
+    /// participation fraction η per round
+    pub participation: f64,
+    /// classes per client c (Algorithm 5)
+    pub classes_per_client: usize,
+    /// local mini-batch size b
+    pub batch_size: usize,
+    /// eq. 18 volume concentration γ (1.0 = balanced)
+    pub gamma: f64,
+    /// eq. 18 volume floor α
+    pub alpha: f64,
+    pub method: Method,
+    pub lr: f32,
+    pub momentum: f32,
+    /// total SGD iteration budget per client
+    pub iterations: usize,
+    /// evaluate the global model every this many iterations
+    pub eval_every: usize,
+    pub seed: u64,
+    /// train/test set sizes for the synthetic dataset
+    pub train_examples: usize,
+    pub test_examples: usize,
+    /// maximum number of rounds the server caches partial sums for
+    /// (stragglers farther behind download the full model) — §V-B
+    pub cache_rounds: usize,
+}
+
+impl Default for FedConfig {
+    fn default() -> Self {
+        FedConfig {
+            model: "logreg".into(),
+            num_clients: 100,
+            participation: 0.1,
+            classes_per_client: 10,
+            batch_size: 20,
+            gamma: 1.0,
+            alpha: 0.1,
+            method: Method::Stc { p_up: 1.0 / 400.0, p_down: 1.0 / 400.0 },
+            lr: 0.04,
+            momentum: 0.0,
+            iterations: 400,
+            eval_every: 20,
+            seed: 42,
+            train_examples: 4000,
+            test_examples: 1000,
+            cache_rounds: 1000,
+        }
+    }
+}
+
+impl FedConfig {
+    /// Config for a model with the paper's per-task hyperparameters.
+    pub fn for_model(model: &str) -> Self {
+        let spec = ModelSpec::by_name(model);
+        let (lr, momentum) = spec.default_hparams();
+        FedConfig { model: model.into(), lr, momentum, ..Default::default() }
+    }
+
+    /// Number of participating clients per round, ⌈ηN⌉ clamped to ≥1.
+    pub fn clients_per_round(&self) -> usize {
+        ((self.participation * self.num_clients as f64).round() as usize)
+            .clamp(1, self.num_clients)
+    }
+
+    /// Communication rounds for the iteration budget.
+    pub fn rounds(&self) -> usize {
+        (self.iterations / self.method.local_iters()).max(1)
+    }
+
+    /// Apply one `key=value` override; errors on unknown keys so typos in
+    /// sweep scripts fail fast.
+    pub fn apply_kv(&mut self, key: &str, value: &str) -> anyhow::Result<()> {
+        match key {
+            "model" => self.model = value.into(),
+            "clients" | "num_clients" => self.num_clients = value.parse()?,
+            "participation" | "eta" => self.participation = value.parse()?,
+            "classes" | "classes_per_client" => self.classes_per_client = value.parse()?,
+            "batch" | "batch_size" => self.batch_size = value.parse()?,
+            "gamma" => self.gamma = value.parse()?,
+            "alpha" => self.alpha = value.parse()?,
+            "method" => self.method = Method::parse(value)?,
+            "lr" => self.lr = value.parse()?,
+            "momentum" => self.momentum = value.parse()?,
+            "iterations" | "iters" => self.iterations = value.parse()?,
+            "eval_every" => self.eval_every = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "train_examples" => self.train_examples = value.parse()?,
+            "test_examples" => self.test_examples = value.parse()?,
+            "cache_rounds" => self.cache_rounds = value.parse()?,
+            other => anyhow::bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: `key = value` lines, `#` comments.
+    pub fn apply_file(&mut self, text: &str) -> anyhow::Result<()> {
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.split('#').next().unwrap().trim();
+            if line.is_empty() {
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("line {}: expected key = value", lineno + 1))?;
+            self.apply_kv(k.trim(), v.trim())?;
+        }
+        Ok(())
+    }
+
+    /// Human-readable one-liner used in logs and bench banners.
+    pub fn describe(&self) -> String {
+        format!(
+            "{} {} clients:{}/{} classes:{} b:{} γ:{} lr:{} m:{} iters:{}",
+            self.model,
+            self.method.label(),
+            self.clients_per_round(),
+            self.num_clients,
+            self.classes_per_client,
+            self.batch_size,
+            self.gamma,
+            self.lr,
+            self.momentum,
+            self.iterations
+        )
+    }
+
+    /// Validate invariants; called by the sim before running.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        anyhow::ensure!(self.num_clients >= 1, "need at least one client");
+        anyhow::ensure!(
+            self.participation > 0.0 && self.participation <= 1.0,
+            "participation must be in (0,1]"
+        );
+        anyhow::ensure!(self.batch_size >= 1, "batch size must be >= 1");
+        anyhow::ensure!(self.classes_per_client >= 1, "classes_per_client >= 1");
+        anyhow::ensure!(self.gamma > 0.0 && self.gamma <= 1.0, "gamma in (0,1]");
+        anyhow::ensure!(self.iterations >= 1, "iterations >= 1");
+        match self.method {
+            Method::Stc { p_up, p_down } | Method::SparseUpDown { p_up, p_down } => {
+                anyhow::ensure!(p_up > 0.0 && p_up <= 1.0, "p_up in (0,1]");
+                anyhow::ensure!(p_down > 0.0 && p_down <= 1.0, "p_down in (0,1]");
+            }
+            Method::Hybrid { p, n } => {
+                anyhow::ensure!(p > 0.0 && p <= 1.0, "p in (0,1]");
+                anyhow::ensure!(n >= 1, "delay n >= 1");
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_table_iii() {
+        let c = FedConfig::default();
+        assert_eq!(c.num_clients, 100);
+        assert_eq!(c.participation, 0.1);
+        assert_eq!(c.classes_per_client, 10);
+        assert_eq!(c.batch_size, 20);
+        assert_eq!(c.gamma, 1.0);
+        assert_eq!(c.clients_per_round(), 10);
+    }
+
+    #[test]
+    fn method_parsing() {
+        assert_eq!(Method::parse("baseline").unwrap(), Method::Baseline);
+        assert_eq!(Method::parse("fedavg:100").unwrap(), Method::FedAvg { n: 100 });
+        assert_eq!(
+            Method::parse("stc:0.01").unwrap(),
+            Method::Stc { p_up: 0.01, p_down: 0.01 }
+        );
+        assert_eq!(
+            Method::parse("stc:0.01:0.04").unwrap(),
+            Method::Stc { p_up: 0.01, p_down: 0.04 }
+        );
+        assert!(Method::parse("magic").is_err());
+    }
+
+    #[test]
+    fn local_iters_fedavg_only() {
+        assert_eq!(Method::FedAvg { n: 25 }.local_iters(), 25);
+        assert_eq!(Method::Baseline.local_iters(), 1);
+        assert_eq!(Method::Stc { p_up: 0.1, p_down: 0.1 }.local_iters(), 1);
+    }
+
+    #[test]
+    fn rounds_respect_budget() {
+        let mut c = FedConfig::default();
+        c.iterations = 2000;
+        c.method = Method::FedAvg { n: 400 };
+        assert_eq!(c.rounds(), 5);
+        c.method = Method::Baseline;
+        assert_eq!(c.rounds(), 2000);
+    }
+
+    #[test]
+    fn kv_overrides() {
+        let mut c = FedConfig::default();
+        c.apply_kv("clients", "50").unwrap();
+        c.apply_kv("method", "fedavg:25").unwrap();
+        c.apply_kv("batch", "4").unwrap();
+        assert_eq!(c.num_clients, 50);
+        assert_eq!(c.method, Method::FedAvg { n: 25 });
+        assert_eq!(c.batch_size, 4);
+        assert!(c.apply_kv("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn config_file_parsing() {
+        let mut c = FedConfig::default();
+        c.apply_file("# comment\nclients = 7\n\nmethod = stc:0.04  # inline\n").unwrap();
+        assert_eq!(c.num_clients, 7);
+        assert_eq!(c.method, Method::Stc { p_up: 0.04, p_down: 0.04 });
+        assert!(c.apply_file("oops").is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = FedConfig::default();
+        assert!(c.validate().is_ok());
+        c.participation = 0.0;
+        assert!(c.validate().is_err());
+        c.participation = 0.5;
+        c.batch_size = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn clients_per_round_rounds_up_to_one() {
+        let mut c = FedConfig::default();
+        c.num_clients = 5;
+        c.participation = 0.01;
+        assert_eq!(c.clients_per_round(), 1);
+    }
+
+    #[test]
+    fn downstream_compression_flags() {
+        assert!(Method::Stc { p_up: 0.1, p_down: 0.1 }.downstream_compressed());
+        assert!(Method::SignSgd { delta: 1e-4 }.downstream_compressed());
+        assert!(!Method::TopK { p: 0.1 }.downstream_compressed());
+        assert!(!Method::FedAvg { n: 10 }.downstream_compressed());
+    }
+}

@@ -1,0 +1,24 @@
+//! The federated coordinator — the paper's system contribution
+//! (Algorithm 2): client-side local training with error-feedback
+//! residuals, upstream compression, server-side aggregation with its own
+//! residual and downstream compression, the partial-sum cache that keeps
+//! stragglers synchronised (§V-B), and bit-exact communication
+//! accounting.
+//!
+//! Key structural insight encoded here: under Algorithm 2 every client
+//! tracks the *global* model — local full-precision progress is never
+//! kept (it lives in the residual A_i), so a client's parameters
+//! immediately after synchronisation equal the server's current W.
+//! Clients therefore hold only their residual, momentum buffer, batch
+//! cursor and sync round; the parameter vector itself is a per-round
+//! scratch copy of the server model. This is behaviourally identical to
+//! the paper's download-ΔW̃-and-apply protocol while keeping per-client
+//! memory to the state that genuinely differs per client.
+
+pub mod client;
+pub mod round;
+pub mod server;
+
+pub use client::ClientState;
+pub use round::FederatedRun;
+pub use server::Server;

@@ -1,0 +1,322 @@
+//! The communication-round orchestrator: Algorithm 2's outer loop.
+
+use super::client::{ClientState, LocalScratch};
+use super::server::Server;
+use crate::compression::{self, Compressor, Message};
+use crate::config::{FedConfig, Method};
+use crate::data::{split_by_class, Dataset, SplitSpec};
+use crate::metrics::CommLedger;
+use crate::models::Trainer;
+use crate::util::rng::Pcg64;
+
+/// A fully wired federated run: server + clients + codec + accounting.
+/// Drive it with [`FederatedRun::run_round`]; evaluation cadence is the
+/// caller's concern (see `sim::Experiment`).
+pub struct FederatedRun {
+    pub cfg: FedConfig,
+    pub server: Server,
+    pub clients: Vec<ClientState>,
+    pub ledger: CommLedger,
+    up_compressor: Box<dyn Compressor>,
+    sampler: Pcg64,
+    scratch: LocalScratch,
+    /// scratch parameter vector (the client's working copy of W)
+    work_params: Vec<f32>,
+    /// participant message buffer reused across rounds
+    round_msgs: Vec<Message>,
+    /// ids drawn for the current round (exposed for diagnostics/tests)
+    pub last_participants: Vec<usize>,
+}
+
+impl FederatedRun {
+    /// Build the run: splits `train` over clients per Algorithm 5 and
+    /// initialises all state. `init_params` is the flattened W^(0).
+    pub fn new(cfg: FedConfig, train: &Dataset, init_params: Vec<f32>) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let dim = init_params.len();
+        let spec = SplitSpec {
+            num_clients: cfg.num_clients,
+            classes_per_client: cfg.classes_per_client,
+            gamma: cfg.gamma,
+            alpha: cfg.alpha,
+            seed: cfg.seed,
+        };
+        let shards = split_by_class(train, &spec);
+        let uses_residual = cfg.method.client_residual();
+        let clients: Vec<ClientState> = shards
+            .into_iter()
+            .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg, uses_residual))
+            .collect();
+
+        let up_compressor: Box<dyn Compressor> = match &cfg.method {
+            Method::Baseline | Method::FedAvg { .. } => Box::new(compression::DenseCompressor),
+            Method::SignSgd { .. } => Box::new(compression::SignCompressor),
+            Method::TopK { p } => Box::new(compression::TopKCompressor::new(*p)),
+            Method::SparseUpDown { p_up, .. } => {
+                Box::new(compression::TopKCompressor::new(*p_up))
+            }
+            Method::Stc { p_up, .. } => Box::new(compression::StcCompressor::new(*p_up)),
+            Method::Hybrid { p, .. } => Box::new(compression::StcCompressor::new(*p)),
+        };
+
+        let server = Server::new(init_params, cfg.method.clone(), cfg.cache_rounds);
+        let sampler = Pcg64::new(cfg.seed, 0x5a3b);
+        Ok(FederatedRun {
+            ledger: CommLedger::new(cfg.num_clients),
+            server,
+            clients,
+            up_compressor,
+            sampler,
+            scratch: LocalScratch::default(),
+            work_params: vec![0.0; dim],
+            round_msgs: Vec::new(),
+            last_participants: Vec::new(),
+            cfg,
+        })
+    }
+
+    /// Iterations consumed so far (per-client budget axis of the paper).
+    pub fn iterations_done(&self) -> usize {
+        self.server.round * self.cfg.method.local_iters()
+    }
+
+    /// Execute one communication round. Returns the mean local training
+    /// loss over participants.
+    pub fn run_round(&mut self, trainer: &mut dyn Trainer, data: &Dataset) -> f32 {
+        let m = self.cfg.clients_per_round();
+        let ids = self.sampler.sample_without_replacement(self.cfg.num_clients, m);
+        self.last_participants = ids.clone();
+        let local_iters = self.cfg.method.local_iters();
+
+        self.round_msgs.clear();
+        let mut loss_sum = 0.0f64;
+        for &id in &ids {
+            let client = &mut self.clients[id];
+
+            // 1. synchronise: download the partial sum P^(s) (or full
+            //    model) covering the rounds missed since last sync.
+            let down_bits = self.server.straggler_download_bits(client.last_sync_round);
+            if down_bits > 0 {
+                self.ledger.record_download(down_bits);
+            }
+            client.last_sync_round = self.server.round;
+
+            // 2. local training from the (now current) global model.
+            self.work_params.copy_from_slice(&self.server.params);
+            let loss = client.local_train(
+                &mut self.work_params,
+                trainer,
+                data,
+                local_iters,
+                self.cfg.lr,
+                self.cfg.momentum,
+                &mut self.scratch,
+            );
+            loss_sum += loss as f64;
+
+            // 3. ΔW_i = W_local − W_global, compress with error feedback,
+            //    upload.
+            let mut delta = std::mem::take(&mut self.work_params);
+            for (d, w) in delta.iter_mut().zip(&self.server.params) {
+                *d -= *w;
+            }
+            let msg = client.compress_update(delta, self.up_compressor.as_mut());
+            self.ledger.record_upload(msg.wire_bits());
+            self.round_msgs.push(msg);
+            self.work_params = vec![0.0; self.server.dim()];
+        }
+
+        // 4. server aggregates, applies, and enqueues the broadcast; the
+        //    broadcast's download cost is charged to clients when they
+        //    next synchronise (straggler_download_bits).
+        let msgs = std::mem::take(&mut self.round_msgs);
+        self.server.aggregate_and_apply(&msgs);
+        self.round_msgs = msgs;
+
+        (loss_sum / ids.len() as f64) as f32
+    }
+
+    /// Drain accounting for clients that never participated again: at the
+    /// end of training every client must still download the remaining
+    /// updates once to own the final model. Called once by the sim after
+    /// the last round so per-client download averages match the paper's
+    /// accounting (every client ends up with W^(T)).
+    pub fn settle_final_downloads(&mut self) {
+        for c in &mut self.clients {
+            let bits = self.server.straggler_download_bits(c.last_sync_round);
+            if bits > 0 {
+                self.ledger.record_download(bits);
+            }
+            c.last_sync_round = self.server.round;
+        }
+    }
+
+    /// Mean client residual norm (staleness diagnostic, §VI-C).
+    pub fn mean_residual_norm(&self) -> f64 {
+        if self.clients.is_empty() || self.clients[0].residual.is_empty() {
+            return 0.0;
+        }
+        self.clients.iter().map(|c| c.residual_norm()).sum::<f64>() / self.clients.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::task_dataset;
+    use crate::models::native::NativeLogreg;
+    use crate::models::ModelSpec;
+
+    fn quick_cfg(method: Method) -> FedConfig {
+        FedConfig {
+            model: "logreg".into(),
+            num_clients: 10,
+            participation: 1.0,
+            classes_per_client: 10,
+            batch_size: 10,
+            method,
+            lr: 0.05,
+            momentum: 0.0,
+            iterations: 30,
+            eval_every: 10,
+            seed: 7,
+            train_examples: 500,
+            test_examples: 200,
+            ..Default::default()
+        }
+    }
+
+    fn build(method: Method) -> (FederatedRun, NativeLogreg, Dataset, Dataset) {
+        let (train, test) = task_dataset("mnist", 7);
+        let train = train.subset(&(0..500).collect::<Vec<_>>());
+        let cfg = quick_cfg(method);
+        let spec = ModelSpec::by_name("logreg");
+        let run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
+        (run, NativeLogreg::new(10), train, test)
+    }
+
+    #[test]
+    fn full_participation_samples_everyone() {
+        let (mut run, mut trainer, train, _) = build(Method::Baseline);
+        run.run_round(&mut trainer, &train);
+        let mut ids = run.last_participants.clone();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn partial_participation_samples_subset() {
+        let (train, _) = task_dataset("mnist", 7);
+        let mut cfg = quick_cfg(Method::Baseline);
+        cfg.participation = 0.3;
+        let spec = ModelSpec::by_name("logreg");
+        let mut run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
+        let mut trainer = NativeLogreg::new(10);
+        run.run_round(&mut trainer, &train);
+        assert_eq!(run.last_participants.len(), 3);
+    }
+
+    #[test]
+    fn rounds_advance_server_and_ledger() {
+        let (mut run, mut trainer, train, _) = build(Method::Stc {
+            p_up: 0.01,
+            p_down: 0.01,
+        });
+        for _ in 0..3 {
+            let loss = run.run_round(&mut trainer, &train);
+            assert!(loss.is_finite());
+        }
+        assert_eq!(run.server.round, 3);
+        assert_eq!(run.ledger.uploads, 30); // 10 clients × 3 rounds
+        assert!(run.ledger.total_up_bits > 0);
+        // every participant except round-1 joiners downloaded something
+        assert!(run.ledger.total_down_bits > 0);
+    }
+
+    #[test]
+    fn stc_uploads_far_smaller_than_dense() {
+        let (mut run_stc, mut trainer, train, _) = build(Method::Stc {
+            p_up: 0.0025,
+            p_down: 0.0025,
+        });
+        run_stc.run_round(&mut trainer, &train);
+        let (mut run_dense, mut trainer2, train2, _) = build(Method::Baseline);
+        run_dense.run_round(&mut trainer2, &train2);
+        let ratio =
+            run_dense.ledger.total_up_bits as f64 / run_stc.ledger.total_up_bits as f64;
+        assert!(ratio > 100.0, "compression ratio {ratio}");
+    }
+
+    #[test]
+    fn training_actually_learns_stc() {
+        let (mut run, mut trainer, train, test) = build(Method::Stc {
+            p_up: 0.05,
+            p_down: 0.05,
+        });
+        let before = trainer.eval(&run.server.params, &test).accuracy;
+        for _ in 0..60 {
+            run.run_round(&mut trainer, &train);
+        }
+        let after = trainer.eval(&run.server.params, &test).accuracy;
+        assert!(
+            after > before + 0.25,
+            "STC federated training failed to learn: {before} → {after}"
+        );
+    }
+
+    #[test]
+    fn training_learns_fedavg() {
+        let (mut run, mut trainer, train, test) = build(Method::FedAvg { n: 5 });
+        for _ in 0..12 {
+            run.run_round(&mut trainer, &train);
+        }
+        let after = trainer.eval(&run.server.params, &test).accuracy;
+        assert!(after > 0.5, "FedAvg accuracy {after}");
+        assert_eq!(run.iterations_done(), 60);
+    }
+
+    #[test]
+    fn settle_final_downloads_synchronises_everyone() {
+        let (train, _) = task_dataset("mnist", 7);
+        let mut cfg = quick_cfg(Method::Stc { p_up: 0.01, p_down: 0.01 });
+        cfg.participation = 0.2;
+        let spec = ModelSpec::by_name("logreg");
+        let mut run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
+        let mut trainer = NativeLogreg::new(10);
+        for _ in 0..5 {
+            run.run_round(&mut trainer, &train);
+        }
+        run.settle_final_downloads();
+        for c in &run.clients {
+            assert_eq!(c.last_sync_round, run.server.round);
+        }
+        // calling again adds nothing
+        let down = run.ledger.total_down_bits;
+        run.settle_final_downloads();
+        assert_eq!(run.ledger.total_down_bits, down);
+    }
+
+    #[test]
+    fn client_shards_respect_class_constraint() {
+        let (train, _) = task_dataset("mnist", 7);
+        let mut cfg = quick_cfg(Method::Baseline);
+        cfg.classes_per_client = 2;
+        let spec = ModelSpec::by_name("logreg");
+        let run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
+        for c in &run.clients {
+            assert!(c.num_examples > 0);
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (mut a, mut ta, train_a, _) = build(Method::Stc { p_up: 0.02, p_down: 0.02 });
+        let (mut b, mut tb, train_b, _) = build(Method::Stc { p_up: 0.02, p_down: 0.02 });
+        for _ in 0..4 {
+            a.run_round(&mut ta, &train_a);
+            b.run_round(&mut tb, &train_b);
+        }
+        assert_eq!(a.server.params, b.server.params);
+        assert_eq!(a.ledger.total_up_bits, b.ledger.total_up_bits);
+    }
+}

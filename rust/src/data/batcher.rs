@@ -1,0 +1,136 @@
+//! Mini-batch sampling for local client SGD.
+//!
+//! Epoch-shuffled sampling without replacement within an epoch (standard
+//! SGD practice, also what the paper's reference implementation does):
+//! each client iterates a private shuffled permutation of its shard and
+//! reshuffles when exhausted. Batches shorter than `batch_size` never
+//! occur — the permutation wraps into the next epoch instead, so the
+//! static-shape HLO train-step always receives a full batch.
+
+use crate::util::rng::Pcg64;
+
+/// Cyclic shuffled index iterator over a client shard.
+pub struct Batcher {
+    /// indices into the *master* dataset
+    indices: Vec<usize>,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Pcg64,
+    pub batch_size: usize,
+}
+
+impl Batcher {
+    pub fn new(indices: Vec<usize>, batch_size: usize, seed: u64, stream: u64) -> Self {
+        assert!(batch_size >= 1);
+        assert!(!indices.is_empty(), "client shard is empty");
+        let mut rng = Pcg64::new(seed, 0x8a7c_0000 ^ stream);
+        let mut order: Vec<usize> = (0..indices.len()).collect();
+        rng.shuffle(&mut order);
+        Batcher { indices, order, cursor: 0, rng, batch_size }
+    }
+
+    /// Number of examples on this client.
+    pub fn len(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.indices.is_empty()
+    }
+
+    /// Fill `out` (length = batch_size) with the next batch of master
+    /// dataset indices.
+    pub fn next_batch(&mut self, out: &mut Vec<usize>) {
+        out.clear();
+        for _ in 0..self.batch_size {
+            if self.cursor == self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            out.push(self.indices[self.order[self.cursor]]);
+            self.cursor += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batches_have_requested_size() {
+        let mut b = Batcher::new((100..110).collect(), 3, 1, 0);
+        let mut out = Vec::new();
+        for _ in 0..10 {
+            b.next_batch(&mut out);
+            assert_eq!(out.len(), 3);
+            assert!(out.iter().all(|&i| (100..110).contains(&i)));
+        }
+    }
+
+    #[test]
+    fn epoch_covers_all_examples() {
+        let mut b = Batcher::new((0..12).collect(), 4, 2, 0);
+        let mut seen = Vec::new();
+        let mut out = Vec::new();
+        for _ in 0..3 {
+            b.next_batch(&mut out);
+            seen.extend_from_slice(&out);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, (0..12).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn wraps_across_epochs_without_short_batches() {
+        // 5 examples, batch 2 → batches straddle the epoch boundary
+        let mut b = Batcher::new((0..5).collect(), 2, 3, 0);
+        let mut out = Vec::new();
+        let mut count = vec![0usize; 5];
+        for _ in 0..5 {
+            b.next_batch(&mut out);
+            assert_eq!(out.len(), 2);
+            for &i in &out {
+                count[i] += 1;
+            }
+        }
+        // 10 draws over 5 examples = two full epochs
+        assert_eq!(count.iter().sum::<usize>(), 10);
+        for c in count {
+            assert_eq!(c, 2);
+        }
+    }
+
+    #[test]
+    fn batch_size_one_supported() {
+        // (paper Fig. 7 goes down to b = 1)
+        let mut b = Batcher::new(vec![7, 8], 1, 4, 0);
+        let mut out = Vec::new();
+        b.next_batch(&mut out);
+        assert_eq!(out.len(), 1);
+    }
+
+    #[test]
+    fn batch_larger_than_shard_wraps() {
+        let mut b = Batcher::new(vec![1, 2, 3], 8, 5, 0);
+        let mut out = Vec::new();
+        b.next_batch(&mut out);
+        assert_eq!(out.len(), 8);
+    }
+
+    #[test]
+    fn different_streams_differ() {
+        let mut a = Batcher::new((0..100).collect(), 10, 1, 0);
+        let mut b = Batcher::new((0..100).collect(), 10, 1, 1);
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        a.next_batch(&mut oa);
+        b.next_batch(&mut ob);
+        assert_ne!(oa, ob);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_shard_rejected() {
+        Batcher::new(vec![], 4, 1, 0);
+    }
+}

@@ -1,0 +1,131 @@
+//! Dataset substrate: in-memory datasets, synthetic class-structured data
+//! generators (offline stand-ins for MNIST / CIFAR-10 / SpeechCommands /
+//! Fashion-MNIST — see DESIGN.md substitution table), the paper's
+//! Algorithm 5 label-skew splitter and eq. (18) unbalanced volumes.
+
+pub mod batcher;
+pub mod split;
+pub mod synth;
+
+pub use batcher::Batcher;
+pub use split::{split_by_class, unbalanced_fractions, ClientShard, SplitSpec};
+pub use synth::SynthSpec;
+
+/// A dense in-memory classification dataset (row-major features).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// `n × dim` row-major feature matrix
+    pub features: Vec<f32>,
+    /// feature dimensionality
+    pub dim: usize,
+    /// labels in `0..num_classes`, length n
+    pub labels: Vec<u8>,
+    pub num_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Feature row of example `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.features[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Gather a sub-dataset by example indices.
+    pub fn subset(&self, indices: &[usize]) -> Dataset {
+        let mut features = Vec::with_capacity(indices.len() * self.dim);
+        let mut labels = Vec::with_capacity(indices.len());
+        for &i in indices {
+            features.extend_from_slice(self.row(i));
+            labels.push(self.labels[i]);
+        }
+        Dataset { features, dim: self.dim, labels, num_classes: self.num_classes }
+    }
+
+    /// Copy batch `indices` into caller-provided buffers (hot path: no
+    /// allocation). `y_out` is one-hot encoded? No — raw class ids as f32,
+    /// matching the L2 eval/train artifacts which take integer labels.
+    pub fn gather_batch(&self, indices: &[usize], x_out: &mut [f32], y_out: &mut [f32]) {
+        debug_assert_eq!(x_out.len(), indices.len() * self.dim);
+        debug_assert_eq!(y_out.len(), indices.len());
+        for (bi, &i) in indices.iter().enumerate() {
+            x_out[bi * self.dim..(bi + 1) * self.dim].copy_from_slice(self.row(i));
+            y_out[bi] = self.labels[i] as f32;
+        }
+    }
+
+    /// Per-class example counts.
+    pub fn class_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.num_classes];
+        for &y in &self.labels {
+            counts[y as usize] += 1;
+        }
+        counts
+    }
+
+    /// Number of distinct classes present (the paper's
+    /// |{y : (x,y) ∈ D_i}| per-client statistic).
+    pub fn distinct_classes(&self) -> usize {
+        self.class_counts().iter().filter(|&&c| c > 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset {
+            features: vec![
+                0.0, 0.1, //
+                1.0, 1.1, //
+                2.0, 2.1, //
+                3.0, 3.1,
+            ],
+            dim: 2,
+            labels: vec![0, 1, 0, 1],
+            num_classes: 2,
+        }
+    }
+
+    #[test]
+    fn row_access() {
+        let d = toy();
+        assert_eq!(d.row(2), &[2.0, 2.1]);
+        assert_eq!(d.len(), 4);
+    }
+
+    #[test]
+    fn subset_gathers() {
+        let d = toy();
+        let s = d.subset(&[3, 0]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.row(0), &[3.0, 3.1]);
+        assert_eq!(s.labels, vec![1, 0]);
+    }
+
+    #[test]
+    fn gather_batch_fills_buffers() {
+        let d = toy();
+        let mut x = vec![0.0; 4];
+        let mut y = vec![0.0; 2];
+        d.gather_batch(&[1, 2], &mut x, &mut y);
+        assert_eq!(x, vec![1.0, 1.1, 2.0, 2.1]);
+        assert_eq!(y, vec![1.0, 0.0]);
+    }
+
+    #[test]
+    fn class_counts_and_distinct() {
+        let d = toy();
+        assert_eq!(d.class_counts(), vec![2, 2]);
+        assert_eq!(d.distinct_classes(), 2);
+        let s = d.subset(&[0, 2]);
+        assert_eq!(s.distinct_classes(), 1);
+    }
+}

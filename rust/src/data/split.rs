@@ -1,0 +1,219 @@
+//! Client data splitting: the paper's Algorithm 5 (label-skew split with
+//! a fixed number of classes per client) and eq. (18) (unbalanced volume
+//! fractions φ_i(α, γ)).
+
+use super::Dataset;
+use crate::util::rng::Pcg64;
+
+/// One client's local shard: example indices into the master dataset.
+#[derive(Clone, Debug)]
+pub struct ClientShard {
+    pub client_id: usize,
+    pub indices: Vec<usize>,
+}
+
+/// Split specification (defaults = paper Table III base configuration).
+#[derive(Clone, Debug)]
+pub struct SplitSpec {
+    pub num_clients: usize,
+    /// classes per client c (10 = iid-style, 1 = extreme non-iid)
+    pub classes_per_client: usize,
+    /// eq. 18 concentration parameter γ ∈ (0, 1]; 1.0 = balanced
+    pub gamma: f64,
+    /// eq. 18 floor parameter α (paper fixes 0.1)
+    pub alpha: f64,
+    pub seed: u64,
+}
+
+impl SplitSpec {
+    pub fn new(num_clients: usize, classes_per_client: usize, seed: u64) -> Self {
+        SplitSpec { num_clients, classes_per_client, gamma: 1.0, alpha: 0.1, seed }
+    }
+
+    pub fn with_gamma(mut self, gamma: f64) -> Self {
+        self.gamma = gamma;
+        self
+    }
+}
+
+/// Eq. (18): volume fraction of client i (0-based) out of n:
+/// φ_i(α, γ) = α/n + (1−α) γ^(i+1) / Σ_{j=1..n} γ^j.
+/// For γ = 1 this is exactly 1/n (balanced).
+pub fn unbalanced_fractions(n: usize, alpha: f64, gamma: f64) -> Vec<f64> {
+    assert!(n > 0);
+    assert!((0.0..=1.0).contains(&alpha));
+    assert!(gamma > 0.0 && gamma <= 1.0);
+    let denom: f64 = (1..=n).map(|j| gamma.powi(j as i32)).sum();
+    (1..=n).map(|i| alpha / n as f64 + (1.0 - alpha) * gamma.powi(i as i32) / denom).collect()
+}
+
+/// Algorithm 5: distribute `data` over `spec.num_clients` clients so that
+/// client i receives ≈ φ_i·N examples drawn from exactly
+/// `classes_per_client` classes (subject to pool availability), with
+/// non-overlapping shards.
+pub fn split_by_class(data: &Dataset, spec: &SplitSpec) -> Vec<ClientShard> {
+    let m = spec.num_clients;
+    let num_classes = data.num_classes;
+    let c = spec.classes_per_client.min(num_classes);
+    assert!(c >= 1, "classes_per_client must be >= 1");
+    let mut rng = Pcg64::new(spec.seed, 300);
+
+    // sort examples into per-class pools, each shuffled so "randomSubset"
+    // is a cheap pop-from-end
+    let mut pools: Vec<Vec<usize>> = vec![Vec::new(); num_classes];
+    for (i, &y) in data.labels.iter().enumerate() {
+        pools[y as usize].push(i);
+    }
+    for pool in pools.iter_mut() {
+        rng.shuffle(pool);
+    }
+
+    let fractions = unbalanced_fractions(m, spec.alpha, spec.gamma);
+    let n_total = data.len();
+
+    let mut shards = Vec::with_capacity(m);
+    for i in 0..m {
+        let mut budget = (fractions[i] * n_total as f64).round() as usize;
+        let budget_per_class = (budget + c - 1) / c; // ceil so c classes cover budget
+        let mut k = rng.below(num_classes);
+        let mut indices = Vec::with_capacity(budget);
+        let mut guard = 0;
+        while budget > 0 && guard < 4 * num_classes {
+            let t = budget.min(budget_per_class).min(pools[k].len());
+            for _ in 0..t {
+                indices.push(pools[k].pop().unwrap());
+            }
+            budget -= t;
+            k = (k + 1) % num_classes;
+            guard += 1;
+        }
+        shards.push(ClientShard { client_id: i, indices });
+    }
+    shards
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthFlavor, SynthSpec};
+
+    fn data() -> Dataset {
+        SynthSpec::new(SynthFlavor::Mnist, 1000, 10, 42).generate().0
+    }
+
+    #[test]
+    fn fractions_sum_to_one() {
+        for &gamma in &[0.9, 0.95, 1.0] {
+            let f = unbalanced_fractions(20, 0.1, gamma);
+            let sum: f64 = f.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-9, "γ={gamma} sum={sum}");
+        }
+    }
+
+    #[test]
+    fn gamma_one_is_balanced() {
+        let f = unbalanced_fractions(10, 0.1, 1.0);
+        for x in f {
+            assert!((x - 0.1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn gamma_below_one_concentrates_on_early_clients() {
+        let f = unbalanced_fractions(10, 0.1, 0.9);
+        assert!(f[0] > f[9]);
+        // monotone decreasing
+        for w in f.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        // floor: every client keeps at least α/n
+        for &x in &f {
+            assert!(x >= 0.1 / 10.0 - 1e-12);
+        }
+    }
+
+    #[test]
+    fn shards_disjoint_and_cover() {
+        let d = data();
+        let shards = split_by_class(&d, &SplitSpec::new(10, 10, 1));
+        let mut all: Vec<usize> = shards.iter().flat_map(|s| s.indices.clone()).collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "shards must be non-overlapping");
+        // balanced split of 1000 over 10 clients covers everything
+        assert_eq!(n, 1000);
+    }
+
+    #[test]
+    fn classes_per_client_respected() {
+        let d = data();
+        for c in [1usize, 2, 4, 10] {
+            let shards = split_by_class(&d, &SplitSpec::new(10, c, 3));
+            for s in &shards {
+                let local = d.subset(&s.indices);
+                let distinct = local.distinct_classes();
+                assert!(
+                    distinct <= c.max(1) + 1,
+                    "client {} has {distinct} classes, wanted ≈{c}",
+                    s.client_id
+                );
+                assert!(distinct >= 1.min(c));
+            }
+        }
+    }
+
+    #[test]
+    fn extreme_noniid_single_class() {
+        let d = data();
+        let shards = split_by_class(&d, &SplitSpec::new(10, 1, 7));
+        // with 10 clients × 1 class × balanced data, most clients should
+        // hold exactly one class
+        let single = shards
+            .iter()
+            .filter(|s| d.subset(&s.indices).distinct_classes() == 1)
+            .count();
+        assert!(single >= 8, "only {single}/10 single-class shards");
+    }
+
+    #[test]
+    fn balanced_split_equal_sizes() {
+        let d = data();
+        let shards = split_by_class(&d, &SplitSpec::new(10, 2, 5));
+        for s in &shards {
+            assert!(
+                (s.indices.len() as i64 - 100).abs() <= 2,
+                "client {} size {}",
+                s.client_id,
+                s.indices.len()
+            );
+        }
+    }
+
+    #[test]
+    fn unbalanced_split_sizes_follow_fractions() {
+        let d = data();
+        let spec = SplitSpec::new(10, 10, 5).with_gamma(0.9);
+        let fractions = unbalanced_fractions(10, 0.1, 0.9);
+        let shards = split_by_class(&d, &spec);
+        for (s, f) in shards.iter().zip(&fractions) {
+            let expect = f * 1000.0;
+            assert!(
+                (s.indices.len() as f64 - expect).abs() < 25.0,
+                "client {} got {} expected ≈{expect:.0}",
+                s.client_id,
+                s.indices.len()
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic_split() {
+        let d = data();
+        let a = split_by_class(&d, &SplitSpec::new(10, 2, 9));
+        let b = split_by_class(&d, &SplitSpec::new(10, 2, 9));
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.indices, y.indices);
+        }
+    }
+}

@@ -1,0 +1,49 @@
+//! # fedstc — Sparse Ternary Compression for Federated Learning
+//!
+//! A three-layer (rust / JAX / Pallas) reproduction of
+//! *"Robust and Communication-Efficient Federated Learning from Non-IID
+//! Data"* (Sattler, Wiedemann, Müller, Samek — 2019).
+//!
+//! The crate is organised as a framework, not a script:
+//!
+//! * [`compression`] — the compression codecs the paper studies:
+//!   STC (the paper's contribution, Algorithm 1), top-k sparsification,
+//!   signSGD with majority voting, and the bit-exact Golomb position
+//!   codec (Algorithms 3/4) plus entropy/bit accounting (eqs. 1, 13–17).
+//! * [`data`] — dataset substrate: synthetic class-structured datasets
+//!   standing in for MNIST/CIFAR/KWS/F-MNIST, the paper's Algorithm 5
+//!   label-skew splitter and eq. 18 unbalanced volume allocation.
+//! * [`runtime`] — the PJRT bridge: loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered by `python/compile/aot.py`) and executes them on the
+//!   CPU PJRT client. Python never runs at training time.
+//! * [`models`] — model metadata (parameter shapes mirroring the L2 JAX
+//!   definitions), rust-side initialisation, and a dependency-free native
+//!   reference trainer used for cross-checks and fast analysis benches.
+//! * [`coordinator`] — the paper's system contribution: parameter server
+//!   with upstream *and* downstream compression, error-feedback residuals
+//!   on both sides, the partial-sum cache for partial participation
+//!   (§V-B), client state, and the Algorithm 2 round loop.
+//! * [`sim`] — the federated learning simulation engine driving complete
+//!   experiments, and the sign-congruence analysis of Fig. 3.
+//! * [`config`] / [`cli`] — experiment configuration and a small CLI.
+//! * [`metrics`] — training curves, communication accounting, CSV/JSON.
+//! * [`util`] — in-tree substrates (PRNG, bit/stat helpers, JSON writer,
+//!   bench harness, property-test runner) — the offline environment has
+//!   no access to crates.io beyond the vendored `xla` closure.
+
+pub mod cli;
+pub mod compression;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod metrics;
+pub mod models;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,208 @@
+//! `repro` — the fedstc command-line launcher.
+//!
+//! Subcommands:
+//!   train   run one federated training experiment and print the curve
+//!   alpha   gradient sign-congruence analysis (paper Fig. 3)
+//!   info    artifact + model inventory
+//!   sweep   grid over one config key (comma-separated values)
+//!   help    this text
+//!
+//! Config keys accepted by `train`/`sweep` mirror `FedConfig::apply_kv`:
+//!   --model logreg|cnn|kws|lstm   --method stc:0.0025 | fedavg:400 |
+//!   signsgd:0.0002 | topk:0.01 | baseline   --clients N --eta η
+//!   --classes c --batch b --gamma γ --lr --momentum --iters --seed
+//!   --backend native|hlo (native only for logreg)
+
+use fedstc::cli::Args;
+use fedstc::config::FedConfig;
+use fedstc::data::synth::task_dataset;
+use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
+use fedstc::runtime::{Engine, HloTrainer};
+use fedstc::sim::alpha::{AlphaAnalysis, BatchRegime};
+use fedstc::sim::Experiment;
+use fedstc::util::{bits_to_mb, Timer};
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "alpha" => cmd_alpha(&args),
+        "info" => cmd_info(&args),
+        "sweep" => cmd_sweep(&args),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
+    let model = args.get_or("model", "logreg");
+    let mut cfg = FedConfig::for_model(&model);
+    if let Some(file) = args.get("config") {
+        let text = std::fs::read_to_string(&file)?;
+        cfg.apply_file(&text)?;
+    }
+    for (k, v) in args.pairs() {
+        match k.as_str() {
+            // CLI-only keys that are not FedConfig fields
+            "backend" | "out" | "config" | "verbose" | "key" | "values" | "ks" | "trials" => {}
+            _ => cfg.apply_kv(&k, &v)?,
+        }
+    }
+    Ok(cfg)
+}
+
+fn make_trainer(cfg: &FedConfig, backend: &str) -> anyhow::Result<Box<dyn Trainer>> {
+    match backend {
+        "native" => {
+            anyhow::ensure!(
+                cfg.model == "logreg",
+                "native backend only implements logreg; use --backend hlo"
+            );
+            Ok(Box::new(NativeLogreg::new(cfg.batch_size)))
+        }
+        "hlo" => {
+            let engine = Engine::load_default()?;
+            Ok(Box::new(HloTrainer::new(&engine, &cfg.model, cfg.batch_size)?))
+        }
+        other => anyhow::bail!("unknown backend '{other}' (native|hlo)"),
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let default_backend = if cfg.model == "logreg" { "native" } else { "hlo" };
+    let backend = args.get_or("backend", default_backend);
+    let out = args.get("out");
+    args.finish()?;
+
+    println!("# {}", cfg.describe());
+    let timer = Timer::start();
+    let exp = Experiment::new(cfg)?;
+    let mut trainer = make_trainer(&exp.cfg, &backend)?;
+    let log = exp.run(trainer.as_mut())?;
+
+    println!("iter  round  accuracy  loss      upMB      downMB");
+    for p in &log.points {
+        println!(
+            "{:>5} {:>6}  {:.4}    {:.4}  {:>8.3}  {:>8.3}",
+            p.iteration,
+            p.round,
+            p.accuracy,
+            p.loss,
+            bits_to_mb(p.up_bits),
+            bits_to_mb(p.down_bits)
+        );
+    }
+    println!(
+        "# max_accuracy={:.4} wall={:.1}s backend={backend}",
+        log.max_accuracy(),
+        timer.secs()
+    );
+    if let Some(path) = out {
+        std::fs::write(&path, log.to_csv())?;
+        println!("# wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_alpha(args: &Args) -> anyhow::Result<()> {
+    let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
+    let trials: usize = args.get_parse("trials")?.unwrap_or(60);
+    let ks_str = args.get_or("ks", "1,2,4,8,16,32,64,128");
+    args.finish()?;
+    let ks: Vec<usize> =
+        ks_str.split(',').map(|s| s.trim().parse()).collect::<Result<_, _>>()?;
+
+    let (train, _) = task_dataset("mnist", seed);
+    let mut analysis = AlphaAnalysis::new(&train, seed);
+    println!("# α(k): gradient sign congruence (paper Fig. 3, eqs. 5–7)");
+    println!("{:>6}  {:>10}  {:>10}", "k", "iid", "non-iid");
+    for &k in &ks {
+        let iid = analysis.alpha(&train, k, BatchRegime::Iid, trials, seed).alpha_mean;
+        let nid = analysis.alpha(&train, k, BatchRegime::SingleClass, trials, seed).alpha_mean;
+        println!("{:>6}  {:>10.4}  {:>10.4}", k, iid, nid);
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    println!("fedstc {} — Sparse Ternary Compression for Federated Learning", fedstc::VERSION);
+    println!("\nmodels:");
+    for name in ModelSpec::all() {
+        let m = ModelSpec::by_name(name);
+        let (lr, mom) = m.default_hparams();
+        println!(
+            "  {:<8} task={:<8} params={:<7} lr={} momentum={}",
+            m.name,
+            m.task,
+            m.dim(),
+            lr,
+            mom
+        );
+    }
+    match Engine::load_default() {
+        Ok(engine) => {
+            println!("\nartifacts ({}):", engine.manifest().dir.display());
+            for e in &engine.manifest().entries {
+                println!(
+                    "  {:<26} kind={:<5?} model={:<7} batch={:<3} n={}",
+                    e.name, e.kind, e.model, e.batch, e.n
+                );
+            }
+        }
+        Err(e) => println!("\nartifacts: not available ({e})"),
+    }
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> anyhow::Result<()> {
+    let key = args.get("key").ok_or_else(|| anyhow::anyhow!("--key required"))?;
+    let values = args.get("values").ok_or_else(|| anyhow::anyhow!("--values required"))?;
+    let cfg0 = config_from_args(args)?;
+    let backend = args.get_or("backend", "native");
+    args.finish()?;
+
+    println!("# sweep {key} over [{values}] — base: {}", cfg0.describe());
+    println!("{:>12}  {:>10}  {:>10}  {:>10}", key, "max_acc", "upMB", "downMB");
+    for v in values.split(',') {
+        let mut cfg = cfg0.clone();
+        cfg.apply_kv(&key, v.trim())?;
+        let exp = Experiment::new(cfg)?;
+        let mut trainer = make_trainer(&exp.cfg, &backend)?;
+        let log = exp.run(trainer.as_mut())?;
+        let last = log.points.last().unwrap();
+        println!(
+            "{:>12}  {:>10.4}  {:>10.3}  {:>10.3}",
+            v.trim(),
+            log.max_accuracy(),
+            bits_to_mb(last.up_bits),
+            bits_to_mb(last.down_bits)
+        );
+    }
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "repro — fedstc launcher (Sparse Ternary Compression, Sattler et al. 2019)
+
+usage: repro <train|alpha|info|sweep|help> [--key value]...
+
+examples:
+  repro train --model logreg --method stc:0.0025 --classes 1 --iters 400
+  repro train --model cnn --backend hlo --method fedavg:25 --iters 200
+  repro alpha --ks 1,8,64 --trials 100
+  repro sweep --key classes --values 1,2,4,10 --method stc:0.01 --iters 300
+  repro info"
+    );
+}

@@ -1,0 +1,211 @@
+//! Training curves and communication accounting.
+//!
+//! Every experiment produces a [`TrainingLog`]: per-evaluation records of
+//! (iteration, accuracy, loss) plus bit-exact cumulative communication
+//! counters, from which the figure benches derive "max accuracy after T
+//! iterations" (Figs 4–9, 12), "error vs bits" curves (Fig 10) and
+//! "bits to target accuracy" (Table IV).
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+/// One evaluation point during federated training.
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    /// SGD iterations consumed per client so far (the paper's x-axis)
+    pub iteration: usize,
+    /// communication rounds completed
+    pub round: usize,
+    pub accuracy: f64,
+    pub loss: f64,
+    /// cumulative *per-client average* upload, in bits
+    pub up_bits: u64,
+    /// cumulative *per-client average* download, in bits
+    pub down_bits: u64,
+}
+
+/// Bit-exact communication ledger. Upload/download are tracked as totals
+/// over all clients; per-client averages divide by the population size
+/// (the paper's Table IV reports per-client traffic).
+#[derive(Clone, Debug, Default)]
+pub struct CommLedger {
+    pub total_up_bits: u64,
+    pub total_down_bits: u64,
+    pub num_clients: usize,
+    pub uploads: u64,
+    pub downloads: u64,
+}
+
+impl CommLedger {
+    pub fn new(num_clients: usize) -> Self {
+        CommLedger { num_clients, ..Default::default() }
+    }
+
+    pub fn record_upload(&mut self, bits: usize) {
+        self.total_up_bits += bits as u64;
+        self.uploads += 1;
+    }
+
+    pub fn record_download(&mut self, bits: usize) {
+        self.total_down_bits += bits as u64;
+        self.downloads += 1;
+    }
+
+    /// Average per-client cumulative upload bits.
+    pub fn up_bits_per_client(&self) -> u64 {
+        self.total_up_bits / self.num_clients.max(1) as u64
+    }
+
+    pub fn down_bits_per_client(&self) -> u64 {
+        self.total_down_bits / self.num_clients.max(1) as u64
+    }
+}
+
+/// Complete record of one training run.
+#[derive(Clone, Debug, Default)]
+pub struct TrainingLog {
+    pub label: String,
+    pub points: Vec<EvalPoint>,
+}
+
+impl TrainingLog {
+    pub fn new(label: &str) -> Self {
+        TrainingLog { label: label.to_string(), points: Vec::new() }
+    }
+
+    pub fn push(&mut self, p: EvalPoint) {
+        self.points.push(p);
+    }
+
+    /// Maximum accuracy over the run (the paper's per-environment metric).
+    pub fn max_accuracy(&self) -> f64 {
+        self.points.iter().map(|p| p.accuracy).fold(0.0, f64::max)
+    }
+
+    /// Final accuracy.
+    pub fn final_accuracy(&self) -> f64 {
+        self.points.last().map(|p| p.accuracy).unwrap_or(0.0)
+    }
+
+    /// First evaluation point reaching `target` accuracy, if any —
+    /// returns (iteration, up_bits, down_bits), Table IV's measurement.
+    pub fn first_reaching(&self, target: f64) -> Option<(usize, u64, u64)> {
+        self.points
+            .iter()
+            .find(|p| p.accuracy >= target)
+            .map(|p| (p.iteration, p.up_bits, p.down_bits))
+    }
+
+    /// Accuracy series smoothed with a moving average of window `w`
+    /// (the paper smooths Fig. 10 curves with step 5).
+    pub fn smoothed_accuracy(&self, w: usize) -> Vec<f64> {
+        stats::moving_average(&self.points.iter().map(|p| p.accuracy).collect::<Vec<_>>(), w)
+    }
+
+    /// CSV export: header + one row per eval point.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("iteration,round,accuracy,loss,up_bits,down_bits\n");
+        for p in &self.points {
+            out.push_str(&format!(
+                "{},{},{:.6},{:.6},{},{}\n",
+                p.iteration, p.round, p.accuracy, p.loss, p.up_bits, p.down_bits
+            ));
+        }
+        out
+    }
+
+    /// JSON export (used by `repro train --out`).
+    pub fn to_json(&self) -> Json {
+        let mut obj = Json::obj();
+        obj.set("label", Json::Str(self.label.clone()));
+        obj.set("max_accuracy", Json::Num(self.max_accuracy()));
+        let pts = self
+            .points
+            .iter()
+            .map(|p| {
+                let mut o = Json::obj();
+                o.set("iteration", Json::Num(p.iteration as f64))
+                    .set("round", Json::Num(p.round as f64))
+                    .set("accuracy", Json::Num(p.accuracy))
+                    .set("loss", Json::Num(p.loss))
+                    .set("up_bits", Json::Num(p.up_bits as f64))
+                    .set("down_bits", Json::Num(p.down_bits as f64));
+                o
+            })
+            .collect();
+        obj.set("points", Json::Arr(pts));
+        obj
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log_with(accs: &[f64]) -> TrainingLog {
+        let mut log = TrainingLog::new("test");
+        for (i, &a) in accs.iter().enumerate() {
+            log.push(EvalPoint {
+                iteration: (i + 1) * 10,
+                round: i + 1,
+                accuracy: a,
+                loss: 1.0 - a,
+                up_bits: ((i + 1) * 1000) as u64,
+                down_bits: ((i + 1) * 500) as u64,
+            });
+        }
+        log
+    }
+
+    #[test]
+    fn max_and_final_accuracy() {
+        let log = log_with(&[0.1, 0.5, 0.4]);
+        assert_eq!(log.max_accuracy(), 0.5);
+        assert_eq!(log.final_accuracy(), 0.4);
+        assert_eq!(TrainingLog::new("e").max_accuracy(), 0.0);
+    }
+
+    #[test]
+    fn first_reaching_target() {
+        let log = log_with(&[0.1, 0.5, 0.7]);
+        assert_eq!(log.first_reaching(0.5), Some((20, 2000, 1000)));
+        assert_eq!(log.first_reaching(0.9), None);
+    }
+
+    #[test]
+    fn csv_has_header_and_rows() {
+        let log = log_with(&[0.25]);
+        let csv = log.to_csv();
+        assert!(csv.starts_with("iteration,round,"));
+        assert_eq!(csv.lines().count(), 2);
+        assert!(csv.contains("0.250000"));
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let log = log_with(&[0.3, 0.6]);
+        let j = log.to_json();
+        let parsed = crate::util::json::Json::parse(&j.dump()).unwrap();
+        assert_eq!(parsed.get("label").unwrap().as_str(), Some("test"));
+        assert_eq!(parsed.get("points").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn ledger_per_client_average() {
+        let mut l = CommLedger::new(10);
+        for _ in 0..10 {
+            l.record_upload(100);
+            l.record_download(50);
+        }
+        assert_eq!(l.up_bits_per_client(), 100);
+        assert_eq!(l.down_bits_per_client(), 50);
+        assert_eq!(l.uploads, 10);
+    }
+
+    #[test]
+    fn smoothing_window() {
+        let log = log_with(&[0.0, 1.0, 0.0, 1.0]);
+        let s = log.smoothed_accuracy(2);
+        assert_eq!(s, vec![0.0, 0.5, 0.5, 0.5]);
+    }
+}

@@ -1,0 +1,369 @@
+//! Model metadata and the `Trainer` abstraction.
+//!
+//! The *definitions* (forward/backward) of all four models live in L2 JAX
+//! (`python/compile/models.py`) and reach rust only as AOT-compiled HLO
+//! artifacts. This module holds the rust-side mirror of each model's
+//! parameter schema — tensor names, shapes and flattening order — which is
+//! the contract between the layers. `runtime::registry` validates the
+//! mirror against the manifest emitted by `aot.py` at load time, so a
+//! drift between the two layers fails loudly instead of silently
+//! mis-slicing the flattened parameter vector.
+//!
+//! Architectures (scaled versions of the paper's Table II models — see
+//! DESIGN.md substitution table):
+//!
+//! | name | paper analogue | input | params |
+//! |---|---|---|---|
+//! | `logreg` | Logistic Reg. @ MNIST | 28×28 | 7,850 (exact match) |
+//! | `cnn` | VGG11* @ CIFAR | 16×16×3 | 38,570 |
+//! | `kws` | 4-layer CNN @ SpeechCommands | 32×32×1 | 24,042 |
+//! | `lstm` | LSTM @ Fashion-MNIST | 28 × 28 seq | 15,274 |
+
+pub mod native;
+
+use crate::data::Dataset;
+use crate::util::rng::Pcg64;
+
+/// One parameter tensor in the flattening order shared with L2.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: &'static str,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Initialisation scheme per tensor (must match what the paper's training
+/// setup implies; biases zero, LSTM forget-gate bias 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Init {
+    /// Glorot/Xavier uniform with fan_in/fan_out from the shape
+    GlorotUniform,
+    /// constant 0
+    Zero,
+    /// LSTM bias layout [i f g o] with forget gate at 1.0
+    LstmBias,
+}
+
+/// Full model schema.
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    /// synthetic dataset flavor this model trains on
+    pub task: &'static str,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub tensors: Vec<(TensorSpec, Init)>,
+}
+
+impl ModelSpec {
+    /// Total flattened parameter count |W|.
+    pub fn dim(&self) -> usize {
+        self.tensors.iter().map(|(t, _)| t.numel()).sum()
+    }
+
+    /// Offsets of each tensor in the flattened vector.
+    pub fn offsets(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.tensors.len());
+        let mut acc = 0;
+        for (t, _) in &self.tensors {
+            out.push(acc);
+            acc += t.numel();
+        }
+        out
+    }
+
+    /// Initialise a flattened parameter vector (deterministic in `seed`).
+    pub fn init_flat(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg64::new(seed, 500);
+        let mut out = Vec::with_capacity(self.dim());
+        for (t, init) in &self.tensors {
+            let n = t.numel();
+            match init {
+                Init::Zero => out.extend(std::iter::repeat(0.0).take(n)),
+                Init::LstmBias => {
+                    // gate order [i f g o]; forget-gate quarter = 1.0
+                    let h = n / 4;
+                    for gate in 0..4 {
+                        let v = if gate == 1 { 1.0 } else { 0.0 };
+                        out.extend(std::iter::repeat(v).take(h));
+                    }
+                }
+                Init::GlorotUniform => {
+                    let (fan_in, fan_out) = fans(&t.shape);
+                    let limit = (6.0 / (fan_in + fan_out) as f64).sqrt() as f32;
+                    for _ in 0..n {
+                        out.push((rng.f32() * 2.0 - 1.0) * limit);
+                    }
+                }
+            }
+        }
+        debug_assert_eq!(out.len(), self.dim());
+        out
+    }
+
+    /// Model registry by name.
+    pub fn by_name(name: &str) -> ModelSpec {
+        match name {
+            "logreg" => logreg(),
+            "cnn" => cnn(),
+            "kws" => kws(),
+            "lstm" => lstm(),
+            other => panic!("unknown model '{other}'"),
+        }
+    }
+
+    /// All model names.
+    pub fn all() -> &'static [&'static str] {
+        &["logreg", "cnn", "kws", "lstm"]
+    }
+
+    /// Paper Table II training hyperparameters (lr, momentum) scaled task
+    /// mapping — the momentum column is the paper's; lr is retuned for the
+    /// synthetic substitutes (documented in EXPERIMENTS.md).
+    pub fn default_hparams(&self) -> (f32, f32) {
+        match self.name {
+            "logreg" => (0.04, 0.0),
+            "cnn" => (0.05, 0.9),
+            "kws" => (0.05, 0.0),
+            "lstm" => (0.1, 0.9),
+            _ => (0.05, 0.0),
+        }
+    }
+}
+
+/// (fan_in, fan_out) for dense `[in, out]` and conv `[kh, kw, cin, cout]`.
+fn fans(shape: &[usize]) -> (usize, usize) {
+    match shape.len() {
+        1 => (shape[0], shape[0]),
+        2 => (shape[0], shape[1]),
+        4 => {
+            let rf = shape[0] * shape[1];
+            (rf * shape[2], rf * shape[3])
+        }
+        _ => {
+            let n: usize = shape.iter().product();
+            (n, n)
+        }
+    }
+}
+
+fn t(name: &'static str, shape: &[usize], init: Init) -> (TensorSpec, Init) {
+    (TensorSpec { name, shape: shape.to_vec() }, init)
+}
+
+/// Logistic regression, 784 → 10. 7,850 parameters — the paper's exact
+/// MNIST model.
+pub fn logreg() -> ModelSpec {
+    ModelSpec {
+        name: "logreg",
+        task: "mnist",
+        input_dim: 784,
+        num_classes: 10,
+        tensors: vec![
+            t("w", &[784, 10], Init::GlorotUniform),
+            t("b", &[10], Init::Zero),
+        ],
+    }
+}
+
+/// VGG11*-style CNN for 16×16×3 synthetic CIFAR. NHWC, SAME padding,
+/// 2×2 max-pool after each conv block.
+pub fn cnn() -> ModelSpec {
+    ModelSpec {
+        name: "cnn",
+        task: "cifar",
+        input_dim: 16 * 16 * 3,
+        num_classes: 10,
+        tensors: vec![
+            t("conv1_w", &[3, 3, 3, 16], Init::GlorotUniform),
+            t("conv1_b", &[16], Init::Zero),
+            t("conv2_w", &[3, 3, 16, 32], Init::GlorotUniform),
+            t("conv2_b", &[32], Init::Zero),
+            t("fc1_w", &[512, 64], Init::GlorotUniform), // 4·4·32 = 512
+            t("fc1_b", &[64], Init::Zero),
+            t("fc2_w", &[64, 10], Init::GlorotUniform),
+            t("fc2_b", &[10], Init::Zero),
+        ],
+    }
+}
+
+/// Four-layer CNN for 32×32×1 synthetic keyword-spotting spectrograms
+/// (paper: Konecny et al. CNN on SpeechCommands).
+pub fn kws() -> ModelSpec {
+    ModelSpec {
+        name: "kws",
+        task: "kws",
+        input_dim: 32 * 32,
+        num_classes: 10,
+        tensors: vec![
+            t("conv1_w", &[3, 3, 1, 8], Init::GlorotUniform),
+            t("conv1_b", &[8], Init::Zero),
+            t("conv2_w", &[3, 3, 8, 16], Init::GlorotUniform),
+            t("conv2_b", &[16], Init::Zero),
+            t("conv3_w", &[3, 3, 16, 32], Init::GlorotUniform),
+            t("conv3_b", &[32], Init::Zero),
+            t("conv4_w", &[3, 3, 32, 32], Init::GlorotUniform),
+            t("conv4_b", &[32], Init::Zero),
+            t("fc1_w", &[128, 64], Init::GlorotUniform), // 2·2·32 = 128
+            t("fc1_b", &[64], Init::Zero),
+            t("fc2_w", &[64, 10], Init::GlorotUniform),
+            t("fc2_b", &[10], Init::Zero),
+        ],
+    }
+}
+
+/// Single-layer LSTM (h = 48) over 28-step sequences of 28 features
+/// (paper: 2×128 LSTM on Fashion-MNIST, scaled).
+pub fn lstm() -> ModelSpec {
+    ModelSpec {
+        name: "lstm",
+        task: "fashion",
+        input_dim: 28 * 28,
+        num_classes: 10,
+        tensors: vec![
+            t("wx", &[28, 192], Init::GlorotUniform), // 4 gates × h=48
+            t("wh", &[48, 192], Init::GlorotUniform),
+            t("bias", &[192], Init::LstmBias),
+            t("fc_w", &[48, 10], Init::GlorotUniform),
+            t("fc_b", &[10], Init::Zero),
+        ],
+    }
+}
+
+/// Evaluation result on a dataset.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalMetrics {
+    pub loss: f64,
+    pub accuracy: f64,
+    pub n: usize,
+}
+
+/// A gradient oracle + evaluator for one model at one batch size. Two
+/// implementations exist: [`native::NativeLogreg`] (pure rust, used for
+/// analysis and cross-checks) and `runtime::HloTrainer` (the production
+/// path through PJRT-compiled artifacts).
+pub trait Trainer {
+    fn spec(&self) -> &ModelSpec;
+    fn batch_size(&self) -> usize;
+
+    /// Compute ∇_W l(batch, W) into `grads_out` (flattened, same layout
+    /// as `params`); returns the mean batch loss.
+    fn grad_loss(&mut self, params: &[f32], x: &[f32], y: &[f32], grads_out: &mut [f32]) -> f32;
+
+    /// Accuracy/loss of `params` on `data`.
+    fn eval(&mut self, params: &[f32], data: &Dataset) -> EvalMetrics;
+
+    /// Fused local-SGD chunk length supported by this trainer (0 = only
+    /// per-step `grad_loss`). When > 0, [`Trainer::sgd_chunk`] runs that
+    /// many plain-SGD steps in one dispatch — the §Perf amortization for
+    /// delay-based methods (no momentum; the caller falls back to
+    /// per-step when momentum is on).
+    fn chunk_len(&self) -> usize {
+        0
+    }
+
+    /// Run [`Trainer::chunk_len`] plain-SGD steps in place on `params`
+    /// over the stacked batches `xs` = [chunk·b·dim], `ys` = [chunk·b].
+    /// Returns the mean loss over the chunk. Default: unsupported.
+    fn sgd_chunk(&mut self, _params: &mut [f32], _xs: &[f32], _ys: &[f32], _lr: f32) -> f32 {
+        unimplemented!("trainer does not support fused sgd chunks")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parameter_counts_match_design() {
+        assert_eq!(logreg().dim(), 7_850);
+        assert_eq!(cnn().dim(), 38_570);
+        assert_eq!(kws().dim(), 24_042);
+        assert_eq!(lstm().dim(), 15_274);
+    }
+
+    #[test]
+    fn offsets_partition_flat_vector() {
+        for name in ModelSpec::all() {
+            let m = ModelSpec::by_name(name);
+            let offs = m.offsets();
+            assert_eq!(offs[0], 0);
+            let mut acc = 0;
+            for (i, (t, _)) in m.tensors.iter().enumerate() {
+                assert_eq!(offs[i], acc);
+                acc += t.numel();
+            }
+            assert_eq!(acc, m.dim());
+        }
+    }
+
+    #[test]
+    fn init_deterministic_and_sized() {
+        for name in ModelSpec::all() {
+            let m = ModelSpec::by_name(name);
+            let a = m.init_flat(11);
+            let b = m.init_flat(11);
+            assert_eq!(a.len(), m.dim());
+            assert_eq!(a, b);
+            let c = m.init_flat(12);
+            assert_ne!(a, c);
+        }
+    }
+
+    #[test]
+    fn biases_init_zero() {
+        let m = logreg();
+        let flat = m.init_flat(1);
+        // last 10 entries are the bias
+        assert!(flat[7840..].iter().all(|&x| x == 0.0));
+        // weights not all zero
+        assert!(flat[..7840].iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn lstm_forget_gate_bias_one() {
+        let m = lstm();
+        let flat = m.init_flat(2);
+        let offs = m.offsets();
+        let bias_off = offs[2]; // wx, wh, bias
+        let bias = &flat[bias_off..bias_off + 192];
+        assert!(bias[..48].iter().all(|&x| x == 0.0)); // i
+        assert!(bias[48..96].iter().all(|&x| x == 1.0)); // f
+        assert!(bias[96..].iter().all(|&x| x == 0.0)); // g, o
+    }
+
+    #[test]
+    fn glorot_limits_respected() {
+        let m = logreg();
+        let flat = m.init_flat(3);
+        let limit = (6.0f64 / (784.0 + 10.0)).sqrt() as f32;
+        assert!(flat[..7840].iter().all(|&x| x.abs() <= limit));
+        // and spread over the range
+        assert!(flat[..7840].iter().any(|&x| x.abs() > limit * 0.5));
+    }
+
+    #[test]
+    fn fans_conv_and_dense() {
+        assert_eq!(fans(&[784, 10]), (784, 10));
+        assert_eq!(fans(&[3, 3, 3, 16]), (27, 144));
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown model")]
+    fn unknown_model_rejected() {
+        ModelSpec::by_name("resnet152");
+    }
+
+    #[test]
+    fn model_task_pairing() {
+        assert_eq!(ModelSpec::by_name("cnn").task, "cifar");
+        assert_eq!(ModelSpec::by_name("logreg").task, "mnist");
+        assert_eq!(ModelSpec::by_name("kws").task, "kws");
+        assert_eq!(ModelSpec::by_name("lstm").task, "fashion");
+    }
+}

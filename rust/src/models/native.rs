@@ -1,0 +1,275 @@
+//! Native-rust logistic-regression trainer.
+//!
+//! A dependency-free gradient oracle for the `logreg` model used for
+//! (a) the sign-congruence analysis of Fig. 3, which needs full-batch
+//! gradients over arbitrary subsets, (b) cross-checking the PJRT path
+//! (integration tests pin `HloTrainer` gradients against this one), and
+//! (c) fast coordinator benches that should not depend on artifacts.
+//!
+//! Softmax cross-entropy over logits `x·W + b`; gradients are the exact
+//! analytic ones, accumulated in f64 to keep the cross-check tolerance
+//! tight.
+
+use super::{logreg, EvalMetrics, ModelSpec, Trainer};
+use crate::data::Dataset;
+use crate::util::argmax;
+
+/// Pure-rust logreg gradient oracle. `D` = input dim, `C` = classes.
+pub struct NativeLogreg {
+    spec: ModelSpec,
+    batch_size: usize,
+    /// scratch: logits / probabilities per row
+    probs: Vec<f32>,
+}
+
+impl NativeLogreg {
+    pub fn new(batch_size: usize) -> Self {
+        NativeLogreg { spec: logreg(), batch_size, probs: Vec::new() }
+    }
+
+    fn dims(&self) -> (usize, usize) {
+        (self.spec.input_dim, self.spec.num_classes)
+    }
+
+    /// logits = x·W + b for one row.
+    fn row_logits(&self, params: &[f32], row: &[f32], out: &mut [f32]) {
+        let (d, c) = self.dims();
+        let w = &params[..d * c];
+        let b = &params[d * c..];
+        out.copy_from_slice(b);
+        for (j, &xj) in row.iter().enumerate() {
+            if xj != 0.0 {
+                let wrow = &w[j * c..(j + 1) * c];
+                for k in 0..c {
+                    out[k] += xj * wrow[k];
+                }
+            }
+        }
+    }
+
+    /// softmax in place; returns log-sum-exp for loss computation.
+    fn softmax(logits: &mut [f32]) -> f32 {
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0f32;
+        for v in logits.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in logits.iter_mut() {
+            *v /= sum;
+        }
+        sum.ln() + m
+    }
+
+    /// Full-batch gradient over an arbitrary index set (used by the
+    /// Fig. 3 analysis — not part of the `Trainer` trait).
+    pub fn grad_over_indices(
+        &mut self,
+        params: &[f32],
+        data: &Dataset,
+        indices: &[usize],
+        grads_out: &mut [f32],
+    ) -> f32 {
+        let (d, c) = self.dims();
+        grads_out.iter_mut().for_each(|g| *g = 0.0);
+        let mut logits = vec![0.0f32; c];
+        let mut loss = 0.0f64;
+        for &i in indices {
+            let row = data.row(i);
+            let y = data.labels[i] as usize;
+            self.row_logits(params, row, &mut logits);
+            let lse = Self::softmax(&mut logits);
+            let _ = lse;
+            loss -= (logits[y].max(1e-12)).ln() as f64;
+            // dlogits = probs - onehot(y)
+            logits[y] -= 1.0;
+            let (gw, gb) = grads_out.split_at_mut(d * c);
+            for (j, &xj) in row.iter().enumerate() {
+                if xj != 0.0 {
+                    let grow = &mut gw[j * c..(j + 1) * c];
+                    for k in 0..c {
+                        grow[k] += xj * logits[k];
+                    }
+                }
+            }
+            for k in 0..c {
+                gb[k] += logits[k];
+            }
+        }
+        let inv = 1.0 / indices.len() as f32;
+        grads_out.iter_mut().for_each(|g| *g *= inv);
+        (loss / indices.len() as f64) as f32
+    }
+}
+
+impl Trainer for NativeLogreg {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch_size
+    }
+
+    fn grad_loss(&mut self, params: &[f32], x: &[f32], y: &[f32], grads_out: &mut [f32]) -> f32 {
+        let (d, c) = self.dims();
+        let b = self.batch_size;
+        debug_assert_eq!(x.len(), b * d);
+        debug_assert_eq!(y.len(), b);
+        grads_out.iter_mut().for_each(|g| *g = 0.0);
+        self.probs.resize(c, 0.0);
+        let mut loss = 0.0f64;
+        for bi in 0..b {
+            let row = &x[bi * d..(bi + 1) * d];
+            let label = y[bi] as usize;
+            let mut logits = std::mem::take(&mut self.probs);
+            self.row_logits(params, row, &mut logits);
+            Self::softmax(&mut logits);
+            loss -= (logits[label].max(1e-12)).ln() as f64;
+            logits[label] -= 1.0;
+            let (gw, gb) = grads_out.split_at_mut(d * c);
+            for (j, &xj) in row.iter().enumerate() {
+                if xj != 0.0 {
+                    let grow = &mut gw[j * c..(j + 1) * c];
+                    for k in 0..c {
+                        grow[k] += xj * logits[k];
+                    }
+                }
+            }
+            for k in 0..c {
+                gb[k] += logits[k];
+            }
+            self.probs = logits;
+        }
+        let inv = 1.0 / b as f32;
+        grads_out.iter_mut().for_each(|g| *g *= inv);
+        (loss / b as f64) as f32
+    }
+
+    fn eval(&mut self, params: &[f32], data: &Dataset) -> EvalMetrics {
+        let (_, c) = self.dims();
+        let mut logits = vec![0.0f32; c];
+        let mut correct = 0usize;
+        let mut loss = 0.0f64;
+        for i in 0..data.len() {
+            self.row_logits(params, data.row(i), &mut logits);
+            let pred = argmax(&logits);
+            if pred == data.labels[i] as usize {
+                correct += 1;
+            }
+            Self::softmax(&mut logits);
+            loss -= (logits[data.labels[i] as usize].max(1e-12)).ln() as f64;
+        }
+        EvalMetrics {
+            loss: loss / data.len() as f64,
+            accuracy: correct as f64 / data.len() as f64,
+            n: data.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthFlavor, SynthSpec};
+    use crate::util::rng::Pcg64;
+
+    fn tiny_data() -> Dataset {
+        SynthSpec::new(SynthFlavor::Mnist, 200, 100, 77).generate().0
+    }
+
+    #[test]
+    fn gradient_matches_finite_differences() {
+        let data = tiny_data();
+        let mut t = NativeLogreg::new(4);
+        let spec = logreg();
+        let params = spec.init_flat(1);
+        let mut x = vec![0.0f32; 4 * 784];
+        let mut y = vec![0.0f32; 4];
+        data.gather_batch(&[0, 1, 2, 3], &mut x, &mut y);
+        let mut grads = vec![0.0f32; spec.dim()];
+        let loss0 = t.grad_loss(&params, &x, &y, &mut grads);
+        assert!(loss0.is_finite());
+
+        // probe a handful of coordinates with central differences
+        let mut rng = Pcg64::seeded(5);
+        let eps = 2e-3f32;
+        for _ in 0..12 {
+            let i = rng.below(spec.dim());
+            let mut p_plus = params.clone();
+            p_plus[i] += eps;
+            let mut p_minus = params.clone();
+            p_minus[i] -= eps;
+            let mut scratch = vec![0.0f32; spec.dim()];
+            let lp = t.grad_loss(&p_plus, &x, &y, &mut scratch);
+            let lm = t.grad_loss(&p_minus, &x, &y, &mut scratch);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grads[i]).abs() < 2e-3,
+                "coord {i}: fd {fd} vs analytic {}",
+                grads[i]
+            );
+        }
+    }
+
+    #[test]
+    fn training_reduces_loss_and_learns() {
+        let (train, test) = SynthSpec::new(SynthFlavor::Mnist, 600, 300, 3).generate();
+        let spec = logreg();
+        let mut params = spec.init_flat(2);
+        let mut t = NativeLogreg::new(20);
+        let before = t.eval(&params, &test);
+
+        let mut rng = Pcg64::seeded(9);
+        let mut x = vec![0.0f32; 20 * 784];
+        let mut y = vec![0.0f32; 20];
+        let mut g = vec![0.0f32; spec.dim()];
+        for _ in 0..150 {
+            let idx: Vec<usize> = (0..20).map(|_| rng.below(train.len())).collect();
+            train.gather_batch(&idx, &mut x, &mut y);
+            t.grad_loss(&params, &x, &y, &mut g);
+            for (p, gi) in params.iter_mut().zip(&g) {
+                *p -= 0.05 * gi;
+            }
+        }
+        let after = t.eval(&params, &test);
+        assert!(after.loss < before.loss, "{} -> {}", before.loss, after.loss);
+        assert!(after.accuracy > 0.5, "accuracy {}", after.accuracy);
+        assert!(after.accuracy > before.accuracy + 0.2);
+    }
+
+    #[test]
+    fn grad_over_indices_equals_batched_mean() {
+        let data = tiny_data();
+        let spec = logreg();
+        let params = spec.init_flat(4);
+        let idx = [3usize, 10, 17, 42];
+        let mut t = NativeLogreg::new(4);
+
+        let mut g1 = vec![0.0f32; spec.dim()];
+        let l1 = t.grad_over_indices(&params, &data, &idx, &mut g1);
+
+        let mut x = vec![0.0f32; 4 * 784];
+        let mut y = vec![0.0f32; 4];
+        data.gather_batch(&idx, &mut x, &mut y);
+        let mut g2 = vec![0.0f32; spec.dim()];
+        let l2 = t.grad_loss(&params, &x, &y, &mut g2);
+
+        assert!((l1 - l2).abs() < 1e-5);
+        for i in 0..g1.len() {
+            assert!((g1[i] - g2[i]).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn eval_counts_all_examples() {
+        let data = tiny_data();
+        let mut t = NativeLogreg::new(1);
+        let params = logreg().init_flat(6);
+        let m = t.eval(&params, &data);
+        assert_eq!(m.n, 200);
+        assert!((0.0..=1.0).contains(&m.accuracy));
+        // untrained model ≈ chance
+        assert!(m.accuracy < 0.35);
+    }
+}

@@ -1,0 +1,168 @@
+//! The PJRT execution engine: one CPU client, compiled executables cached
+//! by artifact name, literal marshalling helpers.
+
+use super::registry::{ArtifactEntry, Manifest};
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+
+/// Owns the PJRT client and the executable cache. Cheap to clone (Rc).
+#[derive(Clone)]
+pub struct Engine {
+    inner: Rc<EngineInner>,
+}
+
+struct EngineInner {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Engine {
+    /// Create the engine from an artifacts directory (must contain
+    /// `manifest.json`). Validates the manifest against the rust model
+    /// mirrors.
+    pub fn load(dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(dir)?;
+        manifest.validate_against_models()?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Engine {
+            inner: Rc::new(EngineInner { client, manifest, cache: RefCell::new(HashMap::new()) }),
+        })
+    }
+
+    /// Locate artifacts automatically (cwd walk / env var) and load.
+    pub fn load_default() -> Result<Engine> {
+        let dir = super::find_artifacts_dir()
+            .ok_or_else(|| anyhow!("artifacts/manifest.json not found — run `make artifacts`"))?;
+        Self::load(&dir)
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.inner.manifest
+    }
+
+    /// Fetch (compiling and caching on first use) the executable for a
+    /// manifest entry.
+    pub fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.inner.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self
+            .inner
+            .manifest
+            .find(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest"))?;
+        let path = self.inner.manifest.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .inner
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))
+            .with_context(|| format!("artifact file {}", path.display()))?;
+        let exe = Rc::new(exe);
+        self.inner.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 literals built from the given flat
+    /// buffers (shapes from the manifest schema, in order), returning the
+    /// decomposed output tuple as flat f32 vectors.
+    pub fn run_f32(&self, entry: &ArtifactEntry, inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == entry.inputs.len(),
+            "artifact {}: got {} inputs, expected {}",
+            entry.name,
+            inputs.len(),
+            entry.inputs.len()
+        );
+        let exe = self.executable(&entry.name)?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (meta, buf) in entry.inputs.iter().zip(inputs) {
+            anyhow::ensure!(
+                buf.len() == meta.numel(),
+                "artifact {}: input '{}' has {} elements, expected {} for shape {:?}",
+                entry.name,
+                meta.name,
+                buf.len(),
+                meta.numel(),
+                meta.shape
+            );
+            literals.push(make_literal(buf, &meta.shape)?);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {}: {e:?}", entry.name))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {}: {e:?}", entry.name))?;
+        // aot.py lowers with return_tuple=True → a single tuple output
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untupling: {e:?}"))?;
+        anyhow::ensure!(
+            parts.len() == entry.outputs.len(),
+            "artifact {}: {} outputs, manifest says {}",
+            entry.name,
+            parts.len(),
+            entry.outputs.len()
+        );
+        let mut out = Vec::with_capacity(parts.len());
+        for (part, meta) in parts.iter().zip(&entry.outputs) {
+            let v: Vec<f32> =
+                part.to_vec().map_err(|e| anyhow!("reading output {}: {e:?}", meta.name))?;
+            anyhow::ensure!(
+                v.len() == meta.numel(),
+                "output '{}': {} elements vs schema {:?}",
+                meta.name,
+                v.len(),
+                meta.shape
+            );
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Build an f32 literal of the given shape from a flat slice.
+pub fn make_literal(buf: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    if shape.is_empty() {
+        anyhow::ensure!(buf.len() == 1, "scalar literal from {} elements", buf.len());
+        return Ok(xla::Literal::scalar(buf[0]));
+    }
+    let lit = xla::Literal::vec1(buf);
+    if shape.len() == 1 && shape[0] == buf.len() {
+        return Ok(lit);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape to {shape:?}: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Engine tests that need real artifacts live in rust/tests/
+    // (integration), gated on artifacts/ existing. Here: literal helper.
+
+    #[test]
+    fn make_literal_shapes() {
+        let l = make_literal(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        let l1 = make_literal(&[1.0, 2.0], &[2]).unwrap();
+        assert_eq!(l1.element_count(), 2);
+        // scalar
+        let s = make_literal(&[5.0], &[]).unwrap();
+        assert_eq!(s.element_count(), 1);
+    }
+
+    #[test]
+    fn make_literal_wrong_size_errors() {
+        assert!(make_literal(&[1.0, 2.0, 3.0], &[2, 2]).is_err());
+    }
+}

@@ -1,0 +1,46 @@
+//! The PJRT runtime: loads the HLO-text artifacts that
+//! `python/compile/aot.py` emits at build time and executes them on the
+//! CPU PJRT client via the `xla` crate. This is the only place the crate
+//! touches XLA; Python never runs at training time.
+//!
+//! Flow (see /opt/xla-example/load_hlo for the reference wiring):
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto`
+//!   → `PjRtClient::compile` → `PjRtLoadedExecutable::execute`.
+//!
+//! HLO *text* is the interchange format — jax ≥ 0.5 serialised protos use
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see aot.py).
+
+pub mod engine;
+pub mod registry;
+pub mod trainer;
+
+pub use engine::Engine;
+pub use registry::{ArtifactEntry, ArtifactKind, Manifest, TensorMeta};
+pub use trainer::HloTrainer;
+
+/// Default artifacts directory (relative to the repo root).
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Locate the artifacts directory from the current working directory or
+/// the `FEDSTC_ARTIFACTS` environment variable. Examples, tests and
+/// benches run from various cwd depths, so walk up a few levels.
+pub fn find_artifacts_dir() -> Option<std::path::PathBuf> {
+    if let Ok(dir) = std::env::var("FEDSTC_ARTIFACTS") {
+        let p = std::path::PathBuf::from(dir);
+        if p.join("manifest.json").exists() {
+            return Some(p);
+        }
+    }
+    let mut cur = std::env::current_dir().ok()?;
+    for _ in 0..4 {
+        let cand = cur.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return Some(cand);
+        }
+        if !cur.pop() {
+            break;
+        }
+    }
+    None
+}

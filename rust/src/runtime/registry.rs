@@ -1,0 +1,317 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (which
+//! writes `artifacts/manifest.json`) and the rust runtime (which loads
+//! and validates it).
+//!
+//! The manifest records, per artifact: the HLO file, its kind
+//! (train/eval/stc), the model it belongs to, the static batch size, and
+//! the full input/output tensor schemas. `validate_against_models` pins
+//! the schema against the rust-side [`crate::models::ModelSpec`] mirror
+//! so layer drift fails at load time, not as silent mis-slicing.
+
+use crate::models::ModelSpec;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// What an artifact computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// (params…, x, y) → (grads…, loss)
+    Train,
+    /// (params…, X[chunk,b,…], Y[chunk,b], lr) → (params'…, mean_loss) —
+    /// `chunk` fused SGD steps per dispatch (perf lever, §Perf)
+    Multi,
+    /// (params…, x, y, weights) → (loss_sum, correct_sum)
+    Eval,
+    /// (flat) → (ternary_dense, mu) — the Pallas STC kernel path
+    Stc,
+}
+
+impl ArtifactKind {
+    fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "train" => ArtifactKind::Train,
+            "multi" => ArtifactKind::Multi,
+            "eval" => ArtifactKind::Eval,
+            "stc" => ArtifactKind::Stc,
+            other => bail!("unknown artifact kind '{other}'"),
+        })
+    }
+}
+
+/// One tensor in an artifact signature.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact record.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub kind: ArtifactKind,
+    pub model: String,
+    /// static batch size (train/eval); 0 for stc artifacts
+    pub batch: usize,
+    /// flattened tensor length (stc artifacts); 0 otherwise
+    pub n: usize,
+    /// sparsity rate (stc artifacts)
+    pub p: f64,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ArtifactEntry>,
+}
+
+fn tensor_list(j: &Json, key: &str) -> Result<Vec<TensorMeta>> {
+    let arr = j
+        .get(key)
+        .and_then(|x| x.as_arr())
+        .ok_or_else(|| anyhow!("manifest entry missing '{key}'"))?;
+    arr.iter()
+        .map(|t| {
+            let name = t
+                .get("name")
+                .and_then(|x| x.as_str())
+                .ok_or_else(|| anyhow!("tensor missing name"))?
+                .to_string();
+            let shape = t
+                .get("shape")
+                .and_then(|x| x.as_arr())
+                .ok_or_else(|| anyhow!("tensor missing shape"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                .collect::<Result<Vec<_>>>()?;
+            Ok(TensorMeta { name, shape })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load and parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest JSON (exposed for tests).
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let arr = j
+            .get("artifacts")
+            .and_then(|a| a.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing 'artifacts'"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let get_str = |k: &str| -> Result<String> {
+                Ok(e.get(k)
+                    .and_then(|x| x.as_str())
+                    .ok_or_else(|| anyhow!("entry missing '{k}'"))?
+                    .to_string())
+            };
+            entries.push(ArtifactEntry {
+                name: get_str("name")?,
+                file: get_str("file")?,
+                kind: ArtifactKind::parse(&get_str("kind")?)?,
+                model: e.get("model").and_then(|x| x.as_str()).unwrap_or("").to_string(),
+                batch: e.get("batch").and_then(|x| x.as_usize()).unwrap_or(0),
+                n: e.get("n").and_then(|x| x.as_usize()).unwrap_or(0),
+                p: e.get("p").and_then(|x| x.as_f64()).unwrap_or(0.0),
+                inputs: tensor_list(e, "inputs")?,
+                outputs: tensor_list(e, "outputs")?,
+            });
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    /// Train artifact for (model, batch).
+    pub fn train_for(&self, model: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::Train && e.model == model && e.batch == batch)
+    }
+
+    /// Eval artifact for a model (any batch — there is one eval batch).
+    pub fn eval_for(&self, model: &str) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.kind == ArtifactKind::Eval && e.model == model)
+    }
+
+    /// Fused multi-step artifact for (model, batch), if lowered. `n`
+    /// holds the chunk length.
+    pub fn multi_for(&self, model: &str, batch: usize) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::Multi && e.model == model && e.batch == batch)
+    }
+
+    /// STC kernel artifact for (flattened length, sparsity).
+    pub fn stc_for(&self, n: usize, p: f64) -> Option<&ArtifactEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::Stc && e.n == n && (e.p - p).abs() < 1e-12)
+    }
+
+    /// Batch sizes available for a model's train artifacts.
+    pub fn train_batches(&self, model: &str) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == ArtifactKind::Train && e.model == model)
+            .map(|e| e.batch)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Check every train/multi artifact's leading inputs against the
+    /// rust-side model mirror: same tensor count, names and shapes, in
+    /// order.
+    pub fn validate_against_models(&self) -> Result<()> {
+        for e in self
+            .entries
+            .iter()
+            .filter(|e| matches!(e.kind, ArtifactKind::Train | ArtifactKind::Multi))
+        {
+            let spec = ModelSpec::by_name(&e.model);
+            let np = spec.tensors.len();
+            let extra = if e.kind == ArtifactKind::Train { 2 } else { 3 }; // x,y[,lr]
+            if e.inputs.len() != np + extra {
+                bail!(
+                    "artifact {}: {} inputs, expected {} params + {}",
+                    e.name,
+                    e.inputs.len(),
+                    np,
+                    extra
+                );
+            }
+            for (i, (t, _)) in spec.tensors.iter().enumerate() {
+                let got = &e.inputs[i];
+                if got.name != t.name || got.shape != t.shape {
+                    bail!(
+                        "artifact {}: param {} is {}{:?}, rust mirror says {}{:?}",
+                        e.name,
+                        i,
+                        got.name,
+                        got.shape,
+                        t.name,
+                        t.shape
+                    );
+                }
+            }
+            // outputs: grads/new-params (same shapes) + scalar loss
+            if e.outputs.len() != np + 1 {
+                bail!("artifact {}: {} outputs, expected {}", e.name, e.outputs.len(), np + 1);
+            }
+            for (i, (t, _)) in spec.tensors.iter().enumerate() {
+                if e.outputs[i].shape != t.shape {
+                    bail!("artifact {}: output {} shape mismatch", e.name, i);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest() -> String {
+        r#"{
+          "version": 1,
+          "artifacts": [
+            {
+              "name": "train_logreg_b20", "file": "train_logreg_b20.hlo.txt",
+              "kind": "train", "model": "logreg", "batch": 20,
+              "inputs": [
+                {"name": "w", "shape": [784, 10]},
+                {"name": "b", "shape": [10]},
+                {"name": "x", "shape": [20, 784]},
+                {"name": "y", "shape": [20]}
+              ],
+              "outputs": [
+                {"name": "grad_w", "shape": [784, 10]},
+                {"name": "grad_b", "shape": [10]},
+                {"name": "loss", "shape": []}
+              ]
+            },
+            {
+              "name": "stc_7850_p0.01", "file": "stc_7850_p0.01.hlo.txt",
+              "kind": "stc", "model": "", "n": 7850, "p": 0.01,
+              "inputs": [{"name": "flat", "shape": [7850]}],
+              "outputs": [{"name": "ternary", "shape": [7850]}, {"name": "mu", "shape": []}]
+            }
+          ]
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parse_and_lookup() {
+        let m = Manifest::parse(&sample_manifest(), Path::new("/tmp")).unwrap();
+        assert_eq!(m.entries.len(), 2);
+        assert!(m.find("train_logreg_b20").is_some());
+        assert!(m.train_for("logreg", 20).is_some());
+        assert!(m.train_for("logreg", 21).is_none());
+        assert!(m.stc_for(7850, 0.01).is_some());
+        assert!(m.stc_for(7850, 0.02).is_none());
+        assert_eq!(m.train_batches("logreg"), vec![20]);
+    }
+
+    #[test]
+    fn validation_accepts_matching_schema() {
+        let m = Manifest::parse(&sample_manifest(), Path::new("/tmp")).unwrap();
+        m.validate_against_models().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_shape_drift() {
+        let bad = sample_manifest().replace("[784, 10]", "[784, 11]");
+        let m = Manifest::parse(&bad, Path::new("/tmp")).unwrap();
+        let err = m.validate_against_models().unwrap_err().to_string();
+        assert!(err.contains("param 0"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let bad = sample_manifest().replace("\"version\": 1", "\"version\": 9");
+        assert!(Manifest::parse(&bad, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_malformed_json() {
+        assert!(Manifest::parse("{", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("{\"version\": 1}", Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn tensor_meta_numel() {
+        let t = TensorMeta { name: "w".into(), shape: vec![784, 10] };
+        assert_eq!(t.numel(), 7840);
+        let s = TensorMeta { name: "loss".into(), shape: vec![] };
+        assert_eq!(s.numel(), 1);
+    }
+}

@@ -1,0 +1,221 @@
+//! `HloTrainer` — the production gradient oracle: runs the AOT-compiled
+//! L2 train/eval steps through PJRT. Implements [`crate::models::Trainer`]
+//! so the coordinator is agnostic to whether gradients come from HLO or
+//! the native reference path.
+
+use super::engine::Engine;
+use super::registry::{ArtifactEntry, ArtifactKind};
+use crate::compression::TernaryTensor;
+use crate::data::Dataset;
+use crate::models::{EvalMetrics, ModelSpec, Trainer};
+use anyhow::{anyhow, Result};
+
+/// PJRT-backed trainer for one (model, batch size) pair.
+pub struct HloTrainer {
+    engine: Engine,
+    spec: ModelSpec,
+    train_entry: ArtifactEntry,
+    eval_entry: ArtifactEntry,
+    /// fused multi-step artifact (chunked local SGD), when lowered for
+    /// this (model, batch)
+    multi_entry: Option<ArtifactEntry>,
+    batch: usize,
+    /// offsets of each parameter tensor in the flattened vector
+    offsets: Vec<usize>,
+    /// eval scratch
+    eval_x: Vec<f32>,
+    eval_y: Vec<f32>,
+    eval_w: Vec<f32>,
+}
+
+impl HloTrainer {
+    pub fn new(engine: &Engine, model: &str, batch: usize) -> Result<Self> {
+        let spec = ModelSpec::by_name(model);
+        let train_entry = engine
+            .manifest()
+            .train_for(model, batch)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no train artifact for {model} at batch {batch}; available: {:?} — \
+                     add the batch size to aot.py's BATCH_SIZES and re-run `make artifacts`",
+                    engine.manifest().train_batches(model)
+                )
+            })?
+            .clone();
+        let eval_entry = engine
+            .manifest()
+            .eval_for(model)
+            .ok_or_else(|| anyhow!("no eval artifact for {model}"))?
+            .clone();
+        let multi_entry = engine.manifest().multi_for(model, batch).cloned();
+        // pre-compile
+        engine.executable(&train_entry.name)?;
+        engine.executable(&eval_entry.name)?;
+        if let Some(m) = &multi_entry {
+            engine.executable(&m.name)?;
+        }
+        let offsets = spec.offsets();
+        Ok(HloTrainer {
+            engine: engine.clone(),
+            spec,
+            train_entry,
+            eval_entry,
+            multi_entry,
+            batch,
+            offsets,
+            eval_x: Vec::new(),
+            eval_y: Vec::new(),
+            eval_w: Vec::new(),
+        })
+    }
+
+    /// Static batch size of the eval artifact.
+    fn eval_batch(&self) -> usize {
+        self.eval_entry.batch
+    }
+
+    /// Slice the flattened params into per-tensor input slices.
+    fn param_slices<'a>(&self, params: &'a [f32]) -> Vec<&'a [f32]> {
+        let mut out = Vec::with_capacity(self.spec.tensors.len());
+        for (i, (t, _)) in self.spec.tensors.iter().enumerate() {
+            let off = self.offsets[i];
+            out.push(&params[off..off + t.numel()]);
+        }
+        out
+    }
+}
+
+impl Trainer for HloTrainer {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn grad_loss(&mut self, params: &[f32], x: &[f32], y: &[f32], grads_out: &mut [f32]) -> f32 {
+        debug_assert_eq!(params.len(), self.spec.dim());
+        let mut inputs = self.param_slices(params);
+        inputs.push(x);
+        inputs.push(y);
+        let outputs = self
+            .engine
+            .run_f32(&self.train_entry, &inputs)
+            .expect("train step execution failed");
+        // outputs: grads per tensor, then scalar loss
+        let np = self.spec.tensors.len();
+        for i in 0..np {
+            let off = self.offsets[i];
+            let g = &outputs[i];
+            grads_out[off..off + g.len()].copy_from_slice(g);
+        }
+        outputs[np][0]
+    }
+
+    fn chunk_len(&self) -> usize {
+        self.multi_entry.as_ref().map(|e| e.n).unwrap_or(0)
+    }
+
+    fn sgd_chunk(&mut self, params: &mut [f32], xs: &[f32], ys: &[f32], lr: f32) -> f32 {
+        let entry = self.multi_entry.as_ref().expect("no multi artifact").clone();
+        let lr_buf = [lr];
+        let mut inputs = self.param_slices(params);
+        inputs.push(xs);
+        inputs.push(ys);
+        inputs.push(&lr_buf);
+        let outputs = self
+            .engine
+            .run_f32(&entry, &inputs)
+            .expect("multi train step execution failed");
+        let np = self.spec.tensors.len();
+        for i in 0..np {
+            let off = self.offsets[i];
+            params[off..off + outputs[i].len()].copy_from_slice(&outputs[i]);
+        }
+        outputs[np][0]
+    }
+
+    fn eval(&mut self, params: &[f32], data: &Dataset) -> EvalMetrics {
+        let eb = self.eval_batch();
+        let dim = data.dim;
+        self.eval_x.resize(eb * dim, 0.0);
+        self.eval_y.resize(eb, 0.0);
+        self.eval_w.resize(eb, 0.0);
+
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut start = 0;
+        while start < data.len() {
+            let count = (data.len() - start).min(eb);
+            for bi in 0..eb {
+                if bi < count {
+                    let row = data.row(start + bi);
+                    self.eval_x[bi * dim..(bi + 1) * dim].copy_from_slice(row);
+                    self.eval_y[bi] = data.labels[start + bi] as f32;
+                    self.eval_w[bi] = 1.0;
+                } else {
+                    // padding: weight 0 masks the example out
+                    self.eval_x[bi * dim..(bi + 1) * dim].iter_mut().for_each(|v| *v = 0.0);
+                    self.eval_y[bi] = 0.0;
+                    self.eval_w[bi] = 0.0;
+                }
+            }
+            let mut inputs = self.param_slices(params);
+            inputs.push(&self.eval_x);
+            inputs.push(&self.eval_y);
+            inputs.push(&self.eval_w);
+            let outputs = self
+                .engine
+                .run_f32(&self.eval_entry, &inputs)
+                .expect("eval step execution failed");
+            loss_sum += outputs[0][0] as f64;
+            correct += outputs[1][0] as f64;
+            start += count;
+        }
+        EvalMetrics {
+            loss: loss_sum / data.len() as f64,
+            accuracy: correct / data.len() as f64,
+            n: data.len(),
+        }
+    }
+}
+
+/// The HLO-backed STC compression path: runs the L1 Pallas kernel (via
+/// its lowered artifact) and converts the dense ternary output into the
+/// wire representation. Exists to cross-validate the native rust hot path
+/// against the kernel the paper-level stack uses — integration tests pin
+/// the two against each other bit-for-bit.
+pub struct HloStc {
+    engine: Engine,
+    entry: ArtifactEntry,
+}
+
+impl HloStc {
+    pub fn new(engine: &Engine, n: usize, p: f64) -> Result<Self> {
+        let entry = engine
+            .manifest()
+            .stc_for(n, p)
+            .ok_or_else(|| anyhow!("no stc artifact for n={n} p={p}"))?
+            .clone();
+        debug_assert_eq!(entry.kind, ArtifactKind::Stc);
+        engine.executable(&entry.name)?;
+        Ok(HloStc { engine: engine.clone(), entry })
+    }
+
+    /// Compress via the HLO/Pallas path.
+    pub fn compress(&self, flat: &[f32]) -> Result<TernaryTensor> {
+        let outputs = self.engine.run_f32(&self.entry, &[flat])?;
+        let dense = &outputs[0];
+        let mu = outputs[1][0];
+        let mut indices = Vec::new();
+        let mut signs = Vec::new();
+        for (i, &v) in dense.iter().enumerate() {
+            if v != 0.0 {
+                indices.push(i as u32);
+                signs.push(v > 0.0);
+            }
+        }
+        Ok(TernaryTensor { len: flat.len(), indices, signs, mu, p: self.entry.p })
+    }
+}

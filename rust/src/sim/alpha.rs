@@ -1,0 +1,164 @@
+//! Gradient sign-congruence analysis — the paper's Fig. 3 and eqs. (5)–(7).
+//!
+//! α_w(k) = P[sign(g_w^k) = sign(g_w)]: the probability that the sign of
+//! a mini-batch gradient coordinate matches the full-data gradient sign.
+//! The paper shows that for iid batches α(k) → 1 as k grows, while for
+//! non-iid (single-class) batches it stays near 1/2 no matter how large
+//! the batch — the mechanism behind signSGD's collapse on non-iid data.
+
+use crate::data::Dataset;
+use crate::models::native::NativeLogreg;
+use crate::models::{logreg, ModelSpec};
+use crate::util::rng::Pcg64;
+
+/// How batches are drawn for the congruence estimate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BatchRegime {
+    /// uniform random batches over the full dataset
+    Iid,
+    /// every batch holds examples from exactly one (random) class
+    SingleClass,
+}
+
+/// Result of the α(k) analysis for one batch size.
+#[derive(Clone, Debug)]
+pub struct AlphaPoint {
+    pub k: usize,
+    /// mean congruence over all parameters, eq. (7)
+    pub alpha_mean: f64,
+    /// congruence histogram over parameters (10 bins on [0,1]) — the
+    /// paper's Fig. 3 left panel
+    pub histogram: [f64; 10],
+}
+
+/// Estimator for α_w(k) on the logreg model.
+pub struct AlphaAnalysis {
+    spec: ModelSpec,
+    params: Vec<f32>,
+    full_grad: Vec<f32>,
+    oracle: NativeLogreg,
+    /// per-class example index pools
+    class_pools: Vec<Vec<usize>>,
+}
+
+impl AlphaAnalysis {
+    /// Prepare the analysis at a (fresh, seeded) parameter point —
+    /// the paper evaluates at the beginning of training.
+    pub fn new(data: &Dataset, seed: u64) -> Self {
+        let spec = logreg();
+        let params = spec.init_flat(seed);
+        let mut oracle = NativeLogreg::new(1);
+        let all: Vec<usize> = (0..data.len()).collect();
+        let mut full_grad = vec![0.0f32; spec.dim()];
+        oracle.grad_over_indices(&params, data, &all, &mut full_grad);
+        let mut class_pools = vec![Vec::new(); data.num_classes];
+        for (i, &y) in data.labels.iter().enumerate() {
+            class_pools[y as usize].push(i);
+        }
+        AlphaAnalysis { spec, params, full_grad, oracle, class_pools }
+    }
+
+    /// Estimate α(k) from `trials` sampled batches of size `k`.
+    pub fn alpha(
+        &mut self,
+        data: &Dataset,
+        k: usize,
+        regime: BatchRegime,
+        trials: usize,
+        seed: u64,
+    ) -> AlphaPoint {
+        let dim = self.spec.dim();
+        let mut rng = Pcg64::new(seed, 0xa1fa);
+        let mut match_counts = vec![0u32; dim];
+        let mut grad = vec![0.0f32; dim];
+        let mut batch = Vec::with_capacity(k);
+
+        for _ in 0..trials {
+            batch.clear();
+            match regime {
+                BatchRegime::Iid => {
+                    for _ in 0..k {
+                        batch.push(rng.below(data.len()));
+                    }
+                }
+                BatchRegime::SingleClass => {
+                    let c = rng.below(data.num_classes);
+                    let pool = &self.class_pools[c];
+                    for _ in 0..k {
+                        batch.push(pool[rng.below(pool.len())]);
+                    }
+                }
+            }
+            self.oracle.grad_over_indices(&self.params, data, &batch, &mut grad);
+            for i in 0..dim {
+                if (grad[i] >= 0.0) == (self.full_grad[i] >= 0.0) {
+                    match_counts[i] += 1;
+                }
+            }
+        }
+
+        let mut histogram = [0.0f64; 10];
+        let mut sum = 0.0f64;
+        for &c in &match_counts {
+            let a = c as f64 / trials as f64;
+            sum += a;
+            let bin = ((a * 10.0) as usize).min(9);
+            histogram[bin] += 1.0;
+        }
+        for h in histogram.iter_mut() {
+            *h /= dim as f64;
+        }
+        AlphaPoint { k, alpha_mean: sum / dim as f64, histogram }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{SynthFlavor, SynthSpec};
+
+    fn data() -> Dataset {
+        SynthSpec::new(SynthFlavor::Mnist, 1200, 10, 21).generate().0
+    }
+
+    #[test]
+    fn alpha_iid_grows_with_batch_size() {
+        let d = data();
+        let mut a = AlphaAnalysis::new(&d, 1);
+        let a1 = a.alpha(&d, 1, BatchRegime::Iid, 40, 5).alpha_mean;
+        let a64 = a.alpha(&d, 64, BatchRegime::Iid, 40, 5).alpha_mean;
+        assert!(a64 > a1 + 0.08, "α(1)={a1:.3} α(64)={a64:.3}");
+    }
+
+    #[test]
+    fn alpha_single_class_stays_low() {
+        // the paper's key observation: non-iid congruence does not improve
+        // with batch size
+        let d = data();
+        let mut a = AlphaAnalysis::new(&d, 1);
+        let iid64 = a.alpha(&d, 64, BatchRegime::Iid, 40, 6).alpha_mean;
+        let nid64 = a.alpha(&d, 64, BatchRegime::SingleClass, 40, 6).alpha_mean;
+        assert!(
+            iid64 - nid64 > 0.1,
+            "iid α(64)={iid64:.3} should clearly exceed single-class {nid64:.3}"
+        );
+    }
+
+    #[test]
+    fn alpha_at_batch_one_near_half() {
+        // paper: α(1) ≈ 0.51 — a single example barely predicts the sign
+        let d = data();
+        let mut a = AlphaAnalysis::new(&d, 2);
+        let a1 = a.alpha(&d, 1, BatchRegime::Iid, 60, 7).alpha_mean;
+        assert!((0.45..0.75).contains(&a1), "α(1) = {a1}");
+    }
+
+    #[test]
+    fn histogram_is_distribution() {
+        let d = data();
+        let mut a = AlphaAnalysis::new(&d, 3);
+        let p = a.alpha(&d, 4, BatchRegime::Iid, 30, 8);
+        let total: f64 = p.histogram.iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,164 @@
+//! The federated-learning experiment engine: dataset construction,
+//! shard-splitting, round loop, evaluation cadence and logging — one call
+//! regenerates one curve/cell of any paper figure.
+
+pub mod alpha;
+
+use crate::config::FedConfig;
+use crate::coordinator::FederatedRun;
+use crate::data::synth::{SynthFlavor, SynthSpec};
+use crate::data::Dataset;
+use crate::metrics::{EvalPoint, TrainingLog};
+use crate::models::{native::NativeLogreg, ModelSpec, Trainer};
+
+/// A complete experiment: config + datasets.
+pub struct Experiment {
+    pub cfg: FedConfig,
+    pub train: Dataset,
+    pub test: Dataset,
+    pub spec: ModelSpec,
+}
+
+impl Experiment {
+    /// Build datasets for the config's model/task pairing.
+    pub fn new(cfg: FedConfig) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let spec = ModelSpec::by_name(&cfg.model);
+        let flavor = SynthFlavor::by_name(spec.task);
+        let (train, test) =
+            SynthSpec::new(flavor, cfg.train_examples, cfg.test_examples, cfg.seed).generate();
+        Ok(Experiment { cfg, train, test, spec })
+    }
+
+    /// Run the full federated training loop with the given gradient
+    /// oracle, evaluating every `cfg.eval_every` iterations.
+    pub fn run(&self, trainer: &mut dyn Trainer) -> anyhow::Result<TrainingLog> {
+        anyhow::ensure!(
+            trainer.batch_size() == self.cfg.batch_size,
+            "trainer batch size {} != config batch size {}",
+            trainer.batch_size(),
+            self.cfg.batch_size
+        );
+        let init = self.spec.init_flat(self.cfg.seed);
+        let mut run = FederatedRun::new(self.cfg.clone(), &self.train, init)?;
+        let mut log = TrainingLog::new(&self.cfg.describe());
+
+        let local_iters = self.cfg.method.local_iters();
+        let total_rounds = self.cfg.rounds();
+        let eval_every_rounds = (self.cfg.eval_every / local_iters).max(1);
+
+        let mut last_loss = f32::NAN;
+        for round in 1..=total_rounds {
+            last_loss = run.run_round(trainer, &self.train);
+            if round % eval_every_rounds == 0 || round == total_rounds {
+                let m = trainer.eval(&run.server.params, &self.test);
+                log.push(EvalPoint {
+                    iteration: run.iterations_done(),
+                    round,
+                    accuracy: m.accuracy,
+                    loss: m.loss,
+                    up_bits: run.ledger.up_bits_per_client(),
+                    down_bits: run.ledger.down_bits_per_client(),
+                });
+            }
+        }
+        let _ = last_loss;
+        run.settle_final_downloads();
+        // refresh the final point's download accounting
+        if let Some(p) = log.points.last_mut() {
+            p.down_bits = run.ledger.down_bits_per_client();
+        }
+        Ok(log)
+    }
+
+    /// Convenience for logreg experiments: run on the native trainer
+    /// (no artifacts needed). Panics if the config's model is not logreg.
+    pub fn run_native(&self) -> anyhow::Result<TrainingLog> {
+        assert_eq!(self.cfg.model, "logreg", "native trainer only supports logreg");
+        let mut trainer = NativeLogreg::new(self.cfg.batch_size);
+        self.run(&mut trainer)
+    }
+}
+
+/// Run one config end-to-end on the native logreg path — the workhorse of
+/// the analysis benches (Figs 2–12 logreg rows).
+pub fn run_logreg(cfg: FedConfig) -> anyhow::Result<TrainingLog> {
+    Experiment::new(cfg)?.run_native()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Method;
+
+    fn small_cfg(method: Method, classes: usize) -> FedConfig {
+        FedConfig {
+            model: "logreg".into(),
+            num_clients: 10,
+            participation: 1.0,
+            classes_per_client: classes,
+            batch_size: 10,
+            method,
+            lr: 0.05,
+            momentum: 0.0,
+            iterations: 120,
+            eval_every: 30,
+            seed: 11,
+            train_examples: 800,
+            test_examples: 400,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn logreg_stc_reaches_nontrivial_accuracy() {
+        let log = run_logreg(small_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 10)).unwrap();
+        assert!(log.max_accuracy() > 0.55, "acc {}", log.max_accuracy());
+        assert_eq!(log.points.len(), 4);
+        // iterations recorded on the paper's axis
+        assert_eq!(log.points.last().unwrap().iteration, 120);
+    }
+
+    #[test]
+    fn fedavg_consumes_budget_in_rounds() {
+        let log = run_logreg(small_cfg(Method::FedAvg { n: 30 }, 10)).unwrap();
+        // 120 iterations / 30 local iters = 4 rounds, eval every round
+        assert_eq!(log.points.last().unwrap().round, 4);
+        assert!(log.max_accuracy() > 0.5);
+    }
+
+    #[test]
+    fn noniid_hurts_fedavg_more_than_stc() {
+        // the paper's headline claim, in miniature
+        let stc_noniid =
+            run_logreg(small_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 1)).unwrap();
+        let fedavg_noniid = run_logreg(small_cfg(Method::FedAvg { n: 30 }, 1)).unwrap();
+        assert!(
+            stc_noniid.max_accuracy() > fedavg_noniid.max_accuracy(),
+            "stc {} <= fedavg {} on non-iid(1)",
+            stc_noniid.max_accuracy(),
+            fedavg_noniid.max_accuracy()
+        );
+    }
+
+    #[test]
+    fn comm_accounting_stc_below_baseline() {
+        let stc = run_logreg(small_cfg(Method::Stc { p_up: 0.0025, p_down: 0.0025 }, 10))
+            .unwrap();
+        let base = run_logreg(small_cfg(Method::Baseline, 10)).unwrap();
+        let stc_up = stc.points.last().unwrap().up_bits;
+        let base_up = base.points.last().unwrap().up_bits;
+        assert!(
+            (base_up as f64 / stc_up as f64) > 100.0,
+            "ratio {}",
+            base_up as f64 / stc_up as f64
+        );
+    }
+
+    #[test]
+    fn batch_size_mismatch_rejected() {
+        let exp = Experiment::new(small_cfg(Method::Baseline, 10)).unwrap();
+        let mut t = NativeLogreg::new(99);
+        assert!(exp.run(&mut t).is_err());
+    }
+}

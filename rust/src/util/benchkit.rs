@@ -1,0 +1,218 @@
+//! Criterion-less micro/macro benchmark harness.
+//!
+//! `cargo bench` targets in this crate are declared `harness = false` and
+//! drive this module directly. For the paper-figure benches the "result"
+//! is a table of accuracies/bits (regenerating the figure), so the harness
+//! also provides simple aligned-table printing; for the microbenches it
+//! provides warmup + repeated timed samples with median/MAD reporting.
+
+use crate::util::stats;
+use std::time::Instant;
+
+/// One timed measurement series.
+pub struct BenchResult {
+    pub name: String,
+    /// seconds per iteration, one entry per sample
+    pub samples: Vec<f64>,
+    /// items processed per iteration (for throughput), if meaningful
+    pub items_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn median(&self) -> f64 {
+        stats::percentile(&self.samples, 50.0)
+    }
+
+    pub fn report(&self) -> String {
+        let med = self.median();
+        let lo = stats::percentile(&self.samples, 10.0);
+        let hi = stats::percentile(&self.samples, 90.0);
+        let tput = self
+            .items_per_iter
+            .map(|n| format!("  {:>10}/s", human_rate(n / med)))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>12} [{} .. {}]{}",
+            self.name,
+            human_time(med),
+            human_time(lo),
+            human_time(hi),
+            tput
+        )
+    }
+}
+
+fn human_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1} ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.3} s", secs)
+    }
+}
+
+fn human_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{:.1}", r)
+    }
+}
+
+/// Run `f` for `warmup` unrecorded iterations then `samples` timed ones.
+/// Each sample may run the payload multiple times if it is very fast
+/// (auto-batched so one sample is ≥ ~1ms).
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, samples: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    // calibrate batch size
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let batch = (1e-3 / once).ceil().max(1.0) as usize;
+
+    let mut out = Vec::with_capacity(samples);
+    for _ in 0..samples {
+        let t = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        out.push(t.elapsed().as_secs_f64() / batch as f64);
+    }
+    BenchResult { name: name.to_string(), samples: out, items_per_iter: None }
+}
+
+/// Like [`bench`] but records a throughput denominator (items/iter).
+pub fn bench_throughput<F: FnMut()>(
+    name: &str,
+    items_per_iter: f64,
+    warmup: usize,
+    samples: usize,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, warmup, samples, f);
+    r.items_per_iter = Some(items_per_iter);
+    r
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Aligned table printer for the figure/table regeneration benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table { header: header.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with column alignment; header separated by a rule.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut w = vec![0usize; ncol];
+        for c in 0..ncol {
+            w[c] = self.header[c].chars().count();
+            for r in &self.rows {
+                w[c] = w[c].max(r[c].chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Section banner used by every bench binary so `cargo bench` output reads
+/// like the paper's evaluation section.
+pub fn banner(id: &str, caption: &str) {
+    println!("\n=== {} — {} ===", id, caption);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_samples() {
+        let r = bench("noop-ish", 1, 5, || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.median() > 0.0);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let r = bench_throughput("sum1k", 1000.0, 1, 3, || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.report().contains("/s"));
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["method", "acc"]);
+        t.row(&["STC".to_string(), "0.795".to_string()]);
+        t.row(&["FedAvg".to_string(), "0.42".to_string()]);
+        let s = t.render();
+        assert!(s.contains("method"));
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".to_string()]);
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert!(human_time(2e-9).contains("ns"));
+        assert!(human_time(2e-6).contains("µs"));
+        assert!(human_time(2e-3).contains("ms"));
+        assert!(human_time(2.0).contains(" s"));
+    }
+}

@@ -1,0 +1,93 @@
+//! In-tree substrates: PRNG, statistics, JSON writing, bench harness and a
+//! small randomized property-testing runner.
+//!
+//! The build environment is fully offline; the only crates available are
+//! the vendored closure of `xla` (see `.cargo/config.toml`). Everything a
+//! production framework would normally pull from crates.io — `rand`,
+//! `serde_json`, `criterion`, `proptest` — is therefore implemented here,
+//! small and specialised to this crate's needs.
+
+pub mod benchkit;
+pub mod json;
+pub mod proplite;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg64;
+
+/// Index of the maximum element (ties broken towards the lower index).
+/// Returns 0 for an empty slice by convention (callers guard emptiness).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best
+}
+
+/// Wall-clock timer for coarse phase measurements.
+pub struct Timer(std::time::Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(std::time::Instant::now())
+    }
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+    pub fn millis(&self) -> f64 {
+        self.0.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Format a byte count the way the paper's Table IV does (MB with 2
+/// decimals), switching to GB above 10⁴ MB for readability.
+pub fn fmt_bytes(bytes: f64) -> String {
+    let mb = bytes / 1e6;
+    if mb >= 10_000.0 {
+        format!("{:.2} GB", mb / 1e3)
+    } else if mb >= 1.0 {
+        format!("{:.2} MB", mb)
+    } else {
+        format!("{:.1} kB", bytes / 1e3)
+    }
+}
+
+/// Format bits as MB (paper reports communication in MB).
+pub fn bits_to_mb(bits: u64) -> f64 {
+    bits as f64 / 8.0 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_basic() {
+        assert_eq!(argmax(&[0.1, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[5.0]), 0);
+        // ties → lowest index
+        assert_eq!(argmax(&[1.0, 1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn argmax_negative_and_nan_free_path() {
+        assert_eq!(argmax(&[-3.0, -1.0, -2.0]), 1);
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(1_500_000.0), "1.50 MB");
+        assert_eq!(fmt_bytes(500.0), "0.5 kB");
+        assert!(fmt_bytes(20_000_000_000.0).ends_with("GB"));
+    }
+
+    #[test]
+    fn bits_to_mb_exact() {
+        assert!((bits_to_mb(8_000_000) - 1.0).abs() < 1e-12);
+    }
+}

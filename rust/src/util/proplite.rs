@@ -1,0 +1,153 @@
+//! proptest-lite: a small randomized property-testing runner.
+//!
+//! The real `proptest` crate is unavailable offline. This runner covers
+//! what the coordinator-invariant tests need: seeded generation of random
+//! inputs, many cases per property, and on failure a bounded greedy
+//! shrink (halving sizes / zeroing elements) with a reproducible report.
+
+use crate::util::rng::Pcg64;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { cases: 128, seed: 0xfed5_7c00, max_shrink_steps: 200 }
+    }
+}
+
+/// Run `prop` on `cases` random inputs produced by `gen`. On failure, try
+/// to shrink with `shrink` (returns candidate simplifications) and panic
+/// with the smallest failing input's debug representation.
+pub fn check<T, G, P, S>(name: &str, cfg: Config, mut gen: G, mut shrink: S, mut prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg64) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: FnMut(&T) -> Vec<T>,
+{
+    let mut rng = Pcg64::new(cfg.seed, fxhash(name));
+    for case in 0..cfg.cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // greedy shrink
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            let mut steps = 0;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    steps += 1;
+                    if steps > cfg.max_shrink_steps {
+                        break 'outer;
+                    }
+                    if let Err(m) = prop(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {:#x}):\n  input: {:?}\n  error: {}",
+                cfg.seed, best, best_msg
+            );
+        }
+    }
+}
+
+/// Convenience: property over a random f32 vector with random length in
+/// [min_len, max_len] and values in [-scale, scale].
+pub fn vec_f32(min_len: usize, max_len: usize, scale: f32) -> impl FnMut(&mut Pcg64) -> Vec<f32> {
+    move |rng| {
+        let n = min_len + rng.below(max_len - min_len + 1);
+        (0..n).map(|_| (rng.f32() * 2.0 - 1.0) * scale).collect()
+    }
+}
+
+/// Standard shrinker for `Vec<f32>`: halve the vector, drop halves,
+/// zero prefixes.
+pub fn shrink_vec_f32(v: &Vec<f32>) -> Vec<Vec<f32>> {
+    let mut out = Vec::new();
+    let n = v.len();
+    if n > 1 {
+        out.push(v[..n / 2].to_vec());
+        out.push(v[n / 2..].to_vec());
+    }
+    if n >= 1 {
+        let mut z = v.clone();
+        for x in z.iter_mut().take(n / 2 + 1) {
+            *x = 0.0;
+        }
+        if &z != v {
+            out.push(z);
+        }
+    }
+    out
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check(
+            "abs-nonneg",
+            Config { cases: 64, ..Default::default() },
+            vec_f32(0, 32, 10.0),
+            shrink_vec_f32,
+            |v| {
+                if v.iter().all(|x| x.abs() >= 0.0) {
+                    Ok(())
+                } else {
+                    Err("negative abs".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-short' failed")]
+    fn failing_property_panics_with_name() {
+        check(
+            "always-short",
+            Config { cases: 64, ..Default::default() },
+            vec_f32(0, 64, 1.0),
+            shrink_vec_f32,
+            |v| if v.len() < 10 { Ok(()) } else { Err(format!("len {}", v.len())) },
+        );
+    }
+
+    #[test]
+    fn shrinker_reduces_length() {
+        let v = vec![1.0f32; 8];
+        let cands = shrink_vec_f32(&v);
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+    }
+
+    #[test]
+    fn generator_respects_bounds() {
+        let mut rng = Pcg64::seeded(9);
+        let mut gen = vec_f32(3, 7, 2.0);
+        for _ in 0..100 {
+            let v = gen(&mut rng);
+            assert!((3..=7).contains(&v.len()));
+            assert!(v.iter().all(|x| x.abs() <= 2.0));
+        }
+    }
+}

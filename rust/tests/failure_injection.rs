@@ -1,0 +1,134 @@
+//! Failure-injection tests: the framework must fail loudly and precisely
+//! on corrupted artifacts, schema drift, malformed wire data and broken
+//! configurations — never silently mis-compute.
+
+use fedstc::compression::golomb::{self, GolombEncoded};
+use fedstc::runtime::{Engine, Manifest};
+use std::path::Path;
+
+fn err_str<T>(r: anyhow::Result<T>) -> String {
+    match r {
+        Ok(_) => panic!("expected an error"),
+        Err(e) => e.to_string(),
+    }
+}
+
+fn write_manifest(dir: &Path, body: &str) {
+    std::fs::create_dir_all(dir).unwrap();
+    std::fs::write(dir.join("manifest.json"), body).unwrap();
+}
+
+const GOOD_ENTRY: &str = r#"{
+  "name": "train_logreg_b4", "file": "train_logreg_b4.hlo.txt",
+  "kind": "train", "model": "logreg", "batch": 4,
+  "inputs": [
+    {"name": "w", "shape": [784, 10]},
+    {"name": "b", "shape": [10]},
+    {"name": "x", "shape": [4, 784]},
+    {"name": "y", "shape": [4]}
+  ],
+  "outputs": [
+    {"name": "grad_w", "shape": [784, 10]},
+    {"name": "grad_b", "shape": [10]},
+    {"name": "loss", "shape": []}
+  ]
+}"#;
+
+#[test]
+fn engine_rejects_missing_manifest() {
+    let dir = std::env::temp_dir().join("fedstc_missing_manifest");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let err = err_str(Engine::load(&dir));
+    assert!(err.contains("manifest"), "{err}");
+}
+
+#[test]
+fn engine_rejects_schema_drift() {
+    // a manifest whose tensor shapes disagree with the rust mirror must
+    // be refused at load time (before any execution)
+    let dir = std::env::temp_dir().join("fedstc_drift");
+    let drifted = GOOD_ENTRY.replace("[784, 10]", "[784, 12]");
+    write_manifest(&dir, &format!(r#"{{"version":1,"artifacts":[{drifted}]}}"#));
+    let err = err_str(Engine::load(&dir));
+    assert!(err.contains("rust mirror") || err.contains("param"), "{err}");
+}
+
+#[test]
+fn engine_rejects_bad_version_and_json() {
+    let dir = std::env::temp_dir().join("fedstc_badver");
+    write_manifest(&dir, r#"{"version": 99, "artifacts": []}"#);
+    assert!(Engine::load(&dir).is_err());
+    write_manifest(&dir, "not json at all {{{");
+    assert!(Engine::load(&dir).is_err());
+}
+
+#[test]
+fn executable_load_fails_on_corrupt_hlo_text() {
+    let dir = std::env::temp_dir().join("fedstc_corrupt_hlo");
+    write_manifest(&dir, &format!(r#"{{"version":1,"artifacts":[{GOOD_ENTRY}]}}"#));
+    std::fs::write(dir.join("train_logreg_b4.hlo.txt"), "HloModule garbage\n%%%%").unwrap();
+    let engine = Engine::load(&dir).unwrap();
+    let err = err_str(engine.executable("train_logreg_b4"));
+    assert!(err.contains("train_logreg_b4") || err.contains("parsing"), "{err}");
+}
+
+#[test]
+fn executable_load_fails_on_missing_hlo_file() {
+    let dir = std::env::temp_dir().join("fedstc_missing_hlo");
+    write_manifest(&dir, &format!(r#"{{"version":1,"artifacts":[{GOOD_ENTRY}]}}"#));
+    let _ = std::fs::remove_file(dir.join("train_logreg_b4.hlo.txt"));
+    let engine = Engine::load(&dir).unwrap();
+    assert!(engine.executable("train_logreg_b4").is_err());
+}
+
+#[test]
+fn run_f32_validates_input_arity_and_sizes() {
+    // use the real artifacts when available
+    let Ok(engine) = Engine::load_default() else { return };
+    let entry = engine.manifest().train_for("logreg", 4).unwrap().clone();
+    // wrong arity
+    let err = err_str(engine.run_f32(&entry, &[&[0.0][..]]));
+    assert!(err.contains("inputs"), "{err}");
+    // wrong tensor size
+    let w = vec![0.0f32; 7840];
+    let b = vec![0.0f32; 10];
+    let x = vec![0.0f32; 4 * 784];
+    let y_bad = vec![0.0f32; 5]; // should be 4
+    let err = err_str(engine.run_f32(&entry, &[&w, &b, &x, &y_bad]));
+    assert!(err.contains("elements"), "{err}");
+}
+
+#[test]
+fn golomb_decoder_rejects_malicious_streams() {
+    // all-ones stream: unary run never terminates → must error, not hang
+    // (bounded by stream length) or panic
+    let enc = GolombEncoded { bytes: vec![0xFF; 64], len_bits: 512, b_star: 4 };
+    assert!(golomb::decode(&enc, 3, 1_000_000).is_err());
+
+    // stream that decodes to an out-of-range index must error
+    let good = golomb::encode(&[900], &[true], 0.01);
+    assert!(golomb::decode(&good, 1, 100).is_err());
+
+    // declared more elements than the stream holds
+    let good = golomb::encode(&[1, 5], &[true, false], 0.1);
+    assert!(golomb::decode(&good, 3, 100).is_err());
+}
+
+#[test]
+fn manifest_lookup_misses_are_none_not_panic() {
+    let m = Manifest::default();
+    assert!(m.find("nope").is_none());
+    assert!(m.train_for("logreg", 3).is_none());
+    assert!(m.eval_for("cnn").is_none());
+    assert!(m.stc_for(10, 0.5).is_none());
+    assert!(m.train_batches("lstm").is_empty());
+}
+
+#[test]
+fn hlo_trainer_unknown_batch_size_lists_alternatives() {
+    let Ok(engine) = Engine::load_default() else { return };
+    let err = err_str(fedstc::runtime::HloTrainer::new(&engine, "logreg", 999));
+    assert!(err.contains("batch 999"), "{err}");
+    assert!(err.contains("available"), "should list available batches: {err}");
+}

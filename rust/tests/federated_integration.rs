@@ -1,0 +1,228 @@
+//! Full-protocol integration tests over the coordinator: every method
+//! end-to-end on small configs, accounting invariants, determinism,
+//! straggler behaviour and failure injection. Native logreg path — no
+//! artifacts required.
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::coordinator::FederatedRun;
+use fedstc::data::synth::task_dataset;
+use fedstc::models::native::NativeLogreg;
+use fedstc::models::{ModelSpec, Trainer};
+use fedstc::sim::{run_logreg, Experiment};
+
+fn cfg(method: Method) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 20,
+        participation: 0.5,
+        classes_per_client: 10,
+        batch_size: 10,
+        method,
+        lr: 0.04,
+        momentum: 0.0,
+        iterations: 200,
+        eval_every: 50,
+        seed: 31,
+        train_examples: 1500,
+        test_examples: 500,
+        ..Default::default()
+    }
+}
+
+const ALL_METHODS: [(&str, Method); 7] = [
+    ("baseline", Method::Baseline),
+    ("fedavg", Method::FedAvg { n: 20 }),
+    ("signsgd", Method::SignSgd { delta: 0.002 }),
+    ("topk", Method::TopK { p: 0.02 }),
+    ("sparse-ud", Method::SparseUpDown { p_up: 0.02, p_down: 0.02 }),
+    ("stc", Method::Stc { p_up: 0.02, p_down: 0.02 }),
+    ("hybrid", Method::Hybrid { p: 0.05, n: 5 }),
+];
+
+#[test]
+fn every_method_trains_to_nontrivial_accuracy() {
+    for (name, method) in ALL_METHODS {
+        let log = run_logreg(cfg(method)).unwrap();
+        assert!(
+            log.max_accuracy() > 0.45,
+            "{name}: accuracy {:.3} — protocol broken?",
+            log.max_accuracy()
+        );
+    }
+}
+
+#[test]
+fn every_method_is_deterministic() {
+    for (name, method) in ALL_METHODS {
+        let a = run_logreg(cfg(method.clone())).unwrap();
+        let b = run_logreg(cfg(method)).unwrap();
+        for (pa, pb) in a.points.iter().zip(&b.points) {
+            assert_eq!(pa.accuracy, pb.accuracy, "{name} nondeterministic accuracy");
+            assert_eq!(pa.up_bits, pb.up_bits, "{name} nondeterministic bits");
+        }
+    }
+}
+
+#[test]
+fn upload_ordering_matches_compression_strength() {
+    // per-client upload: stc < signsgd < dense-per-round methods
+    let up = |m: Method| {
+        let log = run_logreg(cfg(m)).unwrap();
+        log.points.last().unwrap().up_bits
+    };
+    let stc = up(Method::Stc { p_up: 0.0025, p_down: 0.0025 });
+    let sign = up(Method::SignSgd { delta: 0.002 });
+    let base = up(Method::Baseline);
+    let topk = up(Method::TopK { p: 0.0025 });
+    assert!(stc < sign, "stc {stc} !< signsgd {sign}");
+    assert!(sign < base, "signsgd {sign} !< baseline {base}");
+    assert!(topk < base && stc < topk, "topk {topk} out of order (stc {stc}, base {base})");
+}
+
+#[test]
+fn fedavg_uploads_shrink_with_delay() {
+    let up = |n: usize| {
+        let log = run_logreg(cfg(Method::FedAvg { n })).unwrap();
+        log.points.last().unwrap().up_bits
+    };
+    let n10 = up(10);
+    let n40 = up(40);
+    // 4× fewer rounds → ≈ 4× fewer uploaded bits
+    let ratio = n10 as f64 / n40 as f64;
+    assert!((ratio - 4.0).abs() < 0.5, "ratio {ratio}");
+}
+
+#[test]
+fn stc_download_scales_with_inverse_participation() {
+    // paper Table IV: download ≈ upload / η for STC
+    let mut c = cfg(Method::Stc { p_up: 0.01, p_down: 0.01 });
+    c.num_clients = 40;
+    c.participation = 0.25;
+    c.iterations = 400;
+    let log = run_logreg(c).unwrap();
+    let last = log.points.last().unwrap();
+    let ratio = last.down_bits as f64 / last.up_bits as f64;
+    assert!(
+        (2.0..8.0).contains(&ratio),
+        "down/up ratio {ratio}, expected ≈ 1/η = 4"
+    );
+}
+
+#[test]
+fn full_participation_up_equals_down_order() {
+    // at η=1 with p_up = p_down every client uploads one message and
+    // downloads one aggregate per round — same order of magnitude
+    let mut c = cfg(Method::Stc { p_up: 0.01, p_down: 0.01 });
+    c.participation = 1.0;
+    let log = run_logreg(c).unwrap();
+    let last = log.points.last().unwrap();
+    let ratio = last.down_bits as f64 / last.up_bits as f64;
+    assert!((0.3..3.0).contains(&ratio), "ratio {ratio}");
+}
+
+#[test]
+fn residuals_bounded_over_training() {
+    // error feedback must not blow up: client residual norms stay finite
+    // and bounded relative to update scale
+    let (train, _) = task_dataset("mnist", 31);
+    let c = cfg(Method::Stc { p_up: 0.01, p_down: 0.01 });
+    let spec = ModelSpec::by_name("logreg");
+    let mut run = FederatedRun::new(c.clone(), &train, spec.init_flat(31)).unwrap();
+    let mut t = NativeLogreg::new(c.batch_size);
+    let mut norms = Vec::new();
+    for _ in 0..60 {
+        run.run_round(&mut t, &train);
+        norms.push(run.mean_residual_norm());
+    }
+    assert!(norms.iter().all(|n| n.is_finite()));
+    // second half should not be dramatically larger than first half
+    let first: f64 = norms[..30].iter().sum::<f64>() / 30.0;
+    let second: f64 = norms[30..].iter().sum::<f64>() / 30.0;
+    assert!(second < first * 10.0 + 1.0, "residuals growing: {first} -> {second}");
+}
+
+#[test]
+fn momentum_state_persists_across_rounds() {
+    let (train, _) = task_dataset("mnist", 31);
+    let mut c = cfg(Method::Stc { p_up: 0.02, p_down: 0.02 });
+    c.momentum = 0.9;
+    c.participation = 1.0;
+    let spec = ModelSpec::by_name("logreg");
+    let mut run = FederatedRun::new(c.clone(), &train, spec.init_flat(1)).unwrap();
+    let mut t = NativeLogreg::new(c.batch_size);
+    run.run_round(&mut t, &train);
+    let m1: f64 = run.clients[0].momentum.iter().map(|x| (*x as f64).abs()).sum();
+    run.run_round(&mut t, &train);
+    let m2: f64 = run.clients[0].momentum.iter().map(|x| (*x as f64).abs()).sum();
+    assert!(m1 > 0.0);
+    assert!(m2 != m1);
+}
+
+#[test]
+fn unbalanced_split_still_trains() {
+    let mut c = cfg(Method::Stc { p_up: 0.02, p_down: 0.02 });
+    c.gamma = 0.9;
+    c.num_clients = 50;
+    c.participation = 0.2;
+    let log = run_logreg(c).unwrap();
+    assert!(log.max_accuracy() > 0.45, "acc {}", log.max_accuracy());
+}
+
+#[test]
+fn single_client_degenerate_case() {
+    let mut c = cfg(Method::Stc { p_up: 0.02, p_down: 0.02 });
+    c.num_clients = 1;
+    c.participation = 1.0;
+    let log = run_logreg(c).unwrap();
+    assert!(log.max_accuracy() > 0.5);
+}
+
+#[test]
+fn tiny_shards_survive_batch_larger_than_shard() {
+    // 100 clients on 1500 examples → 15 examples/client, batch 10 wraps
+    let mut c = cfg(Method::Stc { p_up: 0.02, p_down: 0.02 });
+    c.num_clients = 100;
+    c.participation = 0.1;
+    c.batch_size = 32;
+    c.iterations = 50;
+    let log = run_logreg(c).unwrap();
+    assert!(log.points.last().unwrap().iteration == 50);
+}
+
+#[test]
+fn eval_cadence_and_axes() {
+    let log = run_logreg(cfg(Method::FedAvg { n: 20 })).unwrap();
+    // 200 iters / n=20 → 10 rounds; eval every 50 iters → rounds 2,4,..10
+    let iters: Vec<usize> = log.points.iter().map(|p| p.iteration).collect();
+    assert_eq!(iters, vec![40, 80, 120, 160, 200]);
+    // monotone non-decreasing bit counters
+    for w in log.points.windows(2) {
+        assert!(w[1].up_bits >= w[0].up_bits);
+        assert!(w[1].down_bits >= w[0].down_bits);
+    }
+}
+
+#[test]
+fn config_validation_rejects_broken_environments() {
+    let mut c = cfg(Method::Baseline);
+    c.num_clients = 0;
+    assert!(Experiment::new(c).is_err());
+    let mut c = cfg(Method::Stc { p_up: 0.0, p_down: 0.1 });
+    c.iterations = 10;
+    assert!(Experiment::new(c).is_err());
+    let mut c = cfg(Method::Hybrid { p: 0.5, n: 0 });
+    c.iterations = 10;
+    assert!(Experiment::new(c).is_err());
+}
+
+#[test]
+fn hybrid_combines_delay_and_sparsity_accounting() {
+    // hybrid with n=5 runs 5× fewer rounds than pure STC; its uploads
+    // must be ≈ 5× smaller than STC at the same p
+    let stc = run_logreg(cfg(Method::Stc { p_up: 0.05, p_down: 0.05 })).unwrap();
+    let hyb = run_logreg(cfg(Method::Hybrid { p: 0.05, n: 5 })).unwrap();
+    let r = stc.points.last().unwrap().up_bits as f64
+        / hyb.points.last().unwrap().up_bits as f64;
+    assert!((3.0..7.0).contains(&r), "upload ratio {r}, expected ≈ 5");
+    assert!(hyb.max_accuracy() > 0.45);
+}

@@ -28,7 +28,7 @@ fn main() -> anyhow::Result<()> {
     let model = arg("--model", "cnn");
     let iterations: usize = arg("--iters", "300").parse()?;
 
-    let mut cfg = FedConfig::for_model(&model);
+    let mut cfg = FedConfig::for_model(&model)?;
     cfg.num_clients = 10;
     cfg.participation = 0.5;
     cfg.classes_per_client = 4; // moderately non-iid — the paper's regime

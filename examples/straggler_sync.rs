@@ -28,8 +28,8 @@ fn main() -> anyhow::Result<()> {
         seed: 9,
         ..Default::default()
     };
-    let (train, _) = task_dataset("mnist", cfg.seed);
-    let spec = ModelSpec::by_name("logreg");
+    let (train, _) = task_dataset("mnist", cfg.seed)?;
+    let spec = ModelSpec::by_name("logreg")?;
     let dim = spec.dim();
     let mut run = FederatedRun::new(cfg.clone(), &train, spec.init_flat(9))?;
     let mut trainer = NativeLogreg::new(cfg.batch_size);

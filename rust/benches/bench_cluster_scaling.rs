@@ -1,0 +1,141 @@
+//! bench_cluster_scaling — rounds/sec of the parallel cluster executor
+//! vs worker count, against the serial `FederatedRun` reference.
+//!
+//! The parallel path is bit-identical to the serial one (see
+//! rust/tests/property_cluster.rs), so this bench is purely about
+//! throughput: how much of one round's local-training work the
+//! `std::thread::scope` pool recovers. Two workloads on the logreg task:
+//!
+//! * `stc` — 1 local iteration/round (communication-bound shape; spawn
+//!   overhead is a real tax here)
+//! * `stc+delay n=4` — 4 local iterations/round (compute-bound shape; the
+//!   regime federated rounds actually live in)
+//!
+//! Acceptance target: ≥ 2× rounds/sec at 4 workers over the serial path.
+//!
+//!     cargo bench --bench bench_cluster_scaling
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::config::{FedConfig, Method};
+use fedstc::coordinator::FederatedRun;
+use fedstc::models::native::NativeLogreg;
+use fedstc::sim::Experiment;
+use fedstc::util::benchkit::{banner, Table};
+use fedstc::util::Timer;
+
+const CLIENTS: usize = 48;
+const BATCH: usize = 20;
+const WARMUP_ROUNDS: usize = 3;
+const TIMED_ROUNDS: usize = 15;
+
+fn cfg(method: Method) -> FedConfig {
+    let iters_per_round = method.local_iters();
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: CLIENTS,
+        participation: 1.0,
+        classes_per_client: 5,
+        batch_size: BATCH,
+        method,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: (WARMUP_ROUNDS + TIMED_ROUNDS + 1) * iters_per_round,
+        eval_every: 1_000_000,
+        seed: 4,
+        train_examples: 2400,
+        test_examples: 200,
+        ..Default::default()
+    }
+}
+
+/// Serial reference: rounds/sec of `FederatedRun::run_round`.
+fn serial_rounds_per_sec(c: &FedConfig) -> anyhow::Result<f64> {
+    let exp = Experiment::new(c.clone())?;
+    let init = exp.spec.init_flat(c.seed);
+    let mut run = FederatedRun::new(c.clone(), &exp.train, init)?;
+    let mut trainer = NativeLogreg::new(c.batch_size);
+    for _ in 0..WARMUP_ROUNDS {
+        run.run_round(&mut trainer, &exp.train);
+    }
+    let t = Timer::start();
+    for _ in 0..TIMED_ROUNDS {
+        run.run_round(&mut trainer, &exp.train);
+    }
+    Ok(TIMED_ROUNDS as f64 / t.secs())
+}
+
+/// Cluster path: rounds/sec of full ticks (train + aggregate + cooldown)
+/// at the given worker count.
+fn cluster_rounds_per_sec(c: &FedConfig, workers: usize) -> anyhow::Result<f64> {
+    let exp = Experiment::new(c.clone())?;
+    let init = exp.spec.init_flat(c.seed);
+    let mut ccfg = ClusterConfig::new(c.clone());
+    ccfg.workers = workers;
+    let mut run = ClusterRun::new(ccfg, &exp.train, init)?;
+    let factory = NativeLogregFactory { batch_size: c.batch_size };
+    for _ in 0..WARMUP_ROUNDS {
+        run.next_round(&factory, &exp.train);
+    }
+    let t = Timer::start();
+    for _ in 0..TIMED_ROUNDS {
+        run.next_round(&factory, &exp.train);
+    }
+    Ok(TIMED_ROUNDS as f64 / t.secs())
+}
+
+fn main() -> anyhow::Result<()> {
+    banner(
+        "cluster scaling",
+        "rounds/sec vs workers (logreg, 48 clients, full participation)",
+    );
+
+    let workloads: Vec<(&str, Method)> = vec![
+        ("stc p=1/50 (1 iter/round)", Method::Stc { p_up: 0.02, p_down: 0.02 }),
+        ("stc+delay p=1/50 n=4", Method::Hybrid { p: 0.02, n: 4 }),
+    ];
+    let worker_counts = [1usize, 2, 4, 8];
+
+    let mut table = Table::new(&[
+        "workload", "arm", "rounds/s", "speedup vs serial",
+    ]);
+    let mut speedup_at_4 = Vec::new();
+    for (name, method) in &workloads {
+        let c = cfg(method.clone());
+        let serial = serial_rounds_per_sec(&c)?;
+        table.row(&[
+            name.to_string(),
+            "serial".into(),
+            format!("{serial:.1}"),
+            "1.00x".into(),
+        ]);
+        for &w in &worker_counts {
+            let rps = cluster_rounds_per_sec(&c, w)?;
+            let speedup = rps / serial;
+            if w == 4 {
+                speedup_at_4.push((name.to_string(), speedup));
+            }
+            table.row(&[
+                name.to_string(),
+                format!("{w} workers"),
+                format!("{rps:.1}"),
+                format!("{speedup:.2}x"),
+            ]);
+        }
+    }
+    table.print();
+
+    println!();
+    for (name, s) in &speedup_at_4 {
+        println!(
+            "{} 4-worker speedup {:.2}x (target >= 2x): {}",
+            if *s >= 2.0 { "PASS" } else { "MISS" },
+            s,
+            name
+        );
+    }
+    println!(
+        "\nExpected shape: the delay workload (4 iters/round) clears 2x easily; \
+         the 1-iter workload is closer to the spawn-overhead floor."
+    );
+    Ok(())
+}

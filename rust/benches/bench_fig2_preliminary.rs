@@ -15,7 +15,7 @@ use fedstc::sim::{run_logreg, Experiment};
 use fedstc::util::benchkit::{banner, Table};
 
 fn cfg(model: &str, method: Method, classes: usize, iters: usize) -> FedConfig {
-    let mut c = FedConfig::for_model(model);
+    let mut c = FedConfig::for_model(model).expect("known model");
     c.num_clients = 10;
     c.participation = 1.0;
     c.classes_per_client = classes;

@@ -13,7 +13,7 @@ use fedstc::util::benchkit::{banner, Table};
 
 fn main() {
     banner("Fig. 3", "gradient sign congruence α(k), iid vs single-class batches");
-    let (train, _) = task_dataset("mnist", 1);
+    let (train, _) = task_dataset("mnist", 1).expect("known task");
     let mut analysis = AlphaAnalysis::new(&train, 1);
 
     // left panel: histogram of α_w(1)

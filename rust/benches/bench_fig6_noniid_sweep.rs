@@ -81,7 +81,7 @@ fn main() -> anyhow::Result<()> {
             for (name, method) in &methods {
                 let mut row = vec![name.to_string()];
                 for &c in &classes {
-                    let mut cfg = FedConfig::for_model("cnn");
+                    let mut cfg = FedConfig::for_model("cnn")?;
                     cfg.num_clients = 20;
                     cfg.participation = 0.25;
                     cfg.classes_per_client = c;

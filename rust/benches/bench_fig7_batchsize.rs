@@ -76,7 +76,7 @@ fn main() -> anyhow::Result<()> {
             for (name, method) in &methods {
                 let mut row = vec![name.to_string()];
                 for &b in &batches {
-                    let mut cfg = FedConfig::for_model("cnn");
+                    let mut cfg = FedConfig::for_model("cnn")?;
                     cfg.num_clients = 10;
                     cfg.participation = 1.0;
                     cfg.classes_per_client = 2;

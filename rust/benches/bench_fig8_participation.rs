@@ -78,7 +78,7 @@ fn main() -> anyhow::Result<()> {
             for (name, method) in &methods {
                 let mut row = vec![name.to_string()];
                 for &n in &totals {
-                    let mut cfg = FedConfig::for_model("cnn");
+                    let mut cfg = FedConfig::for_model("cnn")?;
                     cfg.num_clients = n;
                     cfg.participation = 5.0 / n as f64;
                     cfg.classes_per_client = 2;

@@ -85,8 +85,8 @@ fn main() {
     println!("{}", r.report());
 
     // --- native gradient step ----------------------------------------
-    let (train, _) = task_dataset("mnist", 1);
-    let spec = ModelSpec::by_name("logreg");
+    let (train, _) = task_dataset("mnist", 1).expect("known task");
+    let spec = ModelSpec::by_name("logreg").expect("known model");
     let params = spec.init_flat(1);
     let mut trainer = NativeLogreg::new(20);
     let mut x = vec![0.0f32; 20 * 784];
@@ -108,7 +108,7 @@ fn main() {
             });
             println!("{}", r.report());
 
-            if let Ok(kern) = fedstc::runtime::trainer::HloStc::new(&engine, spec.dim(), 0.01)
+            if let Ok(kern) = fedstc::runtime::HloStc::new(&engine, spec.dim(), 0.01)
             {
                 let update: Vec<f32> = (0..spec.dim()).map(|_| rng.normal()).collect();
                 let r = bench_throughput(

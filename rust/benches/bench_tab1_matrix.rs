@@ -21,7 +21,7 @@ fn measure_robust(method: Method, engine: Option<&Engine>) -> anyhow::Result<(f6
     let run = |classes: usize| -> anyhow::Result<f64> {
         match engine {
             Some(engine) => {
-                let mut cfg = FedConfig::for_model("cnn");
+                let mut cfg = FedConfig::for_model("cnn")?;
                 cfg.num_clients = 10;
                 cfg.participation = 1.0;
                 cfg.classes_per_client = classes;

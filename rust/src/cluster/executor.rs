@@ -1,0 +1,297 @@
+//! The worker-pool executor: shards one round's local training across OS
+//! threads with a **fixed reduction order**.
+//!
+//! Determinism contract: every participant's work (batch draws, SGD
+//! steps, error-feedback compression) is a pure function of its own
+//! `ClientState` plus the shared global model, so the schedule cannot
+//! change any client's result — and results are re-sorted into the
+//! coordinator's participant order before aggregation, so the f32
+//! summation order on the server is exactly the serial loop's. The
+//! parallel path is therefore *bit-identical* to
+//! [`crate::coordinator::FederatedRun`] (pinned by property tests).
+//!
+//! No thread pool crate, no rayon: `std::thread::scope` borrows the
+//! client states for the duration of one round, an `mpsc` channel
+//! collects results, and each worker owns a private trainer + compressor
+//! + scratch (trainers are not `Send`; they are *constructed on* the
+//! worker thread via [`TrainerFactory`]).
+
+use crate::compression::{Compressor, Message};
+use crate::config::Method;
+use crate::coordinator::{ClientState, LocalScratch};
+use crate::data::Dataset;
+use crate::models::native::NativeLogreg;
+use crate::models::Trainer;
+use std::sync::mpsc;
+
+/// Builds a fresh gradient oracle on demand — one per worker thread.
+/// `Sync` because one factory is shared by reference across workers.
+pub trait TrainerFactory: Sync {
+    fn make(&self) -> Box<dyn Trainer>;
+}
+
+/// Factory for the dependency-free native logreg trainer (the backend the
+/// cluster CLI and benches drive).
+pub struct NativeLogregFactory {
+    pub batch_size: usize,
+}
+
+impl TrainerFactory for NativeLogregFactory {
+    fn make(&self) -> Box<dyn Trainer> {
+        Box::new(NativeLogreg::new(self.batch_size))
+    }
+}
+
+/// Per-round training parameters handed to the executor.
+pub struct RoundPlan<'a> {
+    pub method: &'a Method,
+    pub lr: f32,
+    pub momentum: f32,
+    pub local_iters: usize,
+}
+
+/// One participant's finished round work.
+pub struct ClientResult {
+    /// position in the round's participant order (reduction order)
+    pub slot: usize,
+    pub client_id: usize,
+    pub loss: f32,
+    pub msg: Message,
+}
+
+/// The executor. `workers == 1` runs in-thread (no spawn); `workers > 1`
+/// shards participants into contiguous chunks over scoped threads.
+#[derive(Clone, Copy, Debug)]
+pub struct WorkerPool {
+    workers: usize,
+}
+
+impl WorkerPool {
+    pub fn new(workers: usize) -> WorkerPool {
+        assert!(workers >= 1, "worker pool needs at least one worker");
+        WorkerPool { workers }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run local training + upstream compression for every participant.
+    /// `participants` pairs each client's reduction slot with mutable
+    /// access to its state; the returned results are sorted by slot.
+    pub fn execute_round(
+        &self,
+        factory: &dyn TrainerFactory,
+        global_params: &[f32],
+        data: &Dataset,
+        participants: Vec<(usize, &mut ClientState)>,
+        plan: &RoundPlan,
+    ) -> Vec<ClientResult> {
+        if participants.is_empty() {
+            return Vec::new();
+        }
+        let workers = self.workers.min(participants.len());
+        let mut results = if workers <= 1 {
+            let mut trainer = factory.make();
+            let mut compressor = plan.method.up_compressor();
+            let mut scratch = LocalScratch::default();
+            participants
+                .into_iter()
+                .map(|(slot, client)| {
+                    run_one(
+                        slot,
+                        client,
+                        trainer.as_mut(),
+                        compressor.as_mut(),
+                        global_params,
+                        data,
+                        plan,
+                        &mut scratch,
+                    )
+                })
+                .collect::<Vec<_>>()
+        } else {
+            // contiguous chunks keep per-worker cache locality and make
+            // the sharding independent of timing
+            let chunk_len = participants.len().div_ceil(workers);
+            let mut chunks: Vec<Vec<(usize, &mut ClientState)>> =
+                Vec::with_capacity(workers);
+            let mut it = participants.into_iter();
+            loop {
+                let chunk: Vec<_> = it.by_ref().take(chunk_len).collect();
+                if chunk.is_empty() {
+                    break;
+                }
+                chunks.push(chunk);
+            }
+            let (tx, rx) = mpsc::channel::<ClientResult>();
+            std::thread::scope(|s| {
+                for chunk in chunks {
+                    let tx = tx.clone();
+                    s.spawn(move || {
+                        let mut trainer = factory.make();
+                        let mut compressor = plan.method.up_compressor();
+                        let mut scratch = LocalScratch::default();
+                        for (slot, client) in chunk {
+                            let r = run_one(
+                                slot,
+                                client,
+                                trainer.as_mut(),
+                                compressor.as_mut(),
+                                global_params,
+                                data,
+                                plan,
+                                &mut scratch,
+                            );
+                            // receiver outlives the scope; send can only
+                            // fail if the coordinator thread panicked
+                            let _ = tx.send(r);
+                        }
+                    });
+                }
+                drop(tx);
+            });
+            rx.into_iter().collect()
+        };
+        results.sort_by_key(|r| r.slot);
+        results
+    }
+}
+
+/// One client's round: local SGD from the global model, delta
+/// computation, error-feedback compression. Mirrors the body of
+/// `FederatedRun::run_round` step 2–3 exactly.
+#[allow(clippy::too_many_arguments)]
+fn run_one(
+    slot: usize,
+    client: &mut ClientState,
+    trainer: &mut dyn Trainer,
+    compressor: &mut dyn Compressor,
+    global_params: &[f32],
+    data: &Dataset,
+    plan: &RoundPlan,
+    scratch: &mut LocalScratch,
+) -> ClientResult {
+    let mut work = global_params.to_vec();
+    let loss = client.local_train(
+        &mut work,
+        trainer,
+        data,
+        plan.local_iters,
+        plan.lr,
+        plan.momentum,
+        scratch,
+    );
+    // ΔW_i = W_local − W_global
+    for (d, w) in work.iter_mut().zip(global_params) {
+        *d -= *w;
+    }
+    let msg = client.compress_update(work, compressor);
+    ClientResult { slot, client_id: client.id, loss, msg }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FedConfig;
+    use crate::data::synth::{SynthFlavor, SynthSpec};
+    use crate::models::ModelSpec;
+
+    fn setup(n_clients: usize) -> (Dataset, Vec<ClientState>, Vec<f32>, FedConfig) {
+        let (train, _) = SynthSpec::new(SynthFlavor::Mnist, 400, 50, 5).generate();
+        let cfg = FedConfig { batch_size: 10, ..Default::default() };
+        let spec = ModelSpec::by_name("logreg").unwrap();
+        let per = train.len() / n_clients;
+        let clients: Vec<ClientState> = (0..n_clients)
+            .map(|id| {
+                let shard: Vec<usize> = (id * per..(id + 1) * per).collect();
+                ClientState::new(id, shard, spec.dim(), &cfg, true)
+            })
+            .collect();
+        let params = spec.init_flat(3);
+        (train, clients, params, cfg)
+    }
+
+    fn round_results(workers: usize) -> Vec<ClientResult> {
+        let (train, mut clients, params, _cfg) = setup(6);
+        let method = Method::Stc { p_up: 0.02, p_down: 0.02 };
+        let plan = RoundPlan { method: &method, lr: 0.05, momentum: 0.0, local_iters: 3 };
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let participants: Vec<(usize, &mut ClientState)> =
+            clients.iter_mut().enumerate().collect();
+        WorkerPool::new(workers).execute_round(&factory, &params, &train, participants, &plan)
+    }
+
+    #[test]
+    fn results_sorted_by_slot_any_worker_count() {
+        for workers in [1, 2, 3, 8] {
+            let rs = round_results(workers);
+            assert_eq!(rs.len(), 6);
+            for (i, r) in rs.iter().enumerate() {
+                assert_eq!(r.slot, i);
+                assert_eq!(r.client_id, i);
+                assert!(r.loss.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_results_bit_identical_to_serial() {
+        let serial = round_results(1);
+        for workers in [2, 4] {
+            let par = round_results(workers);
+            for (a, b) in serial.iter().zip(&par) {
+                assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "loss differs");
+                assert_eq!(a.msg.to_dense(), b.msg.to_dense(), "message differs");
+                assert_eq!(a.msg.wire_bits(), b.msg.wire_bits(), "wire bits differ");
+            }
+        }
+    }
+
+    #[test]
+    fn client_state_mutations_match_serial() {
+        // residuals after a parallel round == after a serial round
+        let run = |workers: usize| {
+            let (train, mut clients, params, _cfg) = setup(5);
+            let method = Method::Stc { p_up: 0.05, p_down: 0.05 };
+            let plan =
+                RoundPlan { method: &method, lr: 0.05, momentum: 0.0, local_iters: 2 };
+            let factory = NativeLogregFactory { batch_size: 10 };
+            let participants: Vec<(usize, &mut ClientState)> =
+                clients.iter_mut().enumerate().collect();
+            WorkerPool::new(workers)
+                .execute_round(&factory, &params, &train, participants, &plan);
+            clients.into_iter().map(|c| c.residual).collect::<Vec<_>>()
+        };
+        assert_eq!(run(1), run(3));
+    }
+
+    #[test]
+    fn empty_round_yields_no_results() {
+        let (train, _clients, params, _cfg) = setup(2);
+        let method = Method::Baseline;
+        let plan = RoundPlan { method: &method, lr: 0.05, momentum: 0.0, local_iters: 1 };
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let rs =
+            WorkerPool::new(4).execute_round(&factory, &params, &train, Vec::new(), &plan);
+        assert!(rs.is_empty());
+    }
+
+    #[test]
+    fn more_workers_than_participants_is_fine() {
+        let (train, mut clients, params, _cfg) = setup(3);
+        let method = Method::Baseline;
+        let plan = RoundPlan { method: &method, lr: 0.05, momentum: 0.0, local_iters: 1 };
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let participants: Vec<(usize, &mut ClientState)> =
+            clients.iter_mut().enumerate().collect();
+        let rs = WorkerPool::new(16).execute_round(&factory, &params, &train, participants, &plan);
+        assert_eq!(rs.len(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one worker")]
+    fn zero_workers_rejected() {
+        WorkerPool::new(0);
+    }
+}

@@ -1,0 +1,210 @@
+//! Dynamic client membership: the lifecycle every client moves through
+//! and the churn process that drives it.
+//!
+//! ```text
+//! NeverJoined ──join──▶ Active ◀─rejoin── Offline
+//!                         │                  ▲
+//!                         └──churn/dropout───┘
+//! ```
+//!
+//! The coordinator only ever *selects* Active clients; Offline clients
+//! keep their `ClientState` (residual, momentum, `last_sync_round`), so
+//! on rejoin their first selection pays the §V-B catch-up download for
+//! every round they missed. All randomness lives on a dedicated stream:
+//! a zero-churn run draws nothing that could perturb the training path.
+
+use crate::util::rng::Pcg64;
+
+/// Where a client currently is in its lifecycle.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClientPhase {
+    /// has not joined the cluster yet (no model, no state)
+    NeverJoined,
+    /// connected and selectable
+    Active,
+    /// dropped out / churned away; may rejoin later
+    Offline,
+}
+
+/// Counters for one churn step.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChurnEvents {
+    pub joins: usize,
+    pub dropouts: usize,
+    pub rejoins: usize,
+}
+
+/// The population's membership state.
+#[derive(Clone, Debug)]
+pub struct Membership {
+    phases: Vec<ClientPhase>,
+    rng: Pcg64,
+}
+
+impl Membership {
+    /// `initial_members` clients (chosen by a seeded permutation) start
+    /// Active; the rest are NeverJoined.
+    pub fn new(n: usize, seed: u64, initial_members: usize) -> Membership {
+        let mut rng = Pcg64::new(seed, 0x6e6d);
+        let mut phases = vec![ClientPhase::NeverJoined; n];
+        let perm = rng.permutation(n);
+        for &id in perm.iter().take(initial_members.min(n)) {
+            phases[id] = ClientPhase::Active;
+        }
+        Membership { phases, rng }
+    }
+
+    pub fn len(&self) -> usize {
+        self.phases.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.phases.is_empty()
+    }
+
+    pub fn phase(&self, id: usize) -> ClientPhase {
+        self.phases[id]
+    }
+
+    pub fn is_active(&self, id: usize) -> bool {
+        self.phases[id] == ClientPhase::Active
+    }
+
+    /// Has this client ever held the model? (Active or Offline.)
+    pub fn has_joined(&self, id: usize) -> bool {
+        self.phases[id] != ClientPhase::NeverJoined
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.phases.iter().filter(|p| **p == ClientPhase::Active).count()
+    }
+
+    /// Mark a selected client as dropped mid-round.
+    pub fn set_offline(&mut self, id: usize) {
+        debug_assert_eq!(self.phases[id], ClientPhase::Active);
+        self.phases[id] = ClientPhase::Offline;
+    }
+
+    /// Bootstrap step while waiting for quorum: Offline clients retry
+    /// their connection and come back with probability `rejoin_p`;
+    /// NeverJoined clients only join at `join_p` — the configured join
+    /// rate. A stalled cluster must not conjure members the config says
+    /// never join.
+    pub fn tick_bootstrap(&mut self, rejoin_p: f64, join_p: f64) -> ChurnEvents {
+        self.tick_churn(0.0, rejoin_p, join_p)
+    }
+
+    /// One churn step (run during Cooldown): Active clients leave with
+    /// probability `leave_p`, Offline clients rejoin with `rejoin_p`,
+    /// NeverJoined clients join with `join_p`. A zero-rate step draws no
+    /// randomness at all, keeping zero-churn runs stream-silent.
+    pub fn tick_churn(&mut self, leave_p: f64, rejoin_p: f64, join_p: f64) -> ChurnEvents {
+        let mut ev = ChurnEvents::default();
+        if leave_p == 0.0 && rejoin_p == 0.0 && join_p == 0.0 {
+            return ev;
+        }
+        for phase in self.phases.iter_mut() {
+            match *phase {
+                ClientPhase::Active => {
+                    if leave_p > 0.0 && self.rng.f64() < leave_p {
+                        *phase = ClientPhase::Offline;
+                        ev.dropouts += 1;
+                    }
+                }
+                ClientPhase::Offline => {
+                    if rejoin_p > 0.0 && self.rng.f64() < rejoin_p {
+                        *phase = ClientPhase::Active;
+                        ev.rejoins += 1;
+                    }
+                }
+                ClientPhase::NeverJoined => {
+                    if join_p > 0.0 && self.rng.f64() < join_p {
+                        *phase = ClientPhase::Active;
+                        ev.joins += 1;
+                    }
+                }
+            }
+        }
+        ev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn initial_split_respected() {
+        let m = Membership::new(10, 1, 4);
+        assert_eq!(m.active_count(), 4);
+        assert_eq!(m.len(), 10);
+        let joined = (0..10).filter(|&i| m.has_joined(i)).count();
+        assert_eq!(joined, 4);
+    }
+
+    #[test]
+    fn full_initial_membership() {
+        let m = Membership::new(8, 2, 8);
+        assert_eq!(m.active_count(), 8);
+        assert!((0..8).all(|i| m.is_active(i)));
+    }
+
+    #[test]
+    fn offline_and_rejoin_cycle() {
+        let mut m = Membership::new(5, 3, 5);
+        m.set_offline(2);
+        assert!(!m.is_active(2));
+        assert!(m.has_joined(2));
+        assert_eq!(m.active_count(), 4);
+        // rejoin with certainty
+        let ev = m.tick_churn(0.0, 1.0, 0.0);
+        assert_eq!(ev.rejoins, 1);
+        assert!(m.is_active(2));
+    }
+
+    #[test]
+    fn bootstrap_eventually_reaches_quorum() {
+        let mut m = Membership::new(20, 5, 0);
+        let mut steps = 0;
+        while m.active_count() < 10 && steps < 1000 {
+            m.tick_bootstrap(0.25, 0.25);
+            steps += 1;
+        }
+        assert!(m.active_count() >= 10, "bootstrap stalled at {}", m.active_count());
+    }
+
+    #[test]
+    fn bootstrap_without_join_rate_never_conjures_members() {
+        let mut m = Membership::new(10, 9, 0); // everyone NeverJoined
+        for _ in 0..200 {
+            let ev = m.tick_bootstrap(0.25, 0.0);
+            assert_eq!(ev.joins, 0);
+        }
+        assert_eq!(m.active_count(), 0);
+    }
+
+    #[test]
+    fn zero_rate_churn_is_a_noop_and_stream_silent() {
+        let mut a = Membership::new(12, 7, 12);
+        let b = a.clone();
+        for _ in 0..50 {
+            let ev = a.tick_churn(0.0, 0.0, 0.0);
+            assert_eq!(ev, ChurnEvents::default());
+        }
+        // still able to produce identical draws afterwards
+        let ea = a.tick_churn(1.0, 0.0, 0.0);
+        let eb = b.clone().tick_churn(1.0, 0.0, 0.0);
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn churn_moves_population_both_ways() {
+        let mut m = Membership::new(100, 11, 100);
+        let ev = m.tick_churn(0.3, 0.0, 0.0);
+        assert!(ev.dropouts > 0);
+        let off_before = 100 - m.active_count();
+        let ev2 = m.tick_churn(0.0, 1.0, 0.0);
+        assert_eq!(ev2.rejoins, off_before);
+        assert_eq!(m.active_count(), 100);
+    }
+}

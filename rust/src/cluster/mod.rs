@@ -1,0 +1,187 @@
+//! Parallel cluster simulation: a tick-driven coordinator state machine
+//! over a *dynamic* client population, with multi-threaded local training.
+//!
+//! The serial [`crate::coordinator::FederatedRun`] drives Algorithm 2 over
+//! a static population and remains the reference implementation. This
+//! module is the execution layer the paper's §V-B machinery actually
+//! needs to be exercised against: clients join, drop out mid-round,
+//! straggle past the round deadline and rejoin rounds later — and every
+//! catch-up download is billed through the server's partial-sum cache
+//! ([`crate::coordinator::Server::straggler_download_bits`]) instead of a
+//! closed-form pricing formula.
+//!
+//! Layout:
+//!
+//! * [`state`] — the coordinator state machine
+//!   (`WaitingForMembers → Warmup → RoundTrain → Aggregate → Cooldown`),
+//!   advanced by an explicit [`state::ClusterRun::tick`].
+//! * [`membership`] — the client lifecycle (never-joined / active /
+//!   offline) and the churn process that moves clients between states.
+//! * [`executor`] — the worker pool: local training for the round's
+//!   participants is sharded over OS threads (`std::thread::scope` +
+//!   channels) with a fixed reduction order, so the parallel path is
+//!   **bit-identical** to the serial one (tested in
+//!   `rust/tests/property_cluster.rs`).
+//! * [`transport`] — per-client latency/bandwidth/compute models that
+//!   turn every message's measured bits into simulated wall-clock time,
+//!   fed into [`crate::metrics::CommLedger`] alongside the bits.
+//!
+//! The state machine shape follows the psyche coordinator
+//! (`WaitingForMembers`/`Warmup`/`RoundTrain`/`Cooldown` run states); the
+//! round mathematics is exactly Algorithm 2 and reuses `ClientState`,
+//! `Server` and the codecs unchanged.
+
+pub mod executor;
+pub mod membership;
+pub mod state;
+pub mod transport;
+
+pub use executor::{NativeLogregFactory, TrainerFactory, WorkerPool};
+pub use membership::{ClientPhase, Membership};
+pub use state::{ClusterRun, ClusterStats, Phase, RoundSummary};
+pub use transport::{LinkModel, Transport};
+
+use crate::config::FedConfig;
+
+/// Everything the cluster simulation adds on top of a [`FedConfig`].
+///
+/// The defaults describe a *healthy, static* cluster: every client joined
+/// at t = 0, nobody drops, no slow links — in that regime the cluster run
+/// is bit-identical to the serial `FederatedRun` (the equivalence the
+/// property tests pin). Each knob then degrades one axis.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub fed: FedConfig,
+    /// worker threads for local training (1 = in-thread serial executor)
+    pub workers: usize,
+    /// P(selected participant goes offline before syncing) per round —
+    /// "mid-round dropout"; the client misses the round entirely and must
+    /// catch up through the §V-B cache when it rejoins
+    pub dropout_rate: f64,
+    /// fraction of the population on slow links (see
+    /// [`ClusterConfig::straggler_slowdown`]); their uploads miss the
+    /// round deadline and are discarded (re-banked into the residual)
+    pub straggler_frac: f64,
+    /// per-cooldown P(active client goes offline); offline clients rejoin
+    /// with probability `min(1, 4·churn)` per cooldown
+    pub churn: f64,
+    /// fraction of the population already joined at t = 0; the rest join
+    /// over time at `join_rate`
+    pub initial_frac: f64,
+    /// per-cooldown P(a never-joined client joins)
+    pub join_rate: f64,
+    /// minimum active members before training starts / resumes
+    pub min_members: usize,
+    /// ticks spent in Warmup after (re)gaining quorum
+    pub warmup_ticks: usize,
+    /// ticks spent in Cooldown after each aggregation
+    pub cooldown_ticks: usize,
+    /// simulated seconds per non-round tick (Waiting/Warmup/Cooldown)
+    pub tick_seconds: f64,
+    /// round deadline = grace × the slowest *healthy* participant's
+    /// arrival time; must be ≥ 1 so healthy clients always make it
+    pub deadline_grace: f64,
+    /// link/compute slowdown multiplier for straggler clients (≥ 1)
+    pub straggler_slowdown: f64,
+    /// hard tick budget so pathological configs (everyone offline) always
+    /// terminate
+    pub max_ticks: usize,
+}
+
+impl ClusterConfig {
+    pub fn new(fed: FedConfig) -> Self {
+        let rounds = fed.rounds();
+        ClusterConfig {
+            fed,
+            workers: 1,
+            dropout_rate: 0.0,
+            straggler_frac: 0.0,
+            churn: 0.0,
+            initial_frac: 1.0,
+            join_rate: 0.0,
+            min_members: 1,
+            warmup_ticks: 1,
+            cooldown_ticks: 1,
+            tick_seconds: 1.0,
+            deadline_grace: 1.25,
+            straggler_slowdown: 10.0,
+            // WaitingForMembers + Warmup + 3 phases/round + slack for
+            // empty rounds and churn stalls
+            max_ticks: rounds * 8 + 1000,
+        }
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        self.fed.validate()?;
+        anyhow::ensure!(self.workers >= 1, "workers >= 1");
+        for (name, v) in [
+            ("dropout_rate", self.dropout_rate),
+            ("straggler_frac", self.straggler_frac),
+            ("churn", self.churn),
+            ("initial_frac", self.initial_frac),
+            ("join_rate", self.join_rate),
+        ] {
+            anyhow::ensure!((0.0..=1.0).contains(&v), "{name} must be in [0,1], got {v}");
+        }
+        anyhow::ensure!(
+            self.initial_frac > 0.0 || self.join_rate > 0.0,
+            "no client can ever join (initial_frac = 0 and join_rate = 0)"
+        );
+        anyhow::ensure!(
+            (1..=self.fed.num_clients).contains(&self.min_members),
+            "min_members must be in 1..={}",
+            self.fed.num_clients
+        );
+        anyhow::ensure!(self.deadline_grace >= 1.0, "deadline_grace >= 1");
+        anyhow::ensure!(self.straggler_slowdown >= 1.0, "straggler_slowdown >= 1");
+        anyhow::ensure!(self.tick_seconds > 0.0, "tick_seconds > 0");
+        Ok(())
+    }
+
+    /// Initial number of joined clients: ⌈initial_frac·N⌉.
+    pub fn initial_members(&self) -> usize {
+        ((self.initial_frac * self.fed.num_clients as f64).ceil() as usize)
+            .min(self.fed.num_clients)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_static_healthy_cluster() {
+        let c = ClusterConfig::new(FedConfig::default());
+        c.validate().unwrap();
+        assert_eq!(c.initial_members(), c.fed.num_clients);
+        assert_eq!(c.dropout_rate, 0.0);
+        assert_eq!(c.churn, 0.0);
+    }
+
+    #[test]
+    fn validate_rejects_bad_knobs() {
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.dropout_rate = 1.5;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.initial_frac = 0.0;
+        assert!(c.validate().is_err()); // join_rate still 0 → unreachable quorum
+
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.min_members = c.fed.num_clients + 1;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.deadline_grace = 0.5;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn initial_members_rounds_up() {
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.fed.num_clients = 10;
+        c.initial_frac = 0.25;
+        assert_eq!(c.initial_members(), 3);
+    }
+}

@@ -1,0 +1,725 @@
+//! The tick-driven coordinator state machine.
+//!
+//! ```text
+//!             ┌────────────────────────────────────────────┐
+//!             ▼                                            │
+//!   WaitingForMembers ──quorum──▶ Warmup ──▶ RoundTrain    │
+//!             ▲                                  │         │
+//!             │ active < min_members             ▼         │
+//!             └───────────── Cooldown ◀──── Aggregate      │
+//!                                │                         │
+//!                                └──rounds_done = target───┘──▶ Finished
+//! ```
+//!
+//! One [`ClusterRun::tick`] performs exactly one phase step, so a driver
+//! (CLI, bench, test) owns the loop and can observe or stop the machine
+//! between any two transitions. The round mathematics inside
+//! `RoundTrain`/`Aggregate` is Algorithm 2 verbatim — same sampler
+//! stream, same per-client training, same f32 reduction order as the
+//! serial [`crate::coordinator::FederatedRun`] — so a healthy static
+//! cluster (no churn, no dropout, no stragglers) reproduces the serial
+//! run bit-for-bit while still exercising the full machine.
+
+use super::executor::{RoundPlan, TrainerFactory, WorkerPool};
+use super::membership::Membership;
+use super::transport::Transport;
+use super::ClusterConfig;
+use crate::compression::Message;
+use crate::coordinator::{ClientState, Server};
+use crate::data::{split_by_class, Dataset, SplitSpec};
+use crate::metrics::CommLedger;
+use crate::util::rng::Pcg64;
+
+/// Coordinator phases (the psyche run-state shape).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// below quorum; offline/never-joined clients bootstrap in
+    WaitingForMembers,
+    /// quorum reached; active clients synchronise to the global model
+    Warmup { ticks_left: usize },
+    /// participants selected, synced, trained and compressed in parallel
+    RoundTrain,
+    /// deadline applied, on-time uploads reduced into the global model
+    Aggregate,
+    /// between rounds: churn happens here; exit checks quorum + budget
+    Cooldown { ticks_left: usize },
+    /// iteration budget consumed (or tick safety valve hit)
+    Finished,
+}
+
+impl Phase {
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::WaitingForMembers => "waiting-for-members",
+            Phase::Warmup { .. } => "warmup",
+            Phase::RoundTrain => "round-train",
+            Phase::Aggregate => "aggregate",
+            Phase::Cooldown { .. } => "cooldown",
+            Phase::Finished => "finished",
+        }
+    }
+}
+
+/// Lifetime counters for one cluster run.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterStats {
+    /// never-joined clients that came up
+    pub joins: u64,
+    /// active clients lost to churn during Cooldown
+    pub churn_dropouts: u64,
+    /// selected participants that dropped before syncing
+    pub midround_dropouts: u64,
+    /// offline clients that came back
+    pub rejoins: u64,
+    /// sampled clients that were offline (not counted as dropouts)
+    pub no_shows: u64,
+    /// uploads that missed the round deadline and were re-banked
+    pub late_uploads: u64,
+    /// synchronisations that covered more than one missed round (§V-B
+    /// partial-sum cache downloads)
+    pub catch_up_syncs: u64,
+    pub catch_up_bits: u64,
+    /// rounds where no upload survived (all dropped/late)
+    pub empty_rounds: u64,
+    /// ticks spent below quorum
+    pub quorum_stalls: u64,
+}
+
+/// What one completed `Aggregate` tick did.
+#[derive(Clone, Debug)]
+pub struct RoundSummary {
+    /// server round counter after this aggregation
+    pub round: usize,
+    pub selected: usize,
+    pub dropped: usize,
+    pub late: usize,
+    /// messages reduced into the global model
+    pub aggregated: usize,
+    /// mean local training loss over clients that trained
+    pub mean_loss: f32,
+    /// participants whose sync covered > 1 missed round
+    pub catch_up_clients: usize,
+    pub catch_up_bits: u64,
+    /// simulated seconds the round took (the deadline)
+    pub round_secs: f64,
+}
+
+/// A trained-and-compressed upload travelling through the simulated
+/// transport, waiting for the round deadline.
+struct PendingUpload {
+    slot: usize,
+    client_id: usize,
+    loss: f32,
+    msg: Message,
+    up_bits: u64,
+    up_secs: f64,
+    /// seconds after round start at which the server holds the message
+    arrival_s: f64,
+    straggler_link: bool,
+}
+
+/// A fully wired cluster simulation.
+pub struct ClusterRun {
+    pub cfg: ClusterConfig,
+    pub server: Server,
+    pub clients: Vec<ClientState>,
+    pub membership: Membership,
+    pub transport: Transport,
+    pub ledger: CommLedger,
+    pub stats: ClusterStats,
+    /// successfully aggregated rounds
+    pub rounds_done: usize,
+    pub ticks: usize,
+    /// simulated federated wall-clock
+    pub sim_clock_s: f64,
+    /// ids drawn for the current/last round (diagnostics + tests)
+    pub last_participants: Vec<usize>,
+    phase: Phase,
+    pool: WorkerPool,
+    /// participant sampler — SAME stream as the serial FederatedRun so a
+    /// healthy static cluster selects identical participants
+    sampler: Pcg64,
+    /// mid-round dropout draws (separate stream: lifecycle noise must
+    /// never perturb sampling or training)
+    event_rng: Pcg64,
+    pending: Vec<PendingUpload>,
+    pending_selected: usize,
+    pending_dropped: usize,
+    pending_catchup_clients: usize,
+    pending_catchup_bits: u64,
+}
+
+impl ClusterRun {
+    /// Build the run: Algorithm 5 split over the full population (late
+    /// joiners own their shard from the start, they just have not shown
+    /// up yet), server, membership, links and the worker pool.
+    pub fn new(cfg: ClusterConfig, train: &Dataset, init_params: Vec<f32>) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let dim = init_params.len();
+        let spec = SplitSpec {
+            num_clients: cfg.fed.num_clients,
+            classes_per_client: cfg.fed.classes_per_client,
+            gamma: cfg.fed.gamma,
+            alpha: cfg.fed.alpha,
+            seed: cfg.fed.seed,
+        };
+        let shards = split_by_class(train, &spec);
+        let uses_residual = cfg.fed.method.client_residual();
+        let clients: Vec<ClientState> = shards
+            .into_iter()
+            .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg.fed, uses_residual))
+            .collect();
+        let server = Server::new(init_params, cfg.fed.method.clone(), cfg.fed.cache_rounds);
+        let sampler = Pcg64::new(cfg.fed.seed, 0x5a3b);
+        let event_rng = Pcg64::new(cfg.fed.seed, 0xe7e7);
+        let membership = Membership::new(cfg.fed.num_clients, cfg.fed.seed, cfg.initial_members());
+        let transport = Transport::new(
+            cfg.fed.num_clients,
+            cfg.fed.seed,
+            cfg.straggler_frac,
+            cfg.straggler_slowdown,
+        );
+        let pool = WorkerPool::new(cfg.workers);
+        Ok(ClusterRun {
+            ledger: CommLedger::new(cfg.fed.num_clients),
+            server,
+            clients,
+            membership,
+            transport,
+            stats: ClusterStats::default(),
+            rounds_done: 0,
+            ticks: 0,
+            sim_clock_s: 0.0,
+            last_participants: Vec::new(),
+            phase: Phase::WaitingForMembers,
+            pool,
+            sampler,
+            event_rng,
+            pending: Vec::new(),
+            pending_selected: 0,
+            pending_dropped: 0,
+            pending_catchup_clients: 0,
+            pending_catchup_bits: 0,
+            cfg,
+        })
+    }
+
+    pub fn phase(&self) -> Phase {
+        self.phase
+    }
+
+    pub fn finished(&self) -> bool {
+        self.phase == Phase::Finished
+    }
+
+    /// Aggregated-round budget (the serial run's round count).
+    pub fn target_rounds(&self) -> usize {
+        self.cfg.fed.rounds()
+    }
+
+    /// Per-client SGD iterations consumed (the paper's x-axis).
+    pub fn iterations_done(&self) -> usize {
+        self.server.round * self.cfg.fed.method.local_iters()
+    }
+
+    /// Advance the machine by exactly one phase step. Returns a summary
+    /// when the step was an aggregation (one round closed).
+    pub fn tick(&mut self, factory: &dyn TrainerFactory, data: &Dataset) -> Option<RoundSummary> {
+        if self.phase == Phase::Finished {
+            return None;
+        }
+        self.ticks += 1;
+        if self.ticks > self.cfg.max_ticks {
+            self.finish();
+            return None;
+        }
+        match self.phase {
+            Phase::WaitingForMembers => {
+                self.tick_waiting();
+                None
+            }
+            Phase::Warmup { ticks_left } => {
+                self.tick_warmup(ticks_left);
+                None
+            }
+            Phase::RoundTrain => {
+                self.tick_round_train(factory, data);
+                None
+            }
+            Phase::Aggregate => Some(self.tick_aggregate()),
+            Phase::Cooldown { ticks_left } => {
+                self.tick_cooldown(ticks_left);
+                None
+            }
+            Phase::Finished => None,
+        }
+    }
+
+    /// Drive ticks until the next closed round; `None` once finished.
+    pub fn next_round(
+        &mut self,
+        factory: &dyn TrainerFactory,
+        data: &Dataset,
+    ) -> Option<RoundSummary> {
+        while !self.finished() {
+            if let Some(s) = self.tick(factory, data) {
+                return Some(s);
+            }
+        }
+        None
+    }
+
+    fn tick_waiting(&mut self) {
+        self.sim_clock_s += self.cfg.tick_seconds;
+        if self.membership.active_count() < self.cfg.min_members {
+            self.stats.quorum_stalls += 1;
+            // offline clients keep retrying their connection while the
+            // run is stalled (fixed come-up rate bounds the expected
+            // stall); never-joined clients only arrive at join_rate
+            let ev = self.membership.tick_bootstrap(0.25, self.cfg.join_rate);
+            self.stats.joins += ev.joins as u64;
+            self.stats.rejoins += ev.rejoins as u64;
+        }
+        if self.membership.active_count() >= self.cfg.min_members {
+            self.phase = Phase::Warmup { ticks_left: self.cfg.warmup_ticks };
+        }
+    }
+
+    fn tick_warmup(&mut self, ticks_left: usize) {
+        self.sim_clock_s += self.cfg.tick_seconds;
+        if ticks_left > 1 {
+            self.phase = Phase::Warmup { ticks_left: ticks_left - 1 };
+            return;
+        }
+        // bring every active client up to the current global model; free
+        // at server round 0, a billed §V-B catch-up after a quorum outage
+        for id in 0..self.clients.len() {
+            if self.membership.is_active(id) {
+                self.sync_client(id);
+            }
+        }
+        self.phase = Phase::RoundTrain;
+    }
+
+    /// Bill client `id`'s synchronisation through the partial-sum cache.
+    /// Returns (bits, rounds covered, transfer seconds).
+    fn sync_client(&mut self, id: usize) -> (u64, usize, f64) {
+        let last = self.clients[id].last_sync_round;
+        let lag = self.server.round - last;
+        let bits = self.server.straggler_download_bits(last) as u64;
+        let secs = self.transport.down_time(id, bits);
+        if bits > 0 {
+            self.ledger.record_download_timed(bits as usize, secs);
+            if lag > 1 {
+                self.stats.catch_up_syncs += 1;
+                self.stats.catch_up_bits += bits;
+            }
+        }
+        self.clients[id].last_sync_round = self.server.round;
+        (bits, lag, secs)
+    }
+
+    fn tick_round_train(&mut self, factory: &dyn TrainerFactory, data: &Dataset) {
+        let n = self.cfg.fed.num_clients;
+        let m = self.cfg.fed.clients_per_round();
+        let ids = self.sampler.sample_without_replacement(n, m);
+        self.last_participants = ids.clone();
+        self.pending_selected = ids.len();
+
+        // lifecycle: offline no-shows, then mid-round dropouts
+        let mut participant_ids: Vec<usize> = Vec::with_capacity(ids.len());
+        let mut dropped = 0usize;
+        for &id in &ids {
+            if !self.membership.is_active(id) {
+                self.stats.no_shows += 1;
+                continue;
+            }
+            if self.cfg.dropout_rate > 0.0 && self.event_rng.f64() < self.cfg.dropout_rate {
+                self.membership.set_offline(id);
+                self.stats.midround_dropouts += 1;
+                dropped += 1;
+                continue;
+            }
+            participant_ids.push(id);
+        }
+        self.pending_dropped = dropped;
+
+        // synchronise every participant (catch-up billed through §V-B)
+        self.pending_catchup_clients = 0;
+        self.pending_catchup_bits = 0;
+        let mut down_secs = Vec::with_capacity(participant_ids.len());
+        for &id in &participant_ids {
+            let (bits, lag, secs) = self.sync_client(id);
+            if bits > 0 && lag > 1 {
+                self.pending_catchup_clients += 1;
+                self.pending_catchup_bits += bits;
+            }
+            down_secs.push(secs);
+        }
+
+        // parallel local training, fixed reduction order = sampled order
+        let local_iters = self.cfg.fed.method.local_iters();
+        let plan = RoundPlan {
+            method: &self.cfg.fed.method,
+            lr: self.cfg.fed.lr,
+            momentum: self.cfg.fed.momentum,
+            local_iters,
+        };
+        let mut slot_of = vec![usize::MAX; n];
+        for (slot, &id) in participant_ids.iter().enumerate() {
+            slot_of[id] = slot;
+        }
+        let parts: Vec<(usize, &mut ClientState)> = self
+            .clients
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(id, c)| {
+                let slot = slot_of[id];
+                if slot == usize::MAX {
+                    None
+                } else {
+                    Some((slot, c))
+                }
+            })
+            .collect();
+        let results = self.pool.execute_round(factory, &self.server.params, data, parts, &plan);
+
+        let transport = &self.transport;
+        self.pending = results
+            .into_iter()
+            .map(|r| {
+                let bits = r.msg.wire_bits() as u64;
+                let up_secs = transport.up_time(r.client_id, bits);
+                PendingUpload {
+                    arrival_s: down_secs[r.slot]
+                        + transport.compute_time(r.client_id, local_iters)
+                        + up_secs,
+                    straggler_link: transport.link(r.client_id).straggler,
+                    slot: r.slot,
+                    client_id: r.client_id,
+                    loss: r.loss,
+                    msg: r.msg,
+                    up_bits: bits,
+                    up_secs,
+                }
+            })
+            .collect();
+        self.phase = Phase::Aggregate;
+    }
+
+    fn tick_aggregate(&mut self) -> RoundSummary {
+        let pending = std::mem::take(&mut self.pending);
+        self.phase = Phase::Cooldown { ticks_left: self.cfg.cooldown_ticks };
+
+        if pending.is_empty() {
+            self.stats.empty_rounds += 1;
+            self.sim_clock_s += self.cfg.tick_seconds;
+            return RoundSummary {
+                round: self.server.round,
+                selected: self.pending_selected,
+                dropped: self.pending_dropped,
+                late: 0,
+                aggregated: 0,
+                mean_loss: f32::NAN,
+                catch_up_clients: self.pending_catchup_clients,
+                catch_up_bits: self.pending_catchup_bits,
+                round_secs: self.cfg.tick_seconds,
+            };
+        }
+
+        // Round deadline: grace × the slowest healthy participant. If the
+        // draw happens to contain only stragglers, fall back to the
+        // slowest overall so the round still closes.
+        let healthy_max = pending
+            .iter()
+            .filter(|p| !p.straggler_link)
+            .map(|p| p.arrival_s)
+            .fold(0.0f64, f64::max);
+        let base = if healthy_max > 0.0 {
+            healthy_max
+        } else {
+            pending.iter().map(|p| p.arrival_s).fold(0.0f64, f64::max)
+        };
+        let deadline = base * self.cfg.deadline_grace;
+
+        let mut msgs: Vec<Message> = Vec::with_capacity(pending.len());
+        let mut loss_sum = 0.0f64;
+        let trained = pending.len();
+        let mut late = 0usize;
+        for p in pending {
+            // bits leave the client either way; bill the transfer
+            self.ledger.record_upload_timed(p.up_bits as usize, p.up_secs);
+            loss_sum += p.loss as f64;
+            if p.arrival_s <= deadline {
+                msgs.push(p.msg);
+            } else {
+                late += 1;
+                self.stats.late_uploads += 1;
+                // The server never saw it. Error-feedback methods
+                // (top-k/STC) re-bank the decoded update in the residual
+                // so the work is deferred to the next upload; methods
+                // without a residual (signSGD, FedAvg, baseline) have no
+                // deferral mechanism in their protocol and genuinely
+                // lose the round — that asymmetry is part of what the
+                // straggler experiments measure.
+                let residual = &mut self.clients[p.client_id].residual;
+                if !residual.is_empty() {
+                    p.msg.add_to(residual, 1.0);
+                }
+            }
+        }
+        let aggregated = msgs.len();
+        // the deadline always covers the slowest eligible participant
+        // (grace ≥ 1), so msgs is non-empty whenever anyone trained;
+        // all-dropped rounds were counted as empty above. The guard
+        // stays because Server::aggregate_and_apply panics on an empty
+        // round, which must never be reachable from here.
+        if !msgs.is_empty() {
+            self.server.aggregate_and_apply(&msgs);
+            self.rounds_done += 1;
+        }
+        self.sim_clock_s += deadline;
+
+        RoundSummary {
+            round: self.server.round,
+            selected: self.pending_selected,
+            dropped: self.pending_dropped,
+            late,
+            aggregated,
+            mean_loss: (loss_sum / trained as f64) as f32,
+            catch_up_clients: self.pending_catchup_clients,
+            catch_up_bits: self.pending_catchup_bits,
+            round_secs: deadline,
+        }
+    }
+
+    fn tick_cooldown(&mut self, ticks_left: usize) {
+        self.sim_clock_s += self.cfg.tick_seconds;
+        if ticks_left > 1 {
+            self.phase = Phase::Cooldown { ticks_left: ticks_left - 1 };
+            return;
+        }
+        // churn happens between rounds
+        let ev = self.membership.tick_churn(
+            self.cfg.churn,
+            (self.cfg.churn * 4.0).min(1.0),
+            self.cfg.join_rate,
+        );
+        self.stats.churn_dropouts += ev.dropouts as u64;
+        self.stats.rejoins += ev.rejoins as u64;
+        self.stats.joins += ev.joins as u64;
+
+        if self.rounds_done >= self.target_rounds() {
+            self.finish();
+        } else if self.membership.active_count() < self.cfg.min_members {
+            self.phase = Phase::WaitingForMembers;
+        } else {
+            self.phase = Phase::RoundTrain;
+        }
+    }
+
+    /// Terminal settlement: every client that ever held the model
+    /// downloads the updates it is still missing (mirrors the serial
+    /// `FederatedRun::settle_final_downloads`).
+    fn finish(&mut self) {
+        for id in 0..self.clients.len() {
+            if self.membership.has_joined(id) {
+                self.sync_client(id);
+            }
+        }
+        self.phase = Phase::Finished;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeLogregFactory;
+    use crate::config::{FedConfig, Method};
+    use crate::data::synth::task_dataset;
+    use crate::models::ModelSpec;
+
+    fn small_fed(method: Method, rounds: usize) -> FedConfig {
+        FedConfig {
+            model: "logreg".into(),
+            num_clients: 10,
+            participation: 0.5,
+            classes_per_client: 10,
+            batch_size: 10,
+            method,
+            lr: 0.05,
+            momentum: 0.0,
+            iterations: rounds, // local_iters == 1 for STC/baseline
+            eval_every: 10,
+            seed: 13,
+            train_examples: 500,
+            test_examples: 100,
+            ..Default::default()
+        }
+    }
+
+    fn build(ccfg: ClusterConfig) -> (ClusterRun, Dataset) {
+        let (train, _) = task_dataset("mnist", ccfg.fed.seed).unwrap();
+        let train = train.subset(&(0..500).collect::<Vec<_>>());
+        let spec = ModelSpec::by_name("logreg").unwrap();
+        let init = spec.init_flat(ccfg.fed.seed);
+        let run = ClusterRun::new(ccfg, &train, init).unwrap();
+        (run, train)
+    }
+
+    #[test]
+    fn healthy_cluster_cycles_through_all_phases() {
+        let ccfg = ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 3));
+        let (mut run, train) = build(ccfg);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let mut seen = Vec::new();
+        while !run.finished() {
+            seen.push(run.phase().label());
+            run.tick(&factory, &train);
+        }
+        assert_eq!(seen[0], "waiting-for-members");
+        assert!(seen.contains(&"warmup"));
+        assert!(seen.contains(&"round-train"));
+        assert!(seen.contains(&"aggregate"));
+        assert!(seen.contains(&"cooldown"));
+        assert_eq!(run.rounds_done, 3);
+        assert_eq!(run.server.round, 3);
+        assert!(run.sim_clock_s > 0.0);
+        // settlement leaves everyone synchronised
+        for c in &run.clients {
+            assert_eq!(c.last_sync_round, run.server.round);
+        }
+    }
+
+    #[test]
+    fn next_round_returns_summaries_until_budget() {
+        let ccfg = ClusterConfig::new(small_fed(Method::Baseline, 4));
+        let (mut run, train) = build(ccfg);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let mut rounds = 0;
+        while let Some(s) = run.next_round(&factory, &train) {
+            rounds += 1;
+            assert_eq!(s.selected, 5);
+            assert_eq!(s.aggregated, 5);
+            assert_eq!(s.late, 0);
+            assert!(s.mean_loss.is_finite());
+            assert!(s.round_secs > 0.0);
+        }
+        assert_eq!(rounds, 4);
+        assert!(run.finished());
+    }
+
+    #[test]
+    fn dropouts_recover_and_pay_catchup() {
+        let mut ccfg =
+            ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 30));
+        ccfg.dropout_rate = 0.4;
+        ccfg.min_members = 5;
+        let (mut run, train) = build(ccfg);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        while !run.finished() {
+            run.tick(&factory, &train);
+        }
+        assert!(run.stats.midround_dropouts > 0, "{:?}", run.stats);
+        // dropped clients came back (bootstrap or selection) and had to
+        // catch up through the partial-sum cache
+        assert!(run.stats.rejoins > 0 || run.stats.no_shows > 0, "{:?}", run.stats);
+        assert!(run.stats.catch_up_syncs > 0, "{:?}", run.stats);
+        assert!(run.stats.catch_up_bits > 0);
+        assert!(run.rounds_done > 0);
+    }
+
+    #[test]
+    fn stragglers_miss_deadline_and_rebank() {
+        let mut ccfg =
+            ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 12));
+        ccfg.straggler_frac = 0.4;
+        let (mut run, train) = build(ccfg);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let mut late_total = 0;
+        while let Some(s) = run.next_round(&factory, &train) {
+            late_total += s.late;
+            assert_eq!(s.selected, s.aggregated + s.late + s.dropped);
+        }
+        assert!(late_total > 0, "no straggler ever missed a deadline");
+        assert_eq!(run.stats.late_uploads as usize, late_total);
+        // uploads are billed whether or not they made the deadline
+        assert_eq!(run.ledger.uploads as usize, 12 * 5);
+        assert!(run.ledger.up_seconds > 0.0);
+    }
+
+    #[test]
+    fn churn_exercises_waiting_and_rejoin() {
+        let mut ccfg =
+            ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 40));
+        ccfg.churn = 0.3;
+        ccfg.min_members = 6;
+        let (mut run, train) = build(ccfg);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        while !run.finished() {
+            run.tick(&factory, &train);
+        }
+        assert!(run.stats.churn_dropouts > 0, "{:?}", run.stats);
+        assert!(run.stats.rejoins > 0, "{:?}", run.stats);
+        assert!(run.stats.catch_up_bits > 0, "{:?}", run.stats);
+        assert!(run.rounds_done > 0);
+    }
+
+    #[test]
+    fn gradual_join_starts_below_quorum() {
+        let mut ccfg = ClusterConfig::new(small_fed(Method::Baseline, 6));
+        ccfg.initial_frac = 0.2; // 2 of 10
+        ccfg.join_rate = 0.5;
+        ccfg.min_members = 6;
+        let (mut run, train) = build(ccfg);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        while !run.finished() {
+            run.tick(&factory, &train);
+        }
+        assert!(run.stats.quorum_stalls > 0, "{:?}", run.stats);
+        assert!(run.stats.joins > 0, "{:?}", run.stats);
+        assert_eq!(run.rounds_done, 6);
+    }
+
+    #[test]
+    fn max_ticks_safety_valve_terminates_hopeless_runs() {
+        let mut ccfg = ClusterConfig::new(small_fed(Method::Baseline, 5));
+        ccfg.initial_frac = 0.1; // 1 active
+        ccfg.join_rate = 0.0; // nobody else ever joins…
+        ccfg.min_members = 10; // …but quorum needs everyone
+        ccfg.max_ticks = 50;
+        let (mut run, train) = build(ccfg);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let mut guard = 0;
+        while !run.finished() {
+            run.tick(&factory, &train);
+            guard += 1;
+            assert!(guard < 1000, "run failed to terminate");
+        }
+        assert_eq!(run.rounds_done, 0);
+        assert!(run.ticks >= 50);
+    }
+
+    #[test]
+    fn deterministic_across_runs_and_worker_counts() {
+        let mk = |workers: usize| {
+            let mut ccfg =
+                ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 8));
+            ccfg.workers = workers;
+            ccfg.dropout_rate = 0.2;
+            ccfg.straggler_frac = 0.2;
+            ccfg.churn = 0.1;
+            let (mut run, train) = build(ccfg);
+            let factory = NativeLogregFactory { batch_size: 10 };
+            while !run.finished() {
+                run.tick(&factory, &train);
+            }
+            (run.server.params.clone(), run.ledger.total_up_bits, run.ledger.total_down_bits)
+        };
+        let a = mk(1);
+        let b = mk(1);
+        assert_eq!(a, b, "same worker count must be bit-identical");
+        let c = mk(4);
+        assert_eq!(a, c, "worker count must not change results");
+    }
+}

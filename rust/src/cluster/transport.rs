@@ -1,0 +1,148 @@
+//! Simulated transport: per-client latency / bandwidth / compute models.
+//!
+//! The serial round loop accounts *bits*; the cluster layer additionally
+//! accounts *time*. Every client gets a deterministic link drawn from a
+//! moderate heterogeneity band (~4× spread, the shape of a fleet of
+//! consumer uplinks), and a per-iteration compute cost. A configurable
+//! fraction of clients are stragglers: their link and compute are slowed
+//! by `slowdown`×, which (for slowdown ≫ the heterogeneity band × the
+//! deadline grace) guarantees they miss the round deadline — the event
+//! the §V-B catch-up machinery prices.
+//!
+//! All draws come from a dedicated PRNG stream, so enabling or disabling
+//! transport heterogeneity never perturbs participant sampling or
+//! training randomness.
+
+use crate::util::rng::Pcg64;
+
+/// One client's network + compute characteristics.
+#[derive(Clone, Debug)]
+pub struct LinkModel {
+    /// one-way latency per message, seconds
+    pub latency_s: f64,
+    /// upstream bits/second
+    pub up_bps: f64,
+    /// downstream bits/second
+    pub down_bps: f64,
+    /// local compute, seconds per SGD iteration
+    pub compute_s_per_iter: f64,
+    /// whether this client sits on a deliberately slowed link
+    pub straggler: bool,
+}
+
+/// The whole population's links.
+#[derive(Clone, Debug)]
+pub struct Transport {
+    links: Vec<LinkModel>,
+}
+
+impl Transport {
+    /// Build deterministic links for `n` clients. `straggler_frac` of the
+    /// population (chosen by a seeded permutation) is slowed by
+    /// `slowdown`× on latency, bandwidth and compute.
+    pub fn new(n: usize, seed: u64, straggler_frac: f64, slowdown: f64) -> Transport {
+        let mut rng = Pcg64::new(seed, 0x7a11);
+        let num_stragglers = ((straggler_frac * n as f64).round() as usize).min(n);
+        let perm = rng.permutation(n);
+        let mut is_straggler = vec![false; n];
+        for &id in perm.iter().take(num_stragglers) {
+            is_straggler[id] = true;
+        }
+        let links = (0..n)
+            .map(|id| {
+                // ~4× heterogeneity bands (uniform draws):
+                //   uplink 8–32 Mbit/s, downlink 40–160 Mbit/s,
+                //   latency 10–50 ms, compute 0.5–2 ms/iteration
+                let up_bps = (8.0 + 24.0 * rng.f64()) * 1e6;
+                let down_bps = (40.0 + 120.0 * rng.f64()) * 1e6;
+                let latency_s = 0.010 + 0.040 * rng.f64();
+                let compute_s_per_iter = (0.5 + 1.5 * rng.f64()) * 1e-3;
+                let f = if is_straggler[id] { slowdown } else { 1.0 };
+                LinkModel {
+                    latency_s: latency_s * f,
+                    up_bps: up_bps / f,
+                    down_bps: down_bps / f,
+                    compute_s_per_iter: compute_s_per_iter * f,
+                    straggler: is_straggler[id],
+                }
+            })
+            .collect();
+        Transport { links }
+    }
+
+    pub fn link(&self, id: usize) -> &LinkModel {
+        &self.links[id]
+    }
+
+    pub fn num_stragglers(&self) -> usize {
+        self.links.iter().filter(|l| l.straggler).count()
+    }
+
+    /// Seconds for client `id` to upload `bits`.
+    pub fn up_time(&self, id: usize, bits: u64) -> f64 {
+        let l = &self.links[id];
+        l.latency_s + bits as f64 / l.up_bps
+    }
+
+    /// Seconds for client `id` to download `bits`. Zero bits cost zero —
+    /// an in-sync client does not touch the network.
+    pub fn down_time(&self, id: usize, bits: u64) -> f64 {
+        if bits == 0 {
+            return 0.0;
+        }
+        let l = &self.links[id];
+        l.latency_s + bits as f64 / l.down_bps
+    }
+
+    /// Seconds for client `id` to run `iters` local SGD iterations.
+    pub fn compute_time(&self, id: usize, iters: usize) -> f64 {
+        self.links[id].compute_s_per_iter * iters as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = Transport::new(20, 9, 0.25, 10.0);
+        let b = Transport::new(20, 9, 0.25, 10.0);
+        for id in 0..20 {
+            assert_eq!(a.link(id).up_bps, b.link(id).up_bps);
+            assert_eq!(a.link(id).straggler, b.link(id).straggler);
+        }
+        assert_eq!(a.num_stragglers(), 5);
+    }
+
+    #[test]
+    fn straggler_links_are_slower() {
+        let t = Transport::new(40, 3, 0.5, 10.0);
+        let (mut slow_max_bps, mut fast_min_bps) = (0.0f64, f64::INFINITY);
+        for id in 0..40 {
+            let l = t.link(id);
+            if l.straggler {
+                slow_max_bps = slow_max_bps.max(l.up_bps);
+            } else {
+                fast_min_bps = fast_min_bps.min(l.up_bps);
+            }
+        }
+        // 10× slowdown on a 4× band keeps the populations disjoint
+        assert!(slow_max_bps < fast_min_bps, "{slow_max_bps} vs {fast_min_bps}");
+    }
+
+    #[test]
+    fn times_scale_with_bits_and_iters() {
+        let t = Transport::new(4, 1, 0.0, 1.0);
+        assert_eq!(t.down_time(0, 0), 0.0);
+        assert!(t.up_time(0, 1_000_000) > t.up_time(0, 1_000));
+        assert!(t.compute_time(0, 100) > t.compute_time(0, 10));
+        assert!((t.compute_time(0, 10) - 10.0 * t.link(0).compute_s_per_iter).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_frac_means_no_stragglers() {
+        let t = Transport::new(30, 7, 0.0, 10.0);
+        assert_eq!(t.num_stragglers(), 0);
+    }
+}

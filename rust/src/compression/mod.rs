@@ -152,15 +152,16 @@ pub fn residual_after(msg: &Message, acc: &mut [f32]) {
 }
 
 /// Construct a compressor by config name. Supported:
-/// `dense`, `topk`, `stc`, `signsgd`.
-pub fn by_name(name: &str, p: f64) -> Box<dyn Compressor> {
-    match name {
+/// `dense`, `topk`, `stc`, `signsgd`. Unknown names are a clean error
+/// (they typically come straight from CLI/config input).
+pub fn by_name(name: &str, p: f64) -> anyhow::Result<Box<dyn Compressor>> {
+    Ok(match name {
         "dense" => Box::new(DenseCompressor),
         "topk" => Box::new(TopKCompressor::new(p)),
         "stc" => Box::new(StcCompressor::new(p)),
         "signsgd" => Box::new(SignCompressor),
-        other => panic!("unknown compressor '{other}'"),
-    }
+        other => anyhow::bail!("unknown compressor '{other}' (dense|topk|stc|signsgd)"),
+    })
 }
 
 /// Deterministic random dense update for tests/benches.
@@ -239,16 +240,16 @@ mod tests {
     #[test]
     fn by_name_constructs_all() {
         for name in ["dense", "topk", "stc", "signsgd"] {
-            let mut c = by_name(name, 0.1);
+            let mut c = by_name(name, 0.1).unwrap();
             let msg = c.compress(&[1.0, -1.0, 2.0, -2.0, 3.0, -3.0, 4.0, -4.0, 5.0, -5.0]);
             assert_eq!(msg.tensor_len(), 10);
         }
     }
 
     #[test]
-    #[should_panic(expected = "unknown compressor")]
     fn by_name_rejects_unknown() {
-        by_name("quantum", 0.1);
+        let err = by_name("quantum", 0.1).unwrap_err().to_string();
+        assert!(err.contains("unknown compressor 'quantum'"), "{err}");
     }
 
     #[test]

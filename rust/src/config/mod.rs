@@ -5,6 +5,7 @@
 //! from `key=value` CLI pairs / config files (one `key = value` per line,
 //! `#` comments) — see [`FedConfig::apply_kv`].
 
+use crate::compression::{self, Compressor};
 use crate::models::ModelSpec;
 
 /// The compression method under test (Table I rows).
@@ -48,6 +49,22 @@ impl Method {
                 | Method::SparseUpDown { .. }
                 | Method::Hybrid { .. }
         )
+    }
+
+    /// The upstream codec this method's clients run (Table I row). The
+    /// serial round loop and the parallel cluster executor both build
+    /// their compressors here so the two paths cannot drift.
+    pub fn up_compressor(&self) -> Box<dyn Compressor> {
+        match self {
+            Method::Baseline | Method::FedAvg { .. } => Box::new(compression::DenseCompressor),
+            Method::SignSgd { .. } => Box::new(compression::SignCompressor),
+            Method::TopK { p } => Box::new(compression::TopKCompressor::new(*p)),
+            Method::SparseUpDown { p_up, .. } => {
+                Box::new(compression::TopKCompressor::new(*p_up))
+            }
+            Method::Stc { p_up, .. } => Box::new(compression::StcCompressor::new(*p_up)),
+            Method::Hybrid { p, .. } => Box::new(compression::StcCompressor::new(*p)),
+        }
     }
 
     /// Whether the server compresses the downstream update (R1).
@@ -165,10 +182,11 @@ impl Default for FedConfig {
 
 impl FedConfig {
     /// Config for a model with the paper's per-task hyperparameters.
-    pub fn for_model(model: &str) -> Self {
-        let spec = ModelSpec::by_name(model);
+    /// Errors on unknown model names (CLI input) instead of panicking.
+    pub fn for_model(model: &str) -> anyhow::Result<Self> {
+        let spec = ModelSpec::by_name(model)?;
         let (lr, momentum) = spec.default_hparams();
-        FedConfig { model: model.into(), lr, momentum, ..Default::default() }
+        Ok(FedConfig { model: model.into(), lr, momentum, ..Default::default() })
     }
 
     /// Number of participating clients per round, ⌈ηN⌉ clamped to ≥1.
@@ -350,6 +368,24 @@ mod tests {
         c.num_clients = 5;
         c.participation = 0.01;
         assert_eq!(c.clients_per_round(), 1);
+    }
+
+    #[test]
+    fn up_compressor_matches_method() {
+        assert_eq!(Method::Baseline.up_compressor().name(), "dense");
+        assert_eq!(Method::FedAvg { n: 10 }.up_compressor().name(), "dense");
+        assert_eq!(Method::SignSgd { delta: 0.1 }.up_compressor().name(), "signsgd");
+        assert!(Method::TopK { p: 0.02 }.up_compressor().name().starts_with("topk"));
+        assert!(Method::Stc { p_up: 0.01, p_down: 0.01 }
+            .up_compressor()
+            .name()
+            .starts_with("stc"));
+    }
+
+    #[test]
+    fn for_model_rejects_unknown() {
+        assert!(FedConfig::for_model("resnet152").is_err());
+        assert_eq!(FedConfig::for_model("cnn").unwrap().momentum, 0.9);
     }
 
     #[test]

@@ -182,7 +182,7 @@ mod tests {
     fn setup() -> (Dataset, ClientState, NativeLogreg, Vec<f32>) {
         let (train, _) = SynthSpec::new(SynthFlavor::Mnist, 300, 50, 1).generate();
         let cfg = FedConfig { batch_size: 10, ..Default::default() };
-        let spec = ModelSpec::by_name("logreg");
+        let spec = ModelSpec::by_name("logreg").unwrap();
         let client = ClientState::new(0, (0..300).collect(), spec.dim(), &cfg, true);
         let trainer = NativeLogreg::new(10);
         let params = spec.init_flat(3);
@@ -248,7 +248,7 @@ mod tests {
         let (train, mut client, mut trainer, mut params) = setup();
         let mut scratch = LocalScratch::default();
         // gradient direction check: loss after some steps should drop
-        let spec = ModelSpec::by_name("logreg");
+        let spec = ModelSpec::by_name("logreg").unwrap();
         let before_loss = {
             let mut t2 = NativeLogreg::new(10);
             let m = crate::models::Trainer::eval(&mut t2, &params, &train);

@@ -19,6 +19,6 @@ pub mod client;
 pub mod round;
 pub mod server;
 
-pub use client::ClientState;
+pub use client::{ClientState, LocalScratch};
 pub use round::FederatedRun;
 pub use server::Server;

@@ -2,8 +2,8 @@
 
 use super::client::{ClientState, LocalScratch};
 use super::server::Server;
-use crate::compression::{self, Compressor, Message};
-use crate::config::{FedConfig, Method};
+use crate::compression::{Compressor, Message};
+use crate::config::FedConfig;
 use crate::data::{split_by_class, Dataset, SplitSpec};
 use crate::metrics::CommLedger;
 use crate::models::Trainer;
@@ -48,16 +48,7 @@ impl FederatedRun {
             .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg, uses_residual))
             .collect();
 
-        let up_compressor: Box<dyn Compressor> = match &cfg.method {
-            Method::Baseline | Method::FedAvg { .. } => Box::new(compression::DenseCompressor),
-            Method::SignSgd { .. } => Box::new(compression::SignCompressor),
-            Method::TopK { p } => Box::new(compression::TopKCompressor::new(*p)),
-            Method::SparseUpDown { p_up, .. } => {
-                Box::new(compression::TopKCompressor::new(*p_up))
-            }
-            Method::Stc { p_up, .. } => Box::new(compression::StcCompressor::new(*p_up)),
-            Method::Hybrid { p, .. } => Box::new(compression::StcCompressor::new(*p)),
-        };
+        let up_compressor = cfg.method.up_compressor();
 
         let server = Server::new(init_params, cfg.method.clone(), cfg.cache_rounds);
         let sampler = Pcg64::new(cfg.seed, 0x5a3b);
@@ -163,6 +154,7 @@ impl FederatedRun {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::config::Method;
     use crate::data::synth::task_dataset;
     use crate::models::native::NativeLogreg;
     use crate::models::ModelSpec;
@@ -187,10 +179,10 @@ mod tests {
     }
 
     fn build(method: Method) -> (FederatedRun, NativeLogreg, Dataset, Dataset) {
-        let (train, test) = task_dataset("mnist", 7);
+        let (train, test) = task_dataset("mnist", 7).unwrap();
         let train = train.subset(&(0..500).collect::<Vec<_>>());
         let cfg = quick_cfg(method);
-        let spec = ModelSpec::by_name("logreg");
+        let spec = ModelSpec::by_name("logreg").unwrap();
         let run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
         (run, NativeLogreg::new(10), train, test)
     }
@@ -206,10 +198,10 @@ mod tests {
 
     #[test]
     fn partial_participation_samples_subset() {
-        let (train, _) = task_dataset("mnist", 7);
+        let (train, _) = task_dataset("mnist", 7).unwrap();
         let mut cfg = quick_cfg(Method::Baseline);
         cfg.participation = 0.3;
-        let spec = ModelSpec::by_name("logreg");
+        let spec = ModelSpec::by_name("logreg").unwrap();
         let mut run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
         let mut trainer = NativeLogreg::new(10);
         run.run_round(&mut trainer, &train);
@@ -277,10 +269,10 @@ mod tests {
 
     #[test]
     fn settle_final_downloads_synchronises_everyone() {
-        let (train, _) = task_dataset("mnist", 7);
+        let (train, _) = task_dataset("mnist", 7).unwrap();
         let mut cfg = quick_cfg(Method::Stc { p_up: 0.01, p_down: 0.01 });
         cfg.participation = 0.2;
-        let spec = ModelSpec::by_name("logreg");
+        let spec = ModelSpec::by_name("logreg").unwrap();
         let mut run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
         let mut trainer = NativeLogreg::new(10);
         for _ in 0..5 {
@@ -298,10 +290,10 @@ mod tests {
 
     #[test]
     fn client_shards_respect_class_constraint() {
-        let (train, _) = task_dataset("mnist", 7);
+        let (train, _) = task_dataset("mnist", 7).unwrap();
         let mut cfg = quick_cfg(Method::Baseline);
         cfg.classes_per_client = 2;
-        let spec = ModelSpec::by_name("logreg");
+        let spec = ModelSpec::by_name("logreg").unwrap();
         let run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
         for c in &run.clients {
             assert!(c.num_examples > 0);

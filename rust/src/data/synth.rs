@@ -30,14 +30,14 @@ pub enum SynthFlavor {
 }
 
 impl SynthFlavor {
-    pub fn by_name(name: &str) -> SynthFlavor {
-        match name {
+    pub fn by_name(name: &str) -> anyhow::Result<SynthFlavor> {
+        Ok(match name {
             "mnist" => SynthFlavor::Mnist,
             "cifar" => SynthFlavor::Cifar,
             "kws" => SynthFlavor::Kws,
             "fashion" => SynthFlavor::FashionSeq,
-            other => panic!("unknown synth flavor '{other}'"),
-        }
+            other => anyhow::bail!("unknown synth flavor '{other}' (mnist|cifar|kws|fashion)"),
+        })
     }
 
     /// (height, width, channels)
@@ -197,14 +197,14 @@ fn normalize(v: &mut [f32]) {
 
 /// Standard task datasets used across examples/benches (sizes scaled to
 /// the 1-core budget; see EXPERIMENTS.md for the paper-scale mapping).
-pub fn task_dataset(task: &str, seed: u64) -> (Dataset, Dataset) {
-    match task {
+pub fn task_dataset(task: &str, seed: u64) -> anyhow::Result<(Dataset, Dataset)> {
+    Ok(match task {
         "mnist" => SynthSpec::new(SynthFlavor::Mnist, 4000, 1000, seed).generate(),
         "cifar" => SynthSpec::new(SynthFlavor::Cifar, 4000, 1000, seed).generate(),
         "kws" => SynthSpec::new(SynthFlavor::Kws, 3000, 800, seed).generate(),
         "fashion" => SynthSpec::new(SynthFlavor::FashionSeq, 3000, 800, seed).generate(),
-        other => panic!("unknown task '{other}'"),
-    }
+        other => anyhow::bail!("unknown task '{other}' (mnist|cifar|kws|fashion)"),
+    })
 }
 
 #[cfg(test)]
@@ -311,9 +311,11 @@ mod tests {
     #[test]
     fn task_dataset_names() {
         for t in ["mnist", "cifar", "kws", "fashion"] {
-            let (train, test) = task_dataset(t, 1);
+            let (train, test) = task_dataset(t, 1).unwrap();
             assert!(!train.is_empty());
             assert!(!test.is_empty());
         }
+        assert!(task_dataset("imagenet", 1).is_err());
+        assert!(SynthFlavor::by_name("imagenet").is_err());
     }
 }

@@ -23,6 +23,12 @@
 //!   with upstream *and* downstream compression, error-feedback residuals
 //!   on both sides, the partial-sum cache for partial participation
 //!   (§V-B), client state, and the Algorithm 2 round loop.
+//! * [`cluster`] — the parallel cluster simulation: a tick-driven
+//!   coordinator state machine (WaitingForMembers → Warmup → RoundTrain →
+//!   Aggregate → Cooldown) over a dynamic client population with
+//!   join/dropout/straggle/rejoin lifecycles, a multi-threaded local
+//!   training executor that is bit-identical to the serial path, and a
+//!   simulated transport billing wall-clock time alongside bits.
 //! * [`sim`] — the federated learning simulation engine driving complete
 //!   experiments, and the sign-congruence analysis of Fig. 3.
 //! * [`config`] / [`cli`] — experiment configuration and a small CLI.
@@ -32,6 +38,7 @@
 //!   no access to crates.io beyond the vendored `xla` closure.
 
 pub mod cli;
+pub mod cluster;
 pub mod compression;
 pub mod config;
 pub mod coordinator;

@@ -1,11 +1,13 @@
 //! `repro` — the fedstc command-line launcher.
 //!
 //! Subcommands:
-//!   train   run one federated training experiment and print the curve
-//!   alpha   gradient sign-congruence analysis (paper Fig. 3)
-//!   info    artifact + model inventory
-//!   sweep   grid over one config key (comma-separated values)
-//!   help    this text
+//!   train    run one federated training experiment and print the curve
+//!   cluster  run the tick-driven parallel cluster simulation (dynamic
+//!            membership: joins, dropouts, stragglers, churn)
+//!   alpha    gradient sign-congruence analysis (paper Fig. 3)
+//!   info     artifact + model inventory
+//!   sweep    grid over one config key (comma-separated values)
+//!   help     this text
 //!
 //! Config keys accepted by `train`/`sweep` mirror `FedConfig::apply_kv`:
 //!   --model logreg|cnn|kws|lstm   --method stc:0.0025 | fedavg:400 |
@@ -14,6 +16,7 @@
 //!   --backend native|hlo (native only for logreg)
 
 use fedstc::cli::Args;
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
 use fedstc::config::FedConfig;
 use fedstc::data::synth::task_dataset;
 use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
@@ -33,6 +36,7 @@ fn run() -> anyhow::Result<()> {
     let args = Args::from_env()?;
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "cluster" => cmd_cluster(&args),
         "alpha" => cmd_alpha(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),
@@ -45,15 +49,22 @@ fn run() -> anyhow::Result<()> {
 
 fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
     let model = args.get_or("model", "logreg");
-    let mut cfg = FedConfig::for_model(&model);
+    let mut cfg = FedConfig::for_model(&model)?;
     if let Some(file) = args.get("config") {
         let text = std::fs::read_to_string(&file)?;
         cfg.apply_file(&text)?;
     }
+    let is_cluster = args.subcommand == "cluster";
     for (k, v) in args.pairs() {
         match k.as_str() {
             // CLI-only keys that are not FedConfig fields
             "backend" | "out" | "config" | "verbose" | "key" | "values" | "ks" | "trials" => {}
+            // cluster-only keys (cmd_cluster reads them separately); on
+            // any other subcommand they fall through to apply_kv and are
+            // rejected as unknown instead of being silently ignored
+            "workers" | "dropout-rate" | "straggler-frac" | "churn" | "initial-frac"
+            | "join-rate" | "min-members" | "warmup" | "cooldown" | "grace"
+                if is_cluster => {}
             _ => cfg.apply_kv(&k, &v)?,
         }
     }
@@ -114,6 +125,127 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro cluster` — the tick-driven parallel cluster simulation: dynamic
+/// membership (join/dropout/straggle/rejoin), worker-pool local training,
+/// simulated transport, §V-B catch-up downloads billed through the
+/// partial-sum cache.
+fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    anyhow::ensure!(
+        cfg.model == "logreg",
+        "the cluster simulation drives the native logreg backend; got model '{}'",
+        cfg.model
+    );
+    let mut ccfg = ClusterConfig::new(cfg);
+    if let Some(v) = args.get_parse("workers")? {
+        ccfg.workers = v;
+    }
+    if let Some(v) = args.get_parse("dropout-rate")? {
+        ccfg.dropout_rate = v;
+    }
+    if let Some(v) = args.get_parse("straggler-frac")? {
+        ccfg.straggler_frac = v;
+    }
+    if let Some(v) = args.get_parse("churn")? {
+        ccfg.churn = v;
+    }
+    if let Some(v) = args.get_parse("initial-frac")? {
+        ccfg.initial_frac = v;
+    }
+    if let Some(v) = args.get_parse("join-rate")? {
+        ccfg.join_rate = v;
+    }
+    if let Some(v) = args.get_parse("min-members")? {
+        ccfg.min_members = v;
+    }
+    if let Some(v) = args.get_parse("warmup")? {
+        ccfg.warmup_ticks = v;
+    }
+    if let Some(v) = args.get_parse("cooldown")? {
+        ccfg.cooldown_ticks = v;
+    }
+    if let Some(v) = args.get_parse("grace")? {
+        ccfg.deadline_grace = v;
+    }
+    args.finish()?;
+
+    println!(
+        "# cluster: {} workers:{} dropout:{} stragglers:{} churn:{}",
+        ccfg.fed.describe(),
+        ccfg.workers,
+        ccfg.dropout_rate,
+        ccfg.straggler_frac,
+        ccfg.churn
+    );
+    let exp = Experiment::new(ccfg.fed.clone())?;
+    let init = exp.spec.init_flat(exp.cfg.seed);
+    let mut cluster = ClusterRun::new(ccfg, &exp.train, init)?;
+    let factory = NativeLogregFactory { batch_size: exp.cfg.batch_size };
+    let mut eval_trainer = NativeLogreg::new(exp.cfg.batch_size);
+
+    let eval_every_rounds =
+        (exp.cfg.eval_every / exp.cfg.method.local_iters()).max(1);
+    let timer = Timer::start();
+    println!(
+        "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8}  {:>8}  {:>9}  {:>8}",
+        "round", "sel", "aggr", "drop", "late", "loss", "acc", "simsecs", "catchupMB"
+    );
+    while let Some(s) = cluster.next_round(&factory, &exp.train) {
+        let round = cluster.rounds_done;
+        if s.aggregated > 0
+            && (round % eval_every_rounds == 0 || round == cluster.target_rounds())
+        {
+            let m = eval_trainer.eval(&cluster.server.params, &exp.test);
+            println!(
+                "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8.4}  {:>8.4}  {:>9.1}  {:>8.3}",
+                s.round,
+                s.selected,
+                s.aggregated,
+                s.dropped,
+                s.late,
+                s.mean_loss,
+                m.accuracy,
+                cluster.sim_clock_s,
+                bits_to_mb(s.catch_up_bits)
+            );
+        }
+    }
+    let m = eval_trainer.eval(&cluster.server.params, &exp.test);
+    let st = &cluster.stats;
+    println!(
+        "# final: rounds={} acc={:.4} wall={:.1}s sim={:.1}s (net up {:.1}s / down {:.1}s)",
+        cluster.rounds_done,
+        m.accuracy,
+        timer.secs(),
+        cluster.sim_clock_s,
+        cluster.ledger.up_seconds,
+        cluster.ledger.down_seconds
+    );
+    println!(
+        "# lifecycle: joins={} rejoins={} churn_dropouts={} midround_dropouts={} \
+         no_shows={} late_uploads={} empty_rounds={} quorum_stalls={}",
+        st.joins,
+        st.rejoins,
+        st.churn_dropouts,
+        st.midround_dropouts,
+        st.no_shows,
+        st.late_uploads,
+        st.empty_rounds,
+        st.quorum_stalls
+    );
+    println!(
+        "# §V-B catch-up: {} syncs covering >1 round, {:.3} MB through the partial-sum cache",
+        st.catch_up_syncs,
+        bits_to_mb(st.catch_up_bits)
+    );
+    println!(
+        "# comm: {:.3} MB up / {:.3} MB down per client",
+        bits_to_mb(cluster.ledger.up_bits_per_client()),
+        bits_to_mb(cluster.ledger.down_bits_per_client())
+    );
+    Ok(())
+}
+
 fn cmd_alpha(args: &Args) -> anyhow::Result<()> {
     let seed: u64 = args.get_parse("seed")?.unwrap_or(1);
     let trials: usize = args.get_parse("trials")?.unwrap_or(60);
@@ -122,7 +254,7 @@ fn cmd_alpha(args: &Args) -> anyhow::Result<()> {
     let ks: Vec<usize> =
         ks_str.split(',').map(|s| s.trim().parse()).collect::<Result<_, _>>()?;
 
-    let (train, _) = task_dataset("mnist", seed);
+    let (train, _) = task_dataset("mnist", seed)?;
     let mut analysis = AlphaAnalysis::new(&train, seed);
     println!("# α(k): gradient sign congruence (paper Fig. 3, eqs. 5–7)");
     println!("{:>6}  {:>10}  {:>10}", "k", "iid", "non-iid");
@@ -139,7 +271,7 @@ fn cmd_info(args: &Args) -> anyhow::Result<()> {
     println!("fedstc {} — Sparse Ternary Compression for Federated Learning", fedstc::VERSION);
     println!("\nmodels:");
     for name in ModelSpec::all() {
-        let m = ModelSpec::by_name(name);
+        let m = ModelSpec::by_name(name)?;
         let (lr, mom) = m.default_hparams();
         println!(
             "  {:<8} task={:<8} params={:<7} lr={} momentum={}",
@@ -196,13 +328,19 @@ fn print_help() {
     println!(
         "repro — fedstc launcher (Sparse Ternary Compression, Sattler et al. 2019)
 
-usage: repro <train|alpha|info|sweep|help> [--key value]...
+usage: repro <train|cluster|alpha|info|sweep|help> [--key value]...
 
 examples:
   repro train --model logreg --method stc:0.0025 --classes 1 --iters 400
   repro train --model cnn --backend hlo --method fedavg:25 --iters 200
+  repro cluster --workers 4 --dropout-rate 0.2 --straggler-frac 0.1 \\
+      --churn 0.1 --clients 100 --iters 400 --method stc:0.01
   repro alpha --ks 1,8,64 --trials 100
   repro sweep --key classes --values 1,2,4,10 --method stc:0.01 --iters 300
-  repro info"
+  repro info
+
+cluster-only keys: --workers N  --dropout-rate F  --straggler-frac F
+  --churn F  --initial-frac F  --join-rate F  --min-members N
+  --warmup N  --cooldown N  --grace F   (plus any train config key)"
     );
 }

@@ -34,6 +34,12 @@ pub struct CommLedger {
     pub num_clients: usize,
     pub uploads: u64,
     pub downloads: u64,
+    /// simulated wall-clock spent on uploads, in seconds (cluster
+    /// transport model; 0 for the serial round loop, which has no
+    /// notion of time)
+    pub up_seconds: f64,
+    /// simulated wall-clock spent on downloads, in seconds
+    pub down_seconds: f64,
 }
 
 impl CommLedger {
@@ -49,6 +55,19 @@ impl CommLedger {
     pub fn record_download(&mut self, bits: usize) {
         self.total_down_bits += bits as u64;
         self.downloads += 1;
+    }
+
+    /// Upload with a simulated transfer duration (cluster transport
+    /// model): same bit accounting as [`CommLedger::record_upload`], plus
+    /// wall-clock attribution.
+    pub fn record_upload_timed(&mut self, bits: usize, seconds: f64) {
+        self.record_upload(bits);
+        self.up_seconds += seconds;
+    }
+
+    pub fn record_download_timed(&mut self, bits: usize, seconds: f64) {
+        self.record_download(bits);
+        self.down_seconds += seconds;
     }
 
     /// Average per-client cumulative upload bits.
@@ -200,6 +219,19 @@ mod tests {
         assert_eq!(l.up_bits_per_client(), 100);
         assert_eq!(l.down_bits_per_client(), 50);
         assert_eq!(l.uploads, 10);
+    }
+
+    #[test]
+    fn timed_records_accumulate_seconds_and_bits() {
+        let mut l = CommLedger::new(4);
+        l.record_upload_timed(100, 0.5);
+        l.record_download_timed(200, 1.25);
+        l.record_upload(100); // untimed path leaves seconds alone
+        assert_eq!(l.total_up_bits, 200);
+        assert_eq!(l.total_down_bits, 200);
+        assert_eq!(l.uploads, 2);
+        assert!((l.up_seconds - 0.5).abs() < 1e-12);
+        assert!((l.down_seconds - 1.25).abs() < 1e-12);
     }
 
     #[test]

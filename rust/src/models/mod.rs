@@ -106,15 +106,19 @@ impl ModelSpec {
         out
     }
 
-    /// Model registry by name.
-    pub fn by_name(name: &str) -> ModelSpec {
-        match name {
+    /// Model registry by name. Unknown names are a clean error (they
+    /// typically come straight from `--model` on the CLI).
+    pub fn by_name(name: &str) -> anyhow::Result<ModelSpec> {
+        Ok(match name {
             "logreg" => logreg(),
             "cnn" => cnn(),
             "kws" => kws(),
             "lstm" => lstm(),
-            other => panic!("unknown model '{other}'"),
-        }
+            other => anyhow::bail!(
+                "unknown model '{other}' (expected one of {})",
+                Self::all().join("|")
+            ),
+        })
     }
 
     /// All model names.
@@ -290,7 +294,7 @@ mod tests {
     #[test]
     fn offsets_partition_flat_vector() {
         for name in ModelSpec::all() {
-            let m = ModelSpec::by_name(name);
+            let m = ModelSpec::by_name(name).unwrap();
             let offs = m.offsets();
             assert_eq!(offs[0], 0);
             let mut acc = 0;
@@ -305,7 +309,7 @@ mod tests {
     #[test]
     fn init_deterministic_and_sized() {
         for name in ModelSpec::all() {
-            let m = ModelSpec::by_name(name);
+            let m = ModelSpec::by_name(name).unwrap();
             let a = m.init_flat(11);
             let b = m.init_flat(11);
             assert_eq!(a.len(), m.dim());
@@ -354,16 +358,17 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "unknown model")]
     fn unknown_model_rejected() {
-        ModelSpec::by_name("resnet152");
+        let err = ModelSpec::by_name("resnet152").unwrap_err().to_string();
+        assert!(err.contains("unknown model 'resnet152'"), "{err}");
+        assert!(err.contains("logreg"), "should list valid names: {err}");
     }
 
     #[test]
     fn model_task_pairing() {
-        assert_eq!(ModelSpec::by_name("cnn").task, "cifar");
-        assert_eq!(ModelSpec::by_name("logreg").task, "mnist");
-        assert_eq!(ModelSpec::by_name("kws").task, "kws");
-        assert_eq!(ModelSpec::by_name("lstm").task, "fashion");
+        assert_eq!(ModelSpec::by_name("cnn").unwrap().task, "cifar");
+        assert_eq!(ModelSpec::by_name("logreg").unwrap().task, "mnist");
+        assert_eq!(ModelSpec::by_name("kws").unwrap().task, "kws");
+        assert_eq!(ModelSpec::by_name("lstm").unwrap().task, "fashion");
     }
 }

@@ -11,13 +11,26 @@
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see aot.py).
 
+#[cfg(feature = "hlo")]
 pub mod engine;
 pub mod registry;
+#[cfg(feature = "hlo")]
 pub mod trainer;
 
+/// No-PJRT stand-ins used when the crate is built without the `hlo`
+/// feature: manifest loading/validation still works (pure rust), but any
+/// attempt to execute an artifact reports a clean "rebuild with
+/// --features hlo" error instead of requiring the vendored `xla` crate.
+#[cfg(not(feature = "hlo"))]
+pub mod stub;
+
+#[cfg(feature = "hlo")]
 pub use engine::Engine;
 pub use registry::{ArtifactEntry, ArtifactKind, Manifest, TensorMeta};
-pub use trainer::HloTrainer;
+#[cfg(feature = "hlo")]
+pub use trainer::{HloStc, HloTrainer};
+#[cfg(not(feature = "hlo"))]
+pub use stub::{Engine, HloStc, HloTrainer};
 
 /// Default artifacts directory (relative to the repo root).
 pub const ARTIFACTS_DIR: &str = "artifacts";

@@ -195,7 +195,8 @@ impl Manifest {
             .iter()
             .filter(|e| matches!(e.kind, ArtifactKind::Train | ArtifactKind::Multi))
         {
-            let spec = ModelSpec::by_name(&e.model);
+            let spec = ModelSpec::by_name(&e.model)
+                .map_err(|err| anyhow!("artifact {}: {err}", e.name))?;
             let np = spec.tensors.len();
             let extra = if e.kind == ArtifactKind::Train { 2 } else { 3 }; // x,y[,lr]
             if e.inputs.len() != np + extra {

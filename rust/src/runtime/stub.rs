@@ -1,0 +1,112 @@
+//! PJRT-free stand-ins for the `hlo`-gated runtime types.
+//!
+//! The default build has no XLA dependency; everything that would
+//! execute an artifact errors with a rebuild hint instead. Manifest
+//! loading and schema validation are pure rust and still run, so the
+//! failure-injection tests on corrupted manifests behave identically
+//! with and without the feature.
+
+use super::registry::{ArtifactEntry, Manifest};
+use crate::compression::TernaryTensor;
+use crate::data::Dataset;
+use crate::models::{EvalMetrics, ModelSpec, Trainer};
+use anyhow::{bail, Result};
+use std::path::Path;
+
+const UNAVAILABLE: &str = "fedstc was built without the `hlo` feature — the PJRT/XLA \
+     runtime is unavailable. Rebuild with `--features hlo` (requires the vendored `xla` \
+     crate, see Cargo.toml) or use the native backend";
+
+/// Stand-in for [`engine::Engine`](crate::runtime). Never constructible;
+/// `load` still parses and validates the manifest so schema errors
+/// surface the same way they would with PJRT present.
+#[derive(Clone)]
+pub struct Engine {
+    manifest: Manifest,
+}
+
+impl Engine {
+    pub fn load(dir: &Path) -> Result<Engine> {
+        Manifest::load(dir)?.validate_against_models()?;
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn load_default() -> Result<Engine> {
+        match super::find_artifacts_dir() {
+            Some(dir) => Self::load(&dir),
+            None => bail!("artifacts/manifest.json not found — run `make artifacts`"),
+        }
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn run_f32(&self, _entry: &ArtifactEntry, _inputs: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Stand-in for the PJRT-backed trainer; construction always errors.
+pub struct HloTrainer {
+    _never: (),
+}
+
+impl HloTrainer {
+    pub fn new(_engine: &Engine, _model: &str, _batch: usize) -> Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+impl Trainer for HloTrainer {
+    fn spec(&self) -> &ModelSpec {
+        unreachable!("hlo stub cannot be constructed")
+    }
+
+    fn batch_size(&self) -> usize {
+        unreachable!("hlo stub cannot be constructed")
+    }
+
+    fn grad_loss(
+        &mut self,
+        _params: &[f32],
+        _x: &[f32],
+        _y: &[f32],
+        _grads_out: &mut [f32],
+    ) -> f32 {
+        unreachable!("hlo stub cannot be constructed")
+    }
+
+    fn eval(&mut self, _params: &[f32], _data: &Dataset) -> EvalMetrics {
+        unreachable!("hlo stub cannot be constructed")
+    }
+}
+
+/// Stand-in for the Pallas STC kernel path; construction always errors.
+pub struct HloStc {
+    _never: (),
+}
+
+impl HloStc {
+    pub fn new(_engine: &Engine, _n: usize, _p: f64) -> Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn compress(&self, _flat: &[f32]) -> Result<TernaryTensor> {
+        unreachable!("hlo stub cannot be constructed")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_surfaces_rebuild_hint() {
+        let dir = std::env::temp_dir().join("fedstc_stub_no_artifacts");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        // no manifest at all → manifest error, not the feature hint
+        assert!(Engine::load(&dir).unwrap_err().to_string().contains("manifest"));
+    }
+}

@@ -30,7 +30,7 @@ pub struct HloTrainer {
 
 impl HloTrainer {
     pub fn new(engine: &Engine, model: &str, batch: usize) -> Result<Self> {
-        let spec = ModelSpec::by_name(model);
+        let spec = ModelSpec::by_name(model)?;
         let train_entry = engine
             .manifest()
             .train_for(model, batch)

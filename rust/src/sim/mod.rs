@@ -4,6 +4,7 @@
 
 pub mod alpha;
 
+use crate::cluster::{ClusterConfig, ClusterRun, ClusterStats, TrainerFactory};
 use crate::config::FedConfig;
 use crate::coordinator::FederatedRun;
 use crate::data::synth::{SynthFlavor, SynthSpec};
@@ -23,8 +24,8 @@ impl Experiment {
     /// Build datasets for the config's model/task pairing.
     pub fn new(cfg: FedConfig) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let spec = ModelSpec::by_name(&cfg.model);
-        let flavor = SynthFlavor::by_name(spec.task);
+        let spec = ModelSpec::by_name(&cfg.model)?;
+        let flavor = SynthFlavor::by_name(spec.task)?;
         let (train, test) =
             SynthSpec::new(flavor, cfg.train_examples, cfg.test_examples, cfg.seed).generate();
         Ok(Experiment { cfg, train, test, spec })
@@ -69,6 +70,70 @@ impl Experiment {
             p.down_bits = run.ledger.down_bits_per_client();
         }
         Ok(log)
+    }
+
+    /// Run the experiment on the parallel cluster simulation instead of
+    /// the serial round loop: tick-driven coordinator, dynamic
+    /// membership, worker-pool local training, simulated transport. The
+    /// `ClusterConfig`'s embedded `FedConfig` is replaced by this
+    /// experiment's config so the two cannot disagree. Returns the
+    /// training curve plus the cluster's lifecycle statistics.
+    ///
+    /// Evaluation runs on a trainer from `factory` at the serial path's
+    /// cadence (every `eval_every` iterations, plus the final round).
+    pub fn run_cluster(
+        &self,
+        cluster: &ClusterConfig,
+        factory: &dyn TrainerFactory,
+    ) -> anyhow::Result<(TrainingLog, ClusterStats)> {
+        let mut ccfg = cluster.clone();
+        ccfg.fed = self.cfg.clone();
+        // the tick safety valve was sized for the caller's FedConfig;
+        // re-derive it for this experiment's (possibly larger) budget
+        ccfg.max_ticks = ccfg.max_ticks.max(self.cfg.rounds() * 8 + 1000);
+        let init = self.spec.init_flat(self.cfg.seed);
+        let mut run = ClusterRun::new(ccfg, &self.train, init)?;
+        let mut log = TrainingLog::new(&format!("cluster: {}", self.cfg.describe()));
+        let mut eval_trainer = factory.make();
+
+        let local_iters = self.cfg.method.local_iters();
+        let eval_every_rounds = (self.cfg.eval_every / local_iters).max(1);
+        let mut last_eval_round = 0;
+        while let Some(summary) = run.next_round(factory, &self.train) {
+            if summary.aggregated == 0 {
+                continue; // nothing reached the server this round
+            }
+            let round = run.rounds_done;
+            if round % eval_every_rounds == 0 || round == run.target_rounds() {
+                let m = eval_trainer.eval(&run.server.params, &self.test);
+                log.push(EvalPoint {
+                    iteration: run.iterations_done(),
+                    round,
+                    accuracy: m.accuracy,
+                    loss: m.loss,
+                    up_bits: run.ledger.up_bits_per_client(),
+                    down_bits: run.ledger.down_bits_per_client(),
+                });
+                last_eval_round = round;
+            }
+        }
+        // final point: refresh download accounting after settlement, and
+        // make sure the curve ends with an evaluation
+        if run.rounds_done > 0 && last_eval_round < run.rounds_done {
+            let m = eval_trainer.eval(&run.server.params, &self.test);
+            log.push(EvalPoint {
+                iteration: run.iterations_done(),
+                round: run.rounds_done,
+                accuracy: m.accuracy,
+                loss: m.loss,
+                up_bits: run.ledger.up_bits_per_client(),
+                down_bits: run.ledger.down_bits_per_client(),
+            });
+        }
+        if let Some(p) = log.points.last_mut() {
+            p.down_bits = run.ledger.down_bits_per_client();
+        }
+        Ok((log, run.stats.clone()))
     }
 
     /// Convenience for logreg experiments: run on the native trainer
@@ -153,6 +218,27 @@ mod tests {
             "ratio {}",
             base_up as f64 / stc_up as f64
         );
+    }
+
+    #[test]
+    fn cluster_run_matches_serial_curve_when_healthy() {
+        use crate::cluster::{ClusterConfig, NativeLogregFactory};
+        let cfg = small_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 10);
+        let exp = Experiment::new(cfg.clone()).unwrap();
+        let serial = exp.run_native().unwrap();
+        let mut ccfg = ClusterConfig::new(cfg);
+        ccfg.workers = 2;
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let (parallel, stats) = exp.run_cluster(&ccfg, &factory).unwrap();
+        assert_eq!(serial.points.len(), parallel.points.len());
+        for (a, b) in serial.points.iter().zip(&parallel.points) {
+            assert_eq!(a.iteration, b.iteration);
+            assert_eq!(a.accuracy, b.accuracy, "accuracy curve diverged");
+            assert_eq!(a.up_bits, b.up_bits, "upload accounting diverged");
+            assert_eq!(a.down_bits, b.down_bits, "download accounting diverged");
+        }
+        assert_eq!(stats.late_uploads, 0);
+        assert_eq!(stats.midround_dropouts, 0);
     }
 
     #[test]

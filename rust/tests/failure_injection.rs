@@ -63,6 +63,10 @@ fn engine_rejects_bad_version_and_json() {
     assert!(Engine::load(&dir).is_err());
 }
 
+// The two tests below need a *working* Engine::load (good manifest, PJRT
+// client up) and only the artifact file broken — they exercise the real
+// engine and are meaningless against the no-PJRT stub.
+#[cfg(feature = "hlo")]
 #[test]
 fn executable_load_fails_on_corrupt_hlo_text() {
     let dir = std::env::temp_dir().join("fedstc_corrupt_hlo");
@@ -73,6 +77,7 @@ fn executable_load_fails_on_corrupt_hlo_text() {
     assert!(err.contains("train_logreg_b4") || err.contains("parsing"), "{err}");
 }
 
+#[cfg(feature = "hlo")]
 #[test]
 fn executable_load_fails_on_missing_hlo_file() {
     let dir = std::env::temp_dir().join("fedstc_missing_hlo");

@@ -124,9 +124,9 @@ fn full_participation_up_equals_down_order() {
 fn residuals_bounded_over_training() {
     // error feedback must not blow up: client residual norms stay finite
     // and bounded relative to update scale
-    let (train, _) = task_dataset("mnist", 31);
+    let (train, _) = task_dataset("mnist", 31).unwrap();
     let c = cfg(Method::Stc { p_up: 0.01, p_down: 0.01 });
-    let spec = ModelSpec::by_name("logreg");
+    let spec = ModelSpec::by_name("logreg").unwrap();
     let mut run = FederatedRun::new(c.clone(), &train, spec.init_flat(31)).unwrap();
     let mut t = NativeLogreg::new(c.batch_size);
     let mut norms = Vec::new();
@@ -143,11 +143,11 @@ fn residuals_bounded_over_training() {
 
 #[test]
 fn momentum_state_persists_across_rounds() {
-    let (train, _) = task_dataset("mnist", 31);
+    let (train, _) = task_dataset("mnist", 31).unwrap();
     let mut c = cfg(Method::Stc { p_up: 0.02, p_down: 0.02 });
     c.momentum = 0.9;
     c.participation = 1.0;
-    let spec = ModelSpec::by_name("logreg");
+    let spec = ModelSpec::by_name("logreg").unwrap();
     let mut run = FederatedRun::new(c.clone(), &train, spec.init_flat(1)).unwrap();
     let mut t = NativeLogreg::new(c.batch_size);
     run.run_round(&mut t, &train);

@@ -6,7 +6,7 @@
 
 use fedstc::data::synth::task_dataset;
 use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
-use fedstc::runtime::{trainer::HloStc, Engine, HloTrainer};
+use fedstc::runtime::{Engine, HloStc, HloTrainer};
 use fedstc::util::rng::Pcg64;
 
 fn engine() -> Option<Engine> {
@@ -24,8 +24,8 @@ fn hlo_logreg_gradients_match_native() {
     let Some(engine) = engine() else { return };
     let mut hlo = HloTrainer::new(&engine, "logreg", 4).unwrap();
     let mut native = NativeLogreg::new(4);
-    let spec = ModelSpec::by_name("logreg");
-    let (train, _) = task_dataset("mnist", 3);
+    let spec = ModelSpec::by_name("logreg").unwrap();
+    let (train, _) = task_dataset("mnist", 3).unwrap();
 
     let params = spec.init_flat(7);
     let mut x = vec![0.0f32; 4 * 784];
@@ -50,10 +50,10 @@ fn hlo_logreg_eval_matches_native() {
     let Some(engine) = engine() else { return };
     let mut hlo = HloTrainer::new(&engine, "logreg", 4).unwrap();
     let mut native = NativeLogreg::new(4);
-    let spec = ModelSpec::by_name("logreg");
+    let spec = ModelSpec::by_name("logreg").unwrap();
     // 330 examples: not a multiple of the 200-row eval batch → exercises
     // the weight-masked padding path
-    let (_, test) = task_dataset("mnist", 3);
+    let (_, test) = task_dataset("mnist", 3).unwrap();
     let test = test.subset(&(0..330).collect::<Vec<_>>());
     let params = spec.init_flat(9);
 
@@ -72,7 +72,7 @@ fn hlo_logreg_eval_matches_native() {
 #[test]
 fn pallas_stc_kernel_matches_native_compressor() {
     let Some(engine) = engine() else { return };
-    let spec = ModelSpec::by_name("logreg");
+    let spec = ModelSpec::by_name("logreg").unwrap();
     let n = spec.dim();
     for p in [0.04f64, 0.01, 0.0025] {
         let Ok(kernel) = HloStc::new(&engine, n, p) else {
@@ -100,7 +100,7 @@ fn hlo_trainer_all_models_produce_finite_grads() {
     let Some(engine) = engine() else { return };
     let mut rng = Pcg64::seeded(13);
     for model in ModelSpec::all() {
-        let spec = ModelSpec::by_name(model);
+        let spec = ModelSpec::by_name(model).unwrap();
         let batches = engine.manifest().train_batches(model);
         assert!(!batches.is_empty(), "{model} has no train artifacts");
         let b = *batches.iter().find(|&&b| b >= 4).unwrap_or(&batches[0]);
@@ -130,7 +130,7 @@ fn hlo_sgd_reduces_loss_every_model() {
     let Some(engine) = engine() else { return };
     let mut rng = Pcg64::seeded(17);
     for model in ModelSpec::all() {
-        let spec = ModelSpec::by_name(model);
+        let spec = ModelSpec::by_name(model).unwrap();
         let batches = engine.manifest().train_batches(model);
         let b = *batches.iter().find(|&&b| b >= 8).unwrap_or(batches.last().unwrap());
         let mut hlo = HloTrainer::new(&engine, model, b).unwrap();
@@ -159,7 +159,7 @@ fn fused_multi_step_matches_per_step_sequence() {
     let mut hlo = HloTrainer::new(&engine, "logreg", 20).unwrap();
     let chunk = hlo.chunk_len();
     assert_eq!(chunk, 10, "multi artifact expected at b=20");
-    let spec = ModelSpec::by_name("logreg");
+    let spec = ModelSpec::by_name("logreg").unwrap();
     let mut rng = Pcg64::seeded(29);
     let xs: Vec<f32> = (0..chunk * 20 * 784).map(|_| rng.normal() * 0.5).collect();
     let ys: Vec<f32> = (0..chunk * 20).map(|_| rng.below(10) as f32).collect();

@@ -1,0 +1,277 @@
+//! Property tests for the cluster subsystem.
+//!
+//! The load-bearing guarantee: a healthy static cluster (no churn, no
+//! dropout, no stragglers) run through the tick-driven parallel path is
+//! **bit-identical** to the serial `FederatedRun` — same global model
+//! bytes, same ledger — for any method, seed and worker count. Everything
+//! the cluster adds (lifecycle, deadlines, transport time) must be pure
+//! superstructure over Algorithm 2.
+//!
+//! Plus the substrate the wire format stands on: a mixed-operation
+//! bit-level roundtrip property for `bitio` (the Golomb codec's own
+//! roundtrip property lives in property_coordinator.rs).
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::compression::bitio::{BitReader, BitWriter};
+use fedstc::config::{FedConfig, Method};
+use fedstc::coordinator::FederatedRun;
+use fedstc::data::synth::task_dataset;
+use fedstc::data::Dataset;
+use fedstc::models::native::NativeLogreg;
+use fedstc::models::ModelSpec;
+use fedstc::util::proplite::{check, Config};
+use fedstc::util::rng::Pcg64;
+
+fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+fn fed_cfg(method: Method, seed: u64, participation: f64, rounds: usize) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 10,
+        participation,
+        classes_per_client: 5,
+        batch_size: 10,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: rounds * method.local_iters(),
+        method,
+        eval_every: 1_000_000, // evaluation cadence is irrelevant here
+        seed,
+        train_examples: 600,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+fn dataset(seed: u64) -> Dataset {
+    let (train, _) = task_dataset("mnist", seed).unwrap();
+    train.subset(&(0..600).collect::<Vec<_>>())
+}
+
+/// (params, up_bits, down_bits, uploads, downloads) after a serial run.
+fn serial_run(cfg: &FedConfig, train: &Dataset) -> (Vec<f32>, u64, u64, u64, u64) {
+    let spec = ModelSpec::by_name("logreg").unwrap();
+    let mut run = FederatedRun::new(cfg.clone(), train, spec.init_flat(cfg.seed)).unwrap();
+    let mut trainer = NativeLogreg::new(cfg.batch_size);
+    for _ in 0..cfg.rounds() {
+        run.run_round(&mut trainer, train);
+    }
+    run.settle_final_downloads();
+    (
+        run.server.params.clone(),
+        run.ledger.total_up_bits,
+        run.ledger.total_down_bits,
+        run.ledger.uploads,
+        run.ledger.downloads,
+    )
+}
+
+/// Same quintuple after a healthy-cluster run with `workers` threads.
+fn cluster_run(cfg: &FedConfig, train: &Dataset, workers: usize) -> (Vec<f32>, u64, u64, u64, u64) {
+    let spec = ModelSpec::by_name("logreg").unwrap();
+    let mut ccfg = ClusterConfig::new(cfg.clone());
+    ccfg.workers = workers;
+    let mut run = ClusterRun::new(ccfg, train, spec.init_flat(cfg.seed)).unwrap();
+    let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+    while !run.finished() {
+        run.tick(&factory, train);
+    }
+    assert_eq!(run.rounds_done, cfg.rounds(), "cluster must aggregate every round");
+    (
+        run.server.params.clone(),
+        run.ledger.total_up_bits,
+        run.ledger.total_down_bits,
+        run.ledger.uploads,
+        run.ledger.downloads,
+    )
+}
+
+#[test]
+fn prop_parallel_cluster_bit_identical_to_serial() {
+    // methods under test: the paper's contribution plus the two baselines
+    // with materially different server paths
+    let methods: [fn() -> Method; 3] = [
+        || Method::Stc { p_up: 0.02, p_down: 0.02 },
+        || Method::FedAvg { n: 3 },
+        || Method::SignSgd { delta: 0.002 },
+    ];
+    check(
+        "cluster-serial-equivalence",
+        Config { cases: 12, ..Default::default() },
+        move |rng: &mut Pcg64| {
+            let method_idx = rng.below(3);
+            let seed = 1 + rng.next_u64() % 1000;
+            let workers = 2 + rng.below(3); // 2..=4
+            let participation = [0.3, 0.5, 1.0][rng.below(3)];
+            (method_idx, seed, workers, participation)
+        },
+        no_shrink,
+        move |&(method_idx, seed, workers, participation)| {
+            let method = methods[method_idx]();
+            let cfg = fed_cfg(method, seed, participation, 8);
+            let train = dataset(seed);
+            let s = serial_run(&cfg, &train);
+            let c = cluster_run(&cfg, &train, workers);
+            if s.0 != c.0 {
+                let diverged = s.0.iter().zip(&c.0).filter(|(a, b)| a != b).count();
+                return Err(format!(
+                    "params diverged on {diverged}/{} coords (method {method_idx}, \
+                     seed {seed}, workers {workers})",
+                    s.0.len()
+                ));
+            }
+            if (s.1, s.2) != (c.1, c.2) {
+                return Err(format!(
+                    "ledger bits diverged: serial {:?} vs cluster {:?}",
+                    (s.1, s.2),
+                    (c.1, c.2)
+                ));
+            }
+            if (s.3, s.4) != (c.3, c.4) {
+                return Err(format!(
+                    "ledger counts diverged: serial {:?} vs cluster {:?}",
+                    (s.3, s.4),
+                    (c.3, c.4)
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn cluster_equivalence_holds_for_hybrid_delay_method() {
+    // STC + FedAvg-style delay (n local iterations) — the method the
+    // scaling bench leans on; check one fixed configuration exactly.
+    let cfg = fed_cfg(Method::Hybrid { p: 0.02, n: 4 }, 77, 0.5, 6);
+    let train = dataset(77);
+    let s = serial_run(&cfg, &train);
+    for workers in [2, 4] {
+        let c = cluster_run(&cfg, &train, workers);
+        assert_eq!(s.0, c.0, "params diverged at {workers} workers");
+        assert_eq!((s.1, s.2, s.3, s.4), (c.1, c.2, c.3, c.4));
+    }
+}
+
+#[test]
+fn dynamic_membership_exercises_catchup_cache() {
+    // The acceptance scenario: dropouts, stragglers and churn against a
+    // live population, with §V-B catch-up downloads actually billed.
+    let cfg = fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 5, 0.5, 40);
+    let train = dataset(5);
+    let spec = ModelSpec::by_name("logreg").unwrap();
+    let mut ccfg = ClusterConfig::new(cfg.clone());
+    ccfg.workers = 2;
+    ccfg.dropout_rate = 0.2;
+    ccfg.straggler_frac = 0.2;
+    ccfg.churn = 0.15;
+    ccfg.initial_frac = 0.8;
+    ccfg.join_rate = 0.3;
+    ccfg.min_members = 4;
+    let mut run = ClusterRun::new(ccfg, &train, spec.init_flat(cfg.seed)).unwrap();
+    let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+    let before = run.server.params.clone();
+    while !run.finished() {
+        run.tick(&factory, &train);
+    }
+    let st = &run.stats;
+    assert!(st.joins > 0, "no join event: {st:?}");
+    assert!(st.midround_dropouts + st.churn_dropouts > 0, "no dropout event: {st:?}");
+    assert!(st.rejoins > 0, "no rejoin event: {st:?}");
+    assert!(st.late_uploads > 0, "no straggler event: {st:?}");
+    assert!(st.catch_up_syncs > 0, "catch-up cache never used: {st:?}");
+    assert!(st.catch_up_bits > 0);
+    assert!(run.rounds_done > 0, "no round ever closed");
+    assert_ne!(before, run.server.params, "model never moved");
+    assert!(run.ledger.up_seconds > 0.0 && run.ledger.down_seconds > 0.0);
+    // catch-up stays cheaper than re-downloading the dense model each time
+    let dense_bits = (32 * before.len()) as u64;
+    assert!(
+        st.catch_up_bits < st.catch_up_syncs * dense_bits,
+        "catch-up pricing exceeds dense re-downloads"
+    );
+}
+
+#[test]
+fn prop_bitio_mixed_ops_roundtrip() {
+    // Random interleavings of single bits, fixed-width fields and unary
+    // runs must read back exactly, bit for bit.
+    #[derive(Clone, Debug)]
+    enum Op {
+        Bit(bool),
+        Bits(u64, u32),
+        Unary(u64),
+    }
+
+    check(
+        "bitio-mixed-roundtrip",
+        Config { cases: 200, ..Default::default() },
+        |rng: &mut Pcg64| {
+            let n_ops = 1 + rng.below(200);
+            (0..n_ops)
+                .map(|_| match rng.below(3) {
+                    0 => Op::Bit(rng.below(2) == 1),
+                    1 => {
+                        let width = 1 + rng.below(64) as u32;
+                        let value = if width == 64 {
+                            rng.next_u64()
+                        } else {
+                            rng.next_u64() & ((1u64 << width) - 1)
+                        };
+                        Op::Bits(value, width)
+                    }
+                    _ => Op::Unary(rng.below(100) as u64),
+                })
+                .collect::<Vec<Op>>()
+        },
+        no_shrink,
+        |ops| {
+            let mut w = BitWriter::new();
+            for op in ops {
+                match *op {
+                    Op::Bit(b) => w.push(b),
+                    Op::Bits(v, n) => w.push_bits(v, n),
+                    Op::Unary(n) => w.push_unary(n),
+                }
+            }
+            let expected_bits: usize = ops
+                .iter()
+                .map(|op| match op {
+                    Op::Bit(_) => 1,
+                    Op::Bits(_, n) => *n as usize,
+                    Op::Unary(n) => *n as usize + 1,
+                })
+                .sum();
+            let (bytes, len_bits) = w.finish();
+            if len_bits != expected_bits {
+                return Err(format!("length {len_bits} != expected {expected_bits}"));
+            }
+            let mut r = BitReader::new(&bytes, len_bits);
+            for (i, op) in ops.iter().enumerate() {
+                match *op {
+                    Op::Bit(b) => {
+                        if r.read() != Some(b) {
+                            return Err(format!("op {i}: bit mismatch"));
+                        }
+                    }
+                    Op::Bits(v, n) => {
+                        if r.read_bits(n) != Some(v) {
+                            return Err(format!("op {i}: {n}-bit field mismatch"));
+                        }
+                    }
+                    Op::Unary(n) => {
+                        if r.read_unary() != Some(n) {
+                            return Err(format!("op {i}: unary mismatch"));
+                        }
+                    }
+                }
+            }
+            if r.read().is_some() {
+                return Err("trailing bits after all ops read back".into());
+            }
+            Ok(())
+        },
+    );
+}

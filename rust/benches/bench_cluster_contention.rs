@@ -1,0 +1,189 @@
+//! bench_cluster_contention — simulated round wall-clock under
+//! shared-medium server contention, sweeping population size × server
+//! bandwidth.
+//!
+//! The paper's scenario (c) — many clients, low participation, the
+//! server link as the shared bottleneck — is exactly where compressing
+//! *both* directions pays: FedAvg's dense uploads fight each other for
+//! the server ingress, so its round wall-clock grows with the population,
+//! while STC's sparse-ternary uploads barely touch the wire. Both arms
+//! run the same local-iteration schedule (n = 4), so any wall-clock gap
+//! is pure communication.
+//!
+//! Acceptance shape (checked by the PASS/MISS lines):
+//!   * FedAvg round wall-clock increases monotonically with population
+//!     size at every finite server bandwidth
+//!   * the STC-vs-FedAvg wall-clock ratio improves (drops) as server
+//!     bandwidth shrinks
+//!
+//!     cargo bench --bench bench_cluster_contention [-- --rounds N]
+//!
+//! Emits `BENCH_cluster_contention.json` (see `benchkit::emit_json`).
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::config::{FedConfig, Method};
+use fedstc::models::ModelSpec;
+use fedstc::sim::Experiment;
+use fedstc::util::benchkit::{banner, bench_args, emit_json, Table};
+use fedstc::util::json::Json;
+
+/// Local iterations per round — identical for both arms so the
+/// comparison isolates communication.
+const LOCAL_ITERS: usize = 4;
+const PARTICIPATION: f64 = 0.25;
+const POPULATIONS: [usize; 3] = [16, 32, 64];
+/// server ingress/egress sweep, bits/second (inf = independent links)
+const SERVER_BPS: [f64; 3] = [f64::INFINITY, 40e6, 10e6];
+
+fn fmt_bps(bps: f64) -> String {
+    if bps.is_infinite() {
+        "inf".to_string()
+    } else {
+        format!("{}M", (bps / 1e6).round() as u64)
+    }
+}
+
+fn cfg(method: Method, clients: usize, rounds: usize) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: clients,
+        participation: PARTICIPATION,
+        classes_per_client: 5,
+        batch_size: 10,
+        method,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: rounds * LOCAL_ITERS,
+        eval_every: 1_000_000,
+        seed: 17,
+        train_examples: 40 * clients,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+/// Mean simulated seconds per aggregated round + total contention
+/// seconds, for one (method, population, server bandwidth) cell.
+fn mean_round_secs(
+    method: Method,
+    clients: usize,
+    server_bps: f64,
+    rounds: usize,
+) -> anyhow::Result<(f64, f64)> {
+    let c = cfg(method, clients, rounds);
+    let exp = Experiment::new(c.clone())?;
+    let mut ccfg = ClusterConfig::new(c.clone());
+    ccfg.server_up_bps = server_bps;
+    ccfg.server_down_bps = server_bps;
+    let spec = ModelSpec::by_name("logreg")?;
+    let mut run = ClusterRun::new(ccfg, &exp.train, spec.init_flat(c.seed))?;
+    let factory = NativeLogregFactory { batch_size: c.batch_size };
+    let mut total_secs = 0.0;
+    let mut total_queue = 0.0;
+    let mut n = 0usize;
+    while let Some(s) = run.next_round(&factory, &exp.train) {
+        if s.aggregated > 0 {
+            total_secs += s.round_secs;
+            total_queue += s.queue_secs;
+            n += 1;
+        }
+    }
+    anyhow::ensure!(n > 0, "no round ever aggregated");
+    Ok((total_secs / n as f64, total_queue))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args()?;
+    let rounds: usize = args.get_parse("rounds")?.unwrap_or(6);
+    args.finish()?;
+
+    banner(
+        "cluster contention",
+        "simulated round wall-clock vs population × server bandwidth (n=4 local iters)",
+    );
+
+    let arms: Vec<(&str, fn() -> Method)> = vec![
+        ("fedavg", || Method::FedAvg { n: LOCAL_ITERS }),
+        ("stc", || Method::Hybrid { p: 0.01, n: LOCAL_ITERS }),
+    ];
+
+    let mut table = Table::new(&[
+        "server bps", "clients", "fedavg s/round", "stc s/round", "stc/fedavg", "queue s",
+    ]);
+    let mut rows = Vec::new();
+    // cells[bandwidth index][population index] = (fedavg, stc) s/round
+    let mut cells: Vec<Vec<(f64, f64)>> = Vec::new();
+    for &bps in &SERVER_BPS {
+        let mut band = Vec::new();
+        for &clients in &POPULATIONS {
+            let mut secs = [0.0f64; 2];
+            let mut queue = [0.0f64; 2];
+            for (k, (_, mk)) in arms.iter().enumerate() {
+                let (s, q) = mean_round_secs(mk(), clients, bps, rounds)?;
+                secs[k] = s;
+                queue[k] = q;
+            }
+            let ratio = secs[1] / secs[0];
+            table.row(&[
+                fmt_bps(bps),
+                clients.to_string(),
+                format!("{:.4}", secs[0]),
+                format!("{:.4}", secs[1]),
+                format!("{ratio:.3}"),
+                format!("{:.2}", queue[0] + queue[1]),
+            ]);
+            let mut row = Json::obj();
+            row.set("server_bps", Json::Num(if bps.is_infinite() { -1.0 } else { bps }))
+                .set("clients", Json::Num(clients as f64))
+                .set("fedavg_round_secs", Json::Num(secs[0]))
+                .set("stc_round_secs", Json::Num(secs[1]))
+                .set("stc_over_fedavg", Json::Num(ratio))
+                .set("fedavg_queue_secs", Json::Num(queue[0]))
+                .set("stc_queue_secs", Json::Num(queue[1]));
+            rows.push(row);
+            band.push((secs[0], secs[1]));
+        }
+        cells.push(band);
+    }
+    table.print();
+    println!();
+
+    // acceptance: FedAvg wall-clock monotone in population at finite bps
+    let mut all_monotone = true;
+    for (bi, &bps) in SERVER_BPS.iter().enumerate() {
+        if bps.is_infinite() {
+            continue;
+        }
+        let fed: Vec<f64> = cells[bi].iter().map(|c| c.0).collect();
+        let monotone = fed.windows(2).all(|w| w[1] > w[0]);
+        all_monotone &= monotone;
+        println!(
+            "{} fedavg round wall-clock monotone in population at {}: {:?}",
+            if monotone { "PASS" } else { "MISS" },
+            fmt_bps(bps),
+            fed.iter().map(|s| format!("{s:.3}")).collect::<Vec<_>>()
+        );
+    }
+    // acceptance: STC's relative advantage grows as the server shrinks
+    let biggest = POPULATIONS.len() - 1;
+    let ratios: Vec<f64> = cells.iter().map(|band| band[biggest].1 / band[biggest].0).collect();
+    let improving = ratios.windows(2).all(|w| w[1] < w[0]);
+    println!(
+        "{} stc/fedavg wall-clock ratio improves as bandwidth shrinks ({} clients): {:?}",
+        if improving { "PASS" } else { "MISS" },
+        POPULATIONS[biggest],
+        ratios.iter().map(|r| format!("{r:.3}")).collect::<Vec<_>>()
+    );
+
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("cluster_contention".into()))
+        .set("rounds", Json::Num(rounds as f64))
+        .set("local_iters", Json::Num(LOCAL_ITERS as f64))
+        .set("participation", Json::Num(PARTICIPATION))
+        .set("fedavg_monotone_in_population", Json::Bool(all_monotone))
+        .set("ratio_improves_with_contention", Json::Bool(improving))
+        .set("cells", Json::Arr(rows));
+    let path = emit_json("cluster_contention", &out)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

@@ -13,22 +13,24 @@
 //!
 //! Acceptance target: ≥ 2× rounds/sec at 4 workers over the serial path.
 //!
-//!     cargo bench --bench bench_cluster_scaling
+//!     cargo bench --bench bench_cluster_scaling [-- --rounds N]
+//!
+//! Emits `BENCH_cluster_scaling.json` (see `benchkit::emit_json`).
 
 use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
 use fedstc::config::{FedConfig, Method};
 use fedstc::coordinator::FederatedRun;
 use fedstc::models::native::NativeLogreg;
 use fedstc::sim::Experiment;
-use fedstc::util::benchkit::{banner, Table};
+use fedstc::util::benchkit::{banner, bench_args, emit_json, Table};
+use fedstc::util::json::Json;
 use fedstc::util::Timer;
 
 const CLIENTS: usize = 48;
 const BATCH: usize = 20;
 const WARMUP_ROUNDS: usize = 3;
-const TIMED_ROUNDS: usize = 15;
 
-fn cfg(method: Method) -> FedConfig {
+fn cfg(method: Method, timed_rounds: usize) -> FedConfig {
     let iters_per_round = method.local_iters();
     FedConfig {
         model: "logreg".into(),
@@ -39,7 +41,7 @@ fn cfg(method: Method) -> FedConfig {
         method,
         lr: 0.05,
         momentum: 0.0,
-        iterations: (WARMUP_ROUNDS + TIMED_ROUNDS + 1) * iters_per_round,
+        iterations: (WARMUP_ROUNDS + timed_rounds + 1) * iters_per_round,
         eval_every: 1_000_000,
         seed: 4,
         train_examples: 2400,
@@ -49,7 +51,7 @@ fn cfg(method: Method) -> FedConfig {
 }
 
 /// Serial reference: rounds/sec of `FederatedRun::run_round`.
-fn serial_rounds_per_sec(c: &FedConfig) -> anyhow::Result<f64> {
+fn serial_rounds_per_sec(c: &FedConfig, timed_rounds: usize) -> anyhow::Result<f64> {
     let exp = Experiment::new(c.clone())?;
     let init = exp.spec.init_flat(c.seed);
     let mut run = FederatedRun::new(c.clone(), &exp.train, init)?;
@@ -58,15 +60,19 @@ fn serial_rounds_per_sec(c: &FedConfig) -> anyhow::Result<f64> {
         run.run_round(&mut trainer, &exp.train);
     }
     let t = Timer::start();
-    for _ in 0..TIMED_ROUNDS {
+    for _ in 0..timed_rounds {
         run.run_round(&mut trainer, &exp.train);
     }
-    Ok(TIMED_ROUNDS as f64 / t.secs())
+    Ok(timed_rounds as f64 / t.secs())
 }
 
 /// Cluster path: rounds/sec of full ticks (train + aggregate + cooldown)
 /// at the given worker count.
-fn cluster_rounds_per_sec(c: &FedConfig, workers: usize) -> anyhow::Result<f64> {
+fn cluster_rounds_per_sec(
+    c: &FedConfig,
+    workers: usize,
+    timed_rounds: usize,
+) -> anyhow::Result<f64> {
     let exp = Experiment::new(c.clone())?;
     let init = exp.spec.init_flat(c.seed);
     let mut ccfg = ClusterConfig::new(c.clone());
@@ -77,13 +83,17 @@ fn cluster_rounds_per_sec(c: &FedConfig, workers: usize) -> anyhow::Result<f64> 
         run.next_round(&factory, &exp.train);
     }
     let t = Timer::start();
-    for _ in 0..TIMED_ROUNDS {
+    for _ in 0..timed_rounds {
         run.next_round(&factory, &exp.train);
     }
-    Ok(TIMED_ROUNDS as f64 / t.secs())
+    Ok(timed_rounds as f64 / t.secs())
 }
 
 fn main() -> anyhow::Result<()> {
+    let args = bench_args()?;
+    let timed_rounds: usize = args.get_parse("rounds")?.unwrap_or(15);
+    args.finish()?;
+
     banner(
         "cluster scaling",
         "rounds/sec vs workers (logreg, 48 clients, full participation)",
@@ -99,9 +109,10 @@ fn main() -> anyhow::Result<()> {
         "workload", "arm", "rounds/s", "speedup vs serial",
     ]);
     let mut speedup_at_4 = Vec::new();
+    let mut rows = Vec::new();
     for (name, method) in &workloads {
-        let c = cfg(method.clone());
-        let serial = serial_rounds_per_sec(&c)?;
+        let c = cfg(method.clone(), timed_rounds);
+        let serial = serial_rounds_per_sec(&c, timed_rounds)?;
         table.row(&[
             name.to_string(),
             "serial".into(),
@@ -109,7 +120,7 @@ fn main() -> anyhow::Result<()> {
             "1.00x".into(),
         ]);
         for &w in &worker_counts {
-            let rps = cluster_rounds_per_sec(&c, w)?;
+            let rps = cluster_rounds_per_sec(&c, w, timed_rounds)?;
             let speedup = rps / serial;
             if w == 4 {
                 speedup_at_4.push((name.to_string(), speedup));
@@ -120,6 +131,13 @@ fn main() -> anyhow::Result<()> {
                 format!("{rps:.1}"),
                 format!("{speedup:.2}x"),
             ]);
+            let mut row = Json::obj();
+            row.set("workload", Json::Str(name.to_string()))
+                .set("workers", Json::Num(w as f64))
+                .set("rounds_per_sec", Json::Num(rps))
+                .set("serial_rounds_per_sec", Json::Num(serial))
+                .set("speedup", Json::Num(speedup));
+            rows.push(row);
         }
     }
     table.print();
@@ -137,5 +155,13 @@ fn main() -> anyhow::Result<()> {
         "\nExpected shape: the delay workload (4 iters/round) clears 2x easily; \
          the 1-iter workload is closer to the spawn-overhead floor."
     );
+
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("cluster_scaling".into()))
+        .set("timed_rounds", Json::Num(timed_rounds as f64))
+        .set("clients", Json::Num(CLIENTS as f64))
+        .set("cells", Json::Arr(rows));
+    let path = emit_json("cluster_scaling", &out)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

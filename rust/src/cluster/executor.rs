@@ -16,6 +16,7 @@
 //! + scratch (trainers are not `Send`; they are *constructed on* the
 //! worker thread via [`TrainerFactory`]).
 
+use super::transport::Transport;
 use crate::compression::{Compressor, Message};
 use crate::config::Method;
 use crate::coordinator::{ClientState, LocalScratch};
@@ -48,6 +49,11 @@ pub struct RoundPlan<'a> {
     pub lr: f32,
     pub momentum: f32,
     pub local_iters: usize,
+    /// link/compute models: each worker prices its client's local
+    /// training while it still owns the result, so the coordinator
+    /// receives event-ready (bits, compute-seconds) pairs and only has
+    /// to schedule them onto the shared server medium
+    pub transport: &'a Transport,
 }
 
 /// One participant's finished round work.
@@ -57,6 +63,11 @@ pub struct ClientResult {
     pub client_id: usize,
     pub loss: f32,
     pub msg: Message,
+    /// the compressed upload's wire size
+    pub up_bits: u64,
+    /// simulated seconds of local SGD (`local_iters` on this client's
+    /// compute model)
+    pub compute_s: f64,
 }
 
 /// The executor. `workers == 1` runs in-thread (no spawn); `workers > 1`
@@ -187,7 +198,9 @@ fn run_one(
         *d -= *w;
     }
     let msg = client.compress_update(work, compressor);
-    ClientResult { slot, client_id: client.id, loss, msg }
+    let up_bits = msg.wire_bits() as u64;
+    let compute_s = plan.transport.compute_time(client.id, plan.local_iters);
+    ClientResult { slot, client_id: client.id, loss, msg, up_bits, compute_s }
 }
 
 #[cfg(test)]
@@ -214,8 +227,15 @@ mod tests {
 
     fn round_results(workers: usize) -> Vec<ClientResult> {
         let (train, mut clients, params, _cfg) = setup(6);
+        let transport = Transport::new(6, 1, 0.0, 1.0);
         let method = Method::Stc { p_up: 0.02, p_down: 0.02 };
-        let plan = RoundPlan { method: &method, lr: 0.05, momentum: 0.0, local_iters: 3 };
+        let plan = RoundPlan {
+            method: &method,
+            lr: 0.05,
+            momentum: 0.0,
+            local_iters: 3,
+            transport: &transport,
+        };
         let factory = NativeLogregFactory { batch_size: 10 };
         let participants: Vec<(usize, &mut ClientState)> =
             clients.iter_mut().enumerate().collect();
@@ -224,6 +244,7 @@ mod tests {
 
     #[test]
     fn results_sorted_by_slot_any_worker_count() {
+        let transport = Transport::new(6, 1, 0.0, 1.0);
         for workers in [1, 2, 3, 8] {
             let rs = round_results(workers);
             assert_eq!(rs.len(), 6);
@@ -231,6 +252,8 @@ mod tests {
                 assert_eq!(r.slot, i);
                 assert_eq!(r.client_id, i);
                 assert!(r.loss.is_finite());
+                assert_eq!(r.up_bits, r.msg.wire_bits() as u64);
+                assert_eq!(r.compute_s, transport.compute_time(i, 3));
             }
         }
     }
@@ -253,9 +276,15 @@ mod tests {
         // residuals after a parallel round == after a serial round
         let run = |workers: usize| {
             let (train, mut clients, params, _cfg) = setup(5);
+            let transport = Transport::new(5, 1, 0.0, 1.0);
             let method = Method::Stc { p_up: 0.05, p_down: 0.05 };
-            let plan =
-                RoundPlan { method: &method, lr: 0.05, momentum: 0.0, local_iters: 2 };
+            let plan = RoundPlan {
+                method: &method,
+                lr: 0.05,
+                momentum: 0.0,
+                local_iters: 2,
+                transport: &transport,
+            };
             let factory = NativeLogregFactory { batch_size: 10 };
             let participants: Vec<(usize, &mut ClientState)> =
                 clients.iter_mut().enumerate().collect();
@@ -269,8 +298,15 @@ mod tests {
     #[test]
     fn empty_round_yields_no_results() {
         let (train, _clients, params, _cfg) = setup(2);
+        let transport = Transport::new(2, 1, 0.0, 1.0);
         let method = Method::Baseline;
-        let plan = RoundPlan { method: &method, lr: 0.05, momentum: 0.0, local_iters: 1 };
+        let plan = RoundPlan {
+            method: &method,
+            lr: 0.05,
+            momentum: 0.0,
+            local_iters: 1,
+            transport: &transport,
+        };
         let factory = NativeLogregFactory { batch_size: 10 };
         let rs =
             WorkerPool::new(4).execute_round(&factory, &params, &train, Vec::new(), &plan);
@@ -280,8 +316,15 @@ mod tests {
     #[test]
     fn more_workers_than_participants_is_fine() {
         let (train, mut clients, params, _cfg) = setup(3);
+        let transport = Transport::new(3, 1, 0.0, 1.0);
         let method = Method::Baseline;
-        let plan = RoundPlan { method: &method, lr: 0.05, momentum: 0.0, local_iters: 1 };
+        let plan = RoundPlan {
+            method: &method,
+            lr: 0.05,
+            momentum: 0.0,
+            local_iters: 1,
+            transport: &transport,
+        };
         let factory = NativeLogregFactory { batch_size: 10 };
         let participants: Vec<(usize, &mut ClientState)> =
             clients.iter_mut().enumerate().collect();

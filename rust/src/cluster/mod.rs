@@ -22,9 +22,13 @@
 //!   channels) with a fixed reduction order, so the parallel path is
 //!   **bit-identical** to the serial one (tested in
 //!   `rust/tests/property_cluster.rs`).
-//! * [`transport`] — per-client latency/bandwidth/compute models that
-//!   turn every message's measured bits into simulated wall-clock time,
-//!   fed into [`crate::metrics::CommLedger`] alongside the bits.
+//! * [`transport`] — per-client latency/bandwidth/compute models plus
+//!   the **shared-medium server link**: a discrete-event contention
+//!   scheduler (max–min fair share or FIFO admission) turns every
+//!   message's measured bits into simulated wall-clock time — including
+//!   queueing delay when concurrent transfers fight over finite server
+//!   ingress/egress — fed into [`crate::metrics::CommLedger`] alongside
+//!   the bits.
 //!
 //! The state machine shape follows the psyche coordinator
 //! (`WaitingForMembers`/`Warmup`/`RoundTrain`/`Cooldown` run states); the
@@ -39,7 +43,10 @@ pub mod transport;
 pub use executor::{NativeLogregFactory, TrainerFactory, WorkerPool};
 pub use membership::{ClientPhase, Membership};
 pub use state::{ClusterRun, ClusterStats, Phase, RoundSummary};
-pub use transport::{LinkModel, Transport};
+pub use transport::{
+    BatchTelemetry, ContentionPolicy, LinkModel, ScheduleResult, ServerLink, TransferReq,
+    TransferTiming, Transport,
+};
 
 use crate::config::FedConfig;
 
@@ -83,6 +90,13 @@ pub struct ClusterConfig {
     pub deadline_grace: f64,
     /// link/compute slowdown multiplier for straggler clients (≥ 1)
     pub straggler_slowdown: f64,
+    /// aggregate server ingress (all uploads share it), bits/second;
+    /// `f64::INFINITY` = unconstrained independent links (the PR 1 model)
+    pub server_up_bps: f64,
+    /// aggregate server egress (all downloads share it), bits/second
+    pub server_down_bps: f64,
+    /// how concurrent transfers share the server link
+    pub contention_policy: ContentionPolicy,
     /// hard tick budget so pathological configs (everyone offline) always
     /// terminate
     pub max_ticks: usize,
@@ -105,6 +119,9 @@ impl ClusterConfig {
             tick_seconds: 1.0,
             deadline_grace: 1.25,
             straggler_slowdown: 10.0,
+            server_up_bps: f64::INFINITY,
+            server_down_bps: f64::INFINITY,
+            contention_policy: ContentionPolicy::FairShare,
             // WaitingForMembers + Warmup + 3 phases/round + slack for
             // empty rounds and churn stalls
             max_ticks: rounds * 8 + 1000,
@@ -135,6 +152,7 @@ impl ClusterConfig {
         anyhow::ensure!(self.deadline_grace >= 1.0, "deadline_grace >= 1");
         anyhow::ensure!(self.straggler_slowdown >= 1.0, "straggler_slowdown >= 1");
         anyhow::ensure!(self.tick_seconds > 0.0, "tick_seconds > 0");
+        self.server_link().validate()?;
         Ok(())
     }
 
@@ -142,6 +160,15 @@ impl ClusterConfig {
     pub fn initial_members(&self) -> usize {
         ((self.initial_frac * self.fed.num_clients as f64).ceil() as usize)
             .min(self.fed.num_clients)
+    }
+
+    /// The shared server link this config describes.
+    pub fn server_link(&self) -> ServerLink {
+        ServerLink {
+            up_bps: self.server_up_bps,
+            down_bps: self.server_down_bps,
+            policy: self.contention_policy,
+        }
     }
 }
 
@@ -175,6 +202,22 @@ mod tests {
         let mut c = ClusterConfig::new(FedConfig::default());
         c.deadline_grace = 0.5;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_server_link() {
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.server_up_bps = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.server_down_bps = -5.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.server_up_bps = 1e6;
+        c.contention_policy = ContentionPolicy::Fifo;
+        assert!(c.validate().is_ok());
     }
 
     #[test]

@@ -22,12 +22,13 @@
 
 use super::executor::{RoundPlan, TrainerFactory, WorkerPool};
 use super::membership::Membership;
-use super::transport::Transport;
+use super::transport::{TransferReq, Transport};
 use super::ClusterConfig;
 use crate::compression::Message;
 use crate::coordinator::{ClientState, Server};
 use crate::data::{split_by_class, Dataset, SplitSpec};
 use crate::metrics::CommLedger;
+use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
 /// Coordinator phases (the psyche run-state shape).
@@ -83,6 +84,37 @@ pub struct ClusterStats {
     pub empty_rounds: u64,
     /// ticks spent below quorum
     pub quorum_stalls: u64,
+    /// seconds uploads lost to contention on the shared server ingress
+    pub up_queue_seconds: f64,
+    /// seconds downloads lost to contention on the shared server egress
+    pub down_queue_seconds: f64,
+    /// most uploads simultaneously on the server wire
+    pub peak_up_concurrency: u64,
+    /// most downloads simultaneously on the server wire
+    pub peak_down_concurrency: u64,
+}
+
+impl ClusterStats {
+    /// JSON export (persisted next to the training curve by
+    /// `sim::cluster_report_json` / `repro cluster --out`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("joins", Json::Num(self.joins as f64))
+            .set("churn_dropouts", Json::Num(self.churn_dropouts as f64))
+            .set("midround_dropouts", Json::Num(self.midround_dropouts as f64))
+            .set("rejoins", Json::Num(self.rejoins as f64))
+            .set("no_shows", Json::Num(self.no_shows as f64))
+            .set("late_uploads", Json::Num(self.late_uploads as f64))
+            .set("catch_up_syncs", Json::Num(self.catch_up_syncs as f64))
+            .set("catch_up_bits", Json::Num(self.catch_up_bits as f64))
+            .set("empty_rounds", Json::Num(self.empty_rounds as f64))
+            .set("quorum_stalls", Json::Num(self.quorum_stalls as f64))
+            .set("up_queue_seconds", Json::Num(self.up_queue_seconds))
+            .set("down_queue_seconds", Json::Num(self.down_queue_seconds))
+            .set("peak_up_concurrency", Json::Num(self.peak_up_concurrency as f64))
+            .set("peak_down_concurrency", Json::Num(self.peak_down_concurrency as f64));
+        o
+    }
 }
 
 /// What one completed `Aggregate` tick did.
@@ -102,6 +134,9 @@ pub struct RoundSummary {
     pub catch_up_bits: u64,
     /// simulated seconds the round took (the deadline)
     pub round_secs: f64,
+    /// seconds this round's transfers lost to server-link contention
+    /// (uploads + downloads); 0 when the server link never binds
+    pub queue_secs: f64,
 }
 
 /// A trained-and-compressed upload travelling through the simulated
@@ -113,9 +148,22 @@ struct PendingUpload {
     msg: Message,
     up_bits: u64,
     up_secs: f64,
+    /// of `up_secs`, seconds lost to shared-ingress contention
+    up_queue_s: f64,
     /// seconds after round start at which the server holds the message
+    /// (the transfer's event-completion time on the shared medium)
     arrival_s: f64,
     straggler_link: bool,
+}
+
+/// One client's synchronisation outcome (a scheduled download through
+/// the §V-B partial-sum cache).
+struct SyncOutcome {
+    bits: u64,
+    /// rounds the sync covered
+    lag: usize,
+    /// scheduled transfer duration (latency + queueing + serialization)
+    secs: f64,
 }
 
 /// A fully wired cluster simulation.
@@ -147,6 +195,8 @@ pub struct ClusterRun {
     pending_dropped: usize,
     pending_catchup_clients: usize,
     pending_catchup_bits: u64,
+    /// contention seconds accrued by the in-flight round's transfers
+    pending_queue_secs: f64,
 }
 
 impl ClusterRun {
@@ -173,11 +223,12 @@ impl ClusterRun {
         let sampler = Pcg64::new(cfg.fed.seed, 0x5a3b);
         let event_rng = Pcg64::new(cfg.fed.seed, 0xe7e7);
         let membership = Membership::new(cfg.fed.num_clients, cfg.fed.seed, cfg.initial_members());
-        let transport = Transport::new(
+        let transport = Transport::with_server(
             cfg.fed.num_clients,
             cfg.fed.seed,
             cfg.straggler_frac,
             cfg.straggler_slowdown,
+            cfg.server_link(),
         );
         let pool = WorkerPool::new(cfg.workers);
         Ok(ClusterRun {
@@ -200,6 +251,7 @@ impl ClusterRun {
             pending_dropped: 0,
             pending_catchup_clients: 0,
             pending_catchup_bits: 0,
+            pending_queue_secs: 0.0,
             cfg,
         })
     }
@@ -293,30 +345,54 @@ impl ClusterRun {
         }
         // bring every active client up to the current global model; free
         // at server round 0, a billed §V-B catch-up after a quorum outage
-        for id in 0..self.clients.len() {
-            if self.membership.is_active(id) {
-                self.sync_client(id);
-            }
-        }
+        let ids: Vec<usize> =
+            (0..self.clients.len()).filter(|&id| self.membership.is_active(id)).collect();
+        self.sync_clients(&ids);
         self.phase = Phase::RoundTrain;
     }
 
-    /// Bill client `id`'s synchronisation through the partial-sum cache.
-    /// Returns (bits, rounds covered, transfer seconds).
-    fn sync_client(&mut self, id: usize) -> (u64, usize, f64) {
-        let last = self.clients[id].last_sync_round;
-        let lag = self.server.round - last;
-        let bits = self.server.straggler_download_bits(last) as u64;
-        let secs = self.transport.down_time(id, bits);
-        if bits > 0 {
-            self.ledger.record_download_timed(bits as usize, secs);
-            if lag > 1 {
-                self.stats.catch_up_syncs += 1;
-                self.stats.catch_up_bits += bits;
+    /// Bill the given clients' synchronisations through the partial-sum
+    /// cache, scheduling the downloads as one batch on the shared server
+    /// egress (they all start at the same instant, so they contend).
+    /// Returns per-client outcomes in `ids` order plus the batch's
+    /// contention seconds.
+    fn sync_clients(&mut self, ids: &[usize]) -> (Vec<SyncOutcome>, f64) {
+        let reqs: Vec<TransferReq> = ids
+            .iter()
+            .map(|&id| TransferReq {
+                client_id: id,
+                bits: self.server.straggler_download_bits(self.clients[id].last_sync_round)
+                    as u64,
+                ready_s: 0.0,
+            })
+            .collect();
+        let sched = self.transport.schedule_downloads(&reqs);
+        let mut out = Vec::with_capacity(ids.len());
+        for (k, &id) in ids.iter().enumerate() {
+            let lag = self.server.round - self.clients[id].last_sync_round;
+            let bits = reqs[k].bits;
+            let secs = sched.timings[k].duration_s;
+            if bits > 0 {
+                self.ledger.record_download_contended(
+                    bits as usize,
+                    secs,
+                    sched.timings[k].queue_s,
+                );
+                if lag > 1 {
+                    self.stats.catch_up_syncs += 1;
+                    self.stats.catch_up_bits += bits;
+                }
             }
+            self.clients[id].last_sync_round = self.server.round;
+            out.push(SyncOutcome { bits, lag, secs });
         }
-        self.clients[id].last_sync_round = self.server.round;
-        (bits, lag, secs)
+        self.ledger.note_down_concurrency(sched.telemetry.peak_concurrency);
+        self.stats.down_queue_seconds += sched.telemetry.queue_seconds;
+        self.stats.peak_down_concurrency = self
+            .stats
+            .peak_down_concurrency
+            .max(sched.telemetry.peak_concurrency as u64);
+        (out, sched.telemetry.queue_seconds)
     }
 
     fn tick_round_train(&mut self, factory: &dyn TrainerFactory, data: &Dataset) {
@@ -344,17 +420,19 @@ impl ClusterRun {
         }
         self.pending_dropped = dropped;
 
-        // synchronise every participant (catch-up billed through §V-B)
+        // synchronise every participant (catch-up billed through §V-B);
+        // the downloads share the server egress as one batch
         self.pending_catchup_clients = 0;
         self.pending_catchup_bits = 0;
-        let mut down_secs = Vec::with_capacity(participant_ids.len());
-        for &id in &participant_ids {
-            let (bits, lag, secs) = self.sync_client(id);
-            if bits > 0 && lag > 1 {
+        let (outcomes, down_queue_secs) = self.sync_clients(&participant_ids);
+        self.pending_queue_secs = down_queue_secs;
+        let mut down_secs = Vec::with_capacity(outcomes.len());
+        for o in &outcomes {
+            if o.bits > 0 && o.lag > 1 {
                 self.pending_catchup_clients += 1;
-                self.pending_catchup_bits += bits;
+                self.pending_catchup_bits += o.bits;
             }
-            down_secs.push(secs);
+            down_secs.push(o.secs);
         }
 
         // parallel local training, fixed reduction order = sampled order
@@ -364,6 +442,7 @@ impl ClusterRun {
             lr: self.cfg.fed.lr,
             momentum: self.cfg.fed.momentum,
             local_iters,
+            transport: &self.transport,
         };
         let mut slot_of = vec![usize::MAX; n];
         for (slot, &id) in participant_ids.iter().enumerate() {
@@ -384,24 +463,41 @@ impl ClusterRun {
             .collect();
         let results = self.pool.execute_round(factory, &self.server.params, data, parts, &plan);
 
+        // schedule every upload onto the shared server ingress: a client
+        // initiates once its download and local compute are done, and its
+        // arrival is the transfer's *event-completion* time — with finite
+        // server bandwidth that depends on who else is on the wire
+        let reqs: Vec<TransferReq> = results
+            .iter()
+            .map(|r| TransferReq {
+                client_id: r.client_id,
+                bits: r.up_bits,
+                ready_s: down_secs[r.slot] + r.compute_s,
+            })
+            .collect();
+        let sched = self.transport.schedule_uploads(&reqs);
+        self.pending_queue_secs += sched.telemetry.queue_seconds;
+        self.stats.up_queue_seconds += sched.telemetry.queue_seconds;
+        self.stats.peak_up_concurrency = self
+            .stats
+            .peak_up_concurrency
+            .max(sched.telemetry.peak_concurrency as u64);
+        self.ledger.note_up_concurrency(sched.telemetry.peak_concurrency);
+
         let transport = &self.transport;
         self.pending = results
             .into_iter()
-            .map(|r| {
-                let bits = r.msg.wire_bits() as u64;
-                let up_secs = transport.up_time(r.client_id, bits);
-                PendingUpload {
-                    arrival_s: down_secs[r.slot]
-                        + transport.compute_time(r.client_id, local_iters)
-                        + up_secs,
-                    straggler_link: transport.link(r.client_id).straggler,
-                    slot: r.slot,
-                    client_id: r.client_id,
-                    loss: r.loss,
-                    msg: r.msg,
-                    up_bits: bits,
-                    up_secs,
-                }
+            .zip(&sched.timings)
+            .map(|(r, tim)| PendingUpload {
+                arrival_s: tim.end_s,
+                straggler_link: transport.link(r.client_id).straggler,
+                slot: r.slot,
+                client_id: r.client_id,
+                loss: r.loss,
+                msg: r.msg,
+                up_bits: r.up_bits,
+                up_secs: tim.duration_s,
+                up_queue_s: tim.queue_s,
             })
             .collect();
         self.phase = Phase::Aggregate;
@@ -409,6 +505,8 @@ impl ClusterRun {
 
     fn tick_aggregate(&mut self) -> RoundSummary {
         let pending = std::mem::take(&mut self.pending);
+        let queue_secs = self.pending_queue_secs;
+        self.pending_queue_secs = 0.0;
         self.phase = Phase::Cooldown { ticks_left: self.cfg.cooldown_ticks };
 
         if pending.is_empty() {
@@ -424,6 +522,7 @@ impl ClusterRun {
                 catch_up_clients: self.pending_catchup_clients,
                 catch_up_bits: self.pending_catchup_bits,
                 round_secs: self.cfg.tick_seconds,
+                queue_secs,
             };
         }
 
@@ -448,7 +547,7 @@ impl ClusterRun {
         let mut late = 0usize;
         for p in pending {
             // bits leave the client either way; bill the transfer
-            self.ledger.record_upload_timed(p.up_bits as usize, p.up_secs);
+            self.ledger.record_upload_contended(p.up_bits as usize, p.up_secs, p.up_queue_s);
             loss_sum += p.loss as f64;
             if p.arrival_s <= deadline {
                 msgs.push(p.msg);
@@ -490,6 +589,7 @@ impl ClusterRun {
             catch_up_clients: self.pending_catchup_clients,
             catch_up_bits: self.pending_catchup_bits,
             round_secs: deadline,
+            queue_secs,
         }
     }
 
@@ -522,11 +622,9 @@ impl ClusterRun {
     /// downloads the updates it is still missing (mirrors the serial
     /// `FederatedRun::settle_final_downloads`).
     fn finish(&mut self) {
-        for id in 0..self.clients.len() {
-            if self.membership.has_joined(id) {
-                self.sync_client(id);
-            }
-        }
+        let ids: Vec<usize> =
+            (0..self.clients.len()).filter(|&id| self.membership.has_joined(id)).collect();
+        self.sync_clients(&ids);
         self.phase = Phase::Finished;
     }
 }
@@ -534,7 +632,7 @@ impl ClusterRun {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::cluster::NativeLogregFactory;
+    use crate::cluster::{ContentionPolicy, NativeLogregFactory};
     use crate::config::{FedConfig, Method};
     use crate::data::synth::task_dataset;
     use crate::models::ModelSpec;
@@ -721,5 +819,62 @@ mod tests {
         assert_eq!(a, b, "same worker count must be bit-identical");
         let c = mk(4);
         assert_eq!(a, c, "worker count must not change results");
+    }
+
+    #[test]
+    fn finite_server_bandwidth_queues_but_preserves_training_math() {
+        // no stragglers/dropout: the deadline always covers every healthy
+        // participant, so contention slows the simulated clock without
+        // changing what the server aggregates
+        let mk = |server_bps: f64| {
+            let mut ccfg =
+                ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6));
+            ccfg.server_up_bps = server_bps;
+            ccfg.server_down_bps = server_bps;
+            let (mut run, train) = build(ccfg);
+            let factory = NativeLogregFactory { batch_size: 10 };
+            while !run.finished() {
+                run.tick(&factory, &train);
+            }
+            run
+        };
+        // 10 kbit/s: every ~2 kbit STC upload serializes for ≥ 0.2 s while
+        // the whole batch enters within ~50 ms — overlap is structural
+        let free = mk(f64::INFINITY);
+        let tight = mk(1e4);
+        assert_eq!(free.server.params, tight.server.params, "contention changed the math");
+        assert_eq!(free.ledger.total_up_bits, tight.ledger.total_up_bits);
+        assert_eq!(free.ledger.total_down_bits, tight.ledger.total_down_bits);
+        assert_eq!(free.stats.up_queue_seconds, 0.0);
+        assert_eq!(free.ledger.up_queue_seconds, 0.0);
+        assert!(tight.stats.up_queue_seconds > 0.0, "{:?}", tight.stats);
+        assert!(tight.ledger.up_queue_seconds > 0.0);
+        assert!(tight.ledger.up_seconds > free.ledger.up_seconds);
+        assert!(tight.sim_clock_s > free.sim_clock_s);
+        assert!(tight.stats.peak_up_concurrency >= 2, "{:?}", tight.stats);
+        assert!(free.stats.peak_up_concurrency >= 1);
+    }
+
+    #[test]
+    fn fifo_policy_also_preserves_training_math() {
+        let mk = |policy: ContentionPolicy, bps: f64| {
+            let mut ccfg = ClusterConfig::new(small_fed(Method::Baseline, 4));
+            ccfg.server_up_bps = bps;
+            ccfg.server_down_bps = bps;
+            ccfg.contention_policy = policy;
+            let (mut run, train) = build(ccfg);
+            let factory = NativeLogregFactory { batch_size: 10 };
+            while !run.finished() {
+                run.tick(&factory, &train);
+            }
+            run
+        };
+        let fair = mk(ContentionPolicy::FairShare, 2e6);
+        let fifo = mk(ContentionPolicy::Fifo, 2e6);
+        assert_eq!(fair.server.params, fifo.server.params, "policy changed the math");
+        assert_eq!(fair.ledger.total_up_bits, fifo.ledger.total_up_bits);
+        // both see contention, but they price it differently
+        assert!(fair.stats.up_queue_seconds > 0.0);
+        assert!(fifo.stats.up_queue_seconds > 0.0);
     }
 }

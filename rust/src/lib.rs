@@ -28,7 +28,9 @@
 //!   Aggregate → Cooldown) over a dynamic client population with
 //!   join/dropout/straggle/rejoin lifecycles, a multi-threaded local
 //!   training executor that is bit-identical to the serial path, and a
-//!   simulated transport billing wall-clock time alongside bits.
+//!   simulated transport with a shared-medium server link: a
+//!   discrete-event contention scheduler (max–min fair / FIFO) bills
+//!   wall-clock time — including queueing delay — alongside bits.
 //! * [`sim`] — the federated learning simulation engine driving complete
 //!   experiments, and the sign-congruence analysis of Fig. 3.
 //! * [`config`] / [`cli`] — experiment configuration and a small CLI.

@@ -16,13 +16,14 @@
 //!   --backend native|hlo (native only for logreg)
 
 use fedstc::cli::Args;
-use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::cluster::{ClusterConfig, ClusterRun, ContentionPolicy, NativeLogregFactory};
 use fedstc::config::FedConfig;
 use fedstc::data::synth::task_dataset;
+use fedstc::metrics::{EvalPoint, TrainingLog};
 use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
 use fedstc::runtime::{Engine, HloTrainer};
 use fedstc::sim::alpha::{AlphaAnalysis, BatchRegime};
-use fedstc::sim::Experiment;
+use fedstc::sim::{cluster_report_csv, cluster_report_json, Experiment};
 use fedstc::util::{bits_to_mb, Timer};
 
 fn main() {
@@ -64,6 +65,7 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
             // rejected as unknown instead of being silently ignored
             "workers" | "dropout-rate" | "straggler-frac" | "churn" | "initial-frac"
             | "join-rate" | "min-members" | "warmup" | "cooldown" | "grace"
+            | "server-up-bps" | "server-down-bps" | "contention-policy"
                 if is_cluster => {}
             _ => cfg.apply_kv(&k, &v)?,
         }
@@ -167,6 +169,17 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     if let Some(v) = args.get_parse("grace")? {
         ccfg.deadline_grace = v;
     }
+    // shared server medium: `inf` (the default) = independent links
+    if let Some(v) = args.get_parse("server-up-bps")? {
+        ccfg.server_up_bps = v;
+    }
+    if let Some(v) = args.get_parse("server-down-bps")? {
+        ccfg.server_down_bps = v;
+    }
+    if let Some(v) = args.get("contention-policy") {
+        ccfg.contention_policy = ContentionPolicy::parse(&v)?;
+    }
+    let out = args.get("out");
     args.finish()?;
 
     println!(
@@ -177,6 +190,10 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         ccfg.straggler_frac,
         ccfg.churn
     );
+    println!(
+        "# server link: up {} bps / down {} bps, policy {}",
+        ccfg.server_up_bps, ccfg.server_down_bps, ccfg.contention_policy.label()
+    );
     let exp = Experiment::new(ccfg.fed.clone())?;
     let init = exp.spec.init_flat(exp.cfg.seed);
     let mut cluster = ClusterRun::new(ccfg, &exp.train, init)?;
@@ -186,9 +203,11 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let eval_every_rounds =
         (exp.cfg.eval_every / exp.cfg.method.local_iters()).max(1);
     let timer = Timer::start();
+    let mut log = TrainingLog::new(&format!("cluster: {}", exp.cfg.describe()));
+    let mut last_eval_round = 0;
     println!(
-        "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8}  {:>8}  {:>9}  {:>8}",
-        "round", "sel", "aggr", "drop", "late", "loss", "acc", "simsecs", "catchupMB"
+        "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8}  {:>8}  {:>9}  {:>8}  {:>8}",
+        "round", "sel", "aggr", "drop", "late", "loss", "acc", "simsecs", "queuesec", "catchupMB"
     );
     while let Some(s) = cluster.next_round(&factory, &exp.train) {
         let round = cluster.rounds_done;
@@ -197,7 +216,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         {
             let m = eval_trainer.eval(&cluster.server.params, &exp.test);
             println!(
-                "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8.4}  {:>8.4}  {:>9.1}  {:>8.3}",
+                "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8.4}  {:>8.4}  {:>9.1}  {:>8.2}  {:>8.3}",
                 s.round,
                 s.selected,
                 s.aggregated,
@@ -206,11 +225,38 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
                 s.mean_loss,
                 m.accuracy,
                 cluster.sim_clock_s,
+                s.queue_secs,
                 bits_to_mb(s.catch_up_bits)
             );
+            log.push(EvalPoint {
+                iteration: cluster.iterations_done(),
+                round,
+                accuracy: m.accuracy,
+                loss: m.loss,
+                up_bits: cluster.ledger.up_bits_per_client(),
+                down_bits: cluster.ledger.down_bits_per_client(),
+            });
+            last_eval_round = round;
         }
     }
     let m = eval_trainer.eval(&cluster.server.params, &exp.test);
+    // make sure the exported curve ends with an evaluation (mirrors
+    // sim::Experiment::run_cluster — no duplicate point when the loop
+    // already evaluated the final round)
+    if last_eval_round < cluster.rounds_done || log.points.is_empty() {
+        log.push(EvalPoint {
+            iteration: cluster.iterations_done(),
+            round: cluster.rounds_done,
+            accuracy: m.accuracy,
+            loss: m.loss,
+            up_bits: cluster.ledger.up_bits_per_client(),
+            down_bits: cluster.ledger.down_bits_per_client(),
+        });
+    }
+    // settlement already ran; refresh the last point's download accounting
+    if let Some(p) = log.points.last_mut() {
+        p.down_bits = cluster.ledger.down_bits_per_client();
+    }
     let st = &cluster.stats;
     println!(
         "# final: rounds={} acc={:.4} wall={:.1}s sim={:.1}s (net up {:.1}s / down {:.1}s)",
@@ -239,10 +285,23 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         bits_to_mb(st.catch_up_bits)
     );
     println!(
+        "# contention: queued {:.1}s up / {:.1}s down; peak wire concurrency {} up / {} down",
+        st.up_queue_seconds, st.down_queue_seconds, st.peak_up_concurrency, st.peak_down_concurrency
+    );
+    println!(
         "# comm: {:.3} MB up / {:.3} MB down per client",
         bits_to_mb(cluster.ledger.up_bits_per_client()),
         bits_to_mb(cluster.ledger.down_bits_per_client())
     );
+    if let Some(path) = out {
+        let text = if path.ends_with(".json") {
+            cluster_report_json(&log, &cluster.stats).dump()
+        } else {
+            cluster_report_csv(&log, &cluster.stats)
+        };
+        std::fs::write(&path, text)?;
+        println!("# wrote {path}");
+    }
     Ok(())
 }
 
@@ -341,6 +400,10 @@ examples:
 
 cluster-only keys: --workers N  --dropout-rate F  --straggler-frac F
   --churn F  --initial-frac F  --join-rate F  --min-members N
-  --warmup N  --cooldown N  --grace F   (plus any train config key)"
+  --warmup N  --cooldown N  --grace F
+  --server-up-bps BPS  --server-down-bps BPS  (finite = shared medium;
+  'inf' = independent links)  --contention-policy fair|fifo
+  --out FILE.csv|FILE.json  (curve + cluster stats export)
+  (plus any train config key)"
     );
 }

@@ -40,6 +40,15 @@ pub struct CommLedger {
     pub up_seconds: f64,
     /// simulated wall-clock spent on downloads, in seconds
     pub down_seconds: f64,
+    /// of `up_seconds`, seconds lost to contention on the shared server
+    /// ingress (0 whenever the server link never binds)
+    pub up_queue_seconds: f64,
+    /// of `down_seconds`, seconds lost to contention on the server egress
+    pub down_queue_seconds: f64,
+    /// most uploads simultaneously on the server wire
+    pub peak_up_concurrent: usize,
+    /// most downloads simultaneously on the server wire
+    pub peak_down_concurrent: usize,
 }
 
 impl CommLedger {
@@ -68,6 +77,27 @@ impl CommLedger {
     pub fn record_download_timed(&mut self, bits: usize, seconds: f64) {
         self.record_download(bits);
         self.down_seconds += seconds;
+    }
+
+    /// Upload through the shared server medium: timed accounting plus the
+    /// transfer's contention share (`queue_seconds ⊆ seconds`).
+    pub fn record_upload_contended(&mut self, bits: usize, seconds: f64, queue_seconds: f64) {
+        self.record_upload_timed(bits, seconds);
+        self.up_queue_seconds += queue_seconds;
+    }
+
+    pub fn record_download_contended(&mut self, bits: usize, seconds: f64, queue_seconds: f64) {
+        self.record_download_timed(bits, seconds);
+        self.down_queue_seconds += queue_seconds;
+    }
+
+    /// Record a scheduled batch's peak upload concurrency.
+    pub fn note_up_concurrency(&mut self, peak: usize) {
+        self.peak_up_concurrent = self.peak_up_concurrent.max(peak);
+    }
+
+    pub fn note_down_concurrency(&mut self, peak: usize) {
+        self.peak_down_concurrent = self.peak_down_concurrent.max(peak);
     }
 
     /// Average per-client cumulative upload bits.
@@ -232,6 +262,23 @@ mod tests {
         assert_eq!(l.uploads, 2);
         assert!((l.up_seconds - 0.5).abs() < 1e-12);
         assert!((l.down_seconds - 1.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn contended_records_split_queueing_out_of_seconds() {
+        let mut l = CommLedger::new(4);
+        l.record_upload_contended(100, 2.0, 1.5);
+        l.record_download_contended(50, 0.75, 0.25);
+        l.record_upload_timed(100, 0.5); // uncontended path adds no queue
+        assert_eq!(l.uploads, 2);
+        assert!((l.up_seconds - 2.5).abs() < 1e-12);
+        assert!((l.up_queue_seconds - 1.5).abs() < 1e-12);
+        assert!((l.down_queue_seconds - 0.25).abs() < 1e-12);
+        l.note_up_concurrency(3);
+        l.note_up_concurrency(2); // peaks never regress
+        l.note_down_concurrency(7);
+        assert_eq!(l.peak_up_concurrent, 3);
+        assert_eq!(l.peak_down_concurrent, 7);
     }
 
     #[test]

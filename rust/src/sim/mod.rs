@@ -151,6 +151,28 @@ pub fn run_logreg(cfg: FedConfig) -> anyhow::Result<TrainingLog> {
     Experiment::new(cfg)?.run_native()
 }
 
+/// JSON export of a cluster run: the training curve *plus* the cluster's
+/// lifecycle and contention statistics (queueing seconds, peak wire
+/// concurrency) — so the `ClusterStats` that `run_cluster` returns
+/// persist alongside the curve instead of dying with the process.
+pub fn cluster_report_json(log: &TrainingLog, stats: &ClusterStats) -> crate::util::json::Json {
+    let mut o = crate::util::json::Json::obj();
+    o.set("curve", log.to_json());
+    o.set("cluster_stats", stats.to_json());
+    o
+}
+
+/// CSV export of a cluster run: the curve rows followed by one
+/// `# cluster_stats {…}` footer line (comment-prefixed, so row parsers
+/// that skip `#` lines keep working unchanged).
+pub fn cluster_report_csv(log: &TrainingLog, stats: &ClusterStats) -> String {
+    let mut out = log.to_csv();
+    out.push_str("# cluster_stats ");
+    out.push_str(&stats.to_json().dump());
+    out.push('\n');
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,5 +268,28 @@ mod tests {
         let exp = Experiment::new(small_cfg(Method::Baseline, 10)).unwrap();
         let mut t = NativeLogreg::new(99);
         assert!(exp.run(&mut t).is_err());
+    }
+
+    #[test]
+    fn cluster_reports_carry_stats_alongside_the_curve() {
+        use crate::cluster::{ClusterConfig, NativeLogregFactory};
+        let mut cfg = small_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 10);
+        cfg.iterations = 60;
+        let exp = Experiment::new(cfg.clone()).unwrap();
+        let mut ccfg = ClusterConfig::new(cfg);
+        ccfg.server_up_bps = 1e4; // tightly binding: queueing is structural
+        let factory = NativeLogregFactory { batch_size: 10 };
+        let (log, stats) = exp.run_cluster(&ccfg, &factory).unwrap();
+
+        let j = super::cluster_report_json(&log, &stats);
+        let parsed = crate::util::json::Json::parse(&j.dump()).unwrap();
+        assert!(!parsed.get("curve").unwrap().get("points").unwrap().as_arr().unwrap().is_empty());
+        let st = parsed.get("cluster_stats").unwrap();
+        assert!(st.get("up_queue_seconds").unwrap().as_f64().unwrap() > 0.0);
+        assert!(st.get("peak_up_concurrency").unwrap().as_f64().unwrap() >= 2.0);
+
+        let csv = super::cluster_report_csv(&log, &stats);
+        assert!(csv.starts_with("iteration,round,"));
+        assert!(csv.contains("# cluster_stats {"));
     }
 }

@@ -170,6 +170,36 @@ pub fn banner(id: &str, caption: &str) {
     println!("\n=== {} — {} ===", id, caption);
 }
 
+/// Parse a bench binary's CLI (`cargo bench --bench X -- --key value`).
+/// Cargo may pass a bare `--bench` flag to `harness = false` targets; it
+/// is swallowed here so [`crate::cli::Args::finish`] stays strict about
+/// everything else.
+pub fn bench_args() -> anyhow::Result<crate::cli::Args> {
+    let args = std::env::args().skip(1).filter(|a| a != "--bench");
+    crate::cli::Args::parse(std::iter::once("bench".to_string()).chain(args))
+}
+
+/// Persist a bench's machine-readable result as `BENCH_<name>.json` in
+/// `$FEDSTC_BENCH_DIR` (default: the current directory). CI uploads these
+/// as workflow artifacts, so every run extends the perf trajectory.
+pub fn emit_json(
+    name: &str,
+    json: &crate::util::json::Json,
+) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::env::var("FEDSTC_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    emit_json_to(std::path::Path::new(&dir), name, json)
+}
+
+fn emit_json_to(
+    dir: &std::path::Path,
+    name: &str,
+    json: &crate::util::json::Json,
+) -> std::io::Result<std::path::PathBuf> {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, json.dump())?;
+    Ok(path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -214,5 +244,19 @@ mod tests {
         assert!(human_time(2e-6).contains("µs"));
         assert!(human_time(2e-3).contains("ms"));
         assert!(human_time(2.0).contains(" s"));
+    }
+
+    #[test]
+    fn emit_json_writes_bench_file() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir().join("fedstc_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut j = Json::obj();
+        j.set("rounds", Json::Num(3.0));
+        let path = emit_json_to(&dir, "unit_test", &j).unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "BENCH_unit_test.json");
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(&text).unwrap().get("rounds").unwrap().as_usize(), Some(3));
+        let _ = std::fs::remove_file(&path);
     }
 }

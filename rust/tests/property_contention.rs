@@ -1,0 +1,366 @@
+//! Property tests for the shared-medium contention scheduler.
+//!
+//! The load-bearing guarantees:
+//!
+//! 1. **Degeneration** — with an infinite server link the discrete-event
+//!    scheduler reproduces the PR 1 independent-link closed forms
+//!    (`up_time`/`down_time`) *bit for bit*, for any population, policy
+//!    and batch — including the whole round pipeline (download → compute
+//!    → upload → deadline → straggler classification).
+//! 2. **Conservation** — with a finite server link the sum of
+//!    instantaneous granted rates never exceeds the capacity, and no
+//!    transfer beats its unconstrained solo time.
+//! 3. **Determinism** — timings are a pure function of the request set:
+//!    identical across repeated runs, request orderings, and (at the
+//!    cluster level) worker counts.
+
+use fedstc::cluster::{
+    ClusterConfig, ClusterRun, ContentionPolicy, NativeLogregFactory, ServerLink, TransferReq,
+    Transport,
+};
+use fedstc::config::{FedConfig, Method};
+use fedstc::data::synth::task_dataset;
+use fedstc::util::proplite::{check, Config};
+use fedstc::util::rng::Pcg64;
+
+fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+/// Random transfer batch over a random heterogeneous population.
+#[derive(Clone, Debug)]
+struct Batch {
+    seed: u64,
+    n: usize,
+    straggler_frac: f64,
+    reqs: Vec<TransferReq>,
+}
+
+fn gen_batch(rng: &mut Pcg64) -> Batch {
+    let n = 3 + rng.below(12);
+    let seed = 1 + rng.next_u64() % 10_000;
+    let straggler_frac = [0.0, 0.2, 0.5][rng.below(3)];
+    let m = 1 + rng.below(n);
+    let reqs = (0..m)
+        .map(|k| {
+            // include genuine zero-bit and multi-megabit transfers
+            let base = [0u64, 1_000, 250_000, 4_000_000][rng.below(4)];
+            let bits = if base == 0 { 0 } else { base + rng.below(1000) as u64 };
+            TransferReq { client_id: k % n, bits, ready_s: rng.f64() * 3.0 }
+        })
+        .collect();
+    Batch { seed, n, straggler_frac, reqs }
+}
+
+fn transport(b: &Batch, server: ServerLink) -> Transport {
+    Transport::with_server(b.n, b.seed, b.straggler_frac, 10.0, server)
+}
+
+#[test]
+fn prop_infinite_capacity_degenerates_to_closed_form() {
+    for policy in [ContentionPolicy::FairShare, ContentionPolicy::Fifo] {
+        check(
+            "contention-degenerates-to-independent-links",
+            Config { cases: 60, ..Default::default() },
+            gen_batch,
+            no_shrink,
+            move |b: &Batch| {
+                let t = transport(
+                    b,
+                    ServerLink {
+                        up_bps: f64::INFINITY,
+                        down_bps: f64::INFINITY,
+                        policy,
+                    },
+                );
+                let up = t.schedule_uploads(&b.reqs);
+                let down = t.schedule_downloads(&b.reqs);
+                for (k, r) in b.reqs.iter().enumerate() {
+                    let want_up = t.up_time(r.client_id, r.bits);
+                    let got = up.timings[k];
+                    if got.duration_s != want_up {
+                        return Err(format!(
+                            "upload {k}: duration {} != closed form {want_up}",
+                            got.duration_s
+                        ));
+                    }
+                    if got.end_s != r.ready_s + want_up {
+                        return Err(format!("upload {k}: end {} drifted", got.end_s));
+                    }
+                    if got.queue_s != 0.0 {
+                        return Err(format!("upload {k}: phantom queueing {}", got.queue_s));
+                    }
+                    let want_down = t.down_time(r.client_id, r.bits);
+                    if down.timings[k].duration_s != want_down {
+                        return Err(format!(
+                            "download {k}: duration {} != closed form {want_down}",
+                            down.timings[k].duration_s
+                        ));
+                    }
+                }
+                if up.telemetry.queue_seconds != 0.0 || down.telemetry.queue_seconds != 0.0 {
+                    return Err("phantom batch queueing at infinite capacity".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+/// The PR 1 round pipeline, composed from the closed forms: download at
+/// round start, compute, upload; deadline = grace × slowest healthy
+/// arrival (fallback: slowest overall); stragglers late past it.
+fn pr1_round(
+    t: &Transport,
+    participants: &[(usize, u64, u64, usize)], // (id, down_bits, up_bits, iters)
+    grace: f64,
+) -> (Vec<f64>, f64, Vec<bool>, f64, f64) {
+    let mut arrivals = Vec::new();
+    let mut up_secs_sum = 0.0;
+    let mut down_secs_sum = 0.0;
+    for &(id, down_bits, up_bits, iters) in participants {
+        let down = t.down_time(id, down_bits);
+        let up = t.up_time(id, up_bits);
+        arrivals.push(down + t.compute_time(id, iters) + up);
+        up_secs_sum += up;
+        down_secs_sum += down;
+    }
+    let healthy_max = participants
+        .iter()
+        .zip(arrivals.iter())
+        .filter(|(p, _)| !t.link(p.0).straggler)
+        .map(|(_, a)| *a)
+        .fold(0.0f64, f64::max);
+    let base = if healthy_max > 0.0 {
+        healthy_max
+    } else {
+        arrivals.iter().copied().fold(0.0f64, f64::max)
+    };
+    let deadline = base * grace;
+    let late: Vec<bool> = arrivals.iter().map(|&a| a > deadline).collect();
+    (arrivals, deadline, late, up_secs_sum, down_secs_sum)
+}
+
+#[test]
+fn prop_round_pipeline_bit_identical_to_pr1_at_infinite_capacity() {
+    check(
+        "round-pipeline-pr1-equivalence",
+        Config { cases: 40, ..Default::default() },
+        |rng: &mut Pcg64| {
+            let n = 4 + rng.below(10);
+            let seed = 1 + rng.next_u64() % 10_000;
+            let m = 1 + rng.below(n);
+            let parts: Vec<(usize, u64, u64, usize)> = (0..m)
+                .map(|k| {
+                    (
+                        k,
+                        [0u64, 120_000, 251_200][rng.below(3)],
+                        1_000 + rng.below(300_000) as u64,
+                        1 + rng.below(8),
+                    )
+                })
+                .collect();
+            (n, seed, parts)
+        },
+        no_shrink,
+        |&(n, seed, ref parts): &(usize, u64, Vec<(usize, u64, u64, usize)>)| {
+            let t = Transport::with_server(n, seed, 0.3, 10.0, ServerLink::unconstrained());
+            let grace = 1.25;
+            let (ref_arrivals, ref_deadline, ref_late, ref_up, ref_down) =
+                pr1_round(&t, parts, grace);
+
+            // the scheduler-based pipeline, as cluster/state.rs runs it
+            let down_reqs: Vec<TransferReq> = parts
+                .iter()
+                .map(|&(id, down_bits, _, _)| TransferReq {
+                    client_id: id,
+                    bits: down_bits,
+                    ready_s: 0.0,
+                })
+                .collect();
+            let down = t.schedule_downloads(&down_reqs);
+            let up_reqs: Vec<TransferReq> = parts
+                .iter()
+                .enumerate()
+                .map(|(k, &(id, _, up_bits, iters))| TransferReq {
+                    client_id: id,
+                    bits: up_bits,
+                    ready_s: down.timings[k].duration_s + t.compute_time(id, iters),
+                })
+                .collect();
+            let up = t.schedule_uploads(&up_reqs);
+            let arrivals: Vec<f64> = up.timings.iter().map(|x| x.end_s).collect();
+            for (k, (&a, &r)) in arrivals.iter().zip(&ref_arrivals).enumerate() {
+                if a != r {
+                    return Err(format!("arrival {k}: {a} != PR1 {r}"));
+                }
+            }
+            let healthy_max = parts
+                .iter()
+                .zip(arrivals.iter())
+                .filter(|(p, _)| !t.link(p.0).straggler)
+                .map(|(_, a)| *a)
+                .fold(0.0f64, f64::max);
+            let base = if healthy_max > 0.0 {
+                healthy_max
+            } else {
+                arrivals.iter().copied().fold(0.0f64, f64::max)
+            };
+            let deadline = base * grace;
+            if deadline != ref_deadline {
+                return Err(format!("deadline {deadline} != PR1 {ref_deadline}"));
+            }
+            let late: Vec<bool> = arrivals.iter().map(|&a| a > deadline).collect();
+            if late != ref_late {
+                return Err("straggler/deadline outcomes diverged".into());
+            }
+            let up_sum: f64 = up.timings.iter().map(|x| x.duration_s).sum();
+            let down_sum: f64 = down.timings.iter().map(|x| x.duration_s).sum();
+            if up_sum != ref_up || down_sum != ref_down {
+                return Err(format!(
+                    "ledger seconds diverged: up {up_sum} vs {ref_up}, down {down_sum} vs {ref_down}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_finite_capacity_conserves_bandwidth_and_never_beats_solo() {
+    for policy in [ContentionPolicy::FairShare, ContentionPolicy::Fifo] {
+        check(
+            "contention-conservation",
+            Config { cases: 60, ..Default::default() },
+            |rng: &mut Pcg64| (gen_batch(rng), 1e6 * (1.0 + 49.0 * rng.f64())),
+            no_shrink,
+            move |&(ref b, capacity): &(Batch, f64)| {
+                let t = transport(
+                    b,
+                    ServerLink { up_bps: capacity, down_bps: capacity, policy },
+                );
+                for sched in [t.schedule_uploads(&b.reqs), t.schedule_downloads(&b.reqs)] {
+                    if sched.telemetry.max_total_bps > capacity * (1.0 + 1e-9) {
+                        return Err(format!(
+                            "granted {} bps over a {capacity} bps server",
+                            sched.telemetry.max_total_bps
+                        ));
+                    }
+                    for (k, tim) in sched.timings.iter().enumerate() {
+                        if tim.duration_s + 1e-9 < tim.solo_s {
+                            return Err(format!(
+                                "transfer {k} beat its solo time: {} < {}",
+                                tim.duration_s, tim.solo_s
+                            ));
+                        }
+                        if tim.queue_s < 0.0 {
+                            return Err(format!("transfer {k}: negative queueing"));
+                        }
+                    }
+                    if sched.telemetry.peak_concurrency > b.reqs.len() {
+                        return Err("peak concurrency exceeds batch size".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn prop_schedule_deterministic_and_request_order_independent() {
+    for policy in [ContentionPolicy::FairShare, ContentionPolicy::Fifo] {
+        check(
+            "contention-determinism",
+            Config { cases: 40, ..Default::default() },
+            |rng: &mut Pcg64| {
+                let mut b = gen_batch(rng);
+                // distinct clients so reordering is identity-checkable
+                let m = b.reqs.len().min(b.n);
+                b.reqs.truncate(m);
+                for (k, r) in b.reqs.iter_mut().enumerate() {
+                    r.client_id = k;
+                }
+                let capacity = [f64::INFINITY, 20e6, 5e6][rng.below(3)];
+                (b, capacity)
+            },
+            no_shrink,
+            move |&(ref b, capacity): &(Batch, f64)| {
+                let t = transport(
+                    b,
+                    ServerLink { up_bps: capacity, down_bps: capacity, policy },
+                );
+                let a = t.schedule_uploads(&b.reqs);
+                let again = t.schedule_uploads(&b.reqs);
+                let mut rev = b.reqs.clone();
+                rev.reverse();
+                let c = t.schedule_uploads(&rev);
+                let m = b.reqs.len();
+                for k in 0..m {
+                    let (x, y, z) = (a.timings[k], again.timings[k], c.timings[m - 1 - k]);
+                    if x.duration_s != y.duration_s || x.end_s != y.end_s {
+                        return Err(format!("repeat run diverged at {k}"));
+                    }
+                    if x.client_id != z.client_id
+                        || x.duration_s != z.duration_s
+                        || x.end_s != z.end_s
+                    {
+                        return Err(format!("request order changed timings at {k}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn cluster_run_with_finite_bandwidth_is_deterministic_across_workers() {
+    let cfg = FedConfig {
+        model: "logreg".into(),
+        num_clients: 10,
+        participation: 0.5,
+        classes_per_client: 5,
+        batch_size: 10,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: 8,
+        method: Method::Stc { p_up: 0.02, p_down: 0.02 },
+        eval_every: 1_000_000,
+        seed: 23,
+        train_examples: 600,
+        test_examples: 100,
+        ..Default::default()
+    };
+    let (train, _) = task_dataset("mnist", cfg.seed).unwrap();
+    let train = train.subset(&(0..600).collect::<Vec<_>>());
+    let mk = |workers: usize, policy: ContentionPolicy| {
+        let mut ccfg = ClusterConfig::new(cfg.clone());
+        ccfg.workers = workers;
+        ccfg.straggler_frac = 0.2;
+        ccfg.server_up_bps = 2e6;
+        ccfg.server_down_bps = 8e6;
+        ccfg.contention_policy = policy;
+        let spec = fedstc::models::ModelSpec::by_name("logreg").unwrap();
+        let mut run = ClusterRun::new(ccfg, &train, spec.init_flat(cfg.seed)).unwrap();
+        let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+        while !run.finished() {
+            run.tick(&factory, &train);
+        }
+        (
+            run.server.params.clone(),
+            run.ledger.up_seconds.to_bits(),
+            run.ledger.down_seconds.to_bits(),
+            run.ledger.up_queue_seconds.to_bits(),
+            run.sim_clock_s.to_bits(),
+            run.stats.late_uploads,
+        )
+    };
+    for policy in [ContentionPolicy::FairShare, ContentionPolicy::Fifo] {
+        let a = mk(1, policy);
+        let b = mk(1, policy);
+        assert_eq!(a, b, "same worker count must be bit-identical ({policy:?})");
+        let c = mk(4, policy);
+        assert_eq!(a, c, "worker count must not change contention outcomes ({policy:?})");
+    }
+}

@@ -1,0 +1,153 @@
+//! API shim for the vendored `xla` crate (xla-rs PJRT bindings).
+//!
+//! Mirrors exactly the surface `fedstc`'s `hlo` feature consumes so the
+//! feature-gated code can be type-checked (and clippy'd) in environments
+//! without the vendored crate closure. Literals are real enough for the
+//! pure-rust helpers (`element_count`, `reshape` shape algebra); anything
+//! that would need a PJRT runtime returns [`Error`] instead.
+//!
+//! Swap the root Cargo.toml's `xla` path dependency to the vendored
+//! crate to execute artifacts for real; nothing in `fedstc` changes.
+
+/// Error type standing in for xla-rs's. Only its `Debug` representation
+/// is consumed by `fedstc`.
+#[derive(Debug)]
+pub struct Error(pub String);
+
+const UNAVAILABLE: &str =
+    "xla shim: PJRT is unavailable (this build links the type-check shim, \
+     not the vendored xla crate)";
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(UNAVAILABLE.to_string()))
+}
+
+/// Host literal. Carries just enough (element count) for the pure-rust
+/// marshalling helpers and their unit tests.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    count: usize,
+}
+
+impl Literal {
+    pub fn scalar(_v: f32) -> Literal {
+        Literal { count: 1 }
+    }
+
+    pub fn vec1(vals: &[f32]) -> Literal {
+        Literal { count: vals.len() }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.count
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal, Error> {
+        let numel: i64 = dims.iter().product();
+        if numel < 0 || numel as usize != self.count {
+            return Err(Error(format!(
+                "cannot reshape {} elements to {dims:?}",
+                self.count
+            )));
+        }
+        Ok(Literal { count: self.count })
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle returned by an execution.
+#[derive(Debug)]
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+/// Unlowered computation wrapping a module proto.
+#[derive(Debug)]
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// PJRT client handle. `cpu()` fails cleanly in the shim, so
+/// `fedstc::runtime::Engine::load` reports the missing runtime instead
+/// of pretending to execute.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Matches xla-rs's generic-over-argument `execute`; `fedstc` calls
+    /// it as `execute::<Literal>`.
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_shape_algebra_works_without_pjrt() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        assert_eq!(l.reshape(&[2, 2]).unwrap().element_count(), 4);
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7.0).element_count(), 1);
+    }
+
+    #[test]
+    fn runtime_entry_points_error_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo").is_err());
+        let e = format!("{:?}", PjRtClient::cpu().unwrap_err());
+        assert!(e.contains("shim"));
+    }
+}

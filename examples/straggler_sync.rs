@@ -41,7 +41,7 @@ fn main() -> anyhow::Result<()> {
     // would pay to rejoin: (round, rounds_missed, download_bits).
     let mut events: Vec<(usize, usize, usize)> = Vec::new();
     for _ in 0..cfg.rounds() {
-        run.run_round(&mut trainer, &train);
+        run.run_round(&mut trainer, &train)?;
         if run.server.round % 4 == 0 {
             for s in [1usize, 5, 20, 50] {
                 if run.server.round >= s {

@@ -81,7 +81,7 @@ fn mean_round_secs(
     let mut total_secs = 0.0;
     let mut total_queue = 0.0;
     let mut n = 0usize;
-    while let Some(s) = run.next_round(&factory, &exp.train) {
+    while let Some(s) = run.next_round(&factory, &exp.train)? {
         if s.aggregated > 0 {
             total_secs += s.round_secs;
             total_queue += s.queue_secs;

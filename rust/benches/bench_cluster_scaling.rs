@@ -57,11 +57,11 @@ fn serial_rounds_per_sec(c: &FedConfig, timed_rounds: usize) -> anyhow::Result<f
     let mut run = FederatedRun::new(c.clone(), &exp.train, init)?;
     let mut trainer = NativeLogreg::new(c.batch_size);
     for _ in 0..WARMUP_ROUNDS {
-        run.run_round(&mut trainer, &exp.train);
+        run.run_round(&mut trainer, &exp.train)?;
     }
     let t = Timer::start();
     for _ in 0..timed_rounds {
-        run.run_round(&mut trainer, &exp.train);
+        run.run_round(&mut trainer, &exp.train)?;
     }
     Ok(timed_rounds as f64 / t.secs())
 }
@@ -80,11 +80,11 @@ fn cluster_rounds_per_sec(
     let mut run = ClusterRun::new(ccfg, &exp.train, init)?;
     let factory = NativeLogregFactory { batch_size: c.batch_size };
     for _ in 0..WARMUP_ROUNDS {
-        run.next_round(&factory, &exp.train);
+        run.next_round(&factory, &exp.train)?;
     }
     let t = Timer::start();
     for _ in 0..timed_rounds {
-        run.next_round(&factory, &exp.train);
+        run.next_round(&factory, &exp.train)?;
     }
     Ok(timed_rounds as f64 / t.secs())
 }

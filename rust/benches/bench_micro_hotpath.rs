@@ -1,9 +1,12 @@
 //! μ-benchmarks of the L3 hot paths (the §Perf deliverable): STC
-//! compression (quickselect + ternarise), Golomb encode/decode, server
+//! compression (quickselect + ternarise), Golomb encode/decode, the
+//! byte-level wire serialization of every `Message` variant, server
 //! aggregation, residual arithmetic, the native gradient step, and — when
 //! artifacts are present — the PJRT train-step and the HLO STC kernel.
 //!
 //! Run: cargo bench --bench bench_micro_hotpath
+//! Emits `BENCH_micro_hotpath.json` (medians per row) into
+//! `$FEDSTC_BENCH_DIR` for the CI artifact trail.
 //! Targets (DESIGN.md §6): STC ≥ 200 MB/s @ n=1e6; Golomb ≥ 20M nnz/s.
 
 use fedstc::compression::{golomb, stc, Compressor, Message, StcCompressor};
@@ -12,12 +15,19 @@ use fedstc::coordinator::Server;
 use fedstc::data::synth::task_dataset;
 use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
 use fedstc::runtime::{Engine, HloTrainer};
-use fedstc::util::benchkit::{banner, bench_throughput, black_box};
+use fedstc::util::benchkit::{banner, bench_throughput, black_box, emit_json, BenchResult};
+use fedstc::util::json::Json;
 use fedstc::util::rng::Pcg64;
+
+fn report(rows: &mut Vec<(String, f64)>, r: BenchResult) {
+    println!("{}", r.report());
+    rows.push((r.name.clone(), r.median()));
+}
 
 fn main() {
     banner("μ-bench", "hot-path throughput (see EXPERIMENTS.md §Perf)");
     let mut rng = Pcg64::seeded(40);
+    let mut rows: Vec<(String, f64)> = Vec::new();
 
     // --- STC compress at three scales -------------------------------
     for &n in &[10_000usize, 100_000, 1_000_000] {
@@ -32,7 +42,7 @@ fn main() {
                 black_box(stc::compress_with(&update, 0.01, &mut scratch));
             },
         );
-        println!("{}", r.report());
+        report(&mut rows, r);
     }
 
     // --- Golomb codec ------------------------------------------------
@@ -48,7 +58,7 @@ fn main() {
             black_box(tern.encode());
         },
     );
-    println!("{}", r.report());
+    report(&mut rows, r);
     let enc = tern.encode();
     let r = bench_throughput(
         &format!("golomb_decode nnz={}", tern.nnz()),
@@ -59,7 +69,45 @@ fn main() {
             black_box(golomb::decode(&enc, tern.nnz(), n).unwrap());
         },
     );
-    println!("{}", r.report());
+    report(&mut rows, r);
+
+    // --- byte-level wire serialization, all four variants ------------
+    // (the path every upload and broadcast now crosses: to_wire encodes
+    // the real frame, from_bytes decodes it)
+    let wire_dim = 100_000;
+    let dense_update: Vec<f32> = (0..wire_dim).map(|_| rng.normal()).collect();
+    let wire_msgs = [
+        ("dense", Message::Dense { values: dense_update.clone() }),
+        ("sparse", {
+            let (indices, values) = stc::topk_sparse(&dense_update, 0.01);
+            Message::Sparse { len: wire_dim, indices, values }
+        }),
+        ("ternary", Message::Ternary(stc::compress(&dense_update, 0.01))),
+        ("sign", Message::Sign { signs: dense_update.iter().map(|x| *x >= 0.0).collect() }),
+    ];
+    for (label, msg) in &wire_msgs {
+        let r = bench_throughput(
+            &format!("wire_encode {label} n=100k"),
+            wire_dim as f64,
+            3,
+            15,
+            || {
+                black_box(msg.to_wire());
+            },
+        );
+        report(&mut rows, r);
+        let bytes = msg.to_bytes();
+        let r = bench_throughput(
+            &format!("wire_decode {label} n=100k"),
+            wire_dim as f64,
+            3,
+            15,
+            || {
+                black_box(Message::from_bytes(&bytes).unwrap());
+            },
+        );
+        report(&mut rows, r);
+    }
 
     // --- server aggregation (10 ternary messages, 100k params) -------
     let dim = 100_000;
@@ -78,11 +126,12 @@ fn main() {
         15,
         || {
             let mut server =
-                Server::new(vec![0.0; dim], Method::Stc { p_up: 0.01, p_down: 0.01 }, 10);
-            black_box(server.aggregate_and_apply(&msgs));
+                Server::new(vec![0.0; dim], Method::Stc { p_up: 0.01, p_down: 0.01 }, 10)
+                    .expect("valid method");
+            black_box(server.aggregate_and_apply(&msgs).expect("non-empty round"));
         },
     );
-    println!("{}", r.report());
+    report(&mut rows, r);
 
     // --- native gradient step ----------------------------------------
     let (train, _) = task_dataset("mnist", 1).expect("known task");
@@ -97,7 +146,23 @@ fn main() {
     let r = bench_throughput("native_logreg grad_loss b=20", 20.0, 3, 15, || {
         black_box(trainer.grad_loss(&params, &x, &y, &mut grads));
     });
-    println!("{}", r.report());
+    report(&mut rows, r);
+
+    // machine-readable trail for CI (medians per row)
+    let mut j = Json::obj();
+    let entries = rows
+        .iter()
+        .map(|(name, median)| {
+            let mut o = Json::obj();
+            o.set("name", Json::Str(name.clone())).set("median_s", Json::Num(*median));
+            o
+        })
+        .collect();
+    j.set("rows", Json::Arr(entries));
+    match emit_json("micro_hotpath", &j) {
+        Ok(path) => println!("[wrote {}]", path.display()),
+        Err(e) => println!("[BENCH json skipped: {e}]"),
+    }
 
     // --- PJRT paths (need artifacts) ----------------------------------
     match Engine::load_default() {

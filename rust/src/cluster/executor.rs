@@ -17,12 +17,13 @@
 //! worker thread via [`TrainerFactory`]).
 
 use super::transport::Transport;
-use crate::compression::{Compressor, Message};
+use crate::compression::Message;
 use crate::config::Method;
 use crate::coordinator::{ClientState, LocalScratch};
 use crate::data::Dataset;
 use crate::models::native::NativeLogreg;
 use crate::models::Trainer;
+use crate::protocol::Protocol;
 use std::sync::mpsc;
 
 /// Builds a fresh gradient oracle on demand — one per worker thread.
@@ -104,7 +105,7 @@ impl WorkerPool {
         let workers = self.workers.min(participants.len());
         let mut results = if workers <= 1 {
             let mut trainer = factory.make();
-            let mut compressor = plan.method.up_compressor();
+            let mut proto = worker_protocol(plan.method);
             let mut scratch = LocalScratch::default();
             participants
                 .into_iter()
@@ -113,7 +114,7 @@ impl WorkerPool {
                         slot,
                         client,
                         trainer.as_mut(),
-                        compressor.as_mut(),
+                        proto.as_mut(),
                         global_params,
                         data,
                         plan,
@@ -141,14 +142,14 @@ impl WorkerPool {
                     let tx = tx.clone();
                     s.spawn(move || {
                         let mut trainer = factory.make();
-                        let mut compressor = plan.method.up_compressor();
+                        let mut proto = worker_protocol(plan.method);
                         let mut scratch = LocalScratch::default();
                         for (slot, client) in chunk {
                             let r = run_one(
                                 slot,
                                 client,
                                 trainer.as_mut(),
-                                compressor.as_mut(),
+                                proto.as_mut(),
                                 global_params,
                                 data,
                                 plan,
@@ -169,15 +170,22 @@ impl WorkerPool {
     }
 }
 
+/// Each worker owns a private protocol instance for the upstream codec
+/// (scratch buffers are not `Sync`). Config methods were validated at
+/// parse time, so resolution cannot fail here in a healthy run.
+fn worker_protocol(method: &Method) -> Box<dyn Protocol> {
+    method.protocol().expect("method resolves to a protocol (validated at config parse)")
+}
+
 /// One client's round: local SGD from the global model, delta
-/// computation, error-feedback compression. Mirrors the body of
-/// `FederatedRun::run_round` step 2–3 exactly.
+/// computation, error-feedback compression, byte-level wire encoding.
+/// Mirrors the body of `FederatedRun::run_round` step 2–3 exactly.
 #[allow(clippy::too_many_arguments)]
 fn run_one(
     slot: usize,
     client: &mut ClientState,
     trainer: &mut dyn Trainer,
-    compressor: &mut dyn Compressor,
+    proto: &mut dyn Protocol,
     global_params: &[f32],
     data: &Dataset,
     plan: &RoundPlan,
@@ -197,8 +205,14 @@ fn run_one(
     for (d, w) in work.iter_mut().zip(global_params) {
         *d -= *w;
     }
-    let msg = client.compress_update(work, compressor);
-    let up_bits = msg.wire_bits() as u64;
+    // upload through the real byte serialization (same contract as the
+    // serial loop): bits billed = the measured frame, message delivered =
+    // the decoded bytes
+    let msg = client.compress_update(work, proto);
+    let wire = msg.to_wire();
+    let up_bits = wire.payload_bits as u64;
+    let msg = Message::from_bytes(&wire.bytes)
+        .expect("roundtrip of a freshly encoded upload cannot fail");
     let compute_s = plan.transport.compute_time(client.id, plan.local_iters);
     ClientResult { slot, client_id: client.id, loss, msg, up_bits, compute_s }
 }

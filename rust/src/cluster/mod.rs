@@ -33,7 +33,11 @@
 //! The state machine shape follows the psyche coordinator
 //! (`WaitingForMembers`/`Warmup`/`RoundTrain`/`Cooldown` run states); the
 //! round mathematics is exactly Algorithm 2 and reuses `ClientState`,
-//! `Server` and the codecs unchanged.
+//! `Server` and the codecs unchanged. Method behaviour (codecs,
+//! aggregation, straggler pricing) is resolved per worker through
+//! [`crate::config::Method::protocol`] — the same protocol layer the
+//! serial loop drives — and every upload crosses the executor as real
+//! serialized bytes.
 
 pub mod executor;
 pub mod membership;

@@ -219,7 +219,7 @@ impl ClusterRun {
             .into_iter()
             .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg.fed, uses_residual))
             .collect();
-        let server = Server::new(init_params, cfg.fed.method.clone(), cfg.fed.cache_rounds);
+        let server = Server::new(init_params, cfg.fed.method.clone(), cfg.fed.cache_rounds)?;
         let sampler = Pcg64::new(cfg.fed.seed, 0x5a3b);
         let event_rng = Pcg64::new(cfg.fed.seed, 0xe7e7);
         let membership = Membership::new(cfg.fed.num_clients, cfg.fed.seed, cfg.initial_members());
@@ -275,50 +275,55 @@ impl ClusterRun {
     }
 
     /// Advance the machine by exactly one phase step. Returns a summary
-    /// when the step was an aggregation (one round closed).
-    pub fn tick(&mut self, factory: &dyn TrainerFactory, data: &Dataset) -> Option<RoundSummary> {
+    /// when the step was an aggregation (one round closed); errors —
+    /// instead of panicking — if the protocol rejects the round.
+    pub fn tick(
+        &mut self,
+        factory: &dyn TrainerFactory,
+        data: &Dataset,
+    ) -> anyhow::Result<Option<RoundSummary>> {
         if self.phase == Phase::Finished {
-            return None;
+            return Ok(None);
         }
         self.ticks += 1;
         if self.ticks > self.cfg.max_ticks {
             self.finish();
-            return None;
+            return Ok(None);
         }
         match self.phase {
             Phase::WaitingForMembers => {
                 self.tick_waiting();
-                None
+                Ok(None)
             }
             Phase::Warmup { ticks_left } => {
                 self.tick_warmup(ticks_left);
-                None
+                Ok(None)
             }
             Phase::RoundTrain => {
                 self.tick_round_train(factory, data);
-                None
+                Ok(None)
             }
-            Phase::Aggregate => Some(self.tick_aggregate()),
+            Phase::Aggregate => Ok(Some(self.tick_aggregate()?)),
             Phase::Cooldown { ticks_left } => {
                 self.tick_cooldown(ticks_left);
-                None
+                Ok(None)
             }
-            Phase::Finished => None,
+            Phase::Finished => Ok(None),
         }
     }
 
-    /// Drive ticks until the next closed round; `None` once finished.
+    /// Drive ticks until the next closed round; `Ok(None)` once finished.
     pub fn next_round(
         &mut self,
         factory: &dyn TrainerFactory,
         data: &Dataset,
-    ) -> Option<RoundSummary> {
+    ) -> anyhow::Result<Option<RoundSummary>> {
         while !self.finished() {
-            if let Some(s) = self.tick(factory, data) {
-                return Some(s);
+            if let Some(s) = self.tick(factory, data)? {
+                return Ok(Some(s));
             }
         }
-        None
+        Ok(None)
     }
 
     fn tick_waiting(&mut self) {
@@ -503,7 +508,7 @@ impl ClusterRun {
         self.phase = Phase::Aggregate;
     }
 
-    fn tick_aggregate(&mut self) -> RoundSummary {
+    fn tick_aggregate(&mut self) -> anyhow::Result<RoundSummary> {
         let pending = std::mem::take(&mut self.pending);
         let queue_secs = self.pending_queue_secs;
         self.pending_queue_secs = 0.0;
@@ -512,7 +517,7 @@ impl ClusterRun {
         if pending.is_empty() {
             self.stats.empty_rounds += 1;
             self.sim_clock_s += self.cfg.tick_seconds;
-            return RoundSummary {
+            return Ok(RoundSummary {
                 round: self.server.round,
                 selected: self.pending_selected,
                 dropped: self.pending_dropped,
@@ -523,7 +528,7 @@ impl ClusterRun {
                 catch_up_bits: self.pending_catchup_bits,
                 round_secs: self.cfg.tick_seconds,
                 queue_secs,
-            };
+            });
         }
 
         // Round deadline: grace × the slowest healthy participant. If the
@@ -570,16 +575,14 @@ impl ClusterRun {
         let aggregated = msgs.len();
         // the deadline always covers the slowest eligible participant
         // (grace ≥ 1), so msgs is non-empty whenever anyone trained;
-        // all-dropped rounds were counted as empty above. The guard
-        // stays because Server::aggregate_and_apply panics on an empty
-        // round, which must never be reachable from here.
-        if !msgs.is_empty() {
-            self.server.aggregate_and_apply(&msgs);
-            self.rounds_done += 1;
-        }
+        // all-dropped rounds were counted as empty above — and if a
+        // future bug ever breaks that invariant, aggregation now reports
+        // a clean error instead of panicking
+        self.server.aggregate_and_apply(&msgs)?;
+        self.rounds_done += 1;
         self.sim_clock_s += deadline;
 
-        RoundSummary {
+        Ok(RoundSummary {
             round: self.server.round,
             selected: self.pending_selected,
             dropped: self.pending_dropped,
@@ -590,7 +593,7 @@ impl ClusterRun {
             catch_up_bits: self.pending_catchup_bits,
             round_secs: deadline,
             queue_secs,
-        }
+        })
     }
 
     fn tick_cooldown(&mut self, ticks_left: usize) {
@@ -673,7 +676,7 @@ mod tests {
         let mut seen = Vec::new();
         while !run.finished() {
             seen.push(run.phase().label());
-            run.tick(&factory, &train);
+            run.tick(&factory, &train).unwrap();
         }
         assert_eq!(seen[0], "waiting-for-members");
         assert!(seen.contains(&"warmup"));
@@ -695,7 +698,7 @@ mod tests {
         let (mut run, train) = build(ccfg);
         let factory = NativeLogregFactory { batch_size: 10 };
         let mut rounds = 0;
-        while let Some(s) = run.next_round(&factory, &train) {
+        while let Some(s) = run.next_round(&factory, &train).unwrap() {
             rounds += 1;
             assert_eq!(s.selected, 5);
             assert_eq!(s.aggregated, 5);
@@ -716,7 +719,7 @@ mod tests {
         let (mut run, train) = build(ccfg);
         let factory = NativeLogregFactory { batch_size: 10 };
         while !run.finished() {
-            run.tick(&factory, &train);
+            run.tick(&factory, &train).unwrap();
         }
         assert!(run.stats.midround_dropouts > 0, "{:?}", run.stats);
         // dropped clients came back (bootstrap or selection) and had to
@@ -735,7 +738,7 @@ mod tests {
         let (mut run, train) = build(ccfg);
         let factory = NativeLogregFactory { batch_size: 10 };
         let mut late_total = 0;
-        while let Some(s) = run.next_round(&factory, &train) {
+        while let Some(s) = run.next_round(&factory, &train).unwrap() {
             late_total += s.late;
             assert_eq!(s.selected, s.aggregated + s.late + s.dropped);
         }
@@ -755,7 +758,7 @@ mod tests {
         let (mut run, train) = build(ccfg);
         let factory = NativeLogregFactory { batch_size: 10 };
         while !run.finished() {
-            run.tick(&factory, &train);
+            run.tick(&factory, &train).unwrap();
         }
         assert!(run.stats.churn_dropouts > 0, "{:?}", run.stats);
         assert!(run.stats.rejoins > 0, "{:?}", run.stats);
@@ -772,7 +775,7 @@ mod tests {
         let (mut run, train) = build(ccfg);
         let factory = NativeLogregFactory { batch_size: 10 };
         while !run.finished() {
-            run.tick(&factory, &train);
+            run.tick(&factory, &train).unwrap();
         }
         assert!(run.stats.quorum_stalls > 0, "{:?}", run.stats);
         assert!(run.stats.joins > 0, "{:?}", run.stats);
@@ -790,7 +793,7 @@ mod tests {
         let factory = NativeLogregFactory { batch_size: 10 };
         let mut guard = 0;
         while !run.finished() {
-            run.tick(&factory, &train);
+            run.tick(&factory, &train).unwrap();
             guard += 1;
             assert!(guard < 1000, "run failed to terminate");
         }
@@ -810,7 +813,7 @@ mod tests {
             let (mut run, train) = build(ccfg);
             let factory = NativeLogregFactory { batch_size: 10 };
             while !run.finished() {
-                run.tick(&factory, &train);
+                run.tick(&factory, &train).unwrap();
             }
             (run.server.params.clone(), run.ledger.total_up_bits, run.ledger.total_down_bits)
         };
@@ -834,7 +837,7 @@ mod tests {
             let (mut run, train) = build(ccfg);
             let factory = NativeLogregFactory { batch_size: 10 };
             while !run.finished() {
-                run.tick(&factory, &train);
+                run.tick(&factory, &train).unwrap();
             }
             run
         };
@@ -865,7 +868,7 @@ mod tests {
             let (mut run, train) = build(ccfg);
             let factory = NativeLogregFactory { batch_size: 10 };
             while !run.finished() {
-                run.tick(&factory, &train);
+                run.tick(&factory, &train).unwrap();
             }
             run
         };

@@ -15,6 +15,12 @@
 //! eqs. 9/11/12) is the caller's single line:
 //! `msg.subtract_from(&mut acc); residual = acc;` — compressors that do
 //! not use error feedback (signSGD) report it via [`Compressor::error_feedback`].
+//!
+//! The [`Compressor`] trait is the *upstream half* only. The full round
+//! contract — aggregation rule, downstream broadcast, straggler pricing —
+//! lives in [`crate::protocol`], whose impls compose these codecs; use
+//! [`crate::protocol::by_name`] rather than the deprecated [`by_name`]
+//! here when you need more than a client-side encoder.
 
 pub mod bitio;
 pub mod entropy;
@@ -123,25 +129,42 @@ impl Compressor for SignCompressor {
 }
 
 /// Majority vote over sign messages (signSGD with majority vote,
-/// Bernstein et al. 2018): output is sign(Σ signs) scaled by δ. Ties
-/// (possible with an even number of voters) resolve to +1, matching the
-/// `>= 0` convention of [`SignCompressor`].
-pub fn majority_vote(messages: &[&Message], delta: f32) -> Vec<f32> {
-    assert!(!messages.is_empty());
+/// Bernstein et al. 2018), returned as the winning sign pattern —
+/// `true` = non-negative tally. Ties (possible with an even number of
+/// voters) resolve to +1, matching the `>= 0` convention of
+/// [`SignCompressor`]. Errors (instead of panicking) on an empty round,
+/// non-sign messages or arity mismatches, so the protocol layer can
+/// surface malformed rounds cleanly.
+pub fn majority_signs(messages: &[&Message]) -> anyhow::Result<Vec<bool>> {
+    anyhow::ensure!(!messages.is_empty(), "majority vote over an empty round");
     let n = messages[0].tensor_len();
     let mut votes = vec![0i32; n];
     for m in messages {
         match m {
             Message::Sign { signs } => {
-                assert_eq!(signs.len(), n, "sign vote arity mismatch");
+                anyhow::ensure!(
+                    signs.len() == n,
+                    "sign vote arity mismatch: {} != {n}",
+                    signs.len()
+                );
                 for (v, &s) in votes.iter_mut().zip(signs) {
                     *v += if s { 1 } else { -1 };
                 }
             }
-            _ => panic!("majority_vote over non-sign message"),
+            _ => anyhow::bail!("majority vote over non-sign message"),
         }
     }
-    votes.iter().map(|&v| if v >= 0 { delta } else { -delta }).collect()
+    Ok(votes.iter().map(|&v| v >= 0).collect())
+}
+
+/// [`majority_signs`] scaled to the update δ·sign(Σ signs). Kept for
+/// callers that want the applied values directly; panics where
+/// `majority_signs` would error (legacy contract).
+pub fn majority_vote(messages: &[&Message], delta: f32) -> Vec<f32> {
+    match majority_signs(messages) {
+        Ok(signs) => signs.iter().map(|&s| if s { delta } else { -delta }).collect(),
+        Err(e) => panic!("{e}"),
+    }
 }
 
 /// Apply error feedback after compression: `residual = acc − decode(msg)`,
@@ -151,17 +174,25 @@ pub fn residual_after(msg: &Message, acc: &mut [f32]) {
     msg.subtract_from(acc);
 }
 
-/// Construct a compressor by config name. Supported:
-/// `dense`, `topk`, `stc`, `signsgd`. Unknown names are a clean error
-/// (they typically come straight from CLI/config input).
+/// Construct a compressor by legacy codec name (`dense`, `topk`, `stc`,
+/// `signsgd`). Deprecated shim over the bidirectional protocol registry:
+/// the codec names resolve to the matching protocol's upstream half, so
+/// the diverging name strings the two registries used to carry cannot
+/// drift again. Unknown names are a clean error (they typically come
+/// straight from CLI/config input).
+#[deprecated(
+    since = "0.1.0",
+    note = "use crate::protocol::by_name — the bidirectional protocol registry"
+)]
 pub fn by_name(name: &str, p: f64) -> anyhow::Result<Box<dyn Compressor>> {
-    Ok(match name {
-        "dense" => Box::new(DenseCompressor),
-        "topk" => Box::new(TopKCompressor::new(p)),
-        "stc" => Box::new(StcCompressor::new(p)),
-        "signsgd" => Box::new(SignCompressor),
+    let spec = match name {
+        "dense" => "baseline".to_string(),
+        "topk" => format!("topk:{p}"),
+        "stc" => format!("stc:{p}"),
+        "signsgd" => "signsgd".to_string(),
         other => anyhow::bail!("unknown compressor '{other}' (dense|topk|stc|signsgd)"),
-    })
+    };
+    Ok(Box::new(crate::protocol::UpCodec::new(crate::protocol::by_name(&spec)?)))
 }
 
 /// Deterministic random dense update for tests/benches.
@@ -238,6 +269,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn by_name_constructs_all() {
         for name in ["dense", "topk", "stc", "signsgd"] {
             let mut c = by_name(name, 0.1).unwrap();
@@ -247,9 +279,30 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn by_name_rejects_unknown() {
         let err = by_name("quantum", 0.1).unwrap_err().to_string();
         assert!(err.contains("unknown compressor 'quantum'"), "{err}");
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn by_name_shim_matches_protocol_registry_codecs() {
+        use crate::protocol::Protocol;
+        // the legacy codec names must resolve to the same upstream codecs
+        // the protocol registry builds (satellite: no more drift)
+        let pairs = [
+            ("dense", "baseline"),
+            ("topk", "topk:0.1"),
+            ("stc", "stc:0.1"),
+            ("signsgd", "signsgd"),
+        ];
+        for (legacy, spec) in pairs {
+            let shim = by_name(legacy, 0.1).unwrap();
+            let proto = crate::protocol::by_name(spec).unwrap();
+            assert_eq!(shim.name(), proto.up_codec_name(), "{legacy} vs {spec}");
+            assert_eq!(shim.error_feedback(), proto.client_residual());
+        }
     }
 
     #[test]

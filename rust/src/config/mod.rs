@@ -5,10 +5,18 @@
 //! from `key=value` CLI pairs / config files (one `key = value` per line,
 //! `#` comments) — see [`FedConfig::apply_kv`].
 
-use crate::compression::{self, Compressor};
+use crate::compression::Compressor;
 use crate::models::ModelSpec;
+use crate::protocol::{self, Protocol, ProtocolArgs, UpCodec};
 
-/// The compression method under test (Table I rows).
+/// The compression method under test (Table I rows, plus any protocol
+/// registered at runtime via [`crate::protocol::register`]).
+///
+/// `Method` is a *thin parser*: the behaviour — upstream codec,
+/// aggregation rule, downstream broadcast, straggler pricing — lives in
+/// the [`Protocol`] impl that [`Method::protocol`] resolves to. The
+/// enum itself only carries the parsed parameters (so configs stay
+/// `Clone + PartialEq` and sweep scripts can compare them).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Method {
     /// uncompressed distributed SGD, communicate every iteration
@@ -28,54 +36,80 @@ pub enum Method {
     /// STC combined with FedAvg-style communication delay (n local
     /// iterations per round) — appendix Fig. 12's sparsity×delay grid
     Hybrid { p: f64, n: usize },
+    /// A protocol registered from outside the crate
+    /// ([`crate::protocol::register`]); carries the full registry spec,
+    /// e.g. `tfedavg:0.05`.
+    Custom(String),
 }
 
 impl Method {
+    /// Resolve this method into its full bidirectional protocol — the
+    /// single construction point the serial round loop, the parallel
+    /// cluster executor and the server all share, so the paths cannot
+    /// drift.
+    pub fn protocol(&self) -> anyhow::Result<Box<dyn Protocol>> {
+        use crate::protocol::{dense, signsgd, sparse, stc, topk};
+        Ok(match self {
+            Method::Baseline => Box::new(dense::DenseProtocol::baseline()),
+            Method::FedAvg { n } => Box::new(dense::DenseProtocol::fedavg(*n)?),
+            Method::SignSgd { delta } => Box::new(signsgd::SignSgdProtocol::new(*delta)),
+            Method::TopK { p } => Box::new(topk::TopKProtocol::new(*p)?),
+            Method::SparseUpDown { p_up, p_down } => {
+                Box::new(sparse::SparseUpDownProtocol::new(*p_up, *p_down)?)
+            }
+            Method::Stc { p_up, p_down } => Box::new(stc::StcProtocol::stc(*p_up, *p_down)?),
+            Method::Hybrid { p, n } => Box::new(stc::StcProtocol::hybrid(*p, *n)?),
+            Method::Custom(spec) => protocol::by_name(spec)?,
+        })
+    }
+
     /// Local SGD iterations per communication round.
     pub fn local_iters(&self) -> usize {
         match self {
             Method::FedAvg { n } => *n,
             Method::Hybrid { n, .. } => *n,
+            Method::Custom(_) => self.protocol().map(|p| p.local_iters()).unwrap_or(1),
             _ => 1,
         }
     }
 
     /// Whether the client keeps an error-feedback residual.
     pub fn client_residual(&self) -> bool {
-        matches!(
-            self,
-            Method::TopK { .. }
-                | Method::Stc { .. }
-                | Method::SparseUpDown { .. }
-                | Method::Hybrid { .. }
-        )
+        match self {
+            Method::Custom(_) => self.protocol().map(|p| p.client_residual()).unwrap_or(false),
+            _ => matches!(
+                self,
+                Method::TopK { .. }
+                    | Method::Stc { .. }
+                    | Method::SparseUpDown { .. }
+                    | Method::Hybrid { .. }
+            ),
+        }
     }
 
-    /// The upstream codec this method's clients run (Table I row). The
-    /// serial round loop and the parallel cluster executor both build
-    /// their compressors here so the two paths cannot drift.
+    /// The upstream codec this method's clients run (Table I row), as a
+    /// legacy [`Compressor`]. Convenience shim over
+    /// [`Method::protocol`]'s upstream half.
     pub fn up_compressor(&self) -> Box<dyn Compressor> {
-        match self {
-            Method::Baseline | Method::FedAvg { .. } => Box::new(compression::DenseCompressor),
-            Method::SignSgd { .. } => Box::new(compression::SignCompressor),
-            Method::TopK { p } => Box::new(compression::TopKCompressor::new(*p)),
-            Method::SparseUpDown { p_up, .. } => {
-                Box::new(compression::TopKCompressor::new(*p_up))
-            }
-            Method::Stc { p_up, .. } => Box::new(compression::StcCompressor::new(*p_up)),
-            Method::Hybrid { p, .. } => Box::new(compression::StcCompressor::new(*p)),
-        }
+        Box::new(UpCodec::new(
+            self.protocol().expect("method parameters validated at parse time"),
+        ))
     }
 
     /// Whether the server compresses the downstream update (R1).
     pub fn downstream_compressed(&self) -> bool {
-        matches!(
-            self,
-            Method::Stc { .. }
-                | Method::SignSgd { .. }
-                | Method::SparseUpDown { .. }
-                | Method::Hybrid { .. }
-        )
+        match self {
+            Method::Custom(_) => {
+                self.protocol().map(|p| p.downstream_compressed()).unwrap_or(false)
+            }
+            _ => matches!(
+                self,
+                Method::Stc { .. }
+                    | Method::SignSgd { .. }
+                    | Method::SparseUpDown { .. }
+                    | Method::Hybrid { .. }
+            ),
+        }
     }
 
     /// Short display label matching the paper's figure legends.
@@ -88,37 +122,62 @@ impl Method {
             Method::SparseUpDown { p_up, .. } => format!("sparse-ud(p={p_up})"),
             Method::Stc { p_up, .. } => format!("stc(p={p_up})"),
             Method::Hybrid { p, n } => format!("stc+delay(p={p},n={n})"),
+            Method::Custom(spec) => spec.clone(),
         }
     }
 
-    /// Parse `baseline`, `fedavg:400`, `signsgd:0.0002`, `topk:0.01`,
-    /// `stc:0.0025` or `stc:0.0025:0.0025` (up:down).
+    /// Parse a method spec: `baseline`, `fedavg:400`, `signsgd:0.0002`,
+    /// `topk:0.01`, `stc:0.0025`, `stc:0.0025:0.0025` (up:down),
+    /// `sparse:…`, `hybrid:p:n` — positional and `key=value` argument
+    /// forms both work (`stc:p_up=0.01,p_down=0.01`). Any other name is
+    /// looked up in the protocol registry and, if registered, becomes
+    /// [`Method::Custom`].
     pub fn parse(s: &str) -> anyhow::Result<Method> {
-        let parts: Vec<&str> = s.split(':').collect();
-        Ok(match parts[0] {
-            "baseline" => Method::Baseline,
-            "fedavg" => Method::FedAvg {
-                n: parts.get(1).unwrap_or(&"400").parse()?,
-            },
-            "signsgd" => Method::SignSgd {
-                delta: parts.get(1).unwrap_or(&"0.0002").parse()?,
-            },
-            "topk" => Method::TopK { p: parts.get(1).unwrap_or(&"0.0025").parse()? },
+        let (name, rest) = s.split_once(':').unwrap_or((s, ""));
+        let a = ProtocolArgs::parse(rest);
+        Ok(match name {
+            "baseline" => {
+                a.expect_keys(&[], 0)?;
+                Method::Baseline
+            }
+            "fedavg" => {
+                a.expect_keys(&["n"], 1)?;
+                Method::FedAvg { n: a.parse_or("n", 0, 400)? }
+            }
+            "signsgd" => {
+                a.expect_keys(&["delta"], 1)?;
+                Method::SignSgd { delta: a.parse_or("delta", 0, 0.0002)? }
+            }
+            "topk" => {
+                a.expect_keys(&["p"], 1)?;
+                Method::TopK { p: a.parse_or("p", 0, 0.0025)? }
+            }
             "stc" => {
-                let p_up: f64 = parts.get(1).unwrap_or(&"0.0025").parse()?;
-                let p_down: f64 = parts.get(2).map(|s| s.parse()).transpose()?.unwrap_or(p_up);
+                a.expect_keys(&["p_up", "p_down"], 2)?;
+                let p_up: f64 = a.parse_or("p_up", 0, 0.0025)?;
+                let p_down: f64 = a.parse_opt("p_down", 1)?.unwrap_or(p_up);
                 Method::Stc { p_up, p_down }
             }
             "sparse" => {
-                let p_up: f64 = parts.get(1).unwrap_or(&"0.0025").parse()?;
-                let p_down: f64 = parts.get(2).map(|s| s.parse()).transpose()?.unwrap_or(p_up);
+                a.expect_keys(&["p_up", "p_down"], 2)?;
+                let p_up: f64 = a.parse_or("p_up", 0, 0.0025)?;
+                let p_down: f64 = a.parse_opt("p_down", 1)?.unwrap_or(p_up);
                 Method::SparseUpDown { p_up, p_down }
             }
-            "hybrid" => Method::Hybrid {
-                p: parts.get(1).unwrap_or(&"0.01").parse()?,
-                n: parts.get(2).unwrap_or(&"10").parse()?,
-            },
-            other => anyhow::bail!("unknown method '{other}'"),
+            "hybrid" => {
+                a.expect_keys(&["p", "n"], 2)?;
+                Method::Hybrid { p: a.parse_or("p", 0, 0.01)?, n: a.parse_or("n", 1, 10)? }
+            }
+            other if protocol::is_registered(other) => {
+                // registered external protocol: resolve once to validate
+                // the arguments, then carry the spec
+                protocol::by_name(s)?;
+                Method::Custom(s.to_string())
+            }
+            other => anyhow::bail!(
+                "unknown method '{other}' (registered protocols: {})",
+                protocol::names().join("|")
+            ),
         })
     }
 }
@@ -268,17 +327,10 @@ impl FedConfig {
         anyhow::ensure!(self.classes_per_client >= 1, "classes_per_client >= 1");
         anyhow::ensure!(self.gamma > 0.0 && self.gamma <= 1.0, "gamma in (0,1]");
         anyhow::ensure!(self.iterations >= 1, "iterations >= 1");
-        match self.method {
-            Method::Stc { p_up, p_down } | Method::SparseUpDown { p_up, p_down } => {
-                anyhow::ensure!(p_up > 0.0 && p_up <= 1.0, "p_up in (0,1]");
-                anyhow::ensure!(p_down > 0.0 && p_down <= 1.0, "p_down in (0,1]");
-            }
-            Method::Hybrid { p, n } => {
-                anyhow::ensure!(p > 0.0 && p <= 1.0, "p in (0,1]");
-                anyhow::ensure!(n >= 1, "delay n >= 1");
-            }
-            _ => {}
-        }
+        // resolving the protocol validates every method parameter
+        // (sparsity ranges, delays, custom-protocol arguments) in the
+        // protocol constructors — one source of truth
+        self.method.protocol().map(|_| ())?;
         Ok(())
     }
 }
@@ -394,5 +446,65 @@ mod tests {
         assert!(Method::SignSgd { delta: 1e-4 }.downstream_compressed());
         assert!(!Method::TopK { p: 0.1 }.downstream_compressed());
         assert!(!Method::FedAvg { n: 10 }.downstream_compressed());
+    }
+
+    #[test]
+    fn named_argument_grammar_parses() {
+        assert_eq!(
+            Method::parse("stc:p_up=0.01,p_down=0.04").unwrap(),
+            Method::Stc { p_up: 0.01, p_down: 0.04 }
+        );
+        assert_eq!(Method::parse("fedavg:n=25").unwrap(), Method::FedAvg { n: 25 });
+        assert_eq!(
+            Method::parse("hybrid:p=0.02,n=5").unwrap(),
+            Method::Hybrid { p: 0.02, n: 5 }
+        );
+        // typos in named args fail fast instead of silently defaulting
+        assert!(Method::parse("stc:p_upp=0.01").is_err());
+    }
+
+    #[test]
+    fn every_builtin_method_resolves_to_a_protocol() {
+        for m in [
+            Method::Baseline,
+            Method::FedAvg { n: 10 },
+            Method::SignSgd { delta: 0.1 },
+            Method::TopK { p: 0.02 },
+            Method::SparseUpDown { p_up: 0.05, p_down: 0.02 },
+            Method::Stc { p_up: 0.01, p_down: 0.01 },
+            Method::Hybrid { p: 0.01, n: 4 },
+        ] {
+            let p = m.protocol().unwrap();
+            assert_eq!(p.local_iters(), m.local_iters(), "{m:?}");
+            assert_eq!(p.client_residual(), m.client_residual(), "{m:?}");
+            assert_eq!(p.downstream_compressed(), m.downstream_compressed(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn custom_methods_flow_through_the_registry() {
+        crate::protocol::register("cfg-test-proto", |a| {
+            a.expect_keys(&[], 0)?;
+            crate::protocol::by_name("stc:0.5")
+        })
+        .unwrap();
+        let m = Method::parse("cfg-test-proto").unwrap();
+        assert_eq!(m, Method::Custom("cfg-test-proto".into()));
+        assert_eq!(m.label(), "cfg-test-proto");
+        assert!(m.client_residual());
+        assert_eq!(m.local_iters(), 1);
+        let cfg = FedConfig { method: m, ..Default::default() };
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn bad_method_params_rejected_by_validate() {
+        let mut c =
+            FedConfig { method: Method::Stc { p_up: 0.0, p_down: 0.1 }, ..Default::default() };
+        assert!(c.validate().is_err());
+        c.method = Method::Hybrid { p: 0.1, n: 0 };
+        assert!(c.validate().is_err());
+        c.method = Method::Custom("never-registered:1".into());
+        assert!(c.validate().is_err());
     }
 }

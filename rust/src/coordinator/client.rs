@@ -1,9 +1,10 @@
 //! Client-side state and local training (Algorithm 2, lines 6–15).
 
-use crate::compression::{Compressor, Message};
+use crate::compression::Message;
 use crate::config::FedConfig;
 use crate::data::{Batcher, Dataset};
 use crate::models::Trainer;
+use crate::protocol::Protocol;
 
 /// Persistent per-client state. Everything else (the parameter vector)
 /// is a scratch copy of the global model — see the module docs of
@@ -125,31 +126,28 @@ impl ClientState {
     }
 
     /// Compress the weight update `delta` = W_local − W_global through
-    /// `compressor` with error feedback (Algorithm 2 lines 10–13):
+    /// the protocol's upstream codec with error feedback (Algorithm 2
+    /// lines 10–13):
     ///
     /// ```text
     /// acc  = A_i + ΔW_i
-    /// ΔW̃_i = compress(acc)
-    /// A_i  = acc − ΔW̃_i        (only if the codec uses error feedback)
+    /// ΔW̃_i = up_encode(acc)
+    /// A_i  = acc − ΔW̃_i        (only if the protocol uses error feedback)
     /// ```
     ///
     /// `delta` is consumed as the accumulator scratch.
-    pub fn compress_update(
-        &mut self,
-        mut delta: Vec<f32>,
-        compressor: &mut dyn Compressor,
-    ) -> Message {
-        if compressor.error_feedback() {
+    pub fn compress_update(&mut self, mut delta: Vec<f32>, proto: &mut dyn Protocol) -> Message {
+        if proto.client_residual() {
             debug_assert_eq!(self.residual.len(), delta.len());
             for (d, r) in delta.iter_mut().zip(&self.residual) {
                 *d += *r;
             }
-            let msg = compressor.compress(&delta);
+            let msg = proto.up_encode(&delta);
             msg.subtract_from(&mut delta);
             self.residual = delta;
             msg
         } else {
-            compressor.compress(&delta)
+            proto.up_encode(&delta)
         }
     }
 
@@ -174,7 +172,7 @@ pub struct LocalScratch {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::compression::StcCompressor;
+    use crate::config::Method;
     use crate::data::synth::{SynthFlavor, SynthSpec};
     use crate::models::native::NativeLogreg;
     use crate::models::ModelSpec;
@@ -224,8 +222,8 @@ mod tests {
         }
         let acc: Vec<f32> =
             delta.iter().zip(&client.residual).map(|(d, r)| d + r).collect();
-        let mut comp = StcCompressor::new(0.01);
-        let msg = client.compress_update(delta, &mut comp);
+        let mut proto = Method::Stc { p_up: 0.01, p_down: 0.01 }.protocol().unwrap();
+        let msg = client.compress_update(delta, proto.as_mut());
         let dense = msg.to_dense();
         for i in 0..dim {
             let recon = dense[i] + client.residual[i];
@@ -234,11 +232,11 @@ mod tests {
     }
 
     #[test]
-    fn no_residual_codec_leaves_residual_untouched() {
+    fn no_residual_protocol_leaves_residual_untouched() {
         let (_, mut client, _, _) = setup();
         client.residual.clear(); // sign codec → no residual allocated
-        let mut comp = crate::compression::SignCompressor;
-        let msg = client.compress_update(vec![1.0, -2.0, 3.0], &mut comp);
+        let mut proto = Method::SignSgd { delta: 0.1 }.protocol().unwrap();
+        let msg = client.compress_update(vec![1.0, -2.0, 3.0], proto.as_mut());
         assert!(client.residual.is_empty());
         assert_eq!(msg.tensor_len(), 3);
     }

@@ -2,11 +2,12 @@
 
 use super::client::{ClientState, LocalScratch};
 use super::server::Server;
-use crate::compression::{Compressor, Message};
+use crate::compression::Message;
 use crate::config::FedConfig;
 use crate::data::{split_by_class, Dataset, SplitSpec};
 use crate::metrics::CommLedger;
 use crate::models::Trainer;
+use crate::protocol::Protocol;
 use crate::util::rng::Pcg64;
 
 /// A fully wired federated run: server + clients + codec + accounting.
@@ -17,7 +18,9 @@ pub struct FederatedRun {
     pub server: Server,
     pub clients: Vec<ClientState>,
     pub ledger: CommLedger,
-    up_compressor: Box<dyn Compressor>,
+    /// the method's protocol, used for its upstream half (the server
+    /// owns its own instance for aggregation)
+    up_proto: Box<dyn Protocol>,
     sampler: Pcg64,
     scratch: LocalScratch,
     /// scratch parameter vector (the client's working copy of W)
@@ -42,21 +45,20 @@ impl FederatedRun {
             seed: cfg.seed,
         };
         let shards = split_by_class(train, &spec);
-        let uses_residual = cfg.method.client_residual();
+        let up_proto = cfg.method.protocol()?;
+        let uses_residual = up_proto.client_residual();
         let clients: Vec<ClientState> = shards
             .into_iter()
             .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg, uses_residual))
             .collect();
 
-        let up_compressor = cfg.method.up_compressor();
-
-        let server = Server::new(init_params, cfg.method.clone(), cfg.cache_rounds);
+        let server = Server::new(init_params, cfg.method.clone(), cfg.cache_rounds)?;
         let sampler = Pcg64::new(cfg.seed, 0x5a3b);
         Ok(FederatedRun {
             ledger: CommLedger::new(cfg.num_clients),
             server,
             clients,
-            up_compressor,
+            up_proto,
             sampler,
             scratch: LocalScratch::default(),
             work_params: vec![0.0; dim],
@@ -72,8 +74,13 @@ impl FederatedRun {
     }
 
     /// Execute one communication round. Returns the mean local training
-    /// loss over participants.
-    pub fn run_round(&mut self, trainer: &mut dyn Trainer, data: &Dataset) -> f32 {
+    /// loss over participants; errors (instead of panicking) if the
+    /// protocol rejects the round.
+    pub fn run_round(
+        &mut self,
+        trainer: &mut dyn Trainer,
+        data: &Dataset,
+    ) -> anyhow::Result<f32> {
         let m = self.cfg.clients_per_round();
         let ids = self.sampler.sample_without_replacement(self.cfg.num_clients, m);
         self.last_participants = ids.clone();
@@ -106,14 +113,17 @@ impl FederatedRun {
             loss_sum += loss as f64;
 
             // 3. ΔW_i = W_local − W_global, compress with error feedback,
-            //    upload.
+            //    upload — through the real byte serialization: the ledger
+            //    bills the measured frame and the server receives the
+            //    decoded bytes, so the wire codecs run on every upload.
             let mut delta = std::mem::take(&mut self.work_params);
             for (d, w) in delta.iter_mut().zip(&self.server.params) {
                 *d -= *w;
             }
-            let msg = client.compress_update(delta, self.up_compressor.as_mut());
-            self.ledger.record_upload(msg.wire_bits());
-            self.round_msgs.push(msg);
+            let msg = client.compress_update(delta, self.up_proto.as_mut());
+            let wire = msg.to_wire();
+            self.ledger.record_upload(wire.payload_bits);
+            self.round_msgs.push(Message::from_bytes(&wire.bytes)?);
             self.work_params = vec![0.0; self.server.dim()];
         }
 
@@ -121,10 +131,10 @@ impl FederatedRun {
         //    broadcast's download cost is charged to clients when they
         //    next synchronise (straggler_download_bits).
         let msgs = std::mem::take(&mut self.round_msgs);
-        self.server.aggregate_and_apply(&msgs);
+        self.server.aggregate_and_apply(&msgs)?;
         self.round_msgs = msgs;
 
-        (loss_sum / ids.len() as f64) as f32
+        Ok((loss_sum / ids.len() as f64) as f32)
     }
 
     /// Drain accounting for clients that never participated again: at the
@@ -190,7 +200,7 @@ mod tests {
     #[test]
     fn full_participation_samples_everyone() {
         let (mut run, mut trainer, train, _) = build(Method::Baseline);
-        run.run_round(&mut trainer, &train);
+        run.run_round(&mut trainer, &train).unwrap();
         let mut ids = run.last_participants.clone();
         ids.sort_unstable();
         assert_eq!(ids, (0..10).collect::<Vec<_>>());
@@ -204,7 +214,7 @@ mod tests {
         let spec = ModelSpec::by_name("logreg").unwrap();
         let mut run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
         let mut trainer = NativeLogreg::new(10);
-        run.run_round(&mut trainer, &train);
+        run.run_round(&mut trainer, &train).unwrap();
         assert_eq!(run.last_participants.len(), 3);
     }
 
@@ -215,7 +225,7 @@ mod tests {
             p_down: 0.01,
         });
         for _ in 0..3 {
-            let loss = run.run_round(&mut trainer, &train);
+            let loss = run.run_round(&mut trainer, &train).unwrap();
             assert!(loss.is_finite());
         }
         assert_eq!(run.server.round, 3);
@@ -231,9 +241,9 @@ mod tests {
             p_up: 0.0025,
             p_down: 0.0025,
         });
-        run_stc.run_round(&mut trainer, &train);
+        run_stc.run_round(&mut trainer, &train).unwrap();
         let (mut run_dense, mut trainer2, train2, _) = build(Method::Baseline);
-        run_dense.run_round(&mut trainer2, &train2);
+        run_dense.run_round(&mut trainer2, &train2).unwrap();
         let ratio =
             run_dense.ledger.total_up_bits as f64 / run_stc.ledger.total_up_bits as f64;
         assert!(ratio > 100.0, "compression ratio {ratio}");
@@ -247,7 +257,7 @@ mod tests {
         });
         let before = trainer.eval(&run.server.params, &test).accuracy;
         for _ in 0..60 {
-            run.run_round(&mut trainer, &train);
+            run.run_round(&mut trainer, &train).unwrap();
         }
         let after = trainer.eval(&run.server.params, &test).accuracy;
         assert!(
@@ -260,7 +270,7 @@ mod tests {
     fn training_learns_fedavg() {
         let (mut run, mut trainer, train, test) = build(Method::FedAvg { n: 5 });
         for _ in 0..12 {
-            run.run_round(&mut trainer, &train);
+            run.run_round(&mut trainer, &train).unwrap();
         }
         let after = trainer.eval(&run.server.params, &test).accuracy;
         assert!(after > 0.5, "FedAvg accuracy {after}");
@@ -276,7 +286,7 @@ mod tests {
         let mut run = FederatedRun::new(cfg, &train, spec.init_flat(7)).unwrap();
         let mut trainer = NativeLogreg::new(10);
         for _ in 0..5 {
-            run.run_round(&mut trainer, &train);
+            run.run_round(&mut trainer, &train).unwrap();
         }
         run.settle_final_downloads();
         for c in &run.clients {
@@ -305,8 +315,8 @@ mod tests {
         let (mut a, mut ta, train_a, _) = build(Method::Stc { p_up: 0.02, p_down: 0.02 });
         let (mut b, mut tb, train_b, _) = build(Method::Stc { p_up: 0.02, p_down: 0.02 });
         for _ in 0..4 {
-            a.run_round(&mut ta, &train_a);
-            b.run_round(&mut tb, &train_b);
+            a.run_round(&mut ta, &train_a).unwrap();
+            b.run_round(&mut tb, &train_b).unwrap();
         }
         assert_eq!(a.server.params, b.server.params);
         assert_eq!(a.ledger.total_up_bits, b.ledger.total_up_bits);

@@ -1,50 +1,66 @@
-//! The parameter server (Algorithm 2, lines 16–23): aggregation with a
-//! server-side error-feedback residual, downstream compression, and the
-//! §V-B partial-sum cache for stragglers.
+//! The parameter server (Algorithm 2, lines 16–23), reduced to generic
+//! state: the global model W, the round counter T, and the §V-B
+//! broadcast-bit cache that prices straggler catch-up downloads.
+//!
+//! Everything method-specific — the aggregation rule, the downstream
+//! codec, the server-side error-feedback residual R (eq. 12), signSGD's
+//! majority vote, top-k's union-cost pathology, eq. 14 pricing — lives in
+//! the [`Protocol`] impl this server was built with
+//! ([`crate::protocol`]). Each round the protocol's broadcast is pushed
+//! through its real byte serialization before being applied, so the wire
+//! codecs are exercised (and proven lossless) on the hot path.
 
-use crate::compression::{majority_vote, stc, Compressor, Message, StcCompressor};
+use crate::compression::Message;
 use crate::config::Method;
+use crate::protocol::{BroadcastCache, Protocol};
 use std::collections::VecDeque;
 
-/// The global model and all server-side method state.
+/// The global model plus protocol-agnostic server state.
 pub struct Server {
     /// global parameters W
     pub params: Vec<f32>,
     /// communication round counter T
     pub round: usize,
-    /// server residual R (eq. 12) — STC only
-    residual: Vec<f32>,
-    /// downstream STC compressor (p_down)
-    down: Option<StcCompressor>,
+    /// the method's full bidirectional contract (owns all method state)
+    proto: Box<dyn Protocol>,
     method: Method,
     /// wire bits of each past round's broadcast message, newest last —
     /// the cache that prices a straggler's catch-up download (§V-B)
     broadcast_bits: VecDeque<u64>,
     cache_rounds: usize,
-    /// scratch accumulator for aggregation
-    agg: Vec<f32>,
 }
 
 impl Server {
-    pub fn new(init_params: Vec<f32>, method: Method, cache_rounds: usize) -> Self {
-        let dim = init_params.len();
-        let (residual, down) = match &method {
-            Method::Stc { p_down, .. } => {
-                (vec![0.0; dim], Some(StcCompressor::new(*p_down)))
-            }
-            Method::Hybrid { p, .. } => (vec![0.0; dim], Some(StcCompressor::new(*p))),
-            Method::SparseUpDown { .. } => (vec![0.0; dim], None),
-            _ => (Vec::new(), None),
-        };
-        Server {
+    /// Build a server for `method` (resolved through
+    /// [`Method::protocol`]); errors on unresolvable method parameters
+    /// instead of panicking.
+    pub fn new(init_params: Vec<f32>, method: Method, cache_rounds: usize) -> anyhow::Result<Self> {
+        let proto = method.protocol()?;
+        Ok(Server {
             params: init_params,
             round: 0,
-            residual,
-            down,
+            proto,
             method,
             broadcast_bits: VecDeque::new(),
             cache_rounds,
-            agg: vec![0.0; dim],
+        })
+    }
+
+    /// Build a server around an already-constructed protocol (conformance
+    /// harnesses, external protocols not expressible as a parsed method).
+    pub fn with_protocol(
+        init_params: Vec<f32>,
+        proto: Box<dyn Protocol>,
+        cache_rounds: usize,
+    ) -> Self {
+        let method = Method::Custom(proto.name());
+        Server {
+            params: init_params,
+            round: 0,
+            proto,
+            method,
+            broadcast_bits: VecDeque::new(),
+            cache_rounds,
         }
     }
 
@@ -56,138 +72,65 @@ impl Server {
         &self.method
     }
 
+    /// The protocol driving this server (diagnostics / conformance).
+    pub fn protocol(&self) -> &dyn Protocol {
+        self.proto.as_ref()
+    }
+
     /// Aggregate one round of client messages, update the global model,
-    /// and return the bits of the downstream broadcast message.
+    /// and return the bits of the downstream broadcast message. Errors on
+    /// an empty round or a malformed message mix instead of panicking.
     ///
-    /// Per method (paper §V / Table I):
-    /// * STC:      ΔW = R + mean(decode(msgs)); ΔW̃ = STC_p_down(ΔW);
-    ///             R ← ΔW − ΔW̃; W ← W + ΔW̃; broadcast ΔW̃ (Golomb).
-    /// * signSGD:  ΔW̃ = δ · majority_vote(signs); W ← W + ΔW̃;
-    ///             broadcast is 1 bit/param.
-    /// * FedAvg /
-    ///   baseline: ΔW̃ = mean(msgs); dense broadcast.
-    /// * top-k:    ΔW̃ = mean(msgs); broadcast is the sparse union, which
-    ///             degrades towards dense as participation grows — the
-    ///             exact pathology Table I calls out (no downstream
-    ///             compression); costed at min(union, dense).
-    pub fn aggregate_and_apply(&mut self, messages: &[Message]) -> usize {
-        assert!(!messages.is_empty(), "round with no participants");
-        let n = self.dim();
-        let inv = 1.0 / messages.len() as f32;
-
-        let broadcast_bits = match &self.method {
-            Method::SignSgd { delta } => {
-                let refs: Vec<&Message> = messages.iter().collect();
-                let update = majority_vote(&refs, *delta);
-                for (w, u) in self.params.iter_mut().zip(&update) {
-                    *w += u;
-                }
-                // downstream: one sign bit per parameter (+δ header)
-                n + 32
-            }
-            Method::Stc { .. } | Method::Hybrid { .. } => {
-                // ΔW = R + mean of decoded client updates
-                self.agg.copy_from_slice(&self.residual);
-                for m in messages {
-                    m.add_to(&mut self.agg, inv);
-                }
-                let tern = {
-                    let down = self.down.as_mut().expect("stc server state");
-                    match down.compress(&self.agg) {
-                        Message::Ternary(t) => t,
-                        _ => unreachable!(),
-                    }
-                };
-                // R ← ΔW − ΔW̃ ; W ← W + ΔW̃
-                tern.add_to(&mut self.params, 1.0);
-                tern.subtract_from(&mut self.agg);
-                self.residual.copy_from_slice(&self.agg);
-                Message::Ternary(tern).wire_bits()
-            }
-            Method::SparseUpDown { p_down, .. } => {
-                // eq. (10): top-k the mean (plus server residual) at full
-                // value precision — the pre-ternarisation protocol
-                self.agg.copy_from_slice(&self.residual);
-                for m in messages {
-                    m.add_to(&mut self.agg, inv);
-                }
-                let (indices, values) = stc::topk_sparse(&self.agg, *p_down);
-                let msg = Message::Sparse { len: n, indices, values };
-                msg.add_to(&mut self.params, 1.0);
-                msg.subtract_from(&mut self.agg);
-                self.residual.copy_from_slice(&self.agg);
-                msg.wire_bits()
-            }
-            Method::Baseline | Method::FedAvg { .. } | Method::TopK { .. } => {
-                self.agg.iter_mut().for_each(|x| *x = 0.0);
-                for m in messages {
-                    m.add_to(&mut self.agg, inv);
-                }
-                for (w, u) in self.params.iter_mut().zip(&self.agg) {
-                    *w += u;
-                }
-                if matches!(self.method, Method::TopK { .. }) {
-                    // sparse union support; cost capped at dense
-                    let nnz = self.agg.iter().filter(|x| **x != 0.0).count();
-                    (nnz * 48).min(32 * n)
-                } else {
-                    32 * n
-                }
-            }
-        };
-
+    /// The protocol computes the broadcast (and updates any server-side
+    /// residual); this server then serializes it to real bytes *once* —
+    /// billing that frame's measured payload unless the protocol priced
+    /// the round explicitly — decodes those bytes, and applies the
+    /// decoded update, so every round round-trips the downstream
+    /// direction through the wire format.
+    pub fn aggregate_and_apply(&mut self, messages: &[Message]) -> anyhow::Result<usize> {
+        anyhow::ensure!(!messages.is_empty(), "round with no participants");
+        let b = self.proto.aggregate(messages)?;
+        anyhow::ensure!(
+            b.msg.tensor_len() == self.dim(),
+            "broadcast tensor length {} != model dimension {}",
+            b.msg.tensor_len(),
+            self.dim()
+        );
+        let wire = b.msg.to_wire();
+        let down_bits = b.down_bits.unwrap_or(wire.payload_bits);
+        let decoded = Message::from_bytes(&wire.bytes)?;
+        decoded.add_to(&mut self.params, b.scale);
         self.round += 1;
-        self.broadcast_bits.push_back(broadcast_bits as u64);
+        self.broadcast_bits.push_back(down_bits as u64);
         if self.broadcast_bits.len() > self.cache_rounds {
             self.broadcast_bits.pop_front();
         }
-        broadcast_bits
+        Ok(down_bits)
     }
 
     /// Download cost in bits for a client that last synchronised at
-    /// server round `last_sync` and joins now (§V-B): the cached partial
-    /// sum P^(s) of the s missed broadcasts, or the full dense model if
-    /// that is cheaper / the cache no longer reaches back far enough.
-    ///
-    /// For signSGD the partial sum of s sign vectors needs only
-    /// log2(2s+1) bits per parameter (eq. 14) rather than s separate
-    /// messages.
+    /// server round `last_sync` and joins now (§V-B): priced by the
+    /// protocol from the cached partial sums (eq. 13 by default, eq. 14
+    /// for signSGD), with cache eviction falling back to — and every
+    /// price capped at — a dense model download.
     pub fn straggler_download_bits(&self, last_sync: usize) -> usize {
         let s = self.round - last_sync;
         if s == 0 {
             return 0;
         }
-        let dense_bits = 32 * self.dim();
-        if s > self.broadcast_bits.len() {
-            return dense_bits; // cache evicted → full model download
-        }
-        let cached: u64 = match &self.method {
-            Method::SignSgd { .. } => {
-                // eq. 14: H(P^(τ)) ≤ log2(2τ+1) per parameter
-                (self.dim() as f64 * ((2 * s + 1) as f64).log2()).ceil() as u64 + 32
-            }
-            _ => self
-                .broadcast_bits
-                .iter()
-                .rev()
-                .take(s)
-                .sum(),
-        };
-        (cached as usize).min(dense_bits)
+        self.proto.straggler_bits(s, &BroadcastCache::new(&self.broadcast_bits, self.dim()))
     }
 
-    /// L2 norm of the server residual (diagnostic).
+    /// L2 norm of the protocol's server residual (diagnostic; 0 for
+    /// protocols without server-side error feedback).
     pub fn residual_norm(&self) -> f64 {
-        crate::util::stats::l2_norm(&self.residual)
+        self.proto.server_residual().map(crate::util::stats::l2_norm).unwrap_or(0.0)
     }
 
-    /// Effective sparsity of the last broadcast for diagnostics: the
-    /// number of kept coordinates the down-compressor would use.
+    /// Effective sparsity of the downstream broadcast for diagnostics:
+    /// the number of kept coordinates the down-compressor would use.
     pub fn down_k(&self) -> Option<usize> {
-        match &self.method {
-            Method::Stc { p_down, .. } => Some(stc::k_for(self.dim(), *p_down)),
-            _ => None,
-        }
+        self.proto.down_k(self.dim())
     }
 }
 
@@ -202,11 +145,13 @@ mod tests {
 
     #[test]
     fn baseline_aggregation_is_mean() {
-        let mut s = Server::new(vec![0.0; 4], Method::Baseline, 10);
-        let bits = s.aggregate_and_apply(&[
-            dense_msg(&[1.0, 0.0, 2.0, -2.0]),
-            dense_msg(&[3.0, 0.0, 0.0, 2.0]),
-        ]);
+        let mut s = Server::new(vec![0.0; 4], Method::Baseline, 10).unwrap();
+        let bits = s
+            .aggregate_and_apply(&[
+                dense_msg(&[1.0, 0.0, 2.0, -2.0]),
+                dense_msg(&[3.0, 0.0, 0.0, 2.0]),
+            ])
+            .unwrap();
         assert_eq!(s.params, vec![2.0, 0.0, 1.0, 0.0]);
         assert_eq!(bits, 128);
         assert_eq!(s.round, 1);
@@ -218,20 +163,21 @@ mod tests {
         // only the top 5 and must bank the other 5 in its residual.
         let dim = 100;
         let method = Method::Stc { p_up: 0.10, p_down: 0.05 };
-        let mut s = Server::new(vec![0.0; dim], method, 10);
+        let mut s = Server::new(vec![0.0; dim], method, 10).unwrap();
         let mut up = StcCompressor::new(0.10);
         let update: Vec<f32> = (0..dim).map(|i| (i as f32 - 50.0) * 0.01).collect();
         let msg = up.compress(&update);
-        s.aggregate_and_apply(std::slice::from_ref(&msg));
+        s.aggregate_and_apply(std::slice::from_ref(&msg)).unwrap();
         // k_down = 5 of 100 coords survive; residual holds the rest
         let nnz_params = s.params.iter().filter(|x| **x != 0.0).count();
         assert_eq!(nnz_params, 5);
         assert!(s.residual_norm() > 0.0);
         // conservation: decoded client update = params + residual
         let dense = msg.to_dense();
+        let resid = s.protocol().server_residual().expect("stc keeps a server residual");
         for i in 0..dim {
             let lhs = dense[i];
-            let rhs = s.params[i] + s.agg[i]; // agg holds residual copy
+            let rhs = s.params[i] + resid[i];
             assert!((lhs - rhs).abs() < 1e-6, "coord {i}: {lhs} vs {rhs}");
         }
     }
@@ -242,12 +188,12 @@ mod tests {
         // coordinate through within ~1/p rounds
         let dim = 200;
         let method = Method::Stc { p_up: 1.0, p_down: 0.05 };
-        let mut s = Server::new(vec![0.0; dim], method, 10);
+        let mut s = Server::new(vec![0.0; dim], method, 10).unwrap();
         let update: Vec<f32> = (0..dim).map(|i| 0.01 + (i % 7) as f32 * 0.001).collect();
         for _ in 0..60 {
             // clients send dense (p_up = 1 ⇒ ternary over everything);
             // use a dense message to isolate server behaviour
-            s.aggregate_and_apply(&[dense_msg(&update)]);
+            s.aggregate_and_apply(&[dense_msg(&update)]).unwrap();
         }
         let moved = s.params.iter().filter(|x| **x != 0.0).count();
         assert_eq!(moved, dim, "all coordinates eventually transmitted");
@@ -256,12 +202,12 @@ mod tests {
     #[test]
     fn signsgd_majority_applied() {
         let method = Method::SignSgd { delta: 0.5 };
-        let mut s = Server::new(vec![0.0; 3], method, 10);
+        let mut s = Server::new(vec![0.0; 3], method, 10).unwrap();
         let mut c = SignCompressor;
         let m1 = c.compress(&[1.0, -1.0, 1.0]);
         let m2 = c.compress(&[1.0, -1.0, -1.0]);
         let m3 = c.compress(&[1.0, 1.0, -1.0]);
-        let bits = s.aggregate_and_apply(&[m1, m2, m3]);
+        let bits = s.aggregate_and_apply(&[m1, m2, m3]).unwrap();
         assert_eq!(s.params, vec![0.5, -0.5, -0.5]);
         assert_eq!(bits, 3 + 32);
     }
@@ -270,7 +216,7 @@ mod tests {
     fn topk_broadcast_cost_degrades_to_dense() {
         // many clients with disjoint supports → union ≈ dense (Table I)
         let dim = 100;
-        let mut s = Server::new(vec![0.0; dim], Method::TopK { p: 0.05 }, 10);
+        let mut s = Server::new(vec![0.0; dim], Method::TopK { p: 0.05 }, 10).unwrap();
         let mut msgs = Vec::new();
         for c in 0..20 {
             let indices: Vec<u32> = (0..5).map(|j| (c * 5 + j) as u32).collect();
@@ -280,15 +226,15 @@ mod tests {
                 values: vec![1.0; 5],
             });
         }
-        let bits = s.aggregate_and_apply(&msgs);
+        let bits = s.aggregate_and_apply(&msgs).unwrap();
         assert_eq!(bits, 32 * dim, "union support hit the dense cap");
     }
 
     #[test]
     fn straggler_bits_sum_recent_rounds() {
-        let mut s = Server::new(vec![0.0; 10], Method::Baseline, 100);
+        let mut s = Server::new(vec![0.0; 10], Method::Baseline, 100).unwrap();
         for _ in 0..5 {
-            s.aggregate_and_apply(&[dense_msg(&[0.1; 10])]);
+            s.aggregate_and_apply(&[dense_msg(&[0.1; 10])]).unwrap();
         }
         // dense per-round broadcast = 320 bits; s=2 → 640 but capped at
         // dense model download 320
@@ -301,12 +247,12 @@ mod tests {
     fn straggler_bits_stc_sums_sparse_messages() {
         let dim = 10_000;
         let method = Method::Stc { p_up: 0.01, p_down: 0.01 };
-        let mut s = Server::new(vec![0.0; dim], method, 100);
+        let mut s = Server::new(vec![0.0; dim], method, 100).unwrap();
         let mut up = StcCompressor::new(0.01);
         let update: Vec<f32> = (0..dim).map(|i| ((i * 37) % 101) as f32 * 0.01 - 0.5).collect();
         for _ in 0..4 {
             let m = up.compress(&update);
-            s.aggregate_and_apply(&[m]);
+            s.aggregate_and_apply(&[m]).unwrap();
         }
         let one = s.straggler_download_bits(s.round - 1);
         let four = s.straggler_download_bits(s.round - 4);
@@ -318,11 +264,11 @@ mod tests {
     fn straggler_bits_signsgd_logarithmic() {
         let dim = 1000;
         let method = Method::SignSgd { delta: 0.1 };
-        let mut s = Server::new(vec![0.0; dim], method, 100);
+        let mut s = Server::new(vec![0.0; dim], method, 100).unwrap();
         let mut c = SignCompressor;
         for _ in 0..20 {
             let m = c.compress(&vec![1.0; dim]);
-            s.aggregate_and_apply(&[m]);
+            s.aggregate_and_apply(&[m]).unwrap();
         }
         let one = s.straggler_download_bits(s.round - 1) as f64;
         let twenty = s.straggler_download_bits(s.round - 20) as f64;
@@ -332,18 +278,37 @@ mod tests {
 
     #[test]
     fn cache_eviction_falls_back_to_dense() {
-        let mut s = Server::new(vec![0.0; 10], Method::Baseline, 3);
+        let mut s = Server::new(vec![0.0; 10], Method::Baseline, 3).unwrap();
         for _ in 0..10 {
-            s.aggregate_and_apply(&[dense_msg(&[0.1; 10])]);
+            s.aggregate_and_apply(&[dense_msg(&[0.1; 10])]).unwrap();
         }
         // 5 rounds behind but cache only holds 3 → dense download
         assert_eq!(s.straggler_download_bits(s.round - 5), 320);
     }
 
     #[test]
-    #[should_panic(expected = "no participants")]
-    fn empty_round_panics() {
-        let mut s = Server::new(vec![0.0; 4], Method::Baseline, 10);
-        s.aggregate_and_apply(&[]);
+    fn empty_round_is_a_clean_error() {
+        let mut s = Server::new(vec![0.0; 4], Method::Baseline, 10).unwrap();
+        let err = s.aggregate_and_apply(&[]).unwrap_err().to_string();
+        assert!(err.contains("no participants"), "{err}");
+        assert_eq!(s.round, 0, "a failed round must not advance the counter");
+    }
+
+    #[test]
+    fn with_protocol_drives_registry_protocols() {
+        let proto = crate::protocol::by_name("stc:0.1:0.1").unwrap();
+        let mut s = Server::with_protocol(vec![0.0; 50], proto, 10);
+        assert_eq!(s.method().label(), "stc:0.1:0.1");
+        let bits = s.aggregate_and_apply(&[dense_msg(&[1.0; 50])]).unwrap();
+        assert!(bits > 0);
+        assert_eq!(s.round, 1);
+    }
+
+    #[test]
+    fn broadcast_dim_mismatch_is_an_error() {
+        // a protocol broadcasting the clients' (wrong) dimension must be
+        // caught before corrupting the model
+        let mut s = Server::new(vec![0.0; 8], Method::Baseline, 10).unwrap();
+        assert!(s.aggregate_and_apply(&[dense_msg(&[1.0; 4])]).is_err());
     }
 }

@@ -19,10 +19,20 @@
 //! * [`models`] — model metadata (parameter shapes mirroring the L2 JAX
 //!   definitions), rust-side initialisation, and a dependency-free native
 //!   reference trainer used for cross-checks and fast analysis benches.
+//! * [`protocol`] — the bidirectional protocol layer: one pluggable
+//!   trait owning a method's full round contract (upstream codec,
+//!   aggregation rule, downstream broadcast, §V-B straggler pricing),
+//!   plus a string-keyed registry (`protocol::by_name("stc:0.01")`) that
+//!   external code extends with `protocol::register` — a new method is
+//!   one new file (see `examples/custom_protocol.rs`).
 //! * [`coordinator`] — the paper's system contribution: parameter server
 //!   with upstream *and* downstream compression, error-feedback residuals
 //!   on both sides, the partial-sum cache for partial participation
-//!   (§V-B), client state, and the Algorithm 2 round loop.
+//!   (§V-B), client state, and the Algorithm 2 round loop. The server is
+//!   generic state (params, round counter, broadcast cache) driving
+//!   whichever [`protocol::Protocol`] it was built with, and every
+//!   message in both directions round-trips through its real byte
+//!   serialization.
 //! * [`cluster`] — the parallel cluster simulation: a tick-driven
 //!   coordinator state machine (WaitingForMembers → Warmup → RoundTrain →
 //!   Aggregate → Cooldown) over a dynamic client population with
@@ -47,6 +57,7 @@ pub mod coordinator;
 pub mod data;
 pub mod metrics;
 pub mod models;
+pub mod protocol;
 pub mod runtime;
 pub mod sim;
 pub mod util;

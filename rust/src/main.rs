@@ -1,13 +1,14 @@
 //! `repro` — the fedstc command-line launcher.
 //!
 //! Subcommands:
-//!   train    run one federated training experiment and print the curve
-//!   cluster  run the tick-driven parallel cluster simulation (dynamic
-//!            membership: joins, dropouts, stragglers, churn)
-//!   alpha    gradient sign-congruence analysis (paper Fig. 3)
-//!   info     artifact + model inventory
-//!   sweep    grid over one config key (comma-separated values)
-//!   help     this text
+//!   train      run one federated training experiment and print the curve
+//!   cluster    run the tick-driven parallel cluster simulation (dynamic
+//!              membership: joins, dropouts, stragglers, churn)
+//!   alpha      gradient sign-congruence analysis (paper Fig. 3)
+//!   protocols  list the registered compression protocols (--method names)
+//!   info       artifact + model inventory
+//!   sweep      grid over one config key (comma-separated values)
+//!   help       this text
 //!
 //! Config keys accepted by `train`/`sweep` mirror `FedConfig::apply_kv`:
 //!   --model logreg|cnn|kws|lstm   --method stc:0.0025 | fedavg:400 |
@@ -21,6 +22,7 @@ use fedstc::config::FedConfig;
 use fedstc::data::synth::task_dataset;
 use fedstc::metrics::{EvalPoint, TrainingLog};
 use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
+use fedstc::protocol::Protocol;
 use fedstc::runtime::{Engine, HloTrainer};
 use fedstc::sim::alpha::{AlphaAnalysis, BatchRegime};
 use fedstc::sim::{cluster_report_csv, cluster_report_json, Experiment};
@@ -39,6 +41,7 @@ fn run() -> anyhow::Result<()> {
         "train" => cmd_train(&args),
         "cluster" => cmd_cluster(&args),
         "alpha" => cmd_alpha(&args),
+        "protocols" => cmd_protocols(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),
         _ => {
@@ -209,7 +212,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8}  {:>8}  {:>9}  {:>8}  {:>8}",
         "round", "sel", "aggr", "drop", "late", "loss", "acc", "simsecs", "queuesec", "catchupMB"
     );
-    while let Some(s) = cluster.next_round(&factory, &exp.train) {
+    while let Some(s) = cluster.next_round(&factory, &exp.train)? {
         let round = cluster.rounds_done;
         if s.aggregated > 0
             && (round % eval_every_rounds == 0 || round == cluster.target_rounds())
@@ -325,6 +328,35 @@ fn cmd_alpha(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro protocols` — the registry behind `--method`: every compression
+/// protocol (Table I rows + anything registered at runtime), with its
+/// upstream codec and round metadata.
+fn cmd_protocols(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    println!("registered protocols (use as --method <spec>):");
+    println!(
+        "{:<22} {:>14} {:>9} {:>12} {:>11}",
+        "spec (defaults)", "up codec", "residual", "local_iters", "down compr"
+    );
+    for name in fedstc::protocol::names() {
+        let p = fedstc::protocol::by_name(&name)?;
+        println!(
+            "{:<22} {:>14} {:>9} {:>12} {:>11}",
+            p.name(),
+            p.up_codec_name(),
+            if p.client_residual() { "yes" } else { "no" },
+            p.local_iters(),
+            if p.downstream_compressed() { "yes" } else { "no" }
+        );
+    }
+    println!(
+        "\nargs: positional (stc:0.01:0.02) or named (stc:p_up=0.01,p_down=0.02);\n\
+         external protocols register via fedstc::protocol::register — see\n\
+         examples/custom_protocol.rs"
+    );
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     args.finish()?;
     println!("fedstc {} — Sparse Ternary Compression for Federated Learning", fedstc::VERSION);
@@ -387,14 +419,16 @@ fn print_help() {
     println!(
         "repro — fedstc launcher (Sparse Ternary Compression, Sattler et al. 2019)
 
-usage: repro <train|cluster|alpha|info|sweep|help> [--key value]...
+usage: repro <train|cluster|alpha|protocols|info|sweep|help> [--key value]...
 
 examples:
   repro train --model logreg --method stc:0.0025 --classes 1 --iters 400
+  repro train --model logreg --method stc:p_up=0.01,p_down=0.04 --iters 400
   repro train --model cnn --backend hlo --method fedavg:25 --iters 200
   repro cluster --workers 4 --dropout-rate 0.2 --straggler-frac 0.1 \\
       --churn 0.1 --clients 100 --iters 400 --method stc:0.01
   repro alpha --ks 1,8,64 --trials 100
+  repro protocols
   repro sweep --key classes --values 1,2,4,10 --method stc:0.01 --iters 300
   repro info
 

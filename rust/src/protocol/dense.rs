@@ -1,0 +1,112 @@
+//! Uncompressed dense communication: the baseline (communicate every
+//! iteration) and Federated Averaging (communicate full updates every n
+//! local iterations) — Table I's first two rows. One protocol, because
+//! FedAvg *is* the baseline wire format with a communication delay.
+
+use super::{mean_into, uniform_dim, Broadcast, Protocol};
+use crate::compression::{Compressor, DenseCompressor, Message};
+
+/// Full-precision dense protocol with an optional FedAvg delay.
+pub struct DenseProtocol {
+    /// local iterations per round (1 = baseline)
+    n: usize,
+    up: DenseCompressor,
+    agg: Vec<f32>,
+}
+
+impl DenseProtocol {
+    /// Baseline distributed SGD: dense both ways, every iteration.
+    pub fn baseline() -> Self {
+        DenseProtocol { n: 1, up: DenseCompressor, agg: Vec::new() }
+    }
+
+    /// Federated Averaging with n local iterations per round.
+    pub fn fedavg(n: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(n >= 1, "fedavg delay n must be >= 1, got {n}");
+        Ok(DenseProtocol { n, up: DenseCompressor, agg: Vec::new() })
+    }
+}
+
+impl Protocol for DenseProtocol {
+    fn name(&self) -> String {
+        if self.n == 1 {
+            "baseline".into()
+        } else {
+            format!("fedavg:{}", self.n)
+        }
+    }
+
+    fn up_codec_name(&self) -> String {
+        self.up.name()
+    }
+
+    fn up_encode(&mut self, acc: &[f32]) -> Message {
+        self.up.compress(acc)
+    }
+
+    fn client_residual(&self) -> bool {
+        false
+    }
+
+    fn local_iters(&self) -> usize {
+        self.n
+    }
+
+    fn downstream_compressed(&self) -> bool {
+        false
+    }
+
+    fn aggregate(&mut self, messages: &[Message]) -> anyhow::Result<Broadcast> {
+        let dim = uniform_dim(messages)?;
+        self.agg.clear();
+        self.agg.resize(dim, 0.0);
+        mean_into(&mut self.agg, messages);
+        let msg = Message::Dense { values: self.agg.clone() };
+        // billed at the measured frame: 32 bits/param
+        Ok(Broadcast { msg, scale: 1.0, down_bits: None })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn aggregation_is_mean() {
+        let mut p = DenseProtocol::baseline();
+        let msgs = vec![
+            Message::Dense { values: vec![1.0, 0.0, 2.0, -2.0] },
+            Message::Dense { values: vec![3.0, 0.0, 0.0, 2.0] },
+        ];
+        let b = p.aggregate(&msgs).unwrap();
+        assert_eq!(b.msg.to_dense(), vec![2.0, 0.0, 1.0, 0.0]);
+        assert_eq!(b.down_bits, None, "dense bills the measured frame");
+        assert_eq!(b.msg.wire_bits(), 128);
+        assert_eq!(b.scale, 1.0);
+    }
+
+    #[test]
+    fn fedavg_carries_delay() {
+        let p = DenseProtocol::fedavg(25).unwrap();
+        assert_eq!(p.local_iters(), 25);
+        assert_eq!(p.name(), "fedavg:25");
+        assert_eq!(p.up_codec_name(), "dense");
+        assert!(DenseProtocol::fedavg(0).is_err());
+    }
+
+    #[test]
+    fn empty_round_is_a_clean_error() {
+        let mut p = DenseProtocol::baseline();
+        assert!(p.aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn mismatched_dims_rejected() {
+        let mut p = DenseProtocol::baseline();
+        let msgs = vec![
+            Message::Dense { values: vec![1.0, 2.0] },
+            Message::Dense { values: vec![1.0] },
+        ];
+        assert!(p.aggregate(&msgs).is_err());
+    }
+}

@@ -1,0 +1,488 @@
+//! The bidirectional protocol layer: one pluggable trait owns the full
+//! round contract of a compression method — upstream codec, aggregation
+//! rule, downstream broadcast, and §V-B straggler pricing.
+//!
+//! The paper's central claim is that STC compresses *both* directions of
+//! federated communication (Table I, eqs. 9–17). [`Protocol`] encodes
+//! that whole contract behind one trait object:
+//!
+//! ```text
+//!   client:  acc = ΔW_i + A_i ──up_encode──▶ Message ──bytes──▶ server
+//!   server:  aggregate(msgs) ──▶ Broadcast { msg, scale, down_bits }
+//!            (server residual R, majority vote, union pricing … all
+//!             live inside the protocol impl, not in Server)
+//!   pricing: straggler_bits(s, cache) — what a client s rounds behind
+//!            pays to resynchronise through the partial-sum cache
+//! ```
+//!
+//! [`crate::coordinator::Server`] is reduced to generic state (params,
+//! round counter, broadcast-bit cache) that drives whichever protocol it
+//! was built with; the serial round loop and the cluster executor both
+//! resolve their codecs through [`crate::config::Method::protocol`], so
+//! the two paths cannot drift.
+//!
+//! ## The registry
+//!
+//! Protocols are constructed from strings — [`by_name`] understands both
+//! the legacy positional grammar (`stc:0.0025:0.0025`) and named args
+//! (`stc:p_up=0.01,p_down=0.01`). The built-ins (Table I) are
+//! pre-registered; external code adds new methods with [`register`]
+//! without touching this crate — one new file with a `Protocol` impl and
+//! one `register` call is a complete new method (see
+//! `examples/custom_protocol.rs` for a T-FedAvg-style quantizer). The
+//! registered name then works everywhere a method string is accepted,
+//! including `--method` on the CLI, via [`crate::config::Method::Custom`].
+//!
+//! Built-in protocol files, one method each:
+//!
+//! | registry name | file | Table I row |
+//! |---|---|---|
+//! | `baseline`, `fedavg:n` | [`dense`] | uncompressed SGD / FedAvg |
+//! | `signsgd:δ` | [`signsgd`] | signSGD with majority vote |
+//! | `topk:p` | [`topk`] | top-k, upload only |
+//! | `sparse:p_up:p_down` | [`sparse`] | eq. (10) sparse both ways |
+//! | `stc:p_up:p_down`, `hybrid:p:n` | [`stc`] | STC (the paper's method) |
+
+pub mod dense;
+pub mod signsgd;
+pub mod sparse;
+pub mod stc;
+pub mod topk;
+
+use crate::compression::{Compressor, Message};
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// What the server sends down after one aggregation: the broadcast
+/// message every synchronised client applies, the scale it is applied at
+/// (δ for signSGD, 1 otherwise), and optionally an explicit downstream
+/// price.
+///
+/// `down_bits = None` means "bill the measured wire frame" — the server
+/// serializes the broadcast exactly once and charges that frame's
+/// payload bits (the common case, and why this is an Option rather than
+/// each protocol calling `wire_bits()` and forcing a second encode).
+/// `Some(bits)` overrides the measurement for protocols whose billed
+/// cost is not the applied message — top-k broadcasts the dense mean but
+/// prices the sparse union capped at dense (the Table I pathology).
+pub struct Broadcast {
+    pub msg: Message,
+    pub scale: f32,
+    pub down_bits: Option<usize>,
+}
+
+/// Read-only view of the server's per-round broadcast-bit cache, handed
+/// to [`Protocol::straggler_bits`] for §V-B catch-up pricing.
+pub struct BroadcastCache<'a> {
+    bits: &'a VecDeque<u64>,
+    dim: usize,
+}
+
+impl<'a> BroadcastCache<'a> {
+    pub fn new(bits: &'a VecDeque<u64>, dim: usize) -> Self {
+        BroadcastCache { bits, dim }
+    }
+
+    /// Model dimension n.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Cost of a full dense model download (the fallback and the cap).
+    pub fn dense_model_bits(&self) -> usize {
+        32 * self.dim
+    }
+
+    /// Whether the cache still reaches back `s` rounds.
+    pub fn covers(&self, s: usize) -> bool {
+        s <= self.bits.len()
+    }
+
+    /// Sum of the newest `s` cached broadcast sizes (eq. 13's P^(s)).
+    pub fn sum_last(&self, s: usize) -> u64 {
+        self.bits.iter().rev().take(s).sum()
+    }
+}
+
+/// One compression method's complete bidirectional round contract.
+///
+/// Implementations are stateful: upstream scratch buffers and the
+/// server-side error-feedback residual R (eq. 12) live *inside* the
+/// protocol, so [`crate::coordinator::Server`] stays generic. Client-side
+/// residuals A_i stay per-client in
+/// [`crate::coordinator::ClientState`] — the protocol only declares
+/// whether they exist ([`Protocol::client_residual`]).
+pub trait Protocol: Send {
+    /// Canonical registry spec for this instance (parsable by
+    /// [`by_name`]), e.g. `stc:0.01:0.01`.
+    fn name(&self) -> String;
+
+    /// Display name of the upstream codec (Table I row; used in
+    /// tables/CSV and by the [`Compressor`] shim).
+    fn up_codec_name(&self) -> String {
+        self.name()
+    }
+
+    /// Client-side: compress the accumulated update (ΔW_i + A_i, summed
+    /// by the caller) into a wire message.
+    fn up_encode(&mut self, acc: &[f32]) -> Message;
+
+    /// Whether clients keep an error-feedback residual A_i
+    /// (eqs. 9/11/12; false for signSGD and dense communication).
+    fn client_residual(&self) -> bool;
+
+    /// Local SGD iterations per communication round (FedAvg-style delay;
+    /// 1 for communicate-every-iteration methods).
+    fn local_iters(&self) -> usize {
+        1
+    }
+
+    /// Whether the downstream direction is compressed (R1 of Table I) —
+    /// metadata for tables and docs; the actual costing is
+    /// [`Broadcast::down_bits`].
+    fn downstream_compressed(&self) -> bool;
+
+    /// Server-side: reduce one round of client messages into the
+    /// downstream [`Broadcast`]. The server serializes `msg` once,
+    /// applies the decoded bytes to the global model at `scale`, and
+    /// caches the billed bits ([`Broadcast::down_bits`]).
+    /// Must error — not panic — on an empty or malformed round.
+    fn aggregate(&mut self, messages: &[Message]) -> anyhow::Result<Broadcast>;
+
+    /// §V-B: download price for a client `s ≥ 1` rounds behind. The
+    /// default sums the cached broadcasts (eq. 13) capped at a dense
+    /// model download, with cache eviction forcing the dense fallback;
+    /// protocols with cheaper partial sums override (signSGD's eq. 14).
+    fn straggler_bits(&self, s: usize, cache: &BroadcastCache) -> usize {
+        if s == 0 {
+            return 0;
+        }
+        let dense = cache.dense_model_bits();
+        if !cache.covers(s) {
+            return dense; // cache evicted → full model download
+        }
+        (cache.sum_last(s) as usize).min(dense)
+    }
+
+    /// Server-side error-feedback residual R, if this protocol keeps one
+    /// (diagnostics + conformance tests). None before the first round.
+    fn server_residual(&self) -> Option<&[f32]> {
+        None
+    }
+
+    /// Number of coordinates the downstream compressor would keep for a
+    /// model of dimension `dim` (diagnostics).
+    fn down_k(&self, _dim: usize) -> Option<usize> {
+        None
+    }
+}
+
+/// Shared aggregation arithmetic: `agg += (1/m)·Σ decode(msgs)`, in
+/// message order — the exact f32 operation sequence the pre-protocol
+/// `Server` used, so refactors cannot drift the bits.
+pub(crate) fn mean_into(agg: &mut [f32], messages: &[Message]) {
+    let inv = 1.0 / messages.len() as f32;
+    for m in messages {
+        m.add_to(agg, inv);
+    }
+}
+
+/// Validate a round's messages agree on the tensor length and return it.
+pub(crate) fn uniform_dim(messages: &[Message]) -> anyhow::Result<usize> {
+    anyhow::ensure!(!messages.is_empty(), "aggregate over a round with no participants");
+    let dim = messages[0].tensor_len();
+    for (i, m) in messages.iter().enumerate() {
+        anyhow::ensure!(
+            m.tensor_len() == dim,
+            "client message {i} has tensor length {} != {dim}",
+            m.tensor_len()
+        );
+    }
+    Ok(dim)
+}
+
+/// Adapter exposing a protocol's upstream half through the legacy
+/// [`Compressor`] trait (keeps `Method::up_compressor` and
+/// `compression::by_name` callers working unchanged).
+pub struct UpCodec {
+    proto: Box<dyn Protocol>,
+}
+
+impl UpCodec {
+    pub fn new(proto: Box<dyn Protocol>) -> Self {
+        UpCodec { proto }
+    }
+}
+
+impl Compressor for UpCodec {
+    fn name(&self) -> String {
+        self.proto.up_codec_name()
+    }
+    fn compress(&mut self, acc: &[f32]) -> Message {
+        self.proto.up_encode(acc)
+    }
+    fn error_feedback(&self) -> bool {
+        self.proto.client_residual()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spec-string parsing
+// ---------------------------------------------------------------------
+
+/// Parsed protocol arguments. Accepts the legacy positional grammar
+/// (`stc:0.0025:0.0025`) and named `key=value` pairs separated by `:` or
+/// `,` (`stc:p_up=0.01,p_down=0.01`); the two may be mixed. Named
+/// arguments win over positional ones.
+pub struct ProtocolArgs {
+    pos: Vec<String>,
+    named: BTreeMap<String, String>,
+}
+
+impl ProtocolArgs {
+    /// Parse everything after the protocol name (may be empty).
+    pub fn parse(rest: &str) -> ProtocolArgs {
+        let mut pos = Vec::new();
+        let mut named = BTreeMap::new();
+        for token in rest.split([':', ',']).filter(|t| !t.is_empty()) {
+            match token.split_once('=') {
+                Some((k, v)) => {
+                    named.insert(k.trim().to_string(), v.trim().to_string());
+                }
+                None => pos.push(token.trim().to_string()),
+            }
+        }
+        ProtocolArgs { pos, named }
+    }
+
+    /// Raw value by name (preferred) or position.
+    pub fn get(&self, name: &str, pos: usize) -> Option<&str> {
+        self.named.get(name).or_else(|| self.pos.get(pos)).map(|s| s.as_str())
+    }
+
+    /// Typed value with a default.
+    pub fn parse_or<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        pos: usize,
+        default: T,
+    ) -> anyhow::Result<T>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.parse_opt(name, pos)?.unwrap_or(default))
+    }
+
+    /// Typed value, absent allowed.
+    pub fn parse_opt<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        pos: usize,
+    ) -> anyhow::Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name, pos) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| anyhow::anyhow!("argument {name} '{s}': {e}")),
+        }
+    }
+
+    /// Fail fast on typos: named keys must be a subset of `known`, and at
+    /// most `max_pos` positional arguments are accepted.
+    pub fn expect_keys(&self, known: &[&str], max_pos: usize) -> anyhow::Result<()> {
+        for k in self.named.keys() {
+            anyhow::ensure!(
+                known.contains(&k.as_str()),
+                "unknown argument '{k}' (expected one of {known:?})"
+            );
+        }
+        anyhow::ensure!(
+            self.pos.len() <= max_pos,
+            "too many positional arguments ({} > {max_pos})",
+            self.pos.len()
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// The registry
+// ---------------------------------------------------------------------
+
+type Builder = Arc<dyn Fn(&ProtocolArgs) -> anyhow::Result<Box<dyn Protocol>> + Send + Sync>;
+
+fn registry() -> &'static Mutex<BTreeMap<String, Builder>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Builder>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        type Ctor = fn(&ProtocolArgs) -> anyhow::Result<Box<dyn Protocol>>;
+        let mut m: BTreeMap<String, Builder> = BTreeMap::new();
+        let mut put = |name: &str, b: Ctor| {
+            m.insert(name.to_string(), Arc::new(b));
+        };
+        put("baseline", |a| {
+            a.expect_keys(&[], 0)?;
+            Ok(Box::new(dense::DenseProtocol::baseline()))
+        });
+        put("fedavg", |a| {
+            a.expect_keys(&["n"], 1)?;
+            Ok(Box::new(dense::DenseProtocol::fedavg(a.parse_or("n", 0, 400)?)?))
+        });
+        put("signsgd", |a| {
+            a.expect_keys(&["delta"], 1)?;
+            Ok(Box::new(signsgd::SignSgdProtocol::new(a.parse_or("delta", 0, 0.0002)?)))
+        });
+        put("topk", |a| {
+            a.expect_keys(&["p"], 1)?;
+            Ok(Box::new(topk::TopKProtocol::new(a.parse_or("p", 0, 0.0025)?)?))
+        });
+        put("sparse", |a| {
+            a.expect_keys(&["p_up", "p_down"], 2)?;
+            let p_up: f64 = a.parse_or("p_up", 0, 0.0025)?;
+            let p_down: f64 = a.parse_opt("p_down", 1)?.unwrap_or(p_up);
+            Ok(Box::new(sparse::SparseUpDownProtocol::new(p_up, p_down)?))
+        });
+        put("stc", |a| {
+            a.expect_keys(&["p_up", "p_down"], 2)?;
+            let p_up: f64 = a.parse_or("p_up", 0, 0.0025)?;
+            let p_down: f64 = a.parse_opt("p_down", 1)?.unwrap_or(p_up);
+            Ok(Box::new(stc::StcProtocol::stc(p_up, p_down)?))
+        });
+        put("hybrid", |a| {
+            a.expect_keys(&["p", "n"], 2)?;
+            Ok(Box::new(stc::StcProtocol::hybrid(
+                a.parse_or("p", 0, 0.01)?,
+                a.parse_or("n", 1, 10)?,
+            )?))
+        });
+        Mutex::new(m)
+    })
+}
+
+/// Construct a protocol from a spec string: `<name>[:args]`. Args accept
+/// both positional (`stc:0.0025:0.0025`) and named
+/// (`stc:p_up=0.01,p_down=0.01`) forms. Unknown names list the registry.
+pub fn by_name(spec: &str) -> anyhow::Result<Box<dyn Protocol>> {
+    let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    // fetch-then-drop: the builder runs (and any error path re-reads the
+    // registry for its message) without the lock held
+    let builder: Option<Builder> =
+        registry().lock().expect("protocol registry poisoned").get(name).cloned();
+    let builder = builder.ok_or_else(|| {
+        anyhow::anyhow!("unknown protocol '{name}' (registered: {})", names().join("|"))
+    })?;
+    (builder.as_ref())(&ProtocolArgs::parse(rest))
+        .map_err(|e| anyhow::anyhow!("protocol '{spec}': {e}"))
+}
+
+/// Whether `name` (the part before any `:`) resolves in the registry.
+pub fn is_registered(spec: &str) -> bool {
+    let name = spec.split(':').next().unwrap_or(spec);
+    registry().lock().expect("protocol registry poisoned").contains_key(name)
+}
+
+/// Register a new protocol under `name`. External crates call this once
+/// at startup; afterwards `--method <name>:<args>` works everywhere a
+/// method string is accepted. Errors on duplicate names (built-ins
+/// cannot be shadowed).
+pub fn register(
+    name: &str,
+    builder: impl Fn(&ProtocolArgs) -> anyhow::Result<Box<dyn Protocol>> + Send + Sync + 'static,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+        "protocol name '{name}' must be non-empty [A-Za-z0-9_-]"
+    );
+    let mut reg = registry().lock().expect("protocol registry poisoned");
+    anyhow::ensure!(
+        !reg.contains_key(name),
+        "protocol '{name}' is already registered"
+    );
+    reg.insert(name.to_string(), Arc::new(builder));
+    Ok(())
+}
+
+/// All registered protocol names, sorted.
+pub fn names() -> Vec<String> {
+    registry().lock().expect("protocol registry poisoned").keys().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_every_table_i_row() {
+        let n = names();
+        for want in ["baseline", "fedavg", "signsgd", "topk", "sparse", "stc", "hybrid"] {
+            assert!(n.iter().any(|x| x == want), "missing '{want}' in {n:?}");
+        }
+    }
+
+    #[test]
+    fn by_name_positional_and_named_agree() {
+        let a = by_name("stc:0.01:0.04").unwrap();
+        let b = by_name("stc:p_up=0.01,p_down=0.04").unwrap();
+        assert_eq!(a.name(), b.name());
+        let c = by_name("fedavg:25").unwrap();
+        assert_eq!(c.local_iters(), 25);
+        let d = by_name("fedavg:n=25").unwrap();
+        assert_eq!(d.local_iters(), 25);
+    }
+
+    #[test]
+    fn by_name_defaults_match_method_defaults() {
+        assert_eq!(by_name("stc").unwrap().name(), "stc:0.0025:0.0025");
+        assert_eq!(by_name("fedavg").unwrap().local_iters(), 400);
+        assert_eq!(by_name("hybrid").unwrap().local_iters(), 10);
+    }
+
+    #[test]
+    fn by_name_rejects_unknowns_and_typos() {
+        let e = by_name("quantum").unwrap_err().to_string();
+        assert!(e.contains("unknown protocol 'quantum'"), "{e}");
+        assert!(e.contains("stc"), "error should list the registry: {e}");
+        let e = by_name("stc:p_upp=0.1").unwrap_err().to_string();
+        assert!(e.contains("p_upp"), "{e}");
+        assert!(by_name("stc:0.1:0.1:0.1").is_err(), "excess positional args");
+        assert!(by_name("stc:p_up=nope").is_err());
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_bad_names() {
+        assert!(register("stc", |_| by_name("stc")).is_err());
+        assert!(register("no colons", |_| by_name("stc")).is_err());
+        register("unit-test-proto", |a| {
+            a.expect_keys(&[], 0)?;
+            by_name("baseline")
+        })
+        .unwrap();
+        assert!(is_registered("unit-test-proto"));
+        assert!(by_name("unit-test-proto").is_ok());
+        assert!(register("unit-test-proto", |_| by_name("stc")).is_err());
+    }
+
+    #[test]
+    fn protocol_args_mixed_grammar() {
+        let a = ProtocolArgs::parse("0.5:k=3,j=7");
+        assert_eq!(a.get("k", 9), Some("3"));
+        assert_eq!(a.get("j", 9), Some("7"));
+        assert_eq!(a.get("missing", 0), Some("0.5"));
+        assert_eq!(a.parse_or::<f64>("x", 0, 1.0).unwrap(), 0.5);
+        assert!(a.expect_keys(&["k", "j"], 1).is_ok());
+        assert!(a.expect_keys(&["k"], 1).is_err());
+        assert!(a.expect_keys(&["k", "j"], 0).is_err());
+    }
+
+    #[test]
+    fn upcodec_adapts_protocol_to_compressor() {
+        let mut c = UpCodec::new(by_name("stc:0.5").unwrap());
+        assert!(c.name().starts_with("stc"));
+        assert!(c.error_feedback());
+        let msg = c.compress(&[1.0, -3.0, 0.5, 2.0]);
+        assert_eq!(msg.tensor_len(), 4);
+    }
+}

@@ -1,0 +1,114 @@
+//! signSGD with majority vote (Bernstein et al. 2018): 1 bit per
+//! parameter in both directions, no error feedback, and the eq. (14)
+//! logarithmic partial-sum pricing for stragglers.
+
+use super::{Broadcast, BroadcastCache, Protocol};
+use crate::compression::{majority_signs, Compressor, Message, SignCompressor};
+
+/// signSGD protocol with coordinate step size δ.
+pub struct SignSgdProtocol {
+    delta: f32,
+    up: SignCompressor,
+}
+
+impl SignSgdProtocol {
+    pub fn new(delta: f32) -> Self {
+        SignSgdProtocol { delta, up: SignCompressor }
+    }
+}
+
+impl Protocol for SignSgdProtocol {
+    fn name(&self) -> String {
+        format!("signsgd:{}", self.delta)
+    }
+
+    fn up_codec_name(&self) -> String {
+        self.up.name()
+    }
+
+    fn up_encode(&mut self, acc: &[f32]) -> Message {
+        self.up.compress(acc)
+    }
+
+    fn client_residual(&self) -> bool {
+        false
+    }
+
+    fn downstream_compressed(&self) -> bool {
+        true
+    }
+
+    fn aggregate(&mut self, messages: &[Message]) -> anyhow::Result<Broadcast> {
+        // The downstream broadcast is itself a sign message (scaled by δ
+        // at application time), so its billed cost is the server's one
+        // measured encoding of it — the same byte-level encoder as every
+        // client upload; the n + 32 closed form and the server-side
+        // charge can never drift apart again.
+        let refs: Vec<&Message> = messages.iter().collect();
+        let signs = majority_signs(&refs)?;
+        Ok(Broadcast { msg: Message::Sign { signs }, scale: self.delta, down_bits: None })
+    }
+
+    /// eq. 14: the partial sum of s sign vectors needs only
+    /// H(P^(τ)) ≤ log2(2s+1) bits per parameter, not s separate
+    /// messages — still capped at (and evicted to) a dense download.
+    fn straggler_bits(&self, s: usize, cache: &BroadcastCache) -> usize {
+        if s == 0 {
+            return 0;
+        }
+        let dense = cache.dense_model_bits();
+        if !cache.covers(s) {
+            return dense;
+        }
+        let cached = (cache.dim() as f64 * ((2 * s + 1) as f64).log2()).ceil() as usize + 32;
+        cached.min(dense)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::VecDeque;
+
+    fn sign(bits: &[bool]) -> Message {
+        Message::Sign { signs: bits.to_vec() }
+    }
+
+    #[test]
+    fn aggregate_majority_votes_and_prices_via_encoder() {
+        let mut p = SignSgdProtocol::new(0.5);
+        let msgs = vec![
+            sign(&[true, false, true]),
+            sign(&[true, false, false]),
+            sign(&[true, true, false]),
+        ];
+        let b = p.aggregate(&msgs).unwrap();
+        assert_eq!(b.scale, 0.5);
+        assert_eq!(b.down_bits, None, "signSGD bills the measured sign frame");
+        assert_eq!(b.msg.wire_bits(), 3 + 32);
+        let mut params = vec![0.0f32; 3];
+        b.msg.add_to(&mut params, b.scale);
+        assert_eq!(params, vec![0.5, -0.5, -0.5]);
+    }
+
+    #[test]
+    fn aggregate_rejects_non_sign_messages() {
+        let mut p = SignSgdProtocol::new(0.1);
+        let msgs = vec![sign(&[true]), Message::Dense { values: vec![1.0] }];
+        assert!(p.aggregate(&msgs).is_err());
+        assert!(p.aggregate(&[]).is_err());
+    }
+
+    #[test]
+    fn straggler_pricing_is_logarithmic_until_the_dense_cap() {
+        let p = SignSgdProtocol::new(0.1);
+        let bits: VecDeque<u64> = (0..30).map(|_| 1032u64).collect();
+        let cache = BroadcastCache::new(&bits, 1000);
+        let one = p.straggler_bits(1, &cache) as f64;
+        let twenty = p.straggler_bits(20, &cache) as f64;
+        assert!(twenty / one < 4.0, "eq. 14 ratio {}", twenty / one);
+        assert_eq!(p.straggler_bits(0, &cache), 0);
+        // beyond the cache: dense fallback
+        assert_eq!(p.straggler_bits(31, &cache), 32_000);
+    }
+}

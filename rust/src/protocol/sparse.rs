@@ -1,0 +1,122 @@
+//! Top-k sparsification of BOTH directions at full value precision —
+//! the paper's eq. (10) protocol before ternarisation (Fig. 4), and the
+//! "pure sparsity" arm of the Fig. 5 ablation. The server keeps its own
+//! error-feedback residual R over the downstream truncation.
+
+use super::{mean_into, uniform_dim, Broadcast, Protocol};
+use crate::compression::{stc, Compressor, Message, TopKCompressor};
+
+/// Sparse-up/sparse-down protocol (eq. 10).
+pub struct SparseUpDownProtocol {
+    p_up: f64,
+    p_down: f64,
+    up: TopKCompressor,
+    /// server residual R over the downstream top-k truncation
+    residual: Vec<f32>,
+    agg: Vec<f32>,
+}
+
+impl SparseUpDownProtocol {
+    pub fn new(p_up: f64, p_down: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(p_up > 0.0 && p_up <= 1.0, "p_up must be in (0,1], got {p_up}");
+        anyhow::ensure!(p_down > 0.0 && p_down <= 1.0, "p_down must be in (0,1], got {p_down}");
+        Ok(SparseUpDownProtocol {
+            p_up,
+            p_down,
+            up: TopKCompressor::new(p_up),
+            residual: Vec::new(),
+            agg: Vec::new(),
+        })
+    }
+}
+
+impl Protocol for SparseUpDownProtocol {
+    fn name(&self) -> String {
+        format!("sparse:{}:{}", self.p_up, self.p_down)
+    }
+
+    fn up_codec_name(&self) -> String {
+        self.up.name()
+    }
+
+    fn up_encode(&mut self, acc: &[f32]) -> Message {
+        self.up.compress(acc)
+    }
+
+    fn client_residual(&self) -> bool {
+        true
+    }
+
+    fn downstream_compressed(&self) -> bool {
+        true
+    }
+
+    fn aggregate(&mut self, messages: &[Message]) -> anyhow::Result<Broadcast> {
+        // eq. (10): top-k the mean (plus server residual) at full value
+        // precision — the pre-ternarisation protocol
+        let dim = uniform_dim(messages)?;
+        if self.residual.len() != dim {
+            anyhow::ensure!(self.residual.is_empty(), "model dimension changed mid-run");
+            self.residual = vec![0.0; dim];
+        }
+        self.agg.clear();
+        self.agg.extend_from_slice(&self.residual);
+        mean_into(&mut self.agg, messages);
+        let (indices, values) = stc::topk_sparse(&self.agg, self.p_down);
+        let msg = Message::Sparse { len: dim, indices, values };
+        // R ← ΔW − ΔW̃
+        msg.subtract_from(&mut self.agg);
+        self.residual.copy_from_slice(&self.agg);
+        // billed at the measured sparse frame (48 bits/non-zero)
+        Ok(Broadcast { msg, scale: 1.0, down_bits: None })
+    }
+
+    fn server_residual(&self) -> Option<&[f32]> {
+        if self.residual.is_empty() {
+            None
+        } else {
+            Some(&self.residual)
+        }
+    }
+
+    fn down_k(&self, dim: usize) -> Option<usize> {
+        Some(stc::k_for(dim, self.p_down))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn downstream_truncation_banks_into_residual() {
+        let dim = 100;
+        let mut p = SparseUpDownProtocol::new(0.5, 0.05).unwrap();
+        let update: Vec<f32> = (0..dim).map(|i| (i as f32 - 50.0) * 0.01).collect();
+        let msgs = vec![Message::Dense { values: update.clone() }];
+        let b = p.aggregate(&msgs).unwrap();
+        // k_down = 5 coordinates travel; the rest sit in R
+        assert_eq!(b.msg.nnz(), 5);
+        assert_eq!(b.down_bits, None);
+        assert_eq!(b.msg.wire_bits(), 5 * 48);
+        let resid = p.server_residual().unwrap();
+        let sent = b.msg.to_dense();
+        for i in 0..dim {
+            assert!((sent[i] + resid[i] - update[i]).abs() < 1e-6, "mass lost at {i}");
+        }
+    }
+
+    #[test]
+    fn residual_flushes_over_rounds() {
+        let dim = 40;
+        let mut p = SparseUpDownProtocol::new(1.0, 0.1).unwrap();
+        let update: Vec<f32> = (0..dim).map(|i| 0.01 + (i % 5) as f32 * 0.003).collect();
+        let mut applied = vec![0.0f32; dim];
+        for _ in 0..30 {
+            let b =
+                p.aggregate(&[Message::Dense { values: update.clone() }]).unwrap();
+            b.msg.add_to(&mut applied, b.scale);
+        }
+        assert!(applied.iter().all(|x| *x != 0.0), "error feedback must reach every coord");
+    }
+}

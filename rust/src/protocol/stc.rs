@@ -1,0 +1,167 @@
+//! Sparse Ternary Compression — the paper's contribution (Algorithm 1 +
+//! Algorithm 2's server side): ternary Golomb-coded messages in both
+//! directions, error feedback on clients *and* server (eqs. 11/12), and
+//! the eq. (13) partial-sum pricing for stragglers (the trait default).
+//! `hybrid:p:n` is STC combined with FedAvg-style delay (appendix
+//! Fig. 12's sparsity×delay grid).
+
+use super::{mean_into, uniform_dim, Broadcast, Protocol};
+use crate::compression::{stc, Compressor, Message, StcCompressor};
+
+/// Bidirectional STC, optionally with n local iterations per round.
+pub struct StcProtocol {
+    p_up: f64,
+    p_down: f64,
+    /// local iterations per round (> 1 only for the hybrid method)
+    n: usize,
+    /// whether this instance was built as `hybrid` (affects the spec name)
+    hybrid: bool,
+    up: StcCompressor,
+    down: StcCompressor,
+    /// server residual R (eq. 12)
+    residual: Vec<f32>,
+    agg: Vec<f32>,
+}
+
+impl StcProtocol {
+    /// Plain STC: upload at `p_up`, broadcast at `p_down`.
+    pub fn stc(p_up: f64, p_down: f64) -> anyhow::Result<Self> {
+        Self::build(p_up, p_down, 1, false)
+    }
+
+    /// STC + FedAvg-style delay of `n` local iterations.
+    pub fn hybrid(p: f64, n: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(n >= 1, "hybrid delay n must be >= 1, got {n}");
+        Self::build(p, p, n, true)
+    }
+
+    fn build(p_up: f64, p_down: f64, n: usize, hybrid: bool) -> anyhow::Result<Self> {
+        anyhow::ensure!(p_up > 0.0 && p_up <= 1.0, "p_up must be in (0,1], got {p_up}");
+        anyhow::ensure!(p_down > 0.0 && p_down <= 1.0, "p_down must be in (0,1], got {p_down}");
+        Ok(StcProtocol {
+            p_up,
+            p_down,
+            n,
+            hybrid,
+            up: StcCompressor::new(p_up),
+            down: StcCompressor::new(p_down),
+            residual: Vec::new(),
+            agg: Vec::new(),
+        })
+    }
+}
+
+impl Protocol for StcProtocol {
+    fn name(&self) -> String {
+        if self.hybrid {
+            format!("hybrid:{}:{}", self.p_up, self.n)
+        } else {
+            format!("stc:{}:{}", self.p_up, self.p_down)
+        }
+    }
+
+    fn up_codec_name(&self) -> String {
+        self.up.name()
+    }
+
+    fn up_encode(&mut self, acc: &[f32]) -> Message {
+        self.up.compress(acc)
+    }
+
+    fn client_residual(&self) -> bool {
+        true
+    }
+
+    fn local_iters(&self) -> usize {
+        self.n
+    }
+
+    fn downstream_compressed(&self) -> bool {
+        true
+    }
+
+    fn aggregate(&mut self, messages: &[Message]) -> anyhow::Result<Broadcast> {
+        // ΔW = R + mean(decode(msgs)); ΔW̃ = STC_p_down(ΔW); R ← ΔW − ΔW̃
+        let dim = uniform_dim(messages)?;
+        if self.residual.len() != dim {
+            anyhow::ensure!(self.residual.is_empty(), "model dimension changed mid-run");
+            self.residual = vec![0.0; dim];
+        }
+        self.agg.clear();
+        self.agg.extend_from_slice(&self.residual);
+        mean_into(&mut self.agg, messages);
+        let tern = match self.down.compress(&self.agg) {
+            Message::Ternary(t) => t,
+            _ => unreachable!("STC compressor always emits ternary"),
+        };
+        tern.subtract_from(&mut self.agg);
+        self.residual.copy_from_slice(&self.agg);
+        // billed at the measured frame: header + Golomb payload
+        Ok(Broadcast { msg: Message::Ternary(tern), scale: 1.0, down_bits: None })
+    }
+
+    fn server_residual(&self) -> Option<&[f32]> {
+        if self.residual.is_empty() {
+            None
+        } else {
+            Some(&self.residual)
+        }
+    }
+
+    fn down_k(&self, dim: usize) -> Option<usize> {
+        Some(stc::k_for(dim, self.p_down))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_residual_accumulates_downstream_truncation() {
+        // p_up > p_down: the client sends 10 non-zeros, the server keeps
+        // only the top 5 and must bank the other 5 in its residual
+        let dim = 100;
+        let mut p = StcProtocol::stc(0.10, 0.05).unwrap();
+        let mut up = StcCompressor::new(0.10);
+        let update: Vec<f32> = (0..dim).map(|i| (i as f32 - 50.0) * 0.01).collect();
+        let msg = up.compress(&update);
+        let sent_dense = msg.to_dense();
+        let b = p.aggregate(std::slice::from_ref(&msg)).unwrap();
+        assert_eq!(b.msg.nnz(), 5);
+        let resid = p.server_residual().unwrap();
+        let broadcast = b.msg.to_dense();
+        for i in 0..dim {
+            let lhs = sent_dense[i];
+            let rhs = broadcast[i] + resid[i];
+            assert!((lhs - rhs).abs() < 1e-6, "coord {i}: {lhs} vs {rhs}");
+        }
+    }
+
+    #[test]
+    fn residual_eventually_flushes_every_coordinate() {
+        let dim = 200;
+        let mut p = StcProtocol::stc(1.0, 0.05).unwrap();
+        let update: Vec<f32> = (0..dim).map(|i| 0.01 + (i % 7) as f32 * 0.001).collect();
+        let mut applied = vec![0.0f32; dim];
+        for _ in 0..60 {
+            let b = p.aggregate(&[Message::Dense { values: update.clone() }]).unwrap();
+            b.msg.add_to(&mut applied, b.scale);
+        }
+        let moved = applied.iter().filter(|x| **x != 0.0).count();
+        assert_eq!(moved, dim, "all coordinates eventually transmitted");
+    }
+
+    #[test]
+    fn names_and_metadata() {
+        let p = StcProtocol::stc(0.01, 0.02).unwrap();
+        assert_eq!(p.name(), "stc:0.01:0.02");
+        assert_eq!(p.local_iters(), 1);
+        assert_eq!(p.down_k(1000), Some(20));
+        let h = StcProtocol::hybrid(0.01, 8).unwrap();
+        assert_eq!(h.name(), "hybrid:0.01:8");
+        assert_eq!(h.local_iters(), 8);
+        assert!(StcProtocol::stc(0.0, 0.1).is_err());
+        assert!(StcProtocol::hybrid(0.1, 0).is_err());
+    }
+}

@@ -1,0 +1,98 @@
+//! Top-k sparsification, upload only (Aji & Heafield 2017, DGC): sparse
+//! full-precision uploads with client-side error feedback, dense
+//! downstream. The broadcast is priced at the sparse *union* of the
+//! round's supports, capped at dense — the union degrades towards dense
+//! as participation grows, which is exactly the pathology Table I calls
+//! out and the reason STC compresses the downstream too.
+
+use super::{mean_into, uniform_dim, Broadcast, Protocol};
+use crate::compression::{Compressor, Message, TopKCompressor};
+
+/// Upload-only top-k protocol at sparsity rate p.
+pub struct TopKProtocol {
+    p: f64,
+    up: TopKCompressor,
+    agg: Vec<f32>,
+}
+
+impl TopKProtocol {
+    pub fn new(p: f64) -> anyhow::Result<Self> {
+        anyhow::ensure!(p > 0.0 && p <= 1.0, "sparsity p must be in (0,1], got {p}");
+        Ok(TopKProtocol { p, up: TopKCompressor::new(p), agg: Vec::new() })
+    }
+}
+
+impl Protocol for TopKProtocol {
+    fn name(&self) -> String {
+        format!("topk:{}", self.p)
+    }
+
+    fn up_codec_name(&self) -> String {
+        self.up.name()
+    }
+
+    fn up_encode(&mut self, acc: &[f32]) -> Message {
+        self.up.compress(acc)
+    }
+
+    fn client_residual(&self) -> bool {
+        true
+    }
+
+    fn downstream_compressed(&self) -> bool {
+        false
+    }
+
+    fn aggregate(&mut self, messages: &[Message]) -> anyhow::Result<Broadcast> {
+        let dim = uniform_dim(messages)?;
+        self.agg.clear();
+        self.agg.resize(dim, 0.0);
+        mean_into(&mut self.agg, messages);
+        // what travels is the mean over the union support; cost it as
+        // sparse records (48 bits/non-zero) capped at a dense model —
+        // an explicit price, since the applied message is dense
+        let nnz = self.agg.iter().filter(|x| **x != 0.0).count();
+        let msg = Message::Dense { values: self.agg.clone() };
+        Ok(Broadcast { msg, scale: 1.0, down_bits: Some((nnz * 48).min(32 * dim)) })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn union_cost_degrades_to_dense() {
+        // many clients with disjoint supports → union ≈ dense (Table I)
+        let dim = 100;
+        let mut p = TopKProtocol::new(0.05).unwrap();
+        let msgs: Vec<Message> = (0..20)
+            .map(|c| Message::Sparse {
+                len: dim,
+                indices: (0..5).map(|j| (c * 5 + j) as u32).collect(),
+                values: vec![1.0; 5],
+            })
+            .collect();
+        let b = p.aggregate(&msgs).unwrap();
+        assert_eq!(b.down_bits, Some(32 * dim), "union support must hit the dense cap");
+    }
+
+    #[test]
+    fn sparse_union_below_cap_prices_by_nnz() {
+        let dim = 1000;
+        let mut p = TopKProtocol::new(0.01).unwrap();
+        let msgs = vec![Message::Sparse {
+            len: dim,
+            indices: vec![3, 500],
+            values: vec![1.0, -1.0],
+        }];
+        let b = p.aggregate(&msgs).unwrap();
+        assert_eq!(b.down_bits, Some(2 * 48));
+    }
+
+    #[test]
+    fn rejects_bad_sparsity() {
+        assert!(TopKProtocol::new(0.0).is_err());
+        assert!(TopKProtocol::new(1.5).is_err());
+    }
+}

@@ -50,7 +50,7 @@ impl Experiment {
 
         let mut last_loss = f32::NAN;
         for round in 1..=total_rounds {
-            last_loss = run.run_round(trainer, &self.train);
+            last_loss = run.run_round(trainer, &self.train)?;
             if round % eval_every_rounds == 0 || round == total_rounds {
                 let m = trainer.eval(&run.server.params, &self.test);
                 log.push(EvalPoint {
@@ -99,7 +99,7 @@ impl Experiment {
         let local_iters = self.cfg.method.local_iters();
         let eval_every_rounds = (self.cfg.eval_every / local_iters).max(1);
         let mut last_eval_round = 0;
-        while let Some(summary) = run.next_round(factory, &self.train) {
+        while let Some(summary) = run.next_round(factory, &self.train)? {
             if summary.aggregated == 0 {
                 continue; // nothing reached the server this round
             }

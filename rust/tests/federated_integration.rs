@@ -131,7 +131,7 @@ fn residuals_bounded_over_training() {
     let mut t = NativeLogreg::new(c.batch_size);
     let mut norms = Vec::new();
     for _ in 0..60 {
-        run.run_round(&mut t, &train);
+        run.run_round(&mut t, &train).unwrap();
         norms.push(run.mean_residual_norm());
     }
     assert!(norms.iter().all(|n| n.is_finite()));
@@ -150,9 +150,9 @@ fn momentum_state_persists_across_rounds() {
     let spec = ModelSpec::by_name("logreg").unwrap();
     let mut run = FederatedRun::new(c.clone(), &train, spec.init_flat(1)).unwrap();
     let mut t = NativeLogreg::new(c.batch_size);
-    run.run_round(&mut t, &train);
+    run.run_round(&mut t, &train).unwrap();
     let m1: f64 = run.clients[0].momentum.iter().map(|x| (*x as f64).abs()).sum();
-    run.run_round(&mut t, &train);
+    run.run_round(&mut t, &train).unwrap();
     let m2: f64 = run.clients[0].momentum.iter().map(|x| (*x as f64).abs()).sum();
     assert!(m1 > 0.0);
     assert!(m2 != m1);

@@ -56,7 +56,7 @@ fn serial_run(cfg: &FedConfig, train: &Dataset) -> (Vec<f32>, u64, u64, u64, u64
     let mut run = FederatedRun::new(cfg.clone(), train, spec.init_flat(cfg.seed)).unwrap();
     let mut trainer = NativeLogreg::new(cfg.batch_size);
     for _ in 0..cfg.rounds() {
-        run.run_round(&mut trainer, train);
+        run.run_round(&mut trainer, train).unwrap();
     }
     run.settle_final_downloads();
     (
@@ -76,7 +76,7 @@ fn cluster_run(cfg: &FedConfig, train: &Dataset, workers: usize) -> (Vec<f32>, u
     let mut run = ClusterRun::new(ccfg, train, spec.init_flat(cfg.seed)).unwrap();
     let factory = NativeLogregFactory { batch_size: cfg.batch_size };
     while !run.finished() {
-        run.tick(&factory, train);
+        run.tick(&factory, train).unwrap();
     }
     assert_eq!(run.rounds_done, cfg.rounds(), "cluster must aggregate every round");
     (
@@ -174,7 +174,7 @@ fn dynamic_membership_exercises_catchup_cache() {
     let factory = NativeLogregFactory { batch_size: cfg.batch_size };
     let before = run.server.params.clone();
     while !run.finished() {
-        run.tick(&factory, &train);
+        run.tick(&factory, &train).unwrap();
     }
     let st = &run.stats;
     assert!(st.joins > 0, "no join event: {st:?}");

@@ -345,7 +345,7 @@ fn cluster_run_with_finite_bandwidth_is_deterministic_across_workers() {
         let mut run = ClusterRun::new(ccfg, &train, spec.init_flat(cfg.seed)).unwrap();
         let factory = NativeLogregFactory { batch_size: cfg.batch_size };
         while !run.finished() {
-            run.tick(&factory, &train);
+            run.tick(&factory, &train).unwrap();
         }
         (
             run.server.params.clone(),

@@ -190,7 +190,7 @@ fn prop_server_stc_conservation() {
         |updates| {
             let dim = updates[0].len();
             let mut server =
-                Server::new(vec![0.0; dim], Method::Stc { p_up: 0.1, p_down: 0.05 }, 8);
+                Server::new(vec![0.0; dim], Method::Stc { p_up: 0.1, p_down: 0.05 }, 8).unwrap();
             let mut comp = StcCompressor::new(0.1);
             let msgs: Vec<Message> = updates.iter().map(|u| comp.compress(u)).collect();
             // expected aggregate
@@ -201,7 +201,7 @@ fn prop_server_stc_conservation() {
                     mean[i] += d[i] as f64 / msgs.len() as f64;
                 }
             }
-            server.aggregate_and_apply(&msgs);
+            server.aggregate_and_apply(&msgs).unwrap();
             // params hold the applied part; server residual the rest
             for i in 0..dim {
                 let applied = server.params[i] as f64;

@@ -1,0 +1,528 @@
+//! Property tests for the protocol layer and the byte-level wire format.
+//!
+//! Three guarantees:
+//!
+//! 1. **Wire roundtrip** — `Message::from_bytes(to_bytes(m)) == m` for
+//!    every variant, any content (including empty tensors and nnz = 0),
+//!    and `wire_bits` always equals the encoder's measured payload.
+//! 2. **Conformance** — every protocol in the registry survives one
+//!    simulated round: uploads roundtrip through bytes, the
+//!    error-feedback identity `acc == decode(msg) + residual` holds for
+//!    residual protocols, aggregation produces a broadcast the server
+//!    can apply, and straggler prices are monotone in the lag and capped
+//!    at a dense model download.
+//! 3. **Equivalence** — for every `Method` variant, the trait-based
+//!    pipeline (protocol up-encode → bytes → `Server::aggregate_and_apply`
+//!    → protocol straggler pricing) is *bit-identical* — server params,
+//!    wire bits, broadcast bits, straggler prices — to a verbatim
+//!    reimplementation of the pre-protocol match-arm server kept here as
+//!    the legacy oracle.
+
+use fedstc::compression::{
+    majority_vote, stc, Compressor, DenseCompressor, Message, SignCompressor, StcCompressor,
+    TernaryTensor, TopKCompressor,
+};
+use fedstc::config::Method;
+use fedstc::coordinator::Server;
+use fedstc::protocol::{self, Protocol};
+use fedstc::util::proplite::{check, Config};
+use fedstc::util::rng::Pcg64;
+use std::collections::VecDeque;
+
+fn no_shrink<T: Clone>(_: &T) -> Vec<T> {
+    Vec::new()
+}
+
+// ---------------------------------------------------------------------
+// 1. Wire roundtrip
+// ---------------------------------------------------------------------
+
+fn random_message(rng: &mut Pcg64) -> Message {
+    match rng.below(4) {
+        0 => {
+            let n = rng.below(400);
+            Message::Dense { values: (0..n).map(|_| rng.normal()).collect() }
+        }
+        1 => {
+            // occasionally huge tensor lengths so gaps overflow u16 and
+            // exercise the escape-word path
+            let len = 1 + rng.below(if rng.below(4) == 0 { 300_000 } else { 2_000 });
+            let nnz = rng.below(40.min(len) + 1);
+            let mut idx: Vec<u32> = Vec::with_capacity(nnz);
+            let mut last: i64 = -1;
+            for k in 0..nnz {
+                let remaining = nnz - k;
+                let lo = (last + 1) as usize;
+                let hi = len - remaining + 1;
+                if lo >= hi {
+                    break;
+                }
+                let i = lo + rng.below(hi - lo);
+                idx.push(i as u32);
+                last = i as i64;
+            }
+            let values = idx.iter().map(|_| rng.normal()).collect();
+            Message::Sparse { len, indices: idx, values }
+        }
+        2 => {
+            let len = 1 + rng.below(3_000);
+            let t: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            if rng.below(8) == 0 {
+                // handcrafted nnz = 0 edge case (never produced by the
+                // compressor, but the wire format must carry it)
+                Message::Ternary(TernaryTensor {
+                    len,
+                    indices: Vec::new(),
+                    signs: Vec::new(),
+                    mu: 0.0,
+                    p: 0.05,
+                })
+            } else {
+                Message::Ternary(stc::compress(&t, 0.05))
+            }
+        }
+        _ => {
+            let n = rng.below(600);
+            Message::Sign { signs: (0..n).map(|_| rng.below(2) == 1).collect() }
+        }
+    }
+}
+
+#[test]
+fn prop_wire_roundtrip_every_variant() {
+    check(
+        "wire-roundtrip",
+        Config { cases: 300, ..Default::default() },
+        random_message,
+        no_shrink,
+        |m| {
+            let wire = m.to_wire();
+            let decoded = Message::from_bytes(&wire.bytes).map_err(|e| e.to_string())?;
+            if &decoded != m {
+                return Err(format!("roundtrip mismatch for {m:?}"));
+            }
+            if wire.payload_bits != m.wire_bits() {
+                return Err(format!(
+                    "wire_bits {} != encoder payload {}",
+                    m.wire_bits(),
+                    wire.payload_bits
+                ));
+            }
+            // payload must physically fit in the frame
+            if wire.payload_bits > wire.bytes.len() * 8 {
+                return Err("billable payload larger than the frame itself".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_truncated_frames_error_cleanly() {
+    check(
+        "wire-truncation",
+        Config { cases: 120, ..Default::default() },
+        |rng: &mut Pcg64| {
+            let m = random_message(rng);
+            let bytes = m.to_bytes();
+            let cut = rng.below(bytes.len().max(1));
+            (bytes, cut)
+        },
+        no_shrink,
+        |(bytes, cut)| {
+            // any strict prefix must decode to an error or to a message
+            // that re-encodes to that exact prefix (possible only when
+            // the suffix was empty anyway) — never panic, never garbage
+            match Message::from_bytes(&bytes[..*cut]) {
+                Err(_) => Ok(()),
+                Ok(m) => {
+                    if m.to_bytes() == bytes[..*cut] {
+                        Ok(())
+                    } else {
+                        Err("prefix decoded to a different message".into())
+                    }
+                }
+            }
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// 2. Conformance: every registered protocol through one simulated round
+// ---------------------------------------------------------------------
+
+/// Synthetic client round against protocol `spec`: error-feedback
+/// compression of `clients` random updates, byte roundtrip, server
+/// aggregation, straggler pricing sanity.
+fn conformance_round(spec: &str) {
+    let dim = 500;
+    let clients = 3;
+    let rounds = 4;
+    let mut rng = Pcg64::new(0xc0f0, 0x1);
+
+    let mut up = protocol::by_name(spec).expect(spec);
+    let mut server =
+        Server::with_protocol(vec![0.0; dim], protocol::by_name(spec).expect(spec), 16);
+    let mut residuals = vec![vec![0.0f32; dim]; clients];
+
+    for _ in 0..rounds {
+        let mut msgs = Vec::new();
+        for residual in residuals.iter_mut() {
+            let delta: Vec<f32> = (0..dim).map(|_| rng.normal() * 0.1).collect();
+            // acc = ΔW + A
+            let acc: Vec<f32> = delta.iter().zip(residual.iter()).map(|(d, r)| d + r).collect();
+            let msg = up.up_encode(&acc);
+            // the error-feedback identity: acc == decode(msg) + A'
+            if up.client_residual() {
+                let dense = msg.to_dense();
+                for i in 0..dim {
+                    residual[i] = acc[i] - dense[i];
+                }
+                for i in 0..dim {
+                    let recon = dense[i] + residual[i];
+                    assert!(
+                        (recon - acc[i]).abs() < 1e-5,
+                        "{spec}: error-feedback identity broken at {i}: {recon} vs {}",
+                        acc[i]
+                    );
+                }
+            }
+            // upload crosses the wire
+            let decoded = Message::from_bytes(&msg.to_bytes()).expect(spec);
+            assert_eq!(decoded, msg, "{spec}: upload roundtrip");
+            msgs.push(decoded);
+        }
+        let bits = server.aggregate_and_apply(&msgs).unwrap_or_else(|e| panic!("{spec}: {e}"));
+        assert!(bits > 0, "{spec}: zero-bit broadcast");
+    }
+
+    // straggler pricing: 0 at no lag, monotone non-decreasing in the
+    // lag, never above a dense model download
+    assert_eq!(server.straggler_download_bits(server.round), 0, "{spec}");
+    let mut last = 0usize;
+    for s in 1..=rounds {
+        let bits = server.straggler_download_bits(server.round - s);
+        assert!(bits >= last, "{spec}: price decreased at lag {s}");
+        assert!(bits <= 32 * dim, "{spec}: price above dense at lag {s}");
+        last = bits;
+    }
+    assert!(server.params.iter().any(|x| *x != 0.0), "{spec}: model never moved");
+}
+
+#[test]
+fn conformance_every_registered_protocol() {
+    for name in protocol::names() {
+        conformance_round(&name);
+    }
+    // and once with explicit non-default arguments
+    for spec in ["stc:0.05:0.02", "sparse:0.1:0.05", "hybrid:p=0.05,n=3", "signsgd:0.01"] {
+        conformance_round(spec);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Equivalence: trait pipeline ⇔ pre-refactor match-arm oracle
+// ---------------------------------------------------------------------
+
+/// The pre-protocol `Method::up_compressor` match, verbatim.
+fn legacy_up_compressor(method: &Method) -> Box<dyn Compressor> {
+    match method {
+        Method::Baseline | Method::FedAvg { .. } => Box::new(DenseCompressor),
+        Method::SignSgd { .. } => Box::new(SignCompressor),
+        Method::TopK { p } => Box::new(TopKCompressor::new(*p)),
+        Method::SparseUpDown { p_up, .. } => Box::new(TopKCompressor::new(*p_up)),
+        Method::Stc { p_up, .. } => Box::new(StcCompressor::new(*p_up)),
+        Method::Hybrid { p, .. } => Box::new(StcCompressor::new(*p)),
+        Method::Custom(_) => unreachable!("legacy oracle covers built-ins only"),
+    }
+}
+
+/// The pre-protocol `Server`, reimplemented verbatim from the match-arm
+/// version (aggregation rules, downstream costing, §V-B pricing) as the
+/// golden oracle the trait-based pipeline must reproduce bit for bit.
+struct LegacyServer {
+    params: Vec<f32>,
+    round: usize,
+    residual: Vec<f32>,
+    down: Option<StcCompressor>,
+    method: Method,
+    broadcast_bits: VecDeque<u64>,
+    cache_rounds: usize,
+    agg: Vec<f32>,
+}
+
+impl LegacyServer {
+    fn new(init_params: Vec<f32>, method: Method, cache_rounds: usize) -> Self {
+        let dim = init_params.len();
+        let (residual, down) = match &method {
+            Method::Stc { p_down, .. } => (vec![0.0; dim], Some(StcCompressor::new(*p_down))),
+            Method::Hybrid { p, .. } => (vec![0.0; dim], Some(StcCompressor::new(*p))),
+            Method::SparseUpDown { .. } => (vec![0.0; dim], None),
+            _ => (Vec::new(), None),
+        };
+        LegacyServer {
+            params: init_params,
+            round: 0,
+            residual,
+            down,
+            method,
+            broadcast_bits: VecDeque::new(),
+            cache_rounds,
+            agg: vec![0.0; dim],
+        }
+    }
+
+    fn dim(&self) -> usize {
+        self.params.len()
+    }
+
+    fn aggregate_and_apply(&mut self, messages: &[Message]) -> usize {
+        assert!(!messages.is_empty());
+        let n = self.dim();
+        let inv = 1.0 / messages.len() as f32;
+        let broadcast_bits = match &self.method {
+            Method::SignSgd { delta } => {
+                let refs: Vec<&Message> = messages.iter().collect();
+                let update = majority_vote(&refs, *delta);
+                for (w, u) in self.params.iter_mut().zip(&update) {
+                    *w += u;
+                }
+                n + 32
+            }
+            Method::Stc { .. } | Method::Hybrid { .. } => {
+                self.agg.copy_from_slice(&self.residual);
+                for m in messages {
+                    m.add_to(&mut self.agg, inv);
+                }
+                let tern = {
+                    let down = self.down.as_mut().unwrap();
+                    match down.compress(&self.agg) {
+                        Message::Ternary(t) => t,
+                        _ => unreachable!(),
+                    }
+                };
+                tern.add_to(&mut self.params, 1.0);
+                tern.subtract_from(&mut self.agg);
+                self.residual.copy_from_slice(&self.agg);
+                Message::Ternary(tern).wire_bits()
+            }
+            Method::SparseUpDown { p_down, .. } => {
+                self.agg.copy_from_slice(&self.residual);
+                for m in messages {
+                    m.add_to(&mut self.agg, inv);
+                }
+                let (indices, values) = stc::topk_sparse(&self.agg, *p_down);
+                let msg = Message::Sparse { len: n, indices, values };
+                msg.add_to(&mut self.params, 1.0);
+                msg.subtract_from(&mut self.agg);
+                self.residual.copy_from_slice(&self.agg);
+                msg.wire_bits()
+            }
+            Method::Baseline | Method::FedAvg { .. } | Method::TopK { .. } => {
+                self.agg.iter_mut().for_each(|x| *x = 0.0);
+                for m in messages {
+                    m.add_to(&mut self.agg, inv);
+                }
+                for (w, u) in self.params.iter_mut().zip(&self.agg) {
+                    *w += u;
+                }
+                if matches!(self.method, Method::TopK { .. }) {
+                    let nnz = self.agg.iter().filter(|x| **x != 0.0).count();
+                    (nnz * 48).min(32 * n)
+                } else {
+                    32 * n
+                }
+            }
+            Method::Custom(_) => unreachable!(),
+        };
+        self.round += 1;
+        self.broadcast_bits.push_back(broadcast_bits as u64);
+        if self.broadcast_bits.len() > self.cache_rounds {
+            self.broadcast_bits.pop_front();
+        }
+        broadcast_bits
+    }
+
+    fn straggler_download_bits(&self, last_sync: usize) -> usize {
+        let s = self.round - last_sync;
+        if s == 0 {
+            return 0;
+        }
+        let dense_bits = 32 * self.dim();
+        if s > self.broadcast_bits.len() {
+            return dense_bits;
+        }
+        let cached: u64 = match &self.method {
+            Method::SignSgd { .. } => {
+                (self.dim() as f64 * ((2 * s + 1) as f64).log2()).ceil() as u64 + 32
+            }
+            _ => self.broadcast_bits.iter().rev().take(s).sum(),
+        };
+        (cached as usize).min(dense_bits)
+    }
+}
+
+/// Deterministic per-round client deltas shared by both pipelines.
+fn round_deltas(rng: &mut Pcg64, clients: usize, dim: usize) -> Vec<Vec<f32>> {
+    (0..clients).map(|_| (0..dim).map(|_| rng.normal() * 0.05).collect()).collect()
+}
+
+/// Drive `rounds` rounds of `method` through both the legacy oracle and
+/// the trait-based pipeline and assert bit identity everywhere.
+fn assert_equivalence(method: Method, rounds: usize) {
+    let dim = 400;
+    let clients = 4;
+    let cache_rounds = 8;
+
+    // --- legacy pipeline ---------------------------------------------
+    let mut legacy_rng = Pcg64::new(0x5eed_e001, 7);
+    let mut legacy_server = LegacyServer::new(vec![0.0; dim], method.clone(), cache_rounds);
+    let mut legacy_up = legacy_up_compressor(&method);
+    let mut legacy_residuals = vec![vec![0.0f32; dim]; clients];
+    let mut legacy_up_bits: Vec<usize> = Vec::new();
+    let mut legacy_down_bits: Vec<usize> = Vec::new();
+
+    // --- trait-based pipeline ----------------------------------------
+    let mut new_rng = Pcg64::new(0x5eed_e001, 7);
+    let mut new_server = Server::new(vec![0.0; dim], method.clone(), cache_rounds).unwrap();
+    let mut new_up = method.protocol().unwrap();
+    let mut new_residuals = vec![vec![0.0f32; dim]; clients];
+    let mut new_up_bits: Vec<usize> = Vec::new();
+    let mut new_down_bits: Vec<usize> = Vec::new();
+
+    let uses_residual = method.client_residual();
+
+    for round in 0..rounds {
+        // identical deltas on both sides (same seed, same draw order)
+        let legacy_deltas = round_deltas(&mut legacy_rng, clients, dim);
+        let new_deltas = round_deltas(&mut new_rng, clients, dim);
+        assert_eq!(legacy_deltas, new_deltas, "rng streams must match");
+
+        // legacy client side: error feedback via the Compressor trait
+        let mut legacy_msgs = Vec::new();
+        for (c, delta) in legacy_deltas.iter().enumerate() {
+            let mut acc: Vec<f32> = delta.clone();
+            if uses_residual {
+                for (a, r) in acc.iter_mut().zip(&legacy_residuals[c]) {
+                    *a += *r;
+                }
+            }
+            let msg = legacy_up.compress(&acc);
+            if legacy_up.error_feedback() {
+                msg.subtract_from(&mut acc);
+                legacy_residuals[c] = acc;
+            }
+            legacy_up_bits.push(msg.wire_bits());
+            legacy_msgs.push(msg);
+        }
+
+        // trait client side: protocol up_encode + byte roundtrip
+        let mut new_msgs = Vec::new();
+        for (c, delta) in new_deltas.iter().enumerate() {
+            let mut acc: Vec<f32> = delta.clone();
+            if uses_residual {
+                for (a, r) in acc.iter_mut().zip(&new_residuals[c]) {
+                    *a += *r;
+                }
+            }
+            let msg = new_up.up_encode(&acc);
+            if new_up.client_residual() {
+                msg.subtract_from(&mut acc);
+                new_residuals[c] = acc;
+            }
+            let wire = msg.to_wire();
+            new_up_bits.push(wire.payload_bits);
+            new_msgs.push(Message::from_bytes(&wire.bytes).unwrap());
+        }
+
+        // identical uploads, bit for bit, wire-roundtripped or not
+        for (a, b) in legacy_msgs.iter().zip(&new_msgs) {
+            assert_eq!(a, b, "{method:?} round {round}: upload diverged");
+        }
+
+        legacy_down_bits.push(legacy_server.aggregate_and_apply(&legacy_msgs));
+        new_down_bits.push(new_server.aggregate_and_apply(&new_msgs).unwrap());
+    }
+
+    // bit-identical global model
+    let legacy_bits: Vec<u32> = legacy_server.params.iter().map(|x| x.to_bits()).collect();
+    let new_bits: Vec<u32> = new_server.params.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(legacy_bits, new_bits, "{method:?}: server params diverged");
+
+    // identical wire accounting in both directions
+    assert_eq!(legacy_up_bits, new_up_bits, "{method:?}: upload bits diverged");
+    assert_eq!(legacy_down_bits, new_down_bits, "{method:?}: broadcast bits diverged");
+
+    // identical client residuals
+    assert_eq!(legacy_residuals, new_residuals, "{method:?}: client residuals diverged");
+
+    // identical straggler prices for every reachable lag (including
+    // beyond the cache horizon)
+    for lag in 0..=rounds {
+        assert_eq!(
+            legacy_server.straggler_download_bits(rounds - lag),
+            new_server.straggler_download_bits(rounds - lag),
+            "{method:?}: straggler price diverged at lag {lag}"
+        );
+    }
+}
+
+#[test]
+fn equivalence_baseline() {
+    assert_equivalence(Method::Baseline, 6);
+}
+
+#[test]
+fn equivalence_fedavg() {
+    assert_equivalence(Method::FedAvg { n: 5 }, 6);
+}
+
+#[test]
+fn equivalence_signsgd() {
+    assert_equivalence(Method::SignSgd { delta: 0.002 }, 6);
+}
+
+#[test]
+fn equivalence_topk() {
+    assert_equivalence(Method::TopK { p: 0.05 }, 6);
+}
+
+#[test]
+fn equivalence_sparse_updown() {
+    assert_equivalence(Method::SparseUpDown { p_up: 0.05, p_down: 0.02 }, 10);
+}
+
+#[test]
+fn equivalence_stc() {
+    assert_equivalence(Method::Stc { p_up: 0.05, p_down: 0.02 }, 10);
+}
+
+#[test]
+fn equivalence_hybrid() {
+    assert_equivalence(Method::Hybrid { p: 0.05, n: 3 }, 10);
+}
+
+#[test]
+fn equivalence_deep_cache_eviction() {
+    // more rounds than the cache holds: eviction fallback must price
+    // identically too
+    let dim = 100;
+    let method = Method::Stc { p_up: 0.1, p_down: 0.1 };
+    let mut rng = Pcg64::new(3, 3);
+    let mut legacy = LegacyServer::new(vec![0.0; dim], method.clone(), 3);
+    let mut newer = Server::new(vec![0.0; dim], method.clone(), 3).unwrap();
+    let mut up = method.protocol().unwrap();
+    for _ in 0..8 {
+        let acc: Vec<f32> = (0..dim).map(|_| rng.normal()).collect();
+        let msg = up.up_encode(&acc);
+        legacy.aggregate_and_apply(std::slice::from_ref(&msg));
+        newer.aggregate_and_apply(std::slice::from_ref(&msg)).unwrap();
+    }
+    for lag in 0..=8 {
+        assert_eq!(
+            legacy.straggler_download_bits(8 - lag),
+            newer.straggler_download_bits(8 - lag),
+            "lag {lag}"
+        );
+    }
+}

@@ -14,7 +14,7 @@
 
 use fedstc::compression::Message;
 use fedstc::config::{FedConfig, Method};
-use fedstc::protocol::{self, Broadcast, Protocol, ProtocolArgs};
+use fedstc::protocol::{self, Broadcast, Protocol, ProtocolArgs, Scale};
 use fedstc::sim::run_logreg;
 use fedstc::util::bits_to_mb;
 
@@ -92,7 +92,7 @@ impl Protocol for TFedAvgProtocol {
         msg.subtract_from(&mut self.agg);
         self.residual.copy_from_slice(&self.agg);
         // down_bits: None → the server bills the measured wire frame
-        Ok(Broadcast { msg, scale: 1.0, down_bits: None })
+        Ok(Broadcast { msg, scale: Scale::Scalar(1.0), down_bits: None })
     }
 
     fn server_residual(&self) -> Option<&[f32]> {

@@ -1,0 +1,162 @@
+//! bench_session_overhead — rounds/sec of the unified session engine
+//! against the legacy-facade path, plus the cost of transcript
+//! recording.
+//!
+//! The session redesign put one round engine behind both drivers; this
+//! bench pins what that indirection costs on the serial hot path:
+//!
+//! * `legacy-facade`   — `FederatedRun::run_round` (the historical API,
+//!   now a thin wrapper over the session)
+//! * `session-direct`  — `Session::run_round` with a caller trainer
+//! * `session-pool1`   — the same rounds through the executor path
+//!   (one in-thread worker; what the cluster tick machine pays)
+//! * `session-record`  — session-direct plus a `TranscriptWriter`
+//!   streaming every round frame to a temp file
+//!
+//! Acceptance target: facade and session-direct within noise of each
+//! other (the facade is one `Deref` deep), recording overhead bounded.
+//!
+//!     cargo bench --bench bench_session_overhead [-- --rounds N]
+//!
+//! Emits `BENCH_session_overhead.json` (see `benchkit::emit_json`).
+
+use fedstc::cluster::NativeLogregFactory;
+use fedstc::config::{FedConfig, Method};
+use fedstc::coordinator::FederatedRun;
+use fedstc::models::native::NativeLogreg;
+use fedstc::session::{Execution, Oracle, Session};
+use fedstc::sim::Experiment;
+use fedstc::util::benchkit::{banner, bench_args, emit_json, Table};
+use fedstc::util::json::Json;
+use fedstc::util::Timer;
+
+const CLIENTS: usize = 32;
+const BATCH: usize = 20;
+const WARMUP_ROUNDS: usize = 3;
+
+fn cfg(timed_rounds: usize) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: CLIENTS,
+        participation: 1.0,
+        classes_per_client: 5,
+        batch_size: BATCH,
+        method: Method::Stc { p_up: 0.02, p_down: 0.02 },
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: WARMUP_ROUNDS + timed_rounds + 1,
+        eval_every: 1_000_000,
+        seed: 9,
+        train_examples: 1600,
+        test_examples: 200,
+        ..Default::default()
+    }
+}
+
+enum Arm {
+    LegacyFacade,
+    SessionDirect,
+    SessionPool1,
+    SessionRecord,
+}
+
+fn rounds_per_sec(arm: &Arm, c: &FedConfig, timed_rounds: usize) -> anyhow::Result<f64> {
+    let exp = Experiment::new(c.clone())?;
+    let init = exp.spec.init_flat(c.seed);
+    let mut trainer = NativeLogreg::new(c.batch_size);
+    let factory = NativeLogregFactory { batch_size: c.batch_size };
+    let record_path = std::env::temp_dir()
+        .join(format!("fedstc_bench_session_overhead_{}.fstx", std::process::id()));
+
+    let secs = match arm {
+        Arm::LegacyFacade => {
+            let mut run = FederatedRun::new(c.clone(), &exp.train, init)?;
+            for _ in 0..WARMUP_ROUNDS {
+                run.run_round(&mut trainer, &exp.train)?;
+            }
+            let t = Timer::start();
+            for _ in 0..timed_rounds {
+                run.run_round(&mut trainer, &exp.train)?;
+            }
+            t.secs()
+        }
+        Arm::SessionDirect | Arm::SessionRecord => {
+            let mut session =
+                Session::new(c.clone(), &exp.train, init, Execution::Serial)?;
+            if matches!(arm, Arm::SessionRecord) {
+                session.record_transcript(&record_path, true)?;
+            }
+            for _ in 0..WARMUP_ROUNDS {
+                session.run_round(Oracle::Trainer(&mut trainer), &exp.train)?;
+            }
+            let t = Timer::start();
+            for _ in 0..timed_rounds {
+                session.run_round(Oracle::Trainer(&mut trainer), &exp.train)?;
+            }
+            let secs = t.secs();
+            session.finish()?;
+            secs
+        }
+        Arm::SessionPool1 => {
+            let mut session =
+                Session::new(c.clone(), &exp.train, init, Execution::Serial)?;
+            for _ in 0..WARMUP_ROUNDS {
+                session.run_round(Oracle::Factory(&factory), &exp.train)?;
+            }
+            let t = Timer::start();
+            for _ in 0..timed_rounds {
+                session.run_round(Oracle::Factory(&factory), &exp.train)?;
+            }
+            t.secs()
+        }
+    };
+    let _ = std::fs::remove_file(&record_path);
+    Ok(timed_rounds as f64 / secs)
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args()?;
+    let timed_rounds: usize = args.get_parse("rounds")?.unwrap_or(20);
+    args.finish()?;
+
+    banner(
+        "session overhead",
+        "rounds/sec: legacy facade vs session engine vs recording (logreg/stc)",
+    );
+
+    let c = cfg(timed_rounds);
+    let arms = [
+        ("legacy-facade", Arm::LegacyFacade),
+        ("session-direct", Arm::SessionDirect),
+        ("session-pool1", Arm::SessionPool1),
+        ("session-record", Arm::SessionRecord),
+    ];
+
+    let mut table = Table::new(&["arm", "rounds/s", "vs facade"]);
+    let mut rows = Vec::new();
+    let mut facade_rps = 0.0f64;
+    for (name, arm) in &arms {
+        let rps = rounds_per_sec(arm, &c, timed_rounds)?;
+        if matches!(arm, Arm::LegacyFacade) {
+            facade_rps = rps;
+        }
+        let rel = rps / facade_rps;
+        table.row(&[name.to_string(), format!("{rps:.1}"), format!("{rel:.2}x")]);
+        let mut row = Json::obj();
+        row.set("arm", Json::Str(name.to_string()))
+            .set("rounds_per_sec", Json::Num(rps))
+            .set("vs_facade", Json::Num(rel));
+        rows.push(row);
+    }
+    table.print();
+
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("session_overhead".into()))
+        .set("clients", Json::Num(CLIENTS as f64))
+        .set("timed_rounds", Json::Num(timed_rounds as f64))
+        .set("rows", Json::Arr(rows));
+    let path = emit_json("session_overhead", &out)?;
+    println!("\nwrote {}", path.display());
+
+    Ok(())
+}

@@ -1,8 +1,11 @@
 //! Minimal CLI argument parser (clap is unavailable offline).
 //!
-//! Grammar: `repro <subcommand> [--key value]... [--flag]...`
-//! Unknown keys are surfaced as errors by the consumers via
-//! [`Args::finish`], which reports any argument that was never read.
+//! Grammar: `repro <subcommand> [operand]... [--key value]... [--flag]...`
+//! Positional operands (`repro replay run.fstx`) must come before the
+//! first `--key`, since a bare token after a key is consumed as that
+//! key's value. Unknown keys and unconsumed operands are surfaced as
+//! errors by the consumers via [`Args::finish`], which reports any
+//! argument that was never read.
 
 use std::collections::BTreeMap;
 
@@ -10,7 +13,9 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub subcommand: String,
     kv: BTreeMap<String, String>,
+    positional: Vec<String>,
     read: std::cell::RefCell<Vec<String>>,
+    pos_read: std::cell::Cell<usize>,
 }
 
 impl Args {
@@ -19,21 +24,28 @@ impl Args {
         let mut it = args.into_iter().peekable();
         let subcommand = it.next().unwrap_or_else(|| "help".to_string());
         let mut kv = BTreeMap::new();
+        let mut positional = Vec::new();
         while let Some(arg) = it.next() {
-            let key = arg
-                .strip_prefix("--")
-                .ok_or_else(|| anyhow::anyhow!("expected --key, got '{arg}'"))?
-                .to_string();
+            let Some(key) = arg.strip_prefix("--") else {
+                positional.push(arg);
+                continue;
+            };
             // `--key=value` or `--key value` or bare flag `--key`
             if let Some((k, v)) = key.split_once('=') {
                 kv.insert(k.to_string(), v.to_string());
             } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
-                kv.insert(key, it.next().unwrap());
+                kv.insert(key.to_string(), it.next().unwrap());
             } else {
-                kv.insert(key, "true".to_string());
+                kv.insert(key.to_string(), "true".to_string());
             }
         }
-        Ok(Args { subcommand, kv, read: std::cell::RefCell::new(Vec::new()) })
+        Ok(Args {
+            subcommand,
+            kv,
+            positional,
+            read: std::cell::RefCell::new(Vec::new()),
+            pos_read: std::cell::Cell::new(0),
+        })
     }
 
     /// Parse from the process environment.
@@ -79,12 +91,24 @@ impl Args {
         self.kv.iter().map(|(k, v)| (k.clone(), v.clone())).collect()
     }
 
+    /// Positional operand `i` (0-based, order of appearance). Marks all
+    /// operands up to `i` as consumed for [`Args::finish`].
+    pub fn positional(&self, i: usize) -> Option<String> {
+        self.pos_read.set(self.pos_read.get().max(i + 1));
+        self.positional.get(i).cloned()
+    }
+
     /// Error if any provided argument was never consumed — catches typos.
     pub fn finish(&self) -> anyhow::Result<()> {
         let read = self.read.borrow();
         let unused: Vec<&String> =
             self.kv.keys().filter(|k| !read.contains(k)).collect();
         anyhow::ensure!(unused.is_empty(), "unknown arguments: {unused:?}");
+        anyhow::ensure!(
+            self.pos_read.get() >= self.positional.len(),
+            "unexpected positional arguments: {:?}",
+            &self.positional[self.pos_read.get()..]
+        );
         Ok(())
     }
 }
@@ -146,7 +170,19 @@ mod tests {
     }
 
     #[test]
-    fn rejects_positional_noise() {
-        assert!(Args::parse(["train".to_string(), "oops".to_string()]).is_err());
+    fn positional_operands() {
+        // consumed operands are fine (`repro replay run.fstx --verbose`)
+        let a = parse(&["replay", "run.fstx", "--verbose"]);
+        assert_eq!(a.positional(0).as_deref(), Some("run.fstx"));
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+        assert_eq!(a.positional(9), None);
+    }
+
+    #[test]
+    fn unconsumed_positionals_detected() {
+        let a = parse(&["train", "oops"]);
+        let err = a.finish().unwrap_err().to_string();
+        assert!(err.contains("oops"), "{err}");
     }
 }

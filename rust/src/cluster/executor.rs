@@ -53,8 +53,10 @@ pub struct RoundPlan<'a> {
     /// link/compute models: each worker prices its client's local
     /// training while it still owns the result, so the coordinator
     /// receives event-ready (bits, compute-seconds) pairs and only has
-    /// to schedule them onto the shared server medium
-    pub transport: &'a Transport,
+    /// to schedule them onto the shared server medium. `None` for
+    /// drivers with no notion of time (the serial session), in which
+    /// case `compute_s` is 0.
+    pub transport: Option<&'a Transport>,
 }
 
 /// One participant's finished round work.
@@ -213,7 +215,8 @@ fn run_one(
     let up_bits = wire.payload_bits as u64;
     let msg = Message::from_bytes(&wire.bytes)
         .expect("roundtrip of a freshly encoded upload cannot fail");
-    let compute_s = plan.transport.compute_time(client.id, plan.local_iters);
+    let compute_s =
+        plan.transport.map_or(0.0, |t| t.compute_time(client.id, plan.local_iters));
     ClientResult { slot, client_id: client.id, loss, msg, up_bits, compute_s }
 }
 
@@ -248,7 +251,7 @@ mod tests {
             lr: 0.05,
             momentum: 0.0,
             local_iters: 3,
-            transport: &transport,
+            transport: Some(&transport),
         };
         let factory = NativeLogregFactory { batch_size: 10 };
         let participants: Vec<(usize, &mut ClientState)> =
@@ -297,7 +300,7 @@ mod tests {
                 lr: 0.05,
                 momentum: 0.0,
                 local_iters: 2,
-                transport: &transport,
+                transport: Some(&transport),
             };
             let factory = NativeLogregFactory { batch_size: 10 };
             let participants: Vec<(usize, &mut ClientState)> =
@@ -319,7 +322,7 @@ mod tests {
             lr: 0.05,
             momentum: 0.0,
             local_iters: 1,
-            transport: &transport,
+            transport: Some(&transport),
         };
         let factory = NativeLogregFactory { batch_size: 10 };
         let rs =
@@ -337,7 +340,7 @@ mod tests {
             lr: 0.05,
             momentum: 0.0,
             local_iters: 1,
-            transport: &transport,
+            transport: Some(&transport),
         };
         let factory = NativeLogregFactory { batch_size: 10 };
         let participants: Vec<(usize, &mut ClientState)> =

@@ -20,14 +20,13 @@
 //! cluster (no churn, no dropout, no stragglers) reproduces the serial
 //! run bit-for-bit while still exercising the full machine.
 
-use super::executor::{RoundPlan, TrainerFactory, WorkerPool};
+use super::executor::{TrainerFactory, WorkerPool};
 use super::membership::Membership;
 use super::transport::{TransferReq, Transport};
 use super::ClusterConfig;
 use crate::compression::Message;
-use crate::coordinator::{ClientState, Server};
-use crate::data::{split_by_class, Dataset, SplitSpec};
-use crate::metrics::CommLedger;
+use crate::data::Dataset;
+use crate::session::{Execution, Session};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -167,26 +166,27 @@ struct SyncOutcome {
 }
 
 /// A fully wired cluster simulation.
+///
+/// Since the session redesign the round mathematics lives in an embedded
+/// [`Session`] (thread-pool execution): participant draws, local
+/// training, aggregation and observer/transcript fan-out all go through
+/// [`Session::draw_participants`] / [`Session::train_participants`] /
+/// [`Session::commit_round`] — this type adds only what a *cluster*
+/// adds: membership lifecycle, the simulated transport, deadlines and
+/// the tick machine. `ClusterRun` derefs to the session, so
+/// `run.server`, `run.ledger` and `run.clients` read as before.
 pub struct ClusterRun {
     pub cfg: ClusterConfig,
-    pub server: Server,
-    pub clients: Vec<ClientState>,
+    session: Session,
     pub membership: Membership,
     pub transport: Transport,
-    pub ledger: CommLedger,
     pub stats: ClusterStats,
     /// successfully aggregated rounds
     pub rounds_done: usize,
     pub ticks: usize,
     /// simulated federated wall-clock
     pub sim_clock_s: f64,
-    /// ids drawn for the current/last round (diagnostics + tests)
-    pub last_participants: Vec<usize>,
     phase: Phase,
-    pool: WorkerPool,
-    /// participant sampler — SAME stream as the serial FederatedRun so a
-    /// healthy static cluster selects identical participants
-    sampler: Pcg64,
     /// mid-round dropout draws (separate stream: lifecycle noise must
     /// never perturb sampling or training)
     event_rng: Pcg64,
@@ -199,28 +199,34 @@ pub struct ClusterRun {
     pending_queue_secs: f64,
 }
 
+impl std::ops::Deref for ClusterRun {
+    type Target = Session;
+
+    fn deref(&self) -> &Session {
+        &self.session
+    }
+}
+
+impl std::ops::DerefMut for ClusterRun {
+    fn deref_mut(&mut self) -> &mut Session {
+        &mut self.session
+    }
+}
+
 impl ClusterRun {
     /// Build the run: Algorithm 5 split over the full population (late
     /// joiners own their shard from the start, they just have not shown
-    /// up yet), server, membership, links and the worker pool.
+    /// up yet), server, membership, links and the worker pool — the
+    /// session owns the federated state, this type owns the cluster
+    /// superstructure.
     pub fn new(cfg: ClusterConfig, train: &Dataset, init_params: Vec<f32>) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let dim = init_params.len();
-        let spec = SplitSpec {
-            num_clients: cfg.fed.num_clients,
-            classes_per_client: cfg.fed.classes_per_client,
-            gamma: cfg.fed.gamma,
-            alpha: cfg.fed.alpha,
-            seed: cfg.fed.seed,
-        };
-        let shards = split_by_class(train, &spec);
-        let uses_residual = cfg.fed.method.client_residual();
-        let clients: Vec<ClientState> = shards
-            .into_iter()
-            .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg.fed, uses_residual))
-            .collect();
-        let server = Server::new(init_params, cfg.fed.method.clone(), cfg.fed.cache_rounds)?;
-        let sampler = Pcg64::new(cfg.fed.seed, 0x5a3b);
+        let session = Session::new(
+            cfg.fed.clone(),
+            train,
+            init_params,
+            Execution::ThreadPool(WorkerPool::new(cfg.workers)),
+        )?;
         let event_rng = Pcg64::new(cfg.fed.seed, 0xe7e7);
         let membership = Membership::new(cfg.fed.num_clients, cfg.fed.seed, cfg.initial_members());
         let transport = Transport::with_server(
@@ -230,21 +236,15 @@ impl ClusterRun {
             cfg.straggler_slowdown,
             cfg.server_link(),
         );
-        let pool = WorkerPool::new(cfg.workers);
         Ok(ClusterRun {
-            ledger: CommLedger::new(cfg.fed.num_clients),
-            server,
-            clients,
+            session,
             membership,
             transport,
             stats: ClusterStats::default(),
             rounds_done: 0,
             ticks: 0,
             sim_clock_s: 0.0,
-            last_participants: Vec::new(),
             phase: Phase::WaitingForMembers,
-            pool,
-            sampler,
             event_rng,
             pending: Vec::new(),
             pending_selected: 0,
@@ -254,6 +254,16 @@ impl ClusterRun {
             pending_queue_secs: 0.0,
             cfg,
         })
+    }
+
+    /// Attach a transcript recorder writing to `path`. Must be called
+    /// before the first round. Cluster recordings are *not* flagged
+    /// sync-derivable: download accounting depends on membership and
+    /// transport state the transcript does not carry, and late uploads
+    /// are billed but never aggregated — replay re-verifies the round
+    /// mathematics (uploads → aggregation → model) only.
+    pub fn record_to(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
+        self.session.record_transcript(path, false)
     }
 
     pub fn phase(&self) -> Phase {
@@ -269,11 +279,6 @@ impl ClusterRun {
         self.cfg.fed.rounds()
     }
 
-    /// Per-client SGD iterations consumed (the paper's x-axis).
-    pub fn iterations_done(&self) -> usize {
-        self.server.round * self.cfg.fed.method.local_iters()
-    }
-
     /// Advance the machine by exactly one phase step. Returns a summary
     /// when the step was an aggregation (one round closed); errors —
     /// instead of panicking — if the protocol rejects the round.
@@ -287,7 +292,7 @@ impl ClusterRun {
         }
         self.ticks += 1;
         if self.ticks > self.cfg.max_ticks {
-            self.finish();
+            self.enter_finished()?;
             return Ok(None);
         }
         match self.phase {
@@ -300,12 +305,12 @@ impl ClusterRun {
                 Ok(None)
             }
             Phase::RoundTrain => {
-                self.tick_round_train(factory, data);
+                self.tick_round_train(factory, data)?;
                 Ok(None)
             }
             Phase::Aggregate => Ok(Some(self.tick_aggregate()?)),
             Phase::Cooldown { ticks_left } => {
-                self.tick_cooldown(ticks_left);
+                self.tick_cooldown(ticks_left)?;
                 Ok(None)
             }
             Phase::Finished => Ok(None),
@@ -350,8 +355,9 @@ impl ClusterRun {
         }
         // bring every active client up to the current global model; free
         // at server round 0, a billed §V-B catch-up after a quorum outage
-        let ids: Vec<usize> =
-            (0..self.clients.len()).filter(|&id| self.membership.is_active(id)).collect();
+        let ids: Vec<usize> = (0..self.session.clients.len())
+            .filter(|&id| self.membership.is_active(id))
+            .collect();
         self.sync_clients(&ids);
         self.phase = Phase::RoundTrain;
     }
@@ -366,7 +372,10 @@ impl ClusterRun {
             .iter()
             .map(|&id| TransferReq {
                 client_id: id,
-                bits: self.server.straggler_download_bits(self.clients[id].last_sync_round)
+                bits: self
+                    .session
+                    .server
+                    .straggler_download_bits(self.session.clients[id].last_sync_round)
                     as u64,
                 ready_s: 0.0,
             })
@@ -374,11 +383,11 @@ impl ClusterRun {
         let sched = self.transport.schedule_downloads(&reqs);
         let mut out = Vec::with_capacity(ids.len());
         for (k, &id) in ids.iter().enumerate() {
-            let lag = self.server.round - self.clients[id].last_sync_round;
+            let lag = self.session.server.round - self.session.clients[id].last_sync_round;
             let bits = reqs[k].bits;
             let secs = sched.timings[k].duration_s;
             if bits > 0 {
-                self.ledger.record_download_contended(
+                self.session.ledger.record_download_contended(
                     bits as usize,
                     secs,
                     sched.timings[k].queue_s,
@@ -388,10 +397,10 @@ impl ClusterRun {
                     self.stats.catch_up_bits += bits;
                 }
             }
-            self.clients[id].last_sync_round = self.server.round;
+            self.session.clients[id].last_sync_round = self.session.server.round;
             out.push(SyncOutcome { bits, lag, secs });
         }
-        self.ledger.note_down_concurrency(sched.telemetry.peak_concurrency);
+        self.session.ledger.note_down_concurrency(sched.telemetry.peak_concurrency);
         self.stats.down_queue_seconds += sched.telemetry.queue_seconds;
         self.stats.peak_down_concurrency = self
             .stats
@@ -400,11 +409,14 @@ impl ClusterRun {
         (out, sched.telemetry.queue_seconds)
     }
 
-    fn tick_round_train(&mut self, factory: &dyn TrainerFactory, data: &Dataset) {
-        let n = self.cfg.fed.num_clients;
-        let m = self.cfg.fed.clients_per_round();
-        let ids = self.sampler.sample_without_replacement(n, m);
-        self.last_participants = ids.clone();
+    fn tick_round_train(
+        &mut self,
+        factory: &dyn TrainerFactory,
+        data: &Dataset,
+    ) -> anyhow::Result<()> {
+        // canonical participant draw through the session (same sampler
+        // stream as the serial path; notifies observers/transcripts)
+        let ids = self.session.draw_participants()?;
         self.pending_selected = ids.len();
 
         // lifecycle: offline no-shows, then mid-round dropouts
@@ -440,33 +452,11 @@ impl ClusterRun {
             down_secs.push(o.secs);
         }
 
-        // parallel local training, fixed reduction order = sampled order
-        let local_iters = self.cfg.fed.method.local_iters();
-        let plan = RoundPlan {
-            method: &self.cfg.fed.method,
-            lr: self.cfg.fed.lr,
-            momentum: self.cfg.fed.momentum,
-            local_iters,
-            transport: &self.transport,
-        };
-        let mut slot_of = vec![usize::MAX; n];
-        for (slot, &id) in participant_ids.iter().enumerate() {
-            slot_of[id] = slot;
-        }
-        let parts: Vec<(usize, &mut ClientState)> = self
-            .clients
-            .iter_mut()
-            .enumerate()
-            .filter_map(|(id, c)| {
-                let slot = slot_of[id];
-                if slot == usize::MAX {
-                    None
-                } else {
-                    Some((slot, c))
-                }
-            })
-            .collect();
-        let results = self.pool.execute_round(factory, &self.server.params, data, parts, &plan);
+        // parallel local training through the session's executor, fixed
+        // reduction order = sampled order
+        let results = self
+            .session
+            .train_participants(factory, data, &participant_ids, Some(&self.transport));
 
         // schedule every upload onto the shared server ingress: a client
         // initiates once its download and local compute are done, and its
@@ -487,7 +477,7 @@ impl ClusterRun {
             .stats
             .peak_up_concurrency
             .max(sched.telemetry.peak_concurrency as u64);
-        self.ledger.note_up_concurrency(sched.telemetry.peak_concurrency);
+        self.session.ledger.note_up_concurrency(sched.telemetry.peak_concurrency);
 
         let transport = &self.transport;
         self.pending = results
@@ -506,6 +496,7 @@ impl ClusterRun {
             })
             .collect();
         self.phase = Phase::Aggregate;
+        Ok(())
     }
 
     fn tick_aggregate(&mut self) -> anyhow::Result<RoundSummary> {
@@ -518,7 +509,7 @@ impl ClusterRun {
             self.stats.empty_rounds += 1;
             self.sim_clock_s += self.cfg.tick_seconds;
             return Ok(RoundSummary {
-                round: self.server.round,
+                round: self.session.server.round,
                 selected: self.pending_selected,
                 dropped: self.pending_dropped,
                 late: 0,
@@ -552,9 +543,16 @@ impl ClusterRun {
         let mut late = 0usize;
         for p in pending {
             // bits leave the client either way; bill the transfer
-            self.ledger.record_upload_contended(p.up_bits as usize, p.up_secs, p.up_queue_s);
+            self.session.ledger.record_upload_contended(
+                p.up_bits as usize,
+                p.up_secs,
+                p.up_queue_s,
+            );
             loss_sum += p.loss as f64;
             if p.arrival_s <= deadline {
+                // only messages the server actually aggregates reach the
+                // observers (transcripts replay exactly these)
+                self.session.notify_upload(p.client_id, &p.msg, p.up_bits)?;
                 msgs.push(p.msg);
             } else {
                 late += 1;
@@ -566,29 +564,30 @@ impl ClusterRun {
                 // deferral mechanism in their protocol and genuinely
                 // lose the round — that asymmetry is part of what the
                 // straggler experiments measure.
-                let residual = &mut self.clients[p.client_id].residual;
+                let residual = &mut self.session.clients[p.client_id].residual;
                 if !residual.is_empty() {
                     p.msg.add_to(residual, 1.0);
                 }
             }
         }
         let aggregated = msgs.len();
+        let mean_loss = (loss_sum / trained as f64) as f32;
         // the deadline always covers the slowest eligible participant
         // (grace ≥ 1), so msgs is non-empty whenever anyone trained;
         // all-dropped rounds were counted as empty above — and if a
         // future bug ever breaks that invariant, aggregation now reports
         // a clean error instead of panicking
-        self.server.aggregate_and_apply(&msgs)?;
+        self.session.commit_round(&msgs, mean_loss)?;
         self.rounds_done += 1;
         self.sim_clock_s += deadline;
 
         Ok(RoundSummary {
-            round: self.server.round,
+            round: self.session.server.round,
             selected: self.pending_selected,
             dropped: self.pending_dropped,
             late,
             aggregated,
-            mean_loss: (loss_sum / trained as f64) as f32,
+            mean_loss,
             catch_up_clients: self.pending_catchup_clients,
             catch_up_bits: self.pending_catchup_bits,
             round_secs: deadline,
@@ -596,11 +595,11 @@ impl ClusterRun {
         })
     }
 
-    fn tick_cooldown(&mut self, ticks_left: usize) {
+    fn tick_cooldown(&mut self, ticks_left: usize) -> anyhow::Result<()> {
         self.sim_clock_s += self.cfg.tick_seconds;
         if ticks_left > 1 {
             self.phase = Phase::Cooldown { ticks_left: ticks_left - 1 };
-            return;
+            return Ok(());
         }
         // churn happens between rounds
         let ev = self.membership.tick_churn(
@@ -613,22 +612,30 @@ impl ClusterRun {
         self.stats.joins += ev.joins as u64;
 
         if self.rounds_done >= self.target_rounds() {
-            self.finish();
+            self.enter_finished()?;
         } else if self.membership.active_count() < self.cfg.min_members {
             self.phase = Phase::WaitingForMembers;
         } else {
             self.phase = Phase::RoundTrain;
         }
+        Ok(())
     }
 
     /// Terminal settlement: every client that ever held the model
     /// downloads the updates it is still missing (mirrors the serial
-    /// `FederatedRun::settle_final_downloads`).
-    fn finish(&mut self) {
-        let ids: Vec<usize> =
-            (0..self.clients.len()).filter(|&id| self.membership.has_joined(id)).collect();
+    /// `Session::settle_final_downloads`), then the session finishes —
+    /// flushing any attached transcript.
+    fn enter_finished(&mut self) -> anyhow::Result<()> {
+        let ids: Vec<usize> = (0..self.session.clients.len())
+            .filter(|&id| self.membership.has_joined(id))
+            .collect();
         self.sync_clients(&ids);
+        // settlement was billed through the contended sync batch above;
+        // record the fact so transcripts carry a truthful end frame
+        self.session.note_settled();
+        self.session.finish()?;
         self.phase = Phase::Finished;
+        Ok(())
     }
 }
 

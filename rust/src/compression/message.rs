@@ -358,6 +358,37 @@ impl Message {
         }
     }
 
+    /// buf += scales ⊙ message — the per-coordinate counterpart of
+    /// [`Message::add_to`] (adaptive-δ broadcasts,
+    /// [`crate::protocol::Scale::PerCoord`]). `scales` must have the
+    /// tensor's length; sparse variants read only the touched positions.
+    pub fn add_to_per_coord(&self, buf: &mut [f32], scales: &[f32]) {
+        debug_assert_eq!(buf.len(), scales.len());
+        match self {
+            Message::Dense { values } => {
+                for ((b, v), s) in buf.iter_mut().zip(values).zip(scales) {
+                    *b += *s * *v;
+                }
+            }
+            Message::Sparse { indices, values, .. } => {
+                for (&idx, &v) in indices.iter().zip(values) {
+                    buf[idx as usize] += scales[idx as usize] * v;
+                }
+            }
+            Message::Ternary(t) => {
+                for (&idx, &sign) in t.indices.iter().zip(&t.signs) {
+                    let mag = if sign { t.mu } else { -t.mu };
+                    buf[idx as usize] += scales[idx as usize] * mag;
+                }
+            }
+            Message::Sign { signs } => {
+                for ((b, &sign), &s) in buf.iter_mut().zip(signs).zip(scales) {
+                    *b += if sign { s } else { -s };
+                }
+            }
+        }
+    }
+
     /// buf -= message (residual update).
     pub fn subtract_from(&self, buf: &mut [f32]) {
         self.add_to(buf, -1.0);
@@ -527,6 +558,37 @@ mod tests {
             m.add_to(&mut buf, 1.0);
             assert_eq!(dense, buf);
         }
+    }
+
+    #[test]
+    fn add_to_per_coord_matches_scalar_when_uniform() {
+        // a uniform per-coordinate vector must agree with the scalar path
+        for m in [
+            Message::Dense { values: vec![1.0, -2.0, 0.5] },
+            Message::Sparse { len: 3, indices: vec![0, 2], values: vec![5.0, -1.0] },
+            Message::Ternary(TernaryTensor {
+                len: 3,
+                indices: vec![1],
+                signs: vec![false],
+                mu: 2.0,
+                p: 0.3,
+            }),
+            Message::Sign { signs: vec![true, false, true] },
+        ] {
+            let mut scalar = vec![0.0f32; 3];
+            m.add_to(&mut scalar, 0.75);
+            let mut percoord = vec![0.0f32; 3];
+            m.add_to_per_coord(&mut percoord, &[0.75; 3]);
+            assert_eq!(scalar, percoord, "{m:?}");
+        }
+    }
+
+    #[test]
+    fn add_to_per_coord_scales_each_coordinate() {
+        let m = Message::Sign { signs: vec![true, true, false] };
+        let mut buf = vec![0.0f32; 3];
+        m.add_to_per_coord(&mut buf, &[0.5, 2.0, 4.0]);
+        assert_eq!(buf, vec![0.5, 2.0, -4.0]);
     }
 
     #[test]

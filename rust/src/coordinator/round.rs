@@ -1,76 +1,36 @@
 //! The communication-round orchestrator: Algorithm 2's outer loop.
+//!
+//! Since the session redesign this is a **thin facade** over a serial
+//! [`Session`] — the canonical round contract (participant draw, §V-B
+//! straggler sync, local training, encode→wire→decode upload,
+//! aggregation) lives in [`Session::run_round`]; `FederatedRun` keeps
+//! the historical constructor/`run_round(trainer, data) -> loss`
+//! signature for the sim, benches and examples, and derefs to the
+//! session for everything else (`run.server`, `run.ledger`,
+//! `run.settle_final_downloads()`, …). Bit-identity with the
+//! pre-session loop is pinned by the legacy-oracle property tests in
+//! `rust/tests/property_session.rs`.
 
-use super::client::{ClientState, LocalScratch};
-use super::server::Server;
-use crate::compression::Message;
-use crate::config::FedConfig;
-use crate::data::{split_by_class, Dataset, SplitSpec};
-use crate::metrics::CommLedger;
+use crate::data::Dataset;
 use crate::models::Trainer;
-use crate::protocol::Protocol;
-use crate::util::rng::Pcg64;
+use crate::session::{Execution, Oracle, Session};
 
 /// A fully wired federated run: server + clients + codec + accounting.
 /// Drive it with [`FederatedRun::run_round`]; evaluation cadence is the
 /// caller's concern (see `sim::Experiment`).
 pub struct FederatedRun {
-    pub cfg: FedConfig,
-    pub server: Server,
-    pub clients: Vec<ClientState>,
-    pub ledger: CommLedger,
-    /// the method's protocol, used for its upstream half (the server
-    /// owns its own instance for aggregation)
-    up_proto: Box<dyn Protocol>,
-    sampler: Pcg64,
-    scratch: LocalScratch,
-    /// scratch parameter vector (the client's working copy of W)
-    work_params: Vec<f32>,
-    /// participant message buffer reused across rounds
-    round_msgs: Vec<Message>,
-    /// ids drawn for the current round (exposed for diagnostics/tests)
-    pub last_participants: Vec<usize>,
+    session: Session,
 }
 
 impl FederatedRun {
     /// Build the run: splits `train` over clients per Algorithm 5 and
     /// initialises all state. `init_params` is the flattened W^(0).
-    pub fn new(cfg: FedConfig, train: &Dataset, init_params: Vec<f32>) -> anyhow::Result<Self> {
-        cfg.validate()?;
-        let dim = init_params.len();
-        let spec = SplitSpec {
-            num_clients: cfg.num_clients,
-            classes_per_client: cfg.classes_per_client,
-            gamma: cfg.gamma,
-            alpha: cfg.alpha,
-            seed: cfg.seed,
-        };
-        let shards = split_by_class(train, &spec);
-        let up_proto = cfg.method.protocol()?;
-        let uses_residual = up_proto.client_residual();
-        let clients: Vec<ClientState> = shards
-            .into_iter()
-            .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg, uses_residual))
-            .collect();
-
-        let server = Server::new(init_params, cfg.method.clone(), cfg.cache_rounds)?;
-        let sampler = Pcg64::new(cfg.seed, 0x5a3b);
-        Ok(FederatedRun {
-            ledger: CommLedger::new(cfg.num_clients),
-            server,
-            clients,
-            up_proto,
-            sampler,
-            scratch: LocalScratch::default(),
-            work_params: vec![0.0; dim],
-            round_msgs: Vec::new(),
-            last_participants: Vec::new(),
-            cfg,
-        })
-    }
-
-    /// Iterations consumed so far (per-client budget axis of the paper).
-    pub fn iterations_done(&self) -> usize {
-        self.server.round * self.cfg.method.local_iters()
+    pub fn new(
+        cfg: crate::config::FedConfig,
+        train: &Dataset,
+        init_params: Vec<f32>,
+    ) -> anyhow::Result<Self> {
+        Ok(FederatedRun { session: Session::new(cfg, train, init_params, Execution::Serial)? })
     }
 
     /// Execute one communication round. Returns the mean local training
@@ -81,90 +41,34 @@ impl FederatedRun {
         trainer: &mut dyn Trainer,
         data: &Dataset,
     ) -> anyhow::Result<f32> {
-        let m = self.cfg.clients_per_round();
-        let ids = self.sampler.sample_without_replacement(self.cfg.num_clients, m);
-        self.last_participants = ids.clone();
-        let local_iters = self.cfg.method.local_iters();
-
-        self.round_msgs.clear();
-        let mut loss_sum = 0.0f64;
-        for &id in &ids {
-            let client = &mut self.clients[id];
-
-            // 1. synchronise: download the partial sum P^(s) (or full
-            //    model) covering the rounds missed since last sync.
-            let down_bits = self.server.straggler_download_bits(client.last_sync_round);
-            if down_bits > 0 {
-                self.ledger.record_download(down_bits);
-            }
-            client.last_sync_round = self.server.round;
-
-            // 2. local training from the (now current) global model.
-            self.work_params.copy_from_slice(&self.server.params);
-            let loss = client.local_train(
-                &mut self.work_params,
-                trainer,
-                data,
-                local_iters,
-                self.cfg.lr,
-                self.cfg.momentum,
-                &mut self.scratch,
-            );
-            loss_sum += loss as f64;
-
-            // 3. ΔW_i = W_local − W_global, compress with error feedback,
-            //    upload — through the real byte serialization: the ledger
-            //    bills the measured frame and the server receives the
-            //    decoded bytes, so the wire codecs run on every upload.
-            let mut delta = std::mem::take(&mut self.work_params);
-            for (d, w) in delta.iter_mut().zip(&self.server.params) {
-                *d -= *w;
-            }
-            let msg = client.compress_update(delta, self.up_proto.as_mut());
-            let wire = msg.to_wire();
-            self.ledger.record_upload(wire.payload_bits);
-            self.round_msgs.push(Message::from_bytes(&wire.bytes)?);
-            self.work_params = vec![0.0; self.server.dim()];
-        }
-
-        // 4. server aggregates, applies, and enqueues the broadcast; the
-        //    broadcast's download cost is charged to clients when they
-        //    next synchronise (straggler_download_bits).
-        let msgs = std::mem::take(&mut self.round_msgs);
-        self.server.aggregate_and_apply(&msgs)?;
-        self.round_msgs = msgs;
-
-        Ok((loss_sum / ids.len() as f64) as f32)
+        Ok(self.session.run_round(Oracle::Trainer(trainer), data)?.mean_loss)
     }
 
-    /// Drain accounting for clients that never participated again: at the
-    /// end of training every client must still download the remaining
-    /// updates once to own the final model. Called once by the sim after
-    /// the last round so per-client download averages match the paper's
-    /// accounting (every client ends up with W^(T)).
-    pub fn settle_final_downloads(&mut self) {
-        for c in &mut self.clients {
-            let bits = self.server.straggler_download_bits(c.last_sync_round);
-            if bits > 0 {
-                self.ledger.record_download(bits);
-            }
-            c.last_sync_round = self.server.round;
-        }
+    /// Consume the facade, yielding the session (the `Deref`/`DerefMut`
+    /// impls below cover every by-reference use).
+    pub fn into_session(self) -> Session {
+        self.session
     }
+}
 
-    /// Mean client residual norm (staleness diagnostic, §VI-C).
-    pub fn mean_residual_norm(&self) -> f64 {
-        if self.clients.is_empty() || self.clients[0].residual.is_empty() {
-            return 0.0;
-        }
-        self.clients.iter().map(|c| c.residual_norm()).sum::<f64>() / self.clients.len() as f64
+impl std::ops::Deref for FederatedRun {
+    type Target = Session;
+
+    fn deref(&self) -> &Session {
+        &self.session
+    }
+}
+
+impl std::ops::DerefMut for FederatedRun {
+    fn deref_mut(&mut self) -> &mut Session {
+        &mut self.session
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::Method;
+    use crate::config::{FedConfig, Method};
     use crate::data::synth::task_dataset;
     use crate::models::native::NativeLogreg;
     use crate::models::ModelSpec;

@@ -12,7 +12,7 @@
 
 use crate::compression::Message;
 use crate::config::Method;
-use crate::protocol::{BroadcastCache, Protocol};
+use crate::protocol::{BroadcastCache, Protocol, Scale};
 use std::collections::VecDeque;
 
 /// The global model plus protocol-agnostic server state.
@@ -97,9 +97,13 @@ impl Server {
             self.dim()
         );
         let wire = b.msg.to_wire();
-        let down_bits = b.down_bits.unwrap_or(wire.payload_bits);
+        // a per-coordinate scale must travel with the broadcast, so its
+        // f32s are billed on top of the message frame (scalar scales ride
+        // the frame's existing slot — 0 extra, the historical accounting)
+        let down_bits = b.down_bits.unwrap_or(wire.payload_bits + b.scale.extra_wire_bits());
         let decoded = Message::from_bytes(&wire.bytes)?;
-        decoded.add_to(&mut self.params, b.scale);
+        let scale = Scale::from_bytes(&b.scale.to_bytes())?;
+        scale.apply(&decoded, &mut self.params)?;
         self.round += 1;
         self.broadcast_bits.push_back(down_bits as u64);
         if self.broadcast_bits.len() > self.cache_rounds {

@@ -41,6 +41,13 @@
 //!   simulated transport with a shared-medium server link: a
 //!   discrete-event contention scheduler (max–min fair / FIFO) bills
 //!   wall-clock time — including queueing delay — alongside bits.
+//! * [`session`] — the unified session layer: **one round engine** behind
+//!   the serial and cluster runs ([`session::Session`], parameterised by
+//!   an execution strategy and observer hooks), plus versioned on-disk
+//!   round transcripts ([`session::TranscriptWriter`] /
+//!   [`session::Transcript`]) and deterministic record/replay
+//!   ([`session::replay`], `repro replay`) that re-executes a recorded
+//!   run bit-for-bit without ever constructing a trainer.
 //! * [`sim`] — the federated learning simulation engine driving complete
 //!   experiments, and the sign-congruence analysis of Fig. 3.
 //! * [`config`] / [`cli`] — experiment configuration and a small CLI.
@@ -59,6 +66,7 @@ pub mod metrics;
 pub mod models;
 pub mod protocol;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod util;
 

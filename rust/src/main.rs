@@ -4,6 +4,7 @@
 //!   train      run one federated training experiment and print the curve
 //!   cluster    run the tick-driven parallel cluster simulation (dynamic
 //!              membership: joins, dropouts, stragglers, churn)
+//!   replay     re-execute / verify a recorded transcript (no trainer)
 //!   alpha      gradient sign-congruence analysis (paper Fig. 3)
 //!   protocols  list the registered compression protocols (--method names)
 //!   info       artifact + model inventory
@@ -20,12 +21,13 @@ use fedstc::cli::Args;
 use fedstc::cluster::{ClusterConfig, ClusterRun, ContentionPolicy, NativeLogregFactory};
 use fedstc::config::FedConfig;
 use fedstc::data::synth::task_dataset;
-use fedstc::metrics::{EvalPoint, TrainingLog};
+use fedstc::metrics::EvalPoint;
 use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
 use fedstc::protocol::Protocol;
 use fedstc::runtime::{Engine, HloTrainer};
+use fedstc::session::{replay, Observer, Transcript, TranscriptWriter};
 use fedstc::sim::alpha::{AlphaAnalysis, BatchRegime};
-use fedstc::sim::{cluster_report_csv, cluster_report_json, Experiment};
+use fedstc::sim::{cluster_report_csv, cluster_report_json, CurveBuilder, Experiment};
 use fedstc::util::{bits_to_mb, Timer};
 
 fn main() {
@@ -40,6 +42,7 @@ fn run() -> anyhow::Result<()> {
     match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "cluster" => cmd_cluster(&args),
+        "replay" => cmd_replay(&args),
         "alpha" => cmd_alpha(&args),
         "protocols" => cmd_protocols(&args),
         "info" => cmd_info(&args),
@@ -59,10 +62,14 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
         cfg.apply_file(&text)?;
     }
     let is_cluster = args.subcommand == "cluster";
+    // only train/cluster consume --record; elsewhere it falls through to
+    // apply_kv and is rejected instead of being silently ignored
+    let records = matches!(args.subcommand.as_str(), "train" | "cluster");
     for (k, v) in args.pairs() {
         match k.as_str() {
             // CLI-only keys that are not FedConfig fields
             "backend" | "out" | "config" | "verbose" | "key" | "values" | "ks" | "trials" => {}
+            "record" if records => {}
             // cluster-only keys (cmd_cluster reads them separately); on
             // any other subcommand they fall through to apply_kv and are
             // rejected as unknown instead of being silently ignored
@@ -98,22 +105,28 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let default_backend = if cfg.model == "logreg" { "native" } else { "hlo" };
     let backend = args.get_or("backend", default_backend);
     let out = args.get("out");
+    let record = args.get("record");
     args.finish()?;
 
     println!("# {}", cfg.describe());
     let timer = Timer::start();
     let exp = Experiment::new(cfg)?;
     let mut trainer = make_trainer(&exp.cfg, &backend)?;
-    let log = exp.run(trainer.as_mut())?;
+    let mut observers: Vec<Box<dyn Observer>> = Vec::new();
+    if let Some(path) = &record {
+        observers.push(Box::new(TranscriptWriter::create(std::path::Path::new(path), true)?));
+    }
+    let log = exp.run_observed(trainer.as_mut(), observers)?;
 
-    println!("iter  round  accuracy  loss      upMB      downMB");
+    println!("iter  round  accuracy  loss     trainloss  upMB      downMB");
     for p in &log.points {
         println!(
-            "{:>5} {:>6}  {:.4}    {:.4}  {:>8.3}  {:>8.3}",
+            "{:>5} {:>6}  {:.4}    {:.4}   {:.4}   {:>8.3}  {:>8.3}",
             p.iteration,
             p.round,
             p.accuracy,
             p.loss,
+            p.train_loss,
             bits_to_mb(p.up_bits),
             bits_to_mb(p.down_bits)
         );
@@ -127,6 +140,87 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         std::fs::write(&path, log.to_csv())?;
         println!("# wrote {path}");
     }
+    if let Some(path) = record {
+        println!("# recorded transcript {path} (verify/re-run with: repro replay {path})");
+    }
+    Ok(())
+}
+
+/// `repro replay <file>` — re-execute a recorded transcript through a
+/// fresh server, with **zero trainer invocations**, verifying the
+/// recorded per-round broadcast bits and model checksums (and, for
+/// serial recordings, the full communication ledger).
+fn cmd_replay(args: &Args) -> anyhow::Result<()> {
+    let file = args
+        .positional(0)
+        .or_else(|| args.get("file"))
+        .ok_or_else(|| anyhow::anyhow!("usage: repro replay <file.fstx> [--verbose]"))?;
+    let verbose = args.flag("verbose");
+    args.finish()?;
+
+    let t = Transcript::read_file(std::path::Path::new(&file))?;
+    println!(
+        "# transcript {file}: v{} method={} clients={} dim={} rounds={} ({})",
+        t.version,
+        t.method_spec,
+        t.num_clients,
+        t.init_params.len(),
+        t.rounds.len(),
+        if t.sync_derivable() { "serial sync discipline" } else { "cluster recording" }
+    );
+    if verbose {
+        println!(
+            "{:>6} {:>8} {:>10} {:>12}  {:>18}",
+            "round", "uploads", "downbits", "upbits", "checksum"
+        );
+        for r in &t.rounds {
+            println!(
+                "{:>6} {:>8} {:>10} {:>12}  {:#018x}",
+                r.round,
+                r.uploads.len(),
+                r.down_bits,
+                r.total_up_bits,
+                r.params_checksum
+            );
+        }
+    }
+    let timer = Timer::start();
+    let outcome = replay(&t)?;
+    println!(
+        "# replayed {} rounds in {:.2}s: final model reproduced bit-for-bit \
+         (checksum {:#018x})",
+        outcome.rounds,
+        timer.secs(),
+        fedstc::session::params_checksum(&outcome.final_params)
+    );
+    // replay re-derives the full ledger only for sync-derivable (serial)
+    // recordings; cluster recordings bill transfers the transcript does
+    // not carry (late uploads, membership syncs), so report the
+    // recording's own end-frame totals there
+    let (up_total, uploads, down_total, downloads) = if outcome.downloads_verified {
+        (
+            outcome.ledger.total_up_bits,
+            outcome.ledger.uploads,
+            outcome.ledger.total_down_bits,
+            outcome.ledger.downloads,
+        )
+    } else {
+        (t.end.total_up_bits, t.end.uploads, t.end.total_down_bits, t.end.downloads)
+    };
+    let per_client = |bits: u64| bits_to_mb(bits / t.num_clients.max(1) as u64);
+    println!(
+        "# ledger: {:.3} MB up / {:.3} MB down per client ({} uploads, {} downloads){}",
+        per_client(up_total),
+        per_client(down_total),
+        uploads,
+        downloads,
+        if outcome.downloads_verified {
+            " — verified against the recording"
+        } else {
+            " — the recording's totals (replay re-verified the aggregated rounds)"
+        }
+    );
+    println!("OK: replay verified");
     Ok(())
 }
 
@@ -183,6 +277,7 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         ccfg.contention_policy = ContentionPolicy::parse(&v)?;
     }
     let out = args.get("out");
+    let record = args.get("record");
     args.finish()?;
 
     println!(
@@ -200,23 +295,25 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let exp = Experiment::new(ccfg.fed.clone())?;
     let init = exp.spec.init_flat(exp.cfg.seed);
     let mut cluster = ClusterRun::new(ccfg, &exp.train, init)?;
+    if let Some(path) = &record {
+        cluster.record_to(std::path::Path::new(path))?;
+    }
     let factory = NativeLogregFactory { batch_size: exp.cfg.batch_size };
     let mut eval_trainer = NativeLogreg::new(exp.cfg.batch_size);
 
-    let eval_every_rounds =
-        (exp.cfg.eval_every / exp.cfg.method.local_iters()).max(1);
     let timer = Timer::start();
-    let mut log = TrainingLog::new(&format!("cluster: {}", exp.cfg.describe()));
-    let mut last_eval_round = 0;
+    let mut curve = CurveBuilder::new(&format!("cluster: {}", exp.cfg.describe()), &exp.cfg);
+    let mut last_loss = 0.0f64;
     println!(
         "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8}  {:>8}  {:>9}  {:>8}  {:>8}",
         "round", "sel", "aggr", "drop", "late", "loss", "acc", "simsecs", "queuesec", "catchupMB"
     );
     while let Some(s) = cluster.next_round(&factory, &exp.train)? {
         let round = cluster.rounds_done;
-        if s.aggregated > 0
-            && (round % eval_every_rounds == 0 || round == cluster.target_rounds())
-        {
+        if s.aggregated > 0 {
+            last_loss = s.mean_loss as f64;
+        }
+        if s.aggregated > 0 && curve.due(round, cluster.target_rounds()) {
             let m = eval_trainer.eval(&cluster.server.params, &exp.test);
             println!(
                 "{:>6} {:>5} {:>5} {:>5} {:>5}  {:>8.4}  {:>8.4}  {:>9.1}  {:>8.2}  {:>8.3}",
@@ -231,35 +328,34 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
                 s.queue_secs,
                 bits_to_mb(s.catch_up_bits)
             );
-            log.push(EvalPoint {
+            curve.push(EvalPoint {
                 iteration: cluster.iterations_done(),
                 round,
                 accuracy: m.accuracy,
                 loss: m.loss,
+                train_loss: last_loss,
                 up_bits: cluster.ledger.up_bits_per_client(),
                 down_bits: cluster.ledger.down_bits_per_client(),
             });
-            last_eval_round = round;
         }
     }
     let m = eval_trainer.eval(&cluster.server.params, &exp.test);
     // make sure the exported curve ends with an evaluation (mirrors
     // sim::Experiment::run_cluster — no duplicate point when the loop
     // already evaluated the final round)
-    if last_eval_round < cluster.rounds_done || log.points.is_empty() {
-        log.push(EvalPoint {
+    if curve.needs_final(cluster.rounds_done) || curve.is_empty() {
+        curve.push(EvalPoint {
             iteration: cluster.iterations_done(),
             round: cluster.rounds_done,
             accuracy: m.accuracy,
             loss: m.loss,
+            train_loss: last_loss,
             up_bits: cluster.ledger.up_bits_per_client(),
             down_bits: cluster.ledger.down_bits_per_client(),
         });
     }
     // settlement already ran; refresh the last point's download accounting
-    if let Some(p) = log.points.last_mut() {
-        p.down_bits = cluster.ledger.down_bits_per_client();
-    }
+    let log = curve.finalize(&cluster.ledger);
     let st = &cluster.stats;
     println!(
         "# final: rounds={} acc={:.4} wall={:.1}s sim={:.1}s (net up {:.1}s / down {:.1}s)",
@@ -304,6 +400,9 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         };
         std::fs::write(&path, text)?;
         println!("# wrote {path}");
+    }
+    if let Some(path) = record {
+        println!("# recorded transcript {path} (verify with: repro replay {path})");
     }
     Ok(())
 }
@@ -419,18 +518,25 @@ fn print_help() {
     println!(
         "repro — fedstc launcher (Sparse Ternary Compression, Sattler et al. 2019)
 
-usage: repro <train|cluster|alpha|protocols|info|sweep|help> [--key value]...
+usage: repro <train|cluster|replay|alpha|protocols|info|sweep|help> [--key value]...
 
 examples:
   repro train --model logreg --method stc:0.0025 --classes 1 --iters 400
   repro train --model logreg --method stc:p_up=0.01,p_down=0.04 --iters 400
   repro train --model cnn --backend hlo --method fedavg:25 --iters 200
+  repro train --method stc:0.01 --iters 200 --record run.fstx
+  repro replay run.fstx --verbose
   repro cluster --workers 4 --dropout-rate 0.2 --straggler-frac 0.1 \\
       --churn 0.1 --clients 100 --iters 400 --method stc:0.01
+  repro cluster --iters 100 --record cluster.fstx
   repro alpha --ks 1,8,64 --trials 100
   repro protocols
   repro sweep --key classes --values 1,2,4,10 --method stc:0.01 --iters 300
   repro info
+
+record/replay: --record FILE persists a versioned round transcript
+  (every upload's wire bytes + per-round model checksums); repro replay
+  re-executes it bit-for-bit with zero trainer invocations.
 
 cluster-only keys: --workers N  --dropout-rate F  --straggler-frac F
   --churn F  --initial-frac F  --join-rate F  --min-members N

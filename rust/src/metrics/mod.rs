@@ -17,7 +17,11 @@ pub struct EvalPoint {
     /// communication rounds completed
     pub round: usize,
     pub accuracy: f64,
+    /// test loss of the global model at this evaluation
     pub loss: f64,
+    /// mean local *training* loss over the most recent round's
+    /// participants (0 when no round trained before this point)
+    pub train_loss: f64,
     /// cumulative *per-client average* upload, in bits
     pub up_bits: u64,
     /// cumulative *per-client average* download, in bits
@@ -153,11 +157,11 @@ impl TrainingLog {
 
     /// CSV export: header + one row per eval point.
     pub fn to_csv(&self) -> String {
-        let mut out = String::from("iteration,round,accuracy,loss,up_bits,down_bits\n");
+        let mut out = String::from("iteration,round,accuracy,loss,train_loss,up_bits,down_bits\n");
         for p in &self.points {
             out.push_str(&format!(
-                "{},{},{:.6},{:.6},{},{}\n",
-                p.iteration, p.round, p.accuracy, p.loss, p.up_bits, p.down_bits
+                "{},{},{:.6},{:.6},{:.6},{},{}\n",
+                p.iteration, p.round, p.accuracy, p.loss, p.train_loss, p.up_bits, p.down_bits
             ));
         }
         out
@@ -177,6 +181,7 @@ impl TrainingLog {
                     .set("round", Json::Num(p.round as f64))
                     .set("accuracy", Json::Num(p.accuracy))
                     .set("loss", Json::Num(p.loss))
+                    .set("train_loss", Json::Num(p.train_loss))
                     .set("up_bits", Json::Num(p.up_bits as f64))
                     .set("down_bits", Json::Num(p.down_bits as f64));
                 o
@@ -199,6 +204,7 @@ mod tests {
                 round: i + 1,
                 accuracy: a,
                 loss: 1.0 - a,
+                train_loss: (1.0 - a) * 1.5,
                 up_bits: ((i + 1) * 1000) as u64,
                 down_bits: ((i + 1) * 500) as u64,
             });
@@ -226,8 +232,11 @@ mod tests {
         let log = log_with(&[0.25]);
         let csv = log.to_csv();
         assert!(csv.starts_with("iteration,round,"));
+        assert!(csv.lines().next().unwrap().contains("train_loss"));
         assert_eq!(csv.lines().count(), 2);
         assert!(csv.contains("0.250000"));
+        // train_loss = (1 - 0.25) * 1.5
+        assert!(csv.contains("1.125000"));
     }
 
     #[test]
@@ -236,7 +245,9 @@ mod tests {
         let j = log.to_json();
         let parsed = crate::util::json::Json::parse(&j.dump()).unwrap();
         assert_eq!(parsed.get("label").unwrap().as_str(), Some("test"));
-        assert_eq!(parsed.get("points").unwrap().as_arr().unwrap().len(), 2);
+        let pts = parsed.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts[0].get("train_loss").unwrap().as_f64().unwrap() > 0.0);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! local iterations) — Table I's first two rows. One protocol, because
 //! FedAvg *is* the baseline wire format with a communication delay.
 
-use super::{mean_into, uniform_dim, Broadcast, Protocol};
+use super::{mean_into, uniform_dim, Broadcast, Protocol, Scale};
 use crate::compression::{Compressor, DenseCompressor, Message};
 
 /// Full-precision dense protocol with an optional FedAvg delay.
@@ -63,7 +63,7 @@ impl Protocol for DenseProtocol {
         mean_into(&mut self.agg, messages);
         let msg = Message::Dense { values: self.agg.clone() };
         // billed at the measured frame: 32 bits/param
-        Ok(Broadcast { msg, scale: 1.0, down_bits: None })
+        Ok(Broadcast { msg, scale: Scale::Scalar(1.0), down_bits: None })
     }
 }
 
@@ -82,7 +82,7 @@ mod tests {
         assert_eq!(b.msg.to_dense(), vec![2.0, 0.0, 1.0, 0.0]);
         assert_eq!(b.down_bits, None, "dense bills the measured frame");
         assert_eq!(b.msg.wire_bits(), 128);
-        assert_eq!(b.scale, 1.0);
+        assert_eq!(b.scale, Scale::Scalar(1.0));
     }
 
     #[test]

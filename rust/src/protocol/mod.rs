@@ -53,21 +53,124 @@ use crate::compression::{Compressor, Message};
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::{Arc, Mutex, OnceLock};
 
+/// The multiplier a broadcast message is applied at.
+///
+/// signSGD applies its sign vector at the global step size δ
+/// (`Scalar`); adaptive-δ variants assign every coordinate its own step
+/// (`PerCoord`), which therefore must *travel* with the broadcast — a
+/// scalar rides the frame's existing 32-bit δ slot (or is a protocol
+/// constant), a per-coordinate vector is d additional f32s the server
+/// bills on top of the message frame ([`Scale::extra_wire_bits`]).
+/// Like every [`Message`], the scale has a real byte serialization
+/// ([`Scale::to_bytes`] / [`Scale::from_bytes`]) and the server pushes
+/// it through those bytes before applying, so the per-coordinate case is
+/// proven lossless on the hot path.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Scale {
+    /// one global multiplier (δ for signSGD, 1 otherwise)
+    Scalar(f32),
+    /// per-coordinate multipliers; length must equal the model dimension
+    PerCoord(Vec<f32>),
+}
+
+const SCALE_TAG_SCALAR: u8 = 0;
+const SCALE_TAG_PER_COORD: u8 = 1;
+
+impl Scale {
+    /// apply `buf += scale ⊙ msg`; errors on a per-coordinate length
+    /// mismatch instead of panicking.
+    pub fn apply(&self, msg: &Message, buf: &mut [f32]) -> anyhow::Result<()> {
+        match self {
+            Scale::Scalar(s) => msg.add_to(buf, *s),
+            Scale::PerCoord(v) => {
+                anyhow::ensure!(
+                    v.len() == buf.len(),
+                    "per-coordinate scale length {} != model dimension {}",
+                    v.len(),
+                    buf.len()
+                );
+                msg.add_to_per_coord(buf, v);
+            }
+        }
+        Ok(())
+    }
+
+    /// Wire bits the scale itself adds to a broadcast beyond what the
+    /// message frame already bills: 0 for a scalar (it rides the frame's
+    /// 32-bit slot or is a protocol constant), 32·d for per-coordinate.
+    pub fn extra_wire_bits(&self) -> usize {
+        match self {
+            Scale::Scalar(_) => 0,
+            Scale::PerCoord(v) => 32 * v.len(),
+        }
+    }
+
+    /// Serialize: tag byte, then the scalar (f32 LE) or `u32` count +
+    /// f32 LE values.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            Scale::Scalar(s) => {
+                let mut b = Vec::with_capacity(5);
+                b.push(SCALE_TAG_SCALAR);
+                b.extend_from_slice(&s.to_le_bytes());
+                b
+            }
+            Scale::PerCoord(v) => {
+                let mut b = Vec::with_capacity(5 + 4 * v.len());
+                b.push(SCALE_TAG_PER_COORD);
+                let n = u32::try_from(v.len()).expect("scale length exceeds u32");
+                b.extend_from_slice(&n.to_le_bytes());
+                for x in v {
+                    b.extend_from_slice(&x.to_le_bytes());
+                }
+                b
+            }
+        }
+    }
+
+    /// Exact inverse of [`Scale::to_bytes`]; errors cleanly on unknown
+    /// tags, truncation and trailing garbage.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Scale> {
+        anyhow::ensure!(!bytes.is_empty(), "empty scale frame");
+        let f32_at = |at: usize| -> f32 {
+            f32::from_le_bytes(bytes[at..at + 4].try_into().expect("length checked"))
+        };
+        match bytes[0] {
+            SCALE_TAG_SCALAR => {
+                anyhow::ensure!(bytes.len() == 5, "scalar scale frame must be 5 bytes");
+                Ok(Scale::Scalar(f32_at(1)))
+            }
+            SCALE_TAG_PER_COORD => {
+                anyhow::ensure!(bytes.len() >= 5, "per-coordinate scale frame truncated");
+                let n =
+                    u32::from_le_bytes(bytes[1..5].try_into().expect("length checked")) as usize;
+                anyhow::ensure!(
+                    bytes.len() == 5 + 4 * n,
+                    "per-coordinate scale frame: {} bytes for {n} coords",
+                    bytes.len()
+                );
+                Ok(Scale::PerCoord((0..n).map(|i| f32_at(5 + 4 * i)).collect()))
+            }
+            tag => anyhow::bail!("unknown scale tag {tag}"),
+        }
+    }
+}
+
 /// What the server sends down after one aggregation: the broadcast
-/// message every synchronised client applies, the scale it is applied at
-/// (δ for signSGD, 1 otherwise), and optionally an explicit downstream
-/// price.
+/// message every synchronised client applies, the [`Scale`] it is
+/// applied at, and optionally an explicit downstream price.
 ///
 /// `down_bits = None` means "bill the measured wire frame" — the server
 /// serializes the broadcast exactly once and charges that frame's
-/// payload bits (the common case, and why this is an Option rather than
-/// each protocol calling `wire_bits()` and forcing a second encode).
-/// `Some(bits)` overrides the measurement for protocols whose billed
-/// cost is not the applied message — top-k broadcasts the dense mean but
-/// prices the sparse union capped at dense (the Table I pathology).
+/// payload bits plus the scale's [`Scale::extra_wire_bits`] (the common
+/// case, and why this is an Option rather than each protocol calling
+/// `wire_bits()` and forcing a second encode). `Some(bits)` overrides
+/// the measurement for protocols whose billed cost is not the applied
+/// message — top-k broadcasts the dense mean but prices the sparse
+/// union capped at dense (the Table I pathology).
 pub struct Broadcast {
     pub msg: Message,
-    pub scale: f32,
+    pub scale: Scale,
     pub down_bits: Option<usize>,
 }
 
@@ -475,6 +578,44 @@ mod tests {
         assert!(a.expect_keys(&["k", "j"], 1).is_ok());
         assert!(a.expect_keys(&["k"], 1).is_err());
         assert!(a.expect_keys(&["k", "j"], 0).is_err());
+    }
+
+    #[test]
+    fn scale_bytes_roundtrip_both_variants() {
+        for s in [
+            Scale::Scalar(1.0),
+            Scale::Scalar(-0.0625),
+            Scale::PerCoord(vec![0.5, -1.0, 2.0, 0.0]),
+            Scale::PerCoord(Vec::new()),
+        ] {
+            let b = s.to_bytes();
+            assert_eq!(Scale::from_bytes(&b).unwrap(), s);
+        }
+        assert!(Scale::from_bytes(&[]).is_err());
+        assert!(Scale::from_bytes(&[7, 0, 0, 0, 0]).is_err(), "unknown tag");
+        assert!(Scale::from_bytes(&[0, 0, 0]).is_err(), "truncated scalar");
+        let mut long = Scale::Scalar(1.0).to_bytes();
+        long.push(0xAB);
+        assert!(Scale::from_bytes(&long).is_err(), "trailing garbage");
+    }
+
+    #[test]
+    fn scale_extra_wire_bits_bills_per_coord_only() {
+        assert_eq!(Scale::Scalar(0.1).extra_wire_bits(), 0);
+        assert_eq!(Scale::PerCoord(vec![0.0; 7]).extra_wire_bits(), 7 * 32);
+    }
+
+    #[test]
+    fn scale_apply_scalar_and_per_coord() {
+        let msg = Message::Dense { values: vec![1.0, 2.0, -4.0] };
+        let mut buf = vec![0.0f32; 3];
+        Scale::Scalar(0.5).apply(&msg, &mut buf).unwrap();
+        assert_eq!(buf, vec![0.5, 1.0, -2.0]);
+        let mut buf = vec![0.0f32; 3];
+        Scale::PerCoord(vec![1.0, 0.0, 0.25]).apply(&msg, &mut buf).unwrap();
+        assert_eq!(buf, vec![1.0, 0.0, -1.0]);
+        // wrong length is a clean error, not a panic
+        assert!(Scale::PerCoord(vec![1.0]).apply(&msg, &mut vec![0.0f32; 3]).is_err());
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! parameter in both directions, no error feedback, and the eq. (14)
 //! logarithmic partial-sum pricing for stragglers.
 
-use super::{Broadcast, BroadcastCache, Protocol};
+use super::{Broadcast, BroadcastCache, Protocol, Scale};
 use crate::compression::{majority_signs, Compressor, Message, SignCompressor};
 
 /// signSGD protocol with coordinate step size δ.
@@ -46,7 +46,11 @@ impl Protocol for SignSgdProtocol {
         // charge can never drift apart again.
         let refs: Vec<&Message> = messages.iter().collect();
         let signs = majority_signs(&refs)?;
-        Ok(Broadcast { msg: Message::Sign { signs }, scale: self.delta, down_bits: None })
+        Ok(Broadcast {
+            msg: Message::Sign { signs },
+            scale: Scale::Scalar(self.delta),
+            down_bits: None,
+        })
     }
 
     /// eq. 14: the partial sum of s sign vectors needs only
@@ -83,11 +87,11 @@ mod tests {
             sign(&[true, true, false]),
         ];
         let b = p.aggregate(&msgs).unwrap();
-        assert_eq!(b.scale, 0.5);
+        assert_eq!(b.scale, Scale::Scalar(0.5));
         assert_eq!(b.down_bits, None, "signSGD bills the measured sign frame");
         assert_eq!(b.msg.wire_bits(), 3 + 32);
         let mut params = vec![0.0f32; 3];
-        b.msg.add_to(&mut params, b.scale);
+        b.scale.apply(&b.msg, &mut params).unwrap();
         assert_eq!(params, vec![0.5, -0.5, -0.5]);
     }
 

@@ -3,7 +3,7 @@
 //! "pure sparsity" arm of the Fig. 5 ablation. The server keeps its own
 //! error-feedback residual R over the downstream truncation.
 
-use super::{mean_into, uniform_dim, Broadcast, Protocol};
+use super::{mean_into, uniform_dim, Broadcast, Protocol, Scale};
 use crate::compression::{stc, Compressor, Message, TopKCompressor};
 
 /// Sparse-up/sparse-down protocol (eq. 10).
@@ -68,7 +68,7 @@ impl Protocol for SparseUpDownProtocol {
         msg.subtract_from(&mut self.agg);
         self.residual.copy_from_slice(&self.agg);
         // billed at the measured sparse frame (48 bits/non-zero)
-        Ok(Broadcast { msg, scale: 1.0, down_bits: None })
+        Ok(Broadcast { msg, scale: Scale::Scalar(1.0), down_bits: None })
     }
 
     fn server_residual(&self) -> Option<&[f32]> {
@@ -115,7 +115,7 @@ mod tests {
         for _ in 0..30 {
             let b =
                 p.aggregate(&[Message::Dense { values: update.clone() }]).unwrap();
-            b.msg.add_to(&mut applied, b.scale);
+            b.scale.apply(&b.msg, &mut applied).unwrap();
         }
         assert!(applied.iter().all(|x| *x != 0.0), "error feedback must reach every coord");
     }

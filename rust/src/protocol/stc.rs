@@ -5,7 +5,7 @@
 //! `hybrid:p:n` is STC combined with FedAvg-style delay (appendix
 //! Fig. 12's sparsity×delay grid).
 
-use super::{mean_into, uniform_dim, Broadcast, Protocol};
+use super::{mean_into, uniform_dim, Broadcast, Protocol, Scale};
 use crate::compression::{stc, Compressor, Message, StcCompressor};
 
 /// Bidirectional STC, optionally with n local iterations per round.
@@ -97,7 +97,11 @@ impl Protocol for StcProtocol {
         tern.subtract_from(&mut self.agg);
         self.residual.copy_from_slice(&self.agg);
         // billed at the measured frame: header + Golomb payload
-        Ok(Broadcast { msg: Message::Ternary(tern), scale: 1.0, down_bits: None })
+        Ok(Broadcast {
+            msg: Message::Ternary(tern),
+            scale: Scale::Scalar(1.0),
+            down_bits: None,
+        })
     }
 
     fn server_residual(&self) -> Option<&[f32]> {
@@ -146,7 +150,7 @@ mod tests {
         let mut applied = vec![0.0f32; dim];
         for _ in 0..60 {
             let b = p.aggregate(&[Message::Dense { values: update.clone() }]).unwrap();
-            b.msg.add_to(&mut applied, b.scale);
+            b.scale.apply(&b.msg, &mut applied).unwrap();
         }
         let moved = applied.iter().filter(|x| **x != 0.0).count();
         assert_eq!(moved, dim, "all coordinates eventually transmitted");

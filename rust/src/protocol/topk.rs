@@ -5,7 +5,7 @@
 //! as participation grows, which is exactly the pathology Table I calls
 //! out and the reason STC compresses the downstream too.
 
-use super::{mean_into, uniform_dim, Broadcast, Protocol};
+use super::{mean_into, uniform_dim, Broadcast, Protocol, Scale};
 use crate::compression::{Compressor, Message, TopKCompressor};
 
 /// Upload-only top-k protocol at sparsity rate p.
@@ -53,7 +53,11 @@ impl Protocol for TopKProtocol {
         // an explicit price, since the applied message is dense
         let nnz = self.agg.iter().filter(|x| **x != 0.0).count();
         let msg = Message::Dense { values: self.agg.clone() };
-        Ok(Broadcast { msg, scale: 1.0, down_bits: Some((nnz * 48).min(32 * dim)) })
+        Ok(Broadcast {
+            msg,
+            scale: Scale::Scalar(1.0),
+            down_bits: Some((nnz * 48).min(32 * dim)),
+        })
     }
 }
 

@@ -1,0 +1,706 @@
+//! The unified session layer: **one round engine behind the serial and
+//! cluster runs**, with observer hooks and versioned round transcripts.
+//!
+//! The paper's claims (Figs. 2–4, Table III) are statements about
+//! *communication rounds*, so the repo keeps exactly one implementation
+//! of the round contract — participant selection, §V-B straggler sync,
+//! local training, encode→wire→decode upload, aggregation, broadcast
+//! enqueue — in [`Session::run_round`], parameterised by:
+//!
+//! * an [`Execution`] strategy — [`Execution::Serial`] runs local
+//!   training in-thread (the historical `FederatedRun` loop, verbatim);
+//!   [`Execution::ThreadPool`] shards it over the cluster subsystem's
+//!   [`WorkerPool`] executor, which is bit-identical to the serial path
+//!   (pinned in `rust/tests/property_cluster.rs` and
+//!   `rust/tests/property_session.rs`);
+//! * an [`Oracle`] — who supplies gradient oracles for the round: a
+//!   caller-owned trainer ([`Oracle::Trainer`], serial execution only,
+//!   since trainers are not `Send`) or a per-worker factory
+//!   ([`Oracle::Factory`]);
+//! * a set of [`Observer`]s — hook objects notified at every stage
+//!   ([`Observer::on_round_start`] / [`Observer::on_upload`] /
+//!   [`Observer::on_broadcast`] / [`Observer::on_eval`] /
+//!   [`Observer::on_finish`]). The training-curve plumbing in
+//!   [`crate::sim::Experiment`] and the transcript recorder are both
+//!   observers; nothing inside the engine is bespoke to either.
+//!
+//! [`crate::coordinator::FederatedRun`] is a thin facade over a serial
+//! session (kept for API compatibility) and the cluster tick machine
+//! ([`crate::cluster::ClusterRun`]) embeds a thread-pool session,
+//! driving the same [`Session::draw_participants`] →
+//! [`Session::train_participants`] → [`Session::commit_round`] steps
+//! with its transport/deadline machinery interleaved — so the two paths
+//! cannot re-implement (and drift) the round mathematics, and both can
+//! be recorded.
+//!
+//! ## Transcripts
+//!
+//! [`Session::record_transcript`] attaches a [`TranscriptWriter`]: a
+//! versioned binary log (magic + `u16` version + per-round frames whose
+//! upload payloads are exactly [`Message::to_bytes`]) that persists a
+//! run's complete communication to disk. [`replay`] re-executes a
+//! transcript through a fresh [`Server`] **without ever constructing a
+//! trainer** — aggregation, downstream compression, error-feedback
+//! residuals and §V-B pricing are all deterministic functions of the
+//! recorded messages — and verifies the replayed model and ledger
+//! against the recorded per-round checksums. See `repro replay`.
+
+pub mod transcript;
+
+pub use transcript::{
+    params_checksum, replay, ReplayOutcome, Transcript, TranscriptEnd, TranscriptRound,
+    TranscriptWriter,
+};
+
+use crate::cluster::executor::{ClientResult, RoundPlan, TrainerFactory, WorkerPool};
+use crate::cluster::transport::Transport;
+use crate::compression::Message;
+use crate::config::FedConfig;
+use crate::coordinator::{ClientState, LocalScratch, Server};
+use crate::data::{split_by_class, Dataset, SplitSpec};
+use crate::metrics::{CommLedger, EvalPoint};
+use crate::models::Trainer;
+use crate::protocol::Protocol;
+use crate::util::rng::Pcg64;
+
+/// How a session executes one round's local training.
+#[derive(Clone, Copy, Debug)]
+pub enum Execution {
+    /// in-thread, one client after another (the reference path)
+    Serial,
+    /// sharded over the cluster subsystem's worker pool (bit-identical
+    /// to serial for any worker count)
+    ThreadPool(WorkerPool),
+}
+
+/// Who supplies gradient oracles for one round.
+pub enum Oracle<'a> {
+    /// a caller-owned trainer, driven in-thread; requires
+    /// [`Execution::Serial`] (trainers are not `Send`)
+    Trainer(&'a mut dyn Trainer),
+    /// per-worker trainers constructed on demand; routes through the
+    /// executor even under [`Execution::Serial`] (one in-thread worker)
+    Factory(&'a dyn TrainerFactory),
+}
+
+/// Immutable run metadata handed to [`Observer::on_run_start`] before
+/// the first round.
+pub struct RunMeta<'a> {
+    /// canonical registry spec of the method (parsable by
+    /// [`crate::config::Method::parse`]), e.g. `stc:0.0025:0.0025`
+    pub method_spec: &'a str,
+    pub num_clients: usize,
+    pub cache_rounds: usize,
+    pub seed: u64,
+    /// the global model W^(0) before any round ran
+    pub init_params: &'a [f32],
+}
+
+/// Everything an observer sees when one round closes (after the
+/// broadcast was computed, applied and billed).
+pub struct RoundRecord<'a> {
+    /// server round counter after this aggregation (1-based)
+    pub round: usize,
+    /// client ids drawn for the round (before any lifecycle filtering)
+    pub participants: &'a [usize],
+    /// mean local training loss over clients that trained
+    pub mean_loss: f32,
+    /// billed broadcast bits
+    pub down_bits: usize,
+    /// the global model after applying the broadcast
+    pub params: &'a [f32],
+    pub ledger: &'a CommLedger,
+}
+
+/// Final state handed to [`Observer::on_finish`].
+pub struct RunEnd<'a> {
+    pub params: &'a [f32],
+    pub ledger: &'a CommLedger,
+    /// whether final-download settlement ran before the finish
+    pub settled: bool,
+}
+
+/// Hook API over the round engine. Every method has a no-op default, so
+/// observers implement only what they consume; errors propagate out of
+/// the session driver (a failing transcript write aborts the run
+/// instead of silently recording garbage).
+pub trait Observer {
+    /// Called once, before the first round's participant draw.
+    fn on_run_start(&mut self, _meta: &RunMeta) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// A round is starting: `round` is the server round counter before
+    /// aggregation (0-based), `participants` the drawn client ids.
+    fn on_round_start(&mut self, _round: usize, _participants: &[usize]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// One upload reached the server (already decoded from its wire
+    /// bytes); `wire_bits` is the billed frame payload.
+    fn on_upload(
+        &mut self,
+        _client_id: usize,
+        _msg: &Message,
+        _wire_bits: u64,
+    ) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// The round closed: broadcast computed, applied and billed.
+    fn on_broadcast(&mut self, _rec: &RoundRecord) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// The driver evaluated the global model.
+    fn on_eval(&mut self, _point: &EvalPoint) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// The run is over (after any settlement); flush buffered state.
+    fn on_finish(&mut self, _fin: &RunEnd) -> anyhow::Result<()> {
+        Ok(())
+    }
+}
+
+/// What [`Session::run_round`] reports back to its driver.
+#[derive(Clone, Copy, Debug)]
+pub struct RoundReport {
+    /// server round counter after aggregation (1-based)
+    pub round: usize,
+    /// mean local training loss over the round's participants
+    pub mean_loss: f32,
+    /// billed broadcast bits
+    pub down_bits: usize,
+}
+
+/// A fully wired federated session: server + clients + protocol +
+/// accounting, driven one communication round at a time. Evaluation
+/// cadence is the caller's concern (see [`crate::sim::Experiment`]).
+pub struct Session {
+    pub cfg: FedConfig,
+    pub server: Server,
+    pub clients: Vec<ClientState>,
+    pub ledger: CommLedger,
+    /// ids drawn for the current round (exposed for diagnostics/tests)
+    pub last_participants: Vec<usize>,
+    exec: Execution,
+    /// the method's protocol, used for its upstream half under serial
+    /// execution (the server owns its own instance for aggregation;
+    /// thread-pool workers build per-worker instances)
+    up_proto: Box<dyn Protocol>,
+    sampler: Pcg64,
+    scratch: LocalScratch,
+    /// scratch parameter vector (the client's working copy of W)
+    work_params: Vec<f32>,
+    /// participant message buffer reused across rounds
+    round_msgs: Vec<Message>,
+    observers: Vec<Box<dyn Observer>>,
+    started: bool,
+    settled: bool,
+    finish_notified: bool,
+}
+
+impl Session {
+    /// Build the session: splits `train` over clients per Algorithm 5
+    /// and initialises all state. `init_params` is the flattened W^(0).
+    pub fn new(
+        cfg: FedConfig,
+        train: &Dataset,
+        init_params: Vec<f32>,
+        exec: Execution,
+    ) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let dim = init_params.len();
+        let spec = SplitSpec {
+            num_clients: cfg.num_clients,
+            classes_per_client: cfg.classes_per_client,
+            gamma: cfg.gamma,
+            alpha: cfg.alpha,
+            seed: cfg.seed,
+        };
+        let shards = split_by_class(train, &spec);
+        let up_proto = cfg.method.protocol()?;
+        let uses_residual = up_proto.client_residual();
+        let clients: Vec<ClientState> = shards
+            .into_iter()
+            .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg, uses_residual))
+            .collect();
+
+        let server = Server::new(init_params, cfg.method.clone(), cfg.cache_rounds)?;
+        let sampler = Pcg64::new(cfg.seed, 0x5a3b);
+        Ok(Session {
+            ledger: CommLedger::new(cfg.num_clients),
+            server,
+            clients,
+            last_participants: Vec::new(),
+            exec,
+            up_proto,
+            sampler,
+            scratch: LocalScratch::default(),
+            work_params: vec![0.0; dim],
+            round_msgs: Vec::new(),
+            observers: Vec::new(),
+            started: false,
+            settled: false,
+            finish_notified: false,
+            cfg,
+        })
+    }
+
+    /// Attach an observer. Hooks fire in attachment order.
+    pub fn add_observer(&mut self, observer: Box<dyn Observer>) {
+        self.observers.push(observer);
+    }
+
+    /// Attach a transcript recorder writing to `path`. Must be called
+    /// before the first round so the header captures W^(0).
+    /// `sync_derivable` marks recordings whose download accounting can
+    /// be re-derived from the participant lists at replay time — true
+    /// for serial sessions (the [`Session::run_round`] sync discipline),
+    /// false for cluster drivers with membership/transport effects.
+    pub fn record_transcript(
+        &mut self,
+        path: &std::path::Path,
+        sync_derivable: bool,
+    ) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.server.round == 0 && !self.started,
+            "attach the transcript recorder before the first round"
+        );
+        self.add_observer(Box::new(TranscriptWriter::create(path, sync_derivable)?));
+        Ok(())
+    }
+
+    /// Iterations consumed so far (per-client budget axis of the paper).
+    pub fn iterations_done(&self) -> usize {
+        self.server.round * self.cfg.method.local_iters()
+    }
+
+    /// Mean client residual norm (staleness diagnostic, §VI-C).
+    pub fn mean_residual_norm(&self) -> f64 {
+        if self.clients.is_empty() || self.clients[0].residual.is_empty() {
+            return 0.0;
+        }
+        self.clients.iter().map(|c| c.residual_norm()).sum::<f64>() / self.clients.len() as f64
+    }
+
+    fn notify_run_start(&mut self) -> anyhow::Result<()> {
+        if self.started {
+            return Ok(());
+        }
+        self.started = true;
+        if self.observers.is_empty() {
+            return Ok(());
+        }
+        let spec = self.cfg.method.protocol()?.name();
+        let meta = RunMeta {
+            method_spec: &spec,
+            num_clients: self.cfg.num_clients,
+            cache_rounds: self.cfg.cache_rounds,
+            seed: self.cfg.seed,
+            init_params: &self.server.params,
+        };
+        for o in &mut self.observers {
+            o.on_run_start(&meta)?;
+        }
+        Ok(())
+    }
+
+    /// Draw the round's participants from the canonical sampler stream
+    /// (the same stream the pre-session serial and cluster drivers used,
+    /// so curves are bit-identical) and notify observers.
+    pub fn draw_participants(&mut self) -> anyhow::Result<Vec<usize>> {
+        self.notify_run_start()?;
+        let m = self.cfg.clients_per_round();
+        let ids = self.sampler.sample_without_replacement(self.cfg.num_clients, m);
+        self.last_participants = ids.clone();
+        let round = self.server.round;
+        for o in &mut self.observers {
+            o.on_round_start(round, &self.last_participants)?;
+        }
+        Ok(ids)
+    }
+
+    /// Run local training + upstream compression for `participant_ids`
+    /// through the session's execution strategy, returning executor
+    /// results in reduction order. Exposed for drivers (the cluster tick
+    /// machine) that interleave transport/deadline machinery between the
+    /// canonical round steps; `transport` prices per-client compute time
+    /// when given.
+    pub fn train_participants(
+        &mut self,
+        factory: &dyn TrainerFactory,
+        data: &Dataset,
+        participant_ids: &[usize],
+        transport: Option<&Transport>,
+    ) -> Vec<ClientResult> {
+        let pool = match &self.exec {
+            Execution::ThreadPool(p) => *p,
+            Execution::Serial => WorkerPool::new(1),
+        };
+        let plan = RoundPlan {
+            method: &self.cfg.method,
+            lr: self.cfg.lr,
+            momentum: self.cfg.momentum,
+            local_iters: self.cfg.method.local_iters(),
+            transport,
+        };
+        let mut slot_of = vec![usize::MAX; self.clients.len()];
+        for (slot, &id) in participant_ids.iter().enumerate() {
+            slot_of[id] = slot;
+        }
+        let parts: Vec<(usize, &mut ClientState)> = self
+            .clients
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(id, c)| {
+                let slot = slot_of[id];
+                if slot == usize::MAX {
+                    None
+                } else {
+                    Some((slot, c))
+                }
+            })
+            .collect();
+        pool.execute_round(factory, &self.server.params, data, parts, &plan)
+    }
+
+    /// Notify observers of one upload that reached the server (already
+    /// wire-decoded). Drivers that bill transfers themselves (the
+    /// cluster transport) call this for every message they aggregate so
+    /// transcripts stay exact.
+    pub fn notify_upload(
+        &mut self,
+        client_id: usize,
+        msg: &Message,
+        wire_bits: u64,
+    ) -> anyhow::Result<()> {
+        for o in &mut self.observers {
+            o.on_upload(client_id, msg, wire_bits)?;
+        }
+        Ok(())
+    }
+
+    /// Close one round: aggregate the uploaded messages into the global
+    /// model (through the downstream wire serialization), enqueue the
+    /// broadcast in the §V-B cache, and notify observers. Returns the
+    /// billed broadcast bits.
+    pub fn commit_round(&mut self, msgs: &[Message], mean_loss: f32) -> anyhow::Result<usize> {
+        let down_bits = self.server.aggregate_and_apply(msgs)?;
+        let rec = RoundRecord {
+            round: self.server.round,
+            participants: &self.last_participants,
+            mean_loss,
+            down_bits,
+            params: &self.server.params,
+            ledger: &self.ledger,
+        };
+        for o in &mut self.observers {
+            o.on_broadcast(&rec)?;
+        }
+        Ok(down_bits)
+    }
+
+    /// Notify observers of an evaluation the driver performed.
+    pub fn notify_eval(&mut self, point: &EvalPoint) -> anyhow::Result<()> {
+        for o in &mut self.observers {
+            o.on_eval(point)?;
+        }
+        Ok(())
+    }
+
+    /// Execute one communication round — the canonical contract:
+    /// participant draw, §V-B straggler sync, local training through the
+    /// execution strategy, encode→wire→decode uploads, aggregation and
+    /// broadcast enqueue. Errors (instead of panicking) if the protocol
+    /// rejects the round or the oracle does not fit the execution.
+    pub fn run_round(&mut self, oracle: Oracle<'_>, data: &Dataset) -> anyhow::Result<RoundReport> {
+        let ids = self.draw_participants()?;
+        let local_iters = self.cfg.method.local_iters();
+
+        // 1. synchronise: every participant downloads the partial sum
+        //    P^(s) (or full model) covering the rounds missed since its
+        //    last sync.
+        for &id in &ids {
+            let down_bits = self.server.straggler_download_bits(self.clients[id].last_sync_round);
+            if down_bits > 0 {
+                self.ledger.record_download(down_bits);
+            }
+            self.clients[id].last_sync_round = self.server.round;
+        }
+
+        // 2+3. local training from the (now current) global model, then
+        //      ΔW_i compressed with error feedback and uploaded through
+        //      the real byte serialization: the ledger bills the
+        //      measured frame and the server receives the decoded bytes.
+        self.round_msgs.clear();
+        let mut loss_sum = 0.0f64;
+        match oracle {
+            Oracle::Trainer(trainer) => {
+                anyhow::ensure!(
+                    matches!(self.exec, Execution::Serial),
+                    "Oracle::Trainer drives in-thread training only; thread-pool \
+                     execution needs Oracle::Factory (trainers are built per worker)"
+                );
+                for &id in &ids {
+                    let client = &mut self.clients[id];
+                    self.work_params.copy_from_slice(&self.server.params);
+                    let loss = client.local_train(
+                        &mut self.work_params,
+                        trainer,
+                        data,
+                        local_iters,
+                        self.cfg.lr,
+                        self.cfg.momentum,
+                        &mut self.scratch,
+                    );
+                    loss_sum += loss as f64;
+
+                    let mut delta = std::mem::take(&mut self.work_params);
+                    for (d, w) in delta.iter_mut().zip(&self.server.params) {
+                        *d -= *w;
+                    }
+                    let msg = client.compress_update(delta, self.up_proto.as_mut());
+                    let wire = msg.to_wire();
+                    self.ledger.record_upload(wire.payload_bits);
+                    let decoded = Message::from_bytes(&wire.bytes)?;
+                    self.notify_upload(id, &decoded, wire.payload_bits as u64)?;
+                    self.round_msgs.push(decoded);
+                    self.work_params = vec![0.0; self.server.dim()];
+                }
+            }
+            Oracle::Factory(factory) => {
+                let results = self.train_participants(factory, data, &ids, None);
+                for r in results {
+                    self.ledger.record_upload(r.up_bits as usize);
+                    loss_sum += r.loss as f64;
+                    self.notify_upload(r.client_id, &r.msg, r.up_bits)?;
+                    self.round_msgs.push(r.msg);
+                }
+            }
+        }
+
+        // 4. server aggregates, applies, and enqueues the broadcast; the
+        //    broadcast's download cost is charged to clients when they
+        //    next synchronise (straggler_download_bits).
+        let msgs = std::mem::take(&mut self.round_msgs);
+        let mean_loss = (loss_sum / ids.len() as f64) as f32;
+        let down_bits = self.commit_round(&msgs, mean_loss)?;
+        self.round_msgs = msgs;
+
+        Ok(RoundReport { round: self.server.round, mean_loss, down_bits })
+    }
+
+    /// Record that final-download settlement ran. Drivers that bill the
+    /// settlement downloads through their own transport (the cluster
+    /// tick machine's contended sync batch) call this instead of
+    /// [`Session::settle_final_downloads`], so transcripts still record
+    /// a truthful `settled` flag.
+    pub fn note_settled(&mut self) {
+        self.settled = true;
+    }
+
+    /// Drain accounting for clients that never participated again: at
+    /// the end of training every client must still download the
+    /// remaining updates once to own the final model (the paper's
+    /// accounting — every client ends up with W^(T)).
+    pub fn settle_final_downloads(&mut self) {
+        for c in &mut self.clients {
+            let bits = self.server.straggler_download_bits(c.last_sync_round);
+            if bits > 0 {
+                self.ledger.record_download(bits);
+            }
+            c.last_sync_round = self.server.round;
+        }
+        self.settled = true;
+    }
+
+    /// Finish the run: notify observers once (flushes transcripts).
+    /// Idempotent.
+    pub fn finish(&mut self) -> anyhow::Result<()> {
+        if self.finish_notified {
+            return Ok(());
+        }
+        self.finish_notified = true;
+        let fin = RunEnd {
+            params: &self.server.params,
+            ledger: &self.ledger,
+            settled: self.settled,
+        };
+        for o in &mut self.observers {
+            o.on_finish(&fin)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::NativeLogregFactory;
+    use crate::config::Method;
+    use crate::data::synth::task_dataset;
+    use crate::models::native::NativeLogreg;
+    use crate::models::ModelSpec;
+    use std::cell::RefCell;
+    use std::rc::Rc;
+
+    fn quick_cfg(method: Method) -> FedConfig {
+        FedConfig {
+            model: "logreg".into(),
+            num_clients: 10,
+            participation: 0.5,
+            classes_per_client: 10,
+            batch_size: 10,
+            method,
+            lr: 0.05,
+            momentum: 0.0,
+            iterations: 30,
+            eval_every: 10,
+            seed: 7,
+            train_examples: 500,
+            test_examples: 200,
+            ..Default::default()
+        }
+    }
+
+    fn build(method: Method, exec: Execution) -> (Session, Dataset) {
+        let (train, _) = task_dataset("mnist", 7).unwrap();
+        let train = train.subset(&(0..500).collect::<Vec<_>>());
+        let spec = ModelSpec::by_name("logreg").unwrap();
+        let s = Session::new(quick_cfg(method), &train, spec.init_flat(7), exec).unwrap();
+        (s, train)
+    }
+
+    #[test]
+    fn serial_and_thread_pool_sessions_are_bit_identical() {
+        let method = Method::Stc { p_up: 0.02, p_down: 0.02 };
+        let (mut serial, train_a) = build(method.clone(), Execution::Serial);
+        let (mut pooled, train_b) = build(method, Execution::ThreadPool(WorkerPool::new(3)));
+        let mut trainer = NativeLogreg::new(10);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        for _ in 0..4 {
+            let a = serial.run_round(Oracle::Trainer(&mut trainer), &train_a).unwrap();
+            let b = pooled.run_round(Oracle::Factory(&factory), &train_b).unwrap();
+            assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits());
+            assert_eq!(a.down_bits, b.down_bits);
+        }
+        assert_eq!(serial.server.params, pooled.server.params);
+        assert_eq!(serial.ledger.total_up_bits, pooled.ledger.total_up_bits);
+        assert_eq!(serial.ledger.total_down_bits, pooled.ledger.total_down_bits);
+        assert_eq!(serial.last_participants, pooled.last_participants);
+    }
+
+    #[test]
+    fn factory_oracle_works_under_serial_execution() {
+        let method = Method::Stc { p_up: 0.02, p_down: 0.02 };
+        let (mut a, train_a) = build(method.clone(), Execution::Serial);
+        let (mut b, train_b) = build(method, Execution::Serial);
+        let mut trainer = NativeLogreg::new(10);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        for _ in 0..3 {
+            a.run_round(Oracle::Trainer(&mut trainer), &train_a).unwrap();
+            b.run_round(Oracle::Factory(&factory), &train_b).unwrap();
+        }
+        assert_eq!(a.server.params, b.server.params);
+        assert_eq!(a.ledger.total_up_bits, b.ledger.total_up_bits);
+    }
+
+    #[test]
+    fn trainer_oracle_rejected_under_thread_pool() {
+        let method = Method::Baseline;
+        let (mut s, train) = build(method, Execution::ThreadPool(WorkerPool::new(2)));
+        let mut trainer = NativeLogreg::new(10);
+        let err = s.run_round(Oracle::Trainer(&mut trainer), &train).unwrap_err();
+        assert!(err.to_string().contains("Oracle::Factory"), "{err}");
+    }
+
+    /// Counts every hook invocation (shared so the test can read back
+    /// counts after the session consumed the box).
+    #[derive(Default)]
+    struct Counts {
+        run_start: usize,
+        round_start: usize,
+        uploads: usize,
+        broadcasts: usize,
+        evals: usize,
+        finishes: usize,
+    }
+
+    struct CountingObserver(Rc<RefCell<Counts>>);
+
+    impl Observer for CountingObserver {
+        fn on_run_start(&mut self, meta: &RunMeta) -> anyhow::Result<()> {
+            assert!(!meta.method_spec.is_empty());
+            assert!(!meta.init_params.is_empty());
+            self.0.borrow_mut().run_start += 1;
+            Ok(())
+        }
+        fn on_round_start(&mut self, _r: usize, p: &[usize]) -> anyhow::Result<()> {
+            assert!(!p.is_empty());
+            self.0.borrow_mut().round_start += 1;
+            Ok(())
+        }
+        fn on_upload(&mut self, _c: usize, m: &Message, bits: u64) -> anyhow::Result<()> {
+            assert_eq!(m.wire_bits() as u64, bits);
+            self.0.borrow_mut().uploads += 1;
+            Ok(())
+        }
+        fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
+            assert!(rec.down_bits > 0);
+            self.0.borrow_mut().broadcasts += 1;
+            Ok(())
+        }
+        fn on_eval(&mut self, _p: &EvalPoint) -> anyhow::Result<()> {
+            self.0.borrow_mut().evals += 1;
+            Ok(())
+        }
+        fn on_finish(&mut self, fin: &RunEnd) -> anyhow::Result<()> {
+            assert!(fin.settled);
+            self.0.borrow_mut().finishes += 1;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn observer_hooks_fire_at_every_stage() {
+        let counts = Rc::new(RefCell::new(Counts::default()));
+        let (mut s, train) = build(Method::Baseline, Execution::Serial);
+        s.add_observer(Box::new(CountingObserver(counts.clone())));
+        let mut trainer = NativeLogreg::new(10);
+        for _ in 0..3 {
+            s.run_round(Oracle::Trainer(&mut trainer), &train).unwrap();
+        }
+        let p = EvalPoint {
+            iteration: 3,
+            round: 3,
+            accuracy: 0.5,
+            loss: 1.0,
+            train_loss: 1.0,
+            up_bits: s.ledger.up_bits_per_client(),
+            down_bits: s.ledger.down_bits_per_client(),
+        };
+        s.notify_eval(&p).unwrap();
+        s.settle_final_downloads();
+        s.finish().unwrap();
+        s.finish().unwrap(); // idempotent
+        let c = counts.borrow();
+        assert_eq!(c.run_start, 1);
+        assert_eq!(c.round_start, 3);
+        assert_eq!(c.uploads, 15, "5 participants × 3 rounds");
+        assert_eq!(c.broadcasts, 3);
+        assert_eq!(c.evals, 1);
+        assert_eq!(c.finishes, 1);
+    }
+
+    #[test]
+    fn recorder_must_attach_before_first_round() {
+        let (mut s, train) = build(Method::Baseline, Execution::Serial);
+        let mut trainer = NativeLogreg::new(10);
+        s.run_round(Oracle::Trainer(&mut trainer), &train).unwrap();
+        let path = std::env::temp_dir().join("fedstc_session_late_recorder.fstx");
+        assert!(s.record_transcript(&path, true).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

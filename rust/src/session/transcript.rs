@@ -1,0 +1,683 @@
+//! Versioned on-disk round transcripts and deterministic replay.
+//!
+//! A transcript is the complete communication record of one federated
+//! run, persisted as a binary file so any curve can be re-executed,
+//! verified and diffed bit-for-bit long after the process died — the
+//! "frame header for replay debugging" the protocol layer was missing.
+//!
+//! ## Format (version 1, all integers little-endian)
+//!
+//! ```text
+//! header:  magic "FSTX" · u16 version · u8 flags
+//!          u16 spec_len · method spec (registry grammar, parseable)
+//!          u32 num_clients · u32 cache_rounds · u64 seed
+//!          u32 dim · dim × f32 init params W⁽⁰⁾
+//! round:   u8 tag=1 · u32 round · f32 mean_loss
+//!          u32 n · n × u32 participant ids
+//!          u32 m · m × { u32 client · u32 len · Message::to_bytes }
+//!          u64 down_bits · u64 params_checksum
+//!          u64 total_up_bits · u64 total_down_bits   (ledger snapshot)
+//! end:     u8 tag=2 · u8 settled
+//!          u64 total_up_bits · u64 total_down_bits
+//!          u64 uploads · u64 downloads · u64 final_checksum
+//! ```
+//!
+//! Upload payloads are exactly [`Message::to_bytes`] frames — the same
+//! bytes that crossed the simulated wire — so the transcript reuses (and
+//! keeps exercising) the production codecs. Checksums are FNV-1a 64
+//! over the little-endian f32 bit patterns of the global model.
+//!
+//! ## Replay
+//!
+//! [`replay`] rebuilds a [`Server`] from the header and re-executes
+//! every round's aggregation from the recorded messages — **zero
+//! trainer invocations**: downstream compression, server residuals and
+//! §V-B pricing are deterministic functions of the uploads. The
+//! replayed model must match the recorded per-round checksums; for
+//! recordings flagged [`FLAG_SYNC_DERIVABLE`] (serial sessions) the
+//! download ledger is re-derived from the participant lists and checked
+//! against the recorded snapshots too. Cluster recordings clear the
+//! flag: their download accounting depends on membership/transport
+//! state the transcript does not carry, and late uploads are billed but
+//! never aggregated, so only the round mathematics is re-verified.
+
+use super::{Observer, RoundRecord, RunEnd, RunMeta};
+use crate::compression::Message;
+use crate::config::Method;
+use crate::coordinator::Server;
+use crate::metrics::CommLedger;
+use std::io::Write;
+use std::path::Path;
+
+/// First four bytes of every transcript.
+pub const TRANSCRIPT_MAGIC: [u8; 4] = *b"FSTX";
+/// Current format version (readers reject anything else).
+pub const TRANSCRIPT_VERSION: u16 = 1;
+/// Header flag: download accounting is re-derivable from the recorded
+/// participant lists (serial sync discipline).
+pub const FLAG_SYNC_DERIVABLE: u8 = 0b0000_0001;
+
+const FRAME_ROUND: u8 = 1;
+const FRAME_END: u8 = 2;
+
+/// FNV-1a 64 over the little-endian f32 bit patterns — the model
+/// fingerprint recorded per round and re-checked at replay.
+pub fn params_checksum(params: &[f32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for p in params {
+        for b in p.to_bits().to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100_0000_01b3);
+        }
+    }
+    h
+}
+
+fn put_u16(buf: &mut Vec<u8>, v: u16) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32(buf: &mut Vec<u8>, v: usize) {
+    buf.extend_from_slice(&u32::try_from(v).expect("transcript field exceeds u32").to_le_bytes());
+}
+
+fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+// ---------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------
+
+/// Session observer that streams a transcript to a sink. Attach via
+/// [`super::Session::record_transcript`] (serial) or
+/// [`crate::cluster::ClusterRun::record_to`] (cluster); the end frame is
+/// written by [`Observer::on_finish`], i.e. when the driver calls
+/// `Session::finish`.
+pub struct TranscriptWriter {
+    sink: Box<dyn Write>,
+    sync_derivable: bool,
+    header_written: bool,
+    /// current round buffer, flushed as one frame at `on_broadcast`
+    participants: Vec<u32>,
+    uploads: Vec<(u32, Vec<u8>)>,
+}
+
+impl TranscriptWriter {
+    /// Stream to a freshly created file at `path`.
+    pub fn create(path: &Path, sync_derivable: bool) -> anyhow::Result<Self> {
+        let file = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("creating transcript {}: {e}", path.display()))?;
+        Ok(Self::new(Box::new(std::io::BufWriter::new(file)), sync_derivable))
+    }
+
+    /// Stream to an arbitrary sink.
+    pub fn new(sink: Box<dyn Write>, sync_derivable: bool) -> Self {
+        TranscriptWriter {
+            sink,
+            sync_derivable,
+            header_written: false,
+            participants: Vec::new(),
+            uploads: Vec::new(),
+        }
+    }
+}
+
+impl Observer for TranscriptWriter {
+    fn on_run_start(&mut self, meta: &RunMeta) -> anyhow::Result<()> {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&TRANSCRIPT_MAGIC);
+        put_u16(&mut buf, TRANSCRIPT_VERSION);
+        buf.push(if self.sync_derivable { FLAG_SYNC_DERIVABLE } else { 0 });
+        let spec = meta.method_spec.as_bytes();
+        anyhow::ensure!(spec.len() <= u16::MAX as usize, "method spec too long");
+        put_u16(&mut buf, spec.len() as u16);
+        buf.extend_from_slice(spec);
+        put_u32(&mut buf, meta.num_clients);
+        put_u32(&mut buf, meta.cache_rounds);
+        put_u64(&mut buf, meta.seed);
+        put_u32(&mut buf, meta.init_params.len());
+        for p in meta.init_params {
+            put_f32(&mut buf, *p);
+        }
+        self.sink.write_all(&buf)?;
+        self.header_written = true;
+        Ok(())
+    }
+
+    fn on_round_start(&mut self, _round: usize, participants: &[usize]) -> anyhow::Result<()> {
+        anyhow::ensure!(self.header_written, "transcript recorder never saw the run start");
+        self.participants = participants
+            .iter()
+            .map(|&id| u32::try_from(id).expect("client id exceeds u32"))
+            .collect();
+        self.uploads.clear();
+        Ok(())
+    }
+
+    fn on_upload(
+        &mut self,
+        client_id: usize,
+        msg: &Message,
+        _wire_bits: u64,
+    ) -> anyhow::Result<()> {
+        self.uploads
+            .push((u32::try_from(client_id).expect("client id exceeds u32"), msg.to_bytes()));
+        Ok(())
+    }
+
+    fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
+        let mut buf = Vec::new();
+        buf.push(FRAME_ROUND);
+        put_u32(&mut buf, rec.round);
+        put_f32(&mut buf, rec.mean_loss);
+        put_u32(&mut buf, self.participants.len());
+        for id in &self.participants {
+            put_u32(&mut buf, *id as usize);
+        }
+        put_u32(&mut buf, self.uploads.len());
+        for (client, frame) in &self.uploads {
+            put_u32(&mut buf, *client as usize);
+            put_u32(&mut buf, frame.len());
+            buf.extend_from_slice(frame);
+        }
+        put_u64(&mut buf, rec.down_bits as u64);
+        put_u64(&mut buf, params_checksum(rec.params));
+        put_u64(&mut buf, rec.ledger.total_up_bits);
+        put_u64(&mut buf, rec.ledger.total_down_bits);
+        self.sink.write_all(&buf)?;
+        self.participants.clear();
+        self.uploads.clear();
+        Ok(())
+    }
+
+    fn on_finish(&mut self, fin: &RunEnd) -> anyhow::Result<()> {
+        // a run that never drew a round never wrote the header; emitting
+        // a bare end frame would produce a corrupt file, so fail loudly —
+        // the user asked for a transcript and there is nothing to record
+        anyhow::ensure!(
+            self.header_written,
+            "transcript recording finished before any round started (nothing recorded)"
+        );
+        let mut buf = Vec::new();
+        buf.push(FRAME_END);
+        buf.push(fin.settled as u8);
+        put_u64(&mut buf, fin.ledger.total_up_bits);
+        put_u64(&mut buf, fin.ledger.total_down_bits);
+        put_u64(&mut buf, fin.ledger.uploads);
+        put_u64(&mut buf, fin.ledger.downloads);
+        put_u64(&mut buf, params_checksum(fin.params));
+        self.sink.write_all(&buf)?;
+        self.sink.flush()?;
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------
+
+/// One recorded communication round.
+pub struct TranscriptRound {
+    /// server round counter after the aggregation (1-based)
+    pub round: usize,
+    pub mean_loss: f32,
+    /// client ids drawn for the round
+    pub participants: Vec<usize>,
+    /// (client id, decoded upload) in aggregation order
+    pub uploads: Vec<(usize, Message)>,
+    /// billed broadcast bits
+    pub down_bits: u64,
+    /// FNV-1a 64 of the global model after this round
+    pub params_checksum: u64,
+    /// cumulative ledger snapshot after this round
+    pub total_up_bits: u64,
+    pub total_down_bits: u64,
+}
+
+/// The end-of-run frame.
+pub struct TranscriptEnd {
+    /// whether final-download settlement ran before the recording closed
+    pub settled: bool,
+    pub total_up_bits: u64,
+    pub total_down_bits: u64,
+    pub uploads: u64,
+    pub downloads: u64,
+    pub final_checksum: u64,
+}
+
+/// A fully parsed transcript.
+pub struct Transcript {
+    pub version: u16,
+    pub flags: u8,
+    /// canonical method spec (parseable by [`Method::parse`])
+    pub method_spec: String,
+    pub num_clients: usize,
+    pub cache_rounds: usize,
+    pub seed: u64,
+    pub init_params: Vec<f32>,
+    pub rounds: Vec<TranscriptRound>,
+    pub end: TranscriptEnd,
+}
+
+impl Transcript {
+    /// Whether download accounting can be re-derived at replay time.
+    pub fn sync_derivable(&self) -> bool {
+        self.flags & FLAG_SYNC_DERIVABLE != 0
+    }
+
+    /// Read and parse a transcript file.
+    pub fn read_file(path: &Path) -> anyhow::Result<Transcript> {
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("reading transcript {}: {e}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Parse a transcript from raw bytes; errors cleanly on bad magic,
+    /// unknown versions, truncation and trailing garbage.
+    pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Transcript> {
+        let mut r = Rd { buf: bytes, pos: 0 };
+        let magic = r.take(4, "magic")?;
+        anyhow::ensure!(magic == TRANSCRIPT_MAGIC, "not a transcript (bad magic {magic:02x?})");
+        let version = r.u16()?;
+        anyhow::ensure!(
+            version == TRANSCRIPT_VERSION,
+            "unsupported transcript version {version} (this build reads {TRANSCRIPT_VERSION})"
+        );
+        let flags = r.u8()?;
+        let spec_len = r.u16()? as usize;
+        let method_spec = String::from_utf8(r.take(spec_len, "method spec")?.to_vec())
+            .map_err(|e| anyhow::anyhow!("method spec is not utf-8: {e}"))?;
+        let num_clients = r.u32()? as usize;
+        let cache_rounds = r.u32()? as usize;
+        let seed = r.u64()?;
+        let dim = r.u32()? as usize;
+        let mut init_params = Vec::with_capacity(dim.min(1 << 20));
+        for _ in 0..dim {
+            init_params.push(r.f32()?);
+        }
+
+        let mut rounds = Vec::new();
+        let end = loop {
+            match r.u8().map_err(|_| anyhow::anyhow!("transcript truncated: no end frame"))? {
+                FRAME_ROUND => {
+                    let round = r.u32()? as usize;
+                    let mean_loss = r.f32()?;
+                    let n_part = r.u32()? as usize;
+                    let mut participants = Vec::with_capacity(n_part.min(1 << 20));
+                    for _ in 0..n_part {
+                        participants.push(r.u32()? as usize);
+                    }
+                    let n_up = r.u32()? as usize;
+                    let mut uploads = Vec::with_capacity(n_up.min(1 << 20));
+                    for _ in 0..n_up {
+                        let client = r.u32()? as usize;
+                        let len = r.u32()? as usize;
+                        let frame = r.take(len, "upload frame")?;
+                        uploads.push((client, Message::from_bytes(frame)?));
+                    }
+                    rounds.push(TranscriptRound {
+                        round,
+                        mean_loss,
+                        participants,
+                        uploads,
+                        down_bits: r.u64()?,
+                        params_checksum: r.u64()?,
+                        total_up_bits: r.u64()?,
+                        total_down_bits: r.u64()?,
+                    });
+                }
+                FRAME_END => {
+                    break TranscriptEnd {
+                        settled: r.u8()? != 0,
+                        total_up_bits: r.u64()?,
+                        total_down_bits: r.u64()?,
+                        uploads: r.u64()?,
+                        downloads: r.u64()?,
+                        final_checksum: r.u64()?,
+                    };
+                }
+                tag => anyhow::bail!("unknown transcript frame tag {tag}"),
+            }
+        };
+        anyhow::ensure!(
+            r.pos == bytes.len(),
+            "{} trailing bytes after the transcript end frame",
+            bytes.len() - r.pos
+        );
+        Ok(Transcript {
+            version,
+            flags,
+            method_spec,
+            num_clients,
+            cache_rounds,
+            seed,
+            init_params,
+            rounds,
+            end,
+        })
+    }
+}
+
+/// Bounds-checked sequential reader (never panics on truncation).
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize, what: &str) -> anyhow::Result<&'a [u8]> {
+        anyhow::ensure!(
+            self.buf.len() - self.pos >= n,
+            "transcript truncated reading {what} ({n} bytes needed, {} left)",
+            self.buf.len() - self.pos
+        );
+        let out = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(out)
+    }
+
+    fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1, "u8")?[0])
+    }
+
+    fn u16(&mut self) -> anyhow::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2, "u16")?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4, "u32")?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8, "u64")?.try_into().unwrap()))
+    }
+
+    fn f32(&mut self) -> anyhow::Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4, "f32")?.try_into().unwrap()))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Replay
+// ---------------------------------------------------------------------
+
+/// What a verified replay produced.
+pub struct ReplayOutcome {
+    /// rounds re-executed
+    pub rounds: usize,
+    /// the replayed global model (bit-identical to the recorded run's)
+    pub final_params: Vec<f32>,
+    /// the replayed communication ledger
+    pub ledger: CommLedger,
+    /// true when download accounting was re-derived and verified
+    /// (serial recordings); false when the recording's sync discipline
+    /// is not derivable (cluster runs) and only the round mathematics
+    /// was verified
+    pub downloads_verified: bool,
+}
+
+/// Re-execute a transcript through a fresh [`Server`] — no trainer is
+/// ever constructed — verifying the recorded per-round broadcast bits
+/// and model checksums (and, for serial recordings, the full ledger).
+/// Errors on the first divergence.
+pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
+    let method = Method::parse(&t.method_spec)
+        .map_err(|e| anyhow::anyhow!("transcript method '{}': {e}", t.method_spec))?;
+    let mut server = Server::new(t.init_params.clone(), method, t.cache_rounds)?;
+    let mut ledger = CommLedger::new(t.num_clients);
+    let mut last_sync = vec![0usize; t.num_clients];
+    let derivable = t.sync_derivable();
+
+    for r in &t.rounds {
+        if derivable {
+            for &id in &r.participants {
+                anyhow::ensure!(
+                    id < t.num_clients,
+                    "round {}: participant {id} out of range 0..{}",
+                    r.round,
+                    t.num_clients
+                );
+                let bits = server.straggler_download_bits(last_sync[id]);
+                if bits > 0 {
+                    ledger.record_download(bits);
+                }
+                last_sync[id] = server.round;
+            }
+        }
+        let msgs: Vec<Message> = r.uploads.iter().map(|(_, m)| m.clone()).collect();
+        for m in &msgs {
+            ledger.record_upload(m.wire_bits());
+        }
+        let down = server.aggregate_and_apply(&msgs)?;
+        anyhow::ensure!(
+            down as u64 == r.down_bits,
+            "round {}: replayed broadcast bills {down} bits, the recording says {}",
+            r.round,
+            r.down_bits
+        );
+        let ck = params_checksum(&server.params);
+        anyhow::ensure!(
+            ck == r.params_checksum,
+            "round {}: replayed model diverged from the recording \
+             (checksum {ck:#018x} != {:#018x})",
+            r.round,
+            r.params_checksum
+        );
+        if derivable {
+            anyhow::ensure!(
+                ledger.total_up_bits == r.total_up_bits
+                    && ledger.total_down_bits == r.total_down_bits,
+                "round {}: replayed ledger ({}, {}) != recorded snapshot ({}, {})",
+                r.round,
+                ledger.total_up_bits,
+                ledger.total_down_bits,
+                r.total_up_bits,
+                r.total_down_bits
+            );
+        }
+    }
+
+    if derivable && t.end.settled {
+        // the recording settled final downloads; reproduce the sweep
+        for last in &mut last_sync {
+            let bits = server.straggler_download_bits(*last);
+            if bits > 0 {
+                ledger.record_download(bits);
+            }
+            *last = server.round;
+        }
+    }
+    anyhow::ensure!(
+        params_checksum(&server.params) == t.end.final_checksum,
+        "final model diverged from the recording"
+    );
+    if derivable {
+        anyhow::ensure!(
+            ledger.total_up_bits == t.end.total_up_bits
+                && ledger.total_down_bits == t.end.total_down_bits
+                && ledger.uploads == t.end.uploads
+                && ledger.downloads == t.end.downloads,
+            "final ledger diverged: replay ({}, {}, {} up, {} down) vs \
+             recording ({}, {}, {} up, {} down)",
+            ledger.total_up_bits,
+            ledger.total_down_bits,
+            ledger.uploads,
+            ledger.downloads,
+            t.end.total_up_bits,
+            t.end.total_down_bits,
+            t.end.uploads,
+            t.end.downloads
+        );
+    }
+
+    Ok(ReplayOutcome {
+        rounds: t.rounds.len(),
+        final_params: server.params.clone(),
+        ledger,
+        downloads_verified: derivable,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::CommLedger;
+
+    fn temp_path(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("fedstc_transcript_{}_{name}.fstx", std::process::id()))
+    }
+
+    fn dense(vals: &[f32]) -> Message {
+        Message::Dense { values: vals.to_vec() }
+    }
+
+    /// Hand-drive the observer hooks through a tiny 2-client baseline
+    /// run (the same scenario as the checked-in golden fixture) and
+    /// return the transcript bytes.
+    fn record_baseline(path: &Path) {
+        let mut w = TranscriptWriter::create(path, true).unwrap();
+        let init = vec![0.0f32; 4];
+        w.on_run_start(&RunMeta {
+            method_spec: "baseline",
+            num_clients: 2,
+            cache_rounds: 10,
+            seed: 1,
+            init_params: &init,
+        })
+        .unwrap();
+
+        let mut ledger = CommLedger::new(2);
+        // round 1: both clients sync at lag 0 (free), upload dense
+        let r1 = [dense(&[1.0, 0.0, 2.0, -2.0]), dense(&[3.0, 0.0, 0.0, 2.0])];
+        w.on_round_start(0, &[0, 1]).unwrap();
+        for (c, m) in r1.iter().enumerate() {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+        }
+        let params1 = [2.0f32, 0.0, 1.0, 0.0];
+        w.on_broadcast(&RoundRecord {
+            round: 1,
+            participants: &[0, 1],
+            mean_loss: 0.25,
+            down_bits: 128,
+            params: &params1,
+            ledger: &ledger,
+        })
+        .unwrap();
+
+        // round 2: both clients one round behind (128 bits each), then
+        // upload all-ones
+        let r2 = [dense(&[1.0; 4]), dense(&[1.0; 4])];
+        w.on_round_start(1, &[0, 1]).unwrap();
+        ledger.record_download(128);
+        ledger.record_download(128);
+        for (c, m) in r2.iter().enumerate() {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+        }
+        let params2 = [3.0f32, 1.0, 2.0, 1.0];
+        w.on_broadcast(&RoundRecord {
+            round: 2,
+            participants: &[0, 1],
+            mean_loss: 0.125,
+            down_bits: 128,
+            params: &params2,
+            ledger: &ledger,
+        })
+        .unwrap();
+
+        // settlement: both clients one round behind again
+        ledger.record_download(128);
+        ledger.record_download(128);
+        w.on_finish(&RunEnd { params: &params2, ledger: &ledger, settled: true }).unwrap();
+    }
+
+    #[test]
+    fn write_read_replay_roundtrip() {
+        let path = temp_path("roundtrip");
+        record_baseline(&path);
+        let t = Transcript::read_file(&path).unwrap();
+        assert_eq!(t.version, TRANSCRIPT_VERSION);
+        assert!(t.sync_derivable());
+        assert_eq!(t.method_spec, "baseline");
+        assert_eq!(t.num_clients, 2);
+        assert_eq!(t.cache_rounds, 10);
+        assert_eq!(t.seed, 1);
+        assert_eq!(t.init_params, vec![0.0; 4]);
+        assert_eq!(t.rounds.len(), 2);
+        assert_eq!(t.rounds[0].participants, vec![0, 1]);
+        assert_eq!(t.rounds[0].uploads.len(), 2);
+        assert_eq!(t.rounds[1].total_down_bits, 256);
+        assert!(t.end.settled);
+        assert_eq!(t.end.total_down_bits, 512);
+
+        let out = replay(&t).unwrap();
+        assert_eq!(out.rounds, 2);
+        assert_eq!(out.final_params, vec![3.0, 1.0, 2.0, 1.0]);
+        assert_eq!(out.ledger.total_up_bits, 512);
+        assert_eq!(out.ledger.total_down_bits, 512);
+        assert_eq!(out.ledger.uploads, 4);
+        assert_eq!(out.ledger.downloads, 4);
+        assert!(out.downloads_verified);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_detects_tampered_uploads() {
+        let path = temp_path("tamper");
+        record_baseline(&path);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flip a bit inside the first upload's value payload; the round
+        // checksum must catch the divergence
+        let needle = 1.0f32.to_le_bytes();
+        let pos = bytes
+            .windows(4)
+            .position(|w| w == needle)
+            .expect("a 1.0 f32 literal exists in the payload");
+        bytes[pos + 2] ^= 0x40;
+        let t = Transcript::from_bytes(&bytes).unwrap();
+        let err = replay(&t).unwrap_err().to_string();
+        assert!(err.contains("diverged") || err.contains("bills"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn reader_rejects_malformed_transcripts() {
+        assert!(Transcript::from_bytes(b"").is_err());
+        assert!(Transcript::from_bytes(b"NOPE").is_err(), "bad magic");
+        // bad version
+        let mut b = TRANSCRIPT_MAGIC.to_vec();
+        b.extend_from_slice(&99u16.to_le_bytes());
+        b.push(0);
+        let err = Transcript::from_bytes(&b).unwrap_err().to_string();
+        assert!(err.contains("version 99"), "{err}");
+
+        // truncation anywhere in a valid transcript errors cleanly
+        let path = temp_path("truncate");
+        record_baseline(&path);
+        let bytes = std::fs::read(&path).unwrap();
+        for cut in [5, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(Transcript::from_bytes(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage after the end frame
+        let mut long = bytes.clone();
+        long.push(0xAB);
+        assert!(Transcript::from_bytes(&long).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn checksum_is_fnv1a_over_f32_bits() {
+        // empty input = the FNV-1a offset basis
+        assert_eq!(params_checksum(&[]), 0xcbf2_9ce4_8422_2325);
+        // order matters
+        assert_ne!(params_checksum(&[1.0, 2.0]), params_checksum(&[2.0, 1.0]));
+        // +0.0 and -0.0 have different bit patterns and must differ
+        assert_ne!(params_checksum(&[0.0]), params_checksum(&[-0.0]));
+    }
+}

@@ -6,11 +6,62 @@ pub mod alpha;
 
 use crate::cluster::{ClusterConfig, ClusterRun, ClusterStats, TrainerFactory};
 use crate::config::FedConfig;
-use crate::coordinator::FederatedRun;
 use crate::data::synth::{SynthFlavor, SynthSpec};
 use crate::data::Dataset;
-use crate::metrics::{EvalPoint, TrainingLog};
+use crate::metrics::{CommLedger, EvalPoint, TrainingLog};
 use crate::models::{native::NativeLogreg, ModelSpec, Trainer};
+use crate::session::{Execution, Observer, Oracle, Session};
+
+/// The evaluation-cadence and curve-assembly plumbing shared by every
+/// driver (serial [`Experiment::run`], [`Experiment::run_cluster`], the
+/// `repro cluster` CLI loop) — one implementation of "evaluate every
+/// `eval_every` iterations, always end on an evaluation, refresh the
+/// final point's download accounting after settlement".
+pub struct CurveBuilder {
+    log: TrainingLog,
+    eval_every_rounds: usize,
+    last_eval_round: usize,
+}
+
+impl CurveBuilder {
+    pub fn new(label: &str, cfg: &FedConfig) -> Self {
+        CurveBuilder {
+            log: TrainingLog::new(label),
+            eval_every_rounds: (cfg.eval_every / cfg.method.local_iters()).max(1),
+            last_eval_round: 0,
+        }
+    }
+
+    /// Whether the cadence calls for an evaluation after `round` of
+    /// `target` total rounds.
+    pub fn due(&self, round: usize, target: usize) -> bool {
+        round % self.eval_every_rounds == 0 || round == target
+    }
+
+    pub fn push(&mut self, p: EvalPoint) {
+        self.last_eval_round = p.round;
+        self.log.push(p);
+    }
+
+    /// Whether the curve still needs a closing evaluation (the last
+    /// aggregated round was never evaluated).
+    pub fn needs_final(&self, rounds_done: usize) -> bool {
+        rounds_done > 0 && self.last_eval_round < rounds_done
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.log.points.is_empty()
+    }
+
+    /// Refresh the final point's download accounting after settlement
+    /// and yield the finished curve.
+    pub fn finalize(mut self, ledger: &CommLedger) -> TrainingLog {
+        if let Some(p) = self.log.points.last_mut() {
+            p.down_bits = ledger.down_bits_per_client();
+        }
+        self.log
+    }
+}
 
 /// A complete experiment: config + datasets.
 pub struct Experiment {
@@ -34,6 +85,18 @@ impl Experiment {
     /// Run the full federated training loop with the given gradient
     /// oracle, evaluating every `cfg.eval_every` iterations.
     pub fn run(&self, trainer: &mut dyn Trainer) -> anyhow::Result<TrainingLog> {
+        self.run_observed(trainer, Vec::new())
+    }
+
+    /// [`Experiment::run`] with extra session observers attached —
+    /// transcript recorders (`repro train --record`), custom telemetry.
+    /// The curve itself is assembled by the shared [`CurveBuilder`]
+    /// plumbing over the session-driven round engine.
+    pub fn run_observed(
+        &self,
+        trainer: &mut dyn Trainer,
+        observers: Vec<Box<dyn Observer>>,
+    ) -> anyhow::Result<TrainingLog> {
         anyhow::ensure!(
             trainer.batch_size() == self.cfg.batch_size,
             "trainer batch size {} != config batch size {}",
@@ -41,35 +104,33 @@ impl Experiment {
             self.cfg.batch_size
         );
         let init = self.spec.init_flat(self.cfg.seed);
-        let mut run = FederatedRun::new(self.cfg.clone(), &self.train, init)?;
-        let mut log = TrainingLog::new(&self.cfg.describe());
-
-        let local_iters = self.cfg.method.local_iters();
+        let mut session = Session::new(self.cfg.clone(), &self.train, init, Execution::Serial)?;
+        for o in observers {
+            session.add_observer(o);
+        }
+        let mut curve = CurveBuilder::new(&self.cfg.describe(), &self.cfg);
         let total_rounds = self.cfg.rounds();
-        let eval_every_rounds = (self.cfg.eval_every / local_iters).max(1);
 
-        let mut last_loss = f32::NAN;
         for round in 1..=total_rounds {
-            last_loss = run.run_round(trainer, &self.train)?;
-            if round % eval_every_rounds == 0 || round == total_rounds {
-                let m = trainer.eval(&run.server.params, &self.test);
-                log.push(EvalPoint {
-                    iteration: run.iterations_done(),
+            let report = session.run_round(Oracle::Trainer(trainer), &self.train)?;
+            if curve.due(round, total_rounds) {
+                let m = trainer.eval(&session.server.params, &self.test);
+                let p = EvalPoint {
+                    iteration: session.iterations_done(),
                     round,
                     accuracy: m.accuracy,
                     loss: m.loss,
-                    up_bits: run.ledger.up_bits_per_client(),
-                    down_bits: run.ledger.down_bits_per_client(),
-                });
+                    train_loss: report.mean_loss as f64,
+                    up_bits: session.ledger.up_bits_per_client(),
+                    down_bits: session.ledger.down_bits_per_client(),
+                };
+                session.notify_eval(&p)?;
+                curve.push(p);
             }
         }
-        let _ = last_loss;
-        run.settle_final_downloads();
-        // refresh the final point's download accounting
-        if let Some(p) = log.points.last_mut() {
-            p.down_bits = run.ledger.down_bits_per_client();
-        }
-        Ok(log)
+        session.settle_final_downloads();
+        session.finish()?;
+        Ok(curve.finalize(&session.ledger))
     }
 
     /// Run the experiment on the parallel cluster simulation instead of
@@ -93,47 +154,45 @@ impl Experiment {
         ccfg.max_ticks = ccfg.max_ticks.max(self.cfg.rounds() * 8 + 1000);
         let init = self.spec.init_flat(self.cfg.seed);
         let mut run = ClusterRun::new(ccfg, &self.train, init)?;
-        let mut log = TrainingLog::new(&format!("cluster: {}", self.cfg.describe()));
+        let mut curve =
+            CurveBuilder::new(&format!("cluster: {}", self.cfg.describe()), &self.cfg);
         let mut eval_trainer = factory.make();
 
-        let local_iters = self.cfg.method.local_iters();
-        let eval_every_rounds = (self.cfg.eval_every / local_iters).max(1);
-        let mut last_eval_round = 0;
+        let mut last_loss = 0.0f64;
         while let Some(summary) = run.next_round(factory, &self.train)? {
             if summary.aggregated == 0 {
                 continue; // nothing reached the server this round
             }
+            last_loss = summary.mean_loss as f64;
             let round = run.rounds_done;
-            if round % eval_every_rounds == 0 || round == run.target_rounds() {
+            if curve.due(round, run.target_rounds()) {
                 let m = eval_trainer.eval(&run.server.params, &self.test);
-                log.push(EvalPoint {
+                curve.push(EvalPoint {
                     iteration: run.iterations_done(),
                     round,
                     accuracy: m.accuracy,
                     loss: m.loss,
+                    train_loss: last_loss,
                     up_bits: run.ledger.up_bits_per_client(),
                     down_bits: run.ledger.down_bits_per_client(),
                 });
-                last_eval_round = round;
             }
         }
         // final point: refresh download accounting after settlement, and
         // make sure the curve ends with an evaluation
-        if run.rounds_done > 0 && last_eval_round < run.rounds_done {
+        if curve.needs_final(run.rounds_done) {
             let m = eval_trainer.eval(&run.server.params, &self.test);
-            log.push(EvalPoint {
+            curve.push(EvalPoint {
                 iteration: run.iterations_done(),
                 round: run.rounds_done,
                 accuracy: m.accuracy,
                 loss: m.loss,
+                train_loss: last_loss,
                 up_bits: run.ledger.up_bits_per_client(),
                 down_bits: run.ledger.down_bits_per_client(),
             });
         }
-        if let Some(p) = log.points.last_mut() {
-            p.down_bits = run.ledger.down_bits_per_client();
-        }
-        Ok((log, run.stats.clone()))
+        Ok((curve.finalize(&run.ledger), run.stats.clone()))
     }
 
     /// Convenience for logreg experiments: run on the native trainer

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Generate golden_baseline_v1.fstx — the checked-in transcript fixture.
+
+Mirrors the version-1 format documented in rust/src/session/transcript.rs
+for a tiny hand-computable run: method `baseline`, 2 clients, model
+dimension 4, two rounds of dense uploads, settled downloads. All f32
+arithmetic involved (means of small integers) is exact, so the byte
+stream is reproducible on any platform. The fixture pins the on-disk
+format: if the reader or the FNV checksum ever drifts, the
+`golden_fixture_parses_and_replays` test fails.
+
+Regenerate with:  python3 rust/tests/fixtures/make_golden.py
+"""
+
+import struct
+from pathlib import Path
+
+OUT = Path(__file__).parent / "golden_baseline_v1.fstx"
+
+MAGIC = b"FSTX"
+VERSION = 1
+FLAG_SYNC_DERIVABLE = 0x01
+
+
+def fnv1a_params(params):
+    """FNV-1a 64 over the little-endian f32 bit patterns."""
+    h = 0xCBF29CE484222325
+    for p in params:
+        for b in struct.pack("<f", p):
+            h ^= b
+            h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def dense_frame(values):
+    """Message::to_bytes for Message::Dense (tag 0, u32 len, f32 LE)."""
+    out = bytearray([0])
+    out += struct.pack("<I", len(values))
+    for v in values:
+        out += struct.pack("<f", v)
+    return bytes(out)
+
+
+def round_frame(rnd, mean_loss, participants, uploads, down_bits, params, up_bits, dn_bits):
+    out = bytearray([1])
+    out += struct.pack("<I", rnd)
+    out += struct.pack("<f", mean_loss)
+    out += struct.pack("<I", len(participants))
+    for p in participants:
+        out += struct.pack("<I", p)
+    out += struct.pack("<I", len(uploads))
+    for client, frame in uploads:
+        out += struct.pack("<I", client)
+        out += struct.pack("<I", len(frame))
+        out += frame
+    out += struct.pack("<Q", down_bits)
+    out += struct.pack("<Q", fnv1a_params(params))
+    out += struct.pack("<Q", up_bits)
+    out += struct.pack("<Q", dn_bits)
+    return bytes(out)
+
+
+def main():
+    buf = bytearray()
+    # header
+    buf += MAGIC
+    buf += struct.pack("<H", VERSION)
+    buf.append(FLAG_SYNC_DERIVABLE)
+    spec = b"baseline"
+    buf += struct.pack("<H", len(spec))
+    buf += spec
+    buf += struct.pack("<I", 2)  # num_clients
+    buf += struct.pack("<I", 10)  # cache_rounds
+    buf += struct.pack("<Q", 1)  # seed
+    buf += struct.pack("<I", 4)  # dim
+    for _ in range(4):
+        buf += struct.pack("<f", 0.0)
+
+    # round 1: mean([1,0,2,-2],[3,0,0,2]) = [2,0,1,0]; dense frame = 128 bits
+    buf += round_frame(
+        1,
+        0.25,
+        [0, 1],
+        [(0, dense_frame([1.0, 0.0, 2.0, -2.0])), (1, dense_frame([3.0, 0.0, 0.0, 2.0]))],
+        128,
+        [2.0, 0.0, 1.0, 0.0],
+        256,  # total_up_bits after round 1
+        0,  # total_down_bits (both synced at lag 0)
+    )
+    # round 2: mean([1,1,1,1],[1,1,1,1]) = [1,1,1,1] → params [3,1,2,1];
+    # both clients one round behind → 128-bit catch-up each
+    buf += round_frame(
+        2,
+        0.125,
+        [0, 1],
+        [(0, dense_frame([1.0] * 4)), (1, dense_frame([1.0] * 4))],
+        128,
+        [3.0, 1.0, 2.0, 1.0],
+        512,
+        256,
+    )
+    # end frame: settlement downloads 128 bits × 2 clients
+    buf.append(2)
+    buf.append(1)  # settled
+    buf += struct.pack("<Q", 512)  # total_up_bits
+    buf += struct.pack("<Q", 512)  # total_down_bits
+    buf += struct.pack("<Q", 4)  # uploads
+    buf += struct.pack("<Q", 4)  # downloads
+    buf += struct.pack("<Q", fnv1a_params([3.0, 1.0, 2.0, 1.0]))
+
+    OUT.write_bytes(bytes(buf))
+    print(f"wrote {OUT} ({len(buf)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

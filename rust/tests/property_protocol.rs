@@ -19,12 +19,12 @@
 //!    the legacy oracle.
 
 use fedstc::compression::{
-    majority_vote, stc, Compressor, DenseCompressor, Message, SignCompressor, StcCompressor,
-    TernaryTensor, TopKCompressor,
+    majority_signs, majority_vote, stc, Compressor, DenseCompressor, Message, SignCompressor,
+    StcCompressor, TernaryTensor, TopKCompressor,
 };
 use fedstc::config::Method;
 use fedstc::coordinator::Server;
-use fedstc::protocol::{self, Protocol};
+use fedstc::protocol::{self, Broadcast, Protocol, Scale};
 use fedstc::util::proplite::{check, Config};
 use fedstc::util::rng::Pcg64;
 use std::collections::VecDeque;
@@ -500,6 +500,103 @@ fn equivalence_stc() {
 #[test]
 fn equivalence_hybrid() {
     assert_equivalence(Method::Hybrid { p: 0.05, n: 3 }, 10);
+}
+
+// ---------------------------------------------------------------------
+// 4. Broadcast scale: wire roundtrip + honest per-coordinate billing
+// ---------------------------------------------------------------------
+
+fn random_scale(rng: &mut Pcg64) -> Scale {
+    if rng.below(2) == 0 {
+        Scale::Scalar(rng.normal())
+    } else {
+        let n = rng.below(200);
+        Scale::PerCoord((0..n).map(|_| rng.normal()).collect())
+    }
+}
+
+#[test]
+fn prop_scale_wire_roundtrip() {
+    check(
+        "scale-roundtrip",
+        Config { cases: 200, ..Default::default() },
+        random_scale,
+        no_shrink,
+        |s| {
+            let bytes = s.to_bytes();
+            let decoded = Scale::from_bytes(&bytes).map_err(|e| e.to_string())?;
+            if &decoded != s {
+                return Err(format!("scale roundtrip mismatch for {s:?}"));
+            }
+            // truncation errors cleanly
+            if !bytes.is_empty() && Scale::from_bytes(&bytes[..bytes.len() - 1]).is_ok() {
+                return Err("truncated scale frame decoded".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// An adaptive-δ signSGD variant: majority vote upstream, but every
+/// coordinate applies its own step size — the protocol family
+/// `Scale::PerCoord` exists for. Exercises the full server path.
+struct AdaptiveSignProtocol {
+    deltas: Vec<f32>,
+}
+
+impl Protocol for AdaptiveSignProtocol {
+    fn name(&self) -> String {
+        "adaptive-sign-test".into()
+    }
+
+    fn up_encode(&mut self, acc: &[f32]) -> Message {
+        SignCompressor.compress(acc)
+    }
+
+    fn client_residual(&self) -> bool {
+        false
+    }
+
+    fn downstream_compressed(&self) -> bool {
+        true
+    }
+
+    fn aggregate(&mut self, messages: &[Message]) -> anyhow::Result<Broadcast> {
+        let refs: Vec<&Message> = messages.iter().collect();
+        let signs = majority_signs(&refs)?;
+        Ok(Broadcast {
+            msg: Message::Sign { signs },
+            scale: Scale::PerCoord(self.deltas.clone()),
+            down_bits: None,
+        })
+    }
+}
+
+#[test]
+fn per_coord_scale_applies_and_bills_honestly() {
+    let dim = 5;
+    let deltas = vec![0.5f32, 0.25, 1.0, 0.0, 2.0];
+    let proto = AdaptiveSignProtocol { deltas: deltas.clone() };
+    let mut server = Server::with_protocol(vec![0.0; dim], Box::new(proto), 10);
+
+    let mut c = SignCompressor;
+    let m1 = c.compress(&[1.0, -1.0, 1.0, 1.0, -1.0]);
+    let m2 = c.compress(&[1.0, -1.0, -1.0, 1.0, -1.0]);
+    let m3 = c.compress(&[1.0, -1.0, 1.0, -1.0, -1.0]);
+    let bits = server.aggregate_and_apply(&[m1, m2, m3]).unwrap();
+
+    // the per-coordinate step vector must travel: measured sign frame
+    // (n + 32) plus 32·n for the δ vector
+    assert_eq!(bits, (dim + 32) + 32 * dim, "per-coordinate scale not billed");
+    // majority signs are [+,−,+,+,−], applied at per-coordinate steps
+    assert_eq!(server.params, vec![0.5, -0.25, 1.0, 0.0, -2.0]);
+
+    // a protocol broadcasting a wrong-length scale is a clean error
+    let bad = AdaptiveSignProtocol { deltas: vec![1.0; dim + 3] };
+    let mut server = Server::with_protocol(vec![0.0; dim], Box::new(bad), 10);
+    let m = SignCompressor.compress(&[1.0; 5]);
+    let err = server.aggregate_and_apply(&[m]).unwrap_err().to_string();
+    assert!(err.contains("scale length"), "{err}");
 }
 
 #[test]

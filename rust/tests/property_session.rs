@@ -1,0 +1,458 @@
+//! Property tests for the unified session layer.
+//!
+//! Three guarantees:
+//!
+//! 1. **Legacy-oracle equivalence** — the session-driven round engine
+//!    (serial execution, and thread-pool execution with any worker
+//!    count) is *bit-identical* — server params, ledger, client
+//!    residuals, per-round losses, participant draws — to a verbatim
+//!    reimplementation of the pre-session `FederatedRun::run_round`
+//!    loop kept here as the golden oracle (the same technique PR 3 used
+//!    for `Server`).
+//! 2. **Record → replay** — for every registered protocol, recording a
+//!    session to a transcript and replaying it reproduces the final
+//!    `server.params` and the full communication ledger bit-for-bit,
+//!    with zero trainer invocations on the replay side.
+//! 3. **Cluster transcripts** — a `ClusterRun` (healthy or with
+//!    stragglers dropping uploads past the deadline) records a
+//!    transcript whose replay reproduces the aggregated model exactly.
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::compression::Message;
+use fedstc::config::{FedConfig, Method};
+use fedstc::coordinator::{ClientState, FederatedRun, LocalScratch, Server};
+use fedstc::data::synth::task_dataset;
+use fedstc::data::{split_by_class, Dataset, SplitSpec};
+use fedstc::metrics::CommLedger;
+use fedstc::models::native::NativeLogreg;
+use fedstc::models::{ModelSpec, Trainer};
+use fedstc::protocol::{self, Protocol};
+use fedstc::session::{replay, Execution, Oracle, Session, Transcript};
+use fedstc::util::rng::Pcg64;
+
+// ---------------------------------------------------------------------
+// The legacy oracle: the pre-session serial round loop, verbatim
+// ---------------------------------------------------------------------
+
+/// The pre-session `FederatedRun`, reimplemented verbatim (state layout,
+/// per-client sync→train→encode interleaving, f32 reduction order) as
+/// the golden oracle the session engine must reproduce bit for bit.
+struct LegacyRun {
+    cfg: FedConfig,
+    server: Server,
+    clients: Vec<ClientState>,
+    ledger: CommLedger,
+    up_proto: Box<dyn Protocol>,
+    sampler: Pcg64,
+    scratch: LocalScratch,
+    work_params: Vec<f32>,
+    round_msgs: Vec<Message>,
+    last_participants: Vec<usize>,
+}
+
+impl LegacyRun {
+    fn new(cfg: FedConfig, train: &Dataset, init_params: Vec<f32>) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        let dim = init_params.len();
+        let spec = SplitSpec {
+            num_clients: cfg.num_clients,
+            classes_per_client: cfg.classes_per_client,
+            gamma: cfg.gamma,
+            alpha: cfg.alpha,
+            seed: cfg.seed,
+        };
+        let shards = split_by_class(train, &spec);
+        let up_proto = cfg.method.protocol()?;
+        let uses_residual = up_proto.client_residual();
+        let clients: Vec<ClientState> = shards
+            .into_iter()
+            .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg, uses_residual))
+            .collect();
+        let server = Server::new(init_params, cfg.method.clone(), cfg.cache_rounds)?;
+        let sampler = Pcg64::new(cfg.seed, 0x5a3b);
+        Ok(LegacyRun {
+            ledger: CommLedger::new(cfg.num_clients),
+            server,
+            clients,
+            up_proto,
+            sampler,
+            scratch: LocalScratch::default(),
+            work_params: vec![0.0; dim],
+            round_msgs: Vec::new(),
+            last_participants: Vec::new(),
+            cfg,
+        })
+    }
+
+    fn run_round(&mut self, trainer: &mut dyn Trainer, data: &Dataset) -> anyhow::Result<f32> {
+        let m = self.cfg.clients_per_round();
+        let ids = self.sampler.sample_without_replacement(self.cfg.num_clients, m);
+        self.last_participants = ids.clone();
+        let local_iters = self.cfg.method.local_iters();
+
+        self.round_msgs.clear();
+        let mut loss_sum = 0.0f64;
+        for &id in &ids {
+            let client = &mut self.clients[id];
+            let down_bits = self.server.straggler_download_bits(client.last_sync_round);
+            if down_bits > 0 {
+                self.ledger.record_download(down_bits);
+            }
+            client.last_sync_round = self.server.round;
+
+            self.work_params.copy_from_slice(&self.server.params);
+            let loss = client.local_train(
+                &mut self.work_params,
+                trainer,
+                data,
+                local_iters,
+                self.cfg.lr,
+                self.cfg.momentum,
+                &mut self.scratch,
+            );
+            loss_sum += loss as f64;
+
+            let mut delta = std::mem::take(&mut self.work_params);
+            for (d, w) in delta.iter_mut().zip(&self.server.params) {
+                *d -= *w;
+            }
+            let msg = client.compress_update(delta, self.up_proto.as_mut());
+            let wire = msg.to_wire();
+            self.ledger.record_upload(wire.payload_bits);
+            self.round_msgs.push(Message::from_bytes(&wire.bytes)?);
+            self.work_params = vec![0.0; self.server.dim()];
+        }
+
+        let msgs = std::mem::take(&mut self.round_msgs);
+        self.server.aggregate_and_apply(&msgs)?;
+        self.round_msgs = msgs;
+
+        Ok((loss_sum / ids.len() as f64) as f32)
+    }
+
+    fn settle_final_downloads(&mut self) {
+        for c in &mut self.clients {
+            let bits = self.server.straggler_download_bits(c.last_sync_round);
+            if bits > 0 {
+                self.ledger.record_download(bits);
+            }
+            c.last_sync_round = self.server.round;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Shared scaffolding
+// ---------------------------------------------------------------------
+
+fn fed_cfg(method: Method, rounds: usize, momentum: f32) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 8,
+        participation: 0.5,
+        classes_per_client: 5,
+        batch_size: 10,
+        lr: 0.05,
+        momentum,
+        iterations: rounds * method.local_iters(),
+        method,
+        eval_every: 1_000_000,
+        seed: 23,
+        train_examples: 600,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+fn dataset() -> Dataset {
+    let (train, _) = task_dataset("mnist", 23).unwrap();
+    train.subset(&(0..600).collect::<Vec<_>>())
+}
+
+fn init_params(cfg: &FedConfig) -> Vec<f32> {
+    ModelSpec::by_name("logreg").unwrap().init_flat(cfg.seed)
+}
+
+/// Assert every piece of run state matches the oracle bit for bit.
+fn assert_state_eq(legacy: &LegacyRun, session: &Session, tag: &str) {
+    let a: Vec<u32> = legacy.server.params.iter().map(|x| x.to_bits()).collect();
+    let b: Vec<u32> = session.server.params.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(a, b, "{tag}: server params diverged");
+    assert_eq!(legacy.server.round, session.server.round, "{tag}: round counter");
+    assert_eq!(legacy.ledger.total_up_bits, session.ledger.total_up_bits, "{tag}: up bits");
+    assert_eq!(legacy.ledger.total_down_bits, session.ledger.total_down_bits, "{tag}: down bits");
+    assert_eq!(legacy.ledger.uploads, session.ledger.uploads, "{tag}: upload count");
+    assert_eq!(legacy.ledger.downloads, session.ledger.downloads, "{tag}: download count");
+    for (lc, sc) in legacy.clients.iter().zip(&session.clients) {
+        assert_eq!(lc.residual, sc.residual, "{tag}: client {} residual", lc.id);
+        assert_eq!(lc.momentum, sc.momentum, "{tag}: client {} momentum", lc.id);
+        assert_eq!(lc.last_sync_round, sc.last_sync_round, "{tag}: client {} sync", lc.id);
+    }
+}
+
+fn methods_under_test() -> Vec<Method> {
+    vec![
+        Method::Baseline,
+        Method::FedAvg { n: 4 },
+        Method::SignSgd { delta: 0.002 },
+        Method::TopK { p: 0.02 },
+        Method::SparseUpDown { p_up: 0.05, p_down: 0.02 },
+        Method::Stc { p_up: 0.02, p_down: 0.02 },
+        Method::Hybrid { p: 0.02, n: 3 },
+    ]
+}
+
+// ---------------------------------------------------------------------
+// 1. Legacy-oracle equivalence
+// ---------------------------------------------------------------------
+
+#[test]
+fn serial_session_bit_identical_to_legacy_oracle() {
+    let train = dataset();
+    for method in methods_under_test() {
+        let rounds = 6;
+        let cfg = fed_cfg(method.clone(), rounds, 0.0);
+        let mut legacy = LegacyRun::new(cfg.clone(), &train, init_params(&cfg)).unwrap();
+        let mut facade = FederatedRun::new(cfg.clone(), &train, init_params(&cfg)).unwrap();
+        let mut t1 = NativeLogreg::new(cfg.batch_size);
+        let mut t2 = NativeLogreg::new(cfg.batch_size);
+        for r in 0..rounds {
+            let l1 = legacy.run_round(&mut t1, &train).unwrap();
+            let l2 = facade.run_round(&mut t2, &train).unwrap();
+            assert_eq!(l1.to_bits(), l2.to_bits(), "{method:?}: loss diverged at round {r}");
+            assert_eq!(
+                legacy.last_participants, facade.last_participants,
+                "{method:?}: participant draw diverged at round {r}"
+            );
+        }
+        legacy.settle_final_downloads();
+        facade.settle_final_downloads();
+        assert_state_eq(&legacy, &facade, &format!("{method:?}"));
+    }
+}
+
+#[test]
+fn serial_session_matches_legacy_with_momentum() {
+    let train = dataset();
+    let rounds = 5;
+    let cfg = fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, rounds, 0.9);
+    let mut legacy = LegacyRun::new(cfg.clone(), &train, init_params(&cfg)).unwrap();
+    let mut facade = FederatedRun::new(cfg.clone(), &train, init_params(&cfg)).unwrap();
+    let mut t1 = NativeLogreg::new(cfg.batch_size);
+    let mut t2 = NativeLogreg::new(cfg.batch_size);
+    for _ in 0..rounds {
+        legacy.run_round(&mut t1, &train).unwrap();
+        facade.run_round(&mut t2, &train).unwrap();
+    }
+    assert_state_eq(&legacy, &facade, "stc+momentum");
+}
+
+#[test]
+fn thread_pool_session_bit_identical_to_legacy_oracle() {
+    let train = dataset();
+    let factory = NativeLogregFactory { batch_size: 10 };
+    for method in [
+        Method::Stc { p_up: 0.02, p_down: 0.02 },
+        Method::SignSgd { delta: 0.002 },
+        Method::FedAvg { n: 4 },
+    ] {
+        for workers in [1usize, 3] {
+            let rounds = 5;
+            let cfg = fed_cfg(method.clone(), rounds, 0.0);
+            let mut legacy = LegacyRun::new(cfg.clone(), &train, init_params(&cfg)).unwrap();
+            let mut session = Session::new(
+                cfg.clone(),
+                &train,
+                init_params(&cfg),
+                Execution::ThreadPool(fedstc::cluster::WorkerPool::new(workers)),
+            )
+            .unwrap();
+            let mut t1 = NativeLogreg::new(cfg.batch_size);
+            for r in 0..rounds {
+                let l1 = legacy.run_round(&mut t1, &train).unwrap();
+                let rep = session.run_round(Oracle::Factory(&factory), &train).unwrap();
+                assert_eq!(
+                    l1.to_bits(),
+                    rep.mean_loss.to_bits(),
+                    "{method:?}/{workers}w: loss diverged at round {r}"
+                );
+            }
+            legacy.settle_final_downloads();
+            session.settle_final_downloads();
+            assert_state_eq(&legacy, &session, &format!("{method:?}/{workers}w"));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Record → replay for every registered protocol
+// ---------------------------------------------------------------------
+
+fn temp_transcript(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "fedstc_prop_session_{}_{}.fstx",
+        std::process::id(),
+        tag.replace([':', ',', '='], "_")
+    ))
+}
+
+#[test]
+fn record_replay_reproduces_every_registered_protocol() {
+    let train = dataset();
+    let factory = NativeLogregFactory { batch_size: 10 };
+    for name in protocol::names() {
+        let method = Method::parse(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let rounds = 3;
+        let cfg = fed_cfg(method, rounds, 0.0);
+        let path = temp_transcript(&name);
+        let mut session =
+            Session::new(cfg.clone(), &train, init_params(&cfg), Execution::Serial).unwrap();
+        session.record_transcript(&path, true).unwrap();
+        for _ in 0..rounds {
+            session.run_round(Oracle::Factory(&factory), &train).unwrap();
+        }
+        session.settle_final_downloads();
+        session.finish().unwrap();
+
+        let t = Transcript::read_file(&path).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(t.rounds.len(), rounds, "{name}");
+        let out = replay(&t).unwrap_or_else(|e| panic!("{name}: replay failed: {e}"));
+
+        // the replayed model is bit-identical to the live run's — and
+        // the replay never constructed a trainer
+        let live: Vec<u32> = session.server.params.iter().map(|x| x.to_bits()).collect();
+        let replayed: Vec<u32> = out.final_params.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(live, replayed, "{name}: replayed params diverged");
+        assert_eq!(out.ledger.total_up_bits, session.ledger.total_up_bits, "{name}: up bits");
+        assert_eq!(
+            out.ledger.total_down_bits, session.ledger.total_down_bits,
+            "{name}: down bits"
+        );
+        assert_eq!(out.ledger.uploads, session.ledger.uploads, "{name}: uploads");
+        assert_eq!(out.ledger.downloads, session.ledger.downloads, "{name}: downloads");
+        assert!(out.downloads_verified, "{name}: serial recording must verify downloads");
+        let _ = std::fs::remove_file(&path);
+    }
+}
+
+#[test]
+fn experiment_run_records_and_replays_stc() {
+    // the acceptance scenario end-to-end through the sim layer: a
+    // recorded STC experiment replays to the exact final model
+    use fedstc::session::TranscriptWriter;
+    use fedstc::sim::Experiment;
+
+    let cfg = FedConfig {
+        model: "logreg".into(),
+        num_clients: 10,
+        participation: 0.5,
+        classes_per_client: 5,
+        batch_size: 10,
+        method: Method::Stc { p_up: 0.02, p_down: 0.02 },
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: 12,
+        eval_every: 4,
+        seed: 31,
+        train_examples: 600,
+        test_examples: 200,
+        ..Default::default()
+    };
+    let path = temp_transcript("experiment_stc");
+    let exp = Experiment::new(cfg.clone()).unwrap();
+    let mut trainer = NativeLogreg::new(cfg.batch_size);
+    let log = exp
+        .run_observed(
+            &mut trainer,
+            vec![Box::new(TranscriptWriter::create(&path, true).unwrap())],
+        )
+        .unwrap();
+    assert!(log.points.iter().all(|p| p.train_loss.is_finite() && p.train_loss > 0.0));
+
+    let t = Transcript::read_file(&path).unwrap();
+    assert_eq!(t.method_spec, "stc:0.02:0.02");
+    assert_eq!(t.rounds.len(), 12);
+    let out = replay(&t).unwrap();
+    assert_eq!(out.rounds, 12);
+    // the curve's final communication totals match the replayed ledger
+    let last = log.points.last().unwrap();
+    assert_eq!(out.ledger.up_bits_per_client(), last.up_bits);
+    assert_eq!(out.ledger.down_bits_per_client(), last.down_bits);
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------
+// 3. Cluster transcripts
+// ---------------------------------------------------------------------
+
+fn cluster_record_replay(straggler_frac: f64, tag: &str) {
+    let cfg = fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 8, 0.0);
+    let train = dataset();
+    let mut ccfg = ClusterConfig::new(cfg.clone());
+    ccfg.workers = 2;
+    ccfg.straggler_frac = straggler_frac;
+    let path = temp_transcript(tag);
+    let mut run = ClusterRun::new(ccfg, &train, init_params(&cfg)).unwrap();
+    run.record_to(&path).unwrap();
+    let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+    while !run.finished() {
+        run.tick(&factory, &train).unwrap();
+    }
+    if straggler_frac > 0.0 {
+        assert!(run.stats.late_uploads > 0, "scenario never exercised late uploads");
+    }
+
+    let t = Transcript::read_file(&path).unwrap();
+    assert!(!t.sync_derivable(), "cluster recordings are not sync-derivable");
+    assert_eq!(t.rounds.len(), run.rounds_done);
+    let out = replay(&t).unwrap();
+    let live: Vec<u32> = run.server.params.iter().map(|x| x.to_bits()).collect();
+    let replayed: Vec<u32> = out.final_params.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(live, replayed, "{tag}: replayed cluster model diverged");
+    assert!(!out.downloads_verified);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn healthy_cluster_transcript_replays_exactly() {
+    cluster_record_replay(0.0, "cluster_healthy");
+}
+
+#[test]
+fn straggler_cluster_transcript_replays_exactly() {
+    // late uploads are billed but never aggregated; the transcript
+    // carries only what the server saw, and replay reproduces the model
+    cluster_record_replay(0.4, "cluster_straggler");
+}
+
+// ---------------------------------------------------------------------
+// Golden fixture: format stability across releases
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_fixture_parses_and_replays() {
+    let path = std::path::Path::new(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/rust/tests/fixtures/golden_baseline_v1.fstx"
+    ));
+    let t = Transcript::read_file(path).expect("golden fixture must stay parseable");
+    assert_eq!(t.version, 1);
+    assert!(t.sync_derivable());
+    assert_eq!(t.method_spec, "baseline");
+    assert_eq!(t.num_clients, 2);
+    assert_eq!(t.cache_rounds, 10);
+    assert_eq!(t.seed, 1);
+    assert_eq!(t.init_params, vec![0.0; 4]);
+    assert_eq!(t.rounds.len(), 2);
+    assert_eq!(t.rounds[0].participants, vec![0, 1]);
+    assert!(t.end.settled);
+
+    let out = replay(&t).expect("golden fixture must replay cleanly");
+    assert_eq!(out.rounds, 2);
+    assert_eq!(out.final_params, vec![3.0, 1.0, 2.0, 1.0]);
+    assert_eq!(out.ledger.total_up_bits, 512);
+    assert_eq!(out.ledger.total_down_bits, 512);
+    assert_eq!(out.ledger.uploads, 4);
+    assert_eq!(out.ledger.downloads, 4);
+    assert!(out.downloads_verified);
+}

@@ -48,8 +48,8 @@ pub use executor::{NativeLogregFactory, TrainerFactory, WorkerPool};
 pub use membership::{ClientPhase, Membership};
 pub use state::{ClusterRun, ClusterStats, Phase, RoundSummary};
 pub use transport::{
-    BatchTelemetry, ContentionPolicy, LinkModel, ScheduleResult, ServerLink, TransferReq,
-    TransferTiming, Transport,
+    BatchTelemetry, ContentionPolicy, Direction, LinkModel, ScheduleResult, ServerLink,
+    TransferReq, TransferTiming, Transport,
 };
 
 use crate::config::FedConfig;

@@ -22,11 +22,12 @@
 
 use super::executor::{TrainerFactory, WorkerPool};
 use super::membership::Membership;
-use super::transport::{TransferReq, Transport};
+use super::transport::{Direction, TransferReq, Transport};
 use super::ClusterConfig;
 use crate::compression::Message;
 use crate::data::Dataset;
 use crate::session::{Execution, Session};
+use crate::telemetry::{ClusterEvent, ParticipantEvent, TickProbe};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
 
@@ -187,6 +188,10 @@ pub struct ClusterRun {
     /// simulated federated wall-clock
     pub sim_clock_s: f64,
     phase: Phase,
+    /// cluster-event listeners ([`crate::telemetry::TickProbe`]); pure
+    /// observers of the tick machine, the membership process and the
+    /// simulated transport — never consulted for control flow
+    probes: Vec<Box<dyn TickProbe>>,
     /// mid-round dropout draws (separate stream: lifecycle noise must
     /// never perturb sampling or training)
     event_rng: Pcg64,
@@ -245,6 +250,7 @@ impl ClusterRun {
             ticks: 0,
             sim_clock_s: 0.0,
             phase: Phase::WaitingForMembers,
+            probes: Vec::new(),
             event_rng,
             pending: Vec::new(),
             pending_selected: 0,
@@ -258,12 +264,34 @@ impl ClusterRun {
 
     /// Attach a transcript recorder writing to `path`. Must be called
     /// before the first round. Cluster recordings are *not* flagged
-    /// sync-derivable: download accounting depends on membership and
-    /// transport state the transcript does not carry, and late uploads
-    /// are billed but never aggregated — replay re-verifies the round
-    /// mathematics (uploads → aggregation → model) only.
+    /// sync-derivable — download accounting depends on membership and
+    /// transport state the transcript does not carry — so the writer
+    /// records every §V-B synchronisation as an explicit sync frame
+    /// (transcript v2) and replay re-prices each one against the
+    /// partial-sum cache, verifying the download ledger. Late uploads
+    /// are billed but never aggregated, so the *upload* ledger stays
+    /// replay-unverified; replay still re-verifies the full round
+    /// mathematics (uploads → aggregation → model).
     pub fn record_to(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
         self.session.record_transcript(path, false)
+    }
+
+    /// Register a [`TickProbe`] for cluster lifecycle events. Probes see
+    /// phase transitions, membership churn, participant no-shows and
+    /// dropouts, simulated transfers, late uploads and round closes —
+    /// everything the session [`crate::session::Observer`] hooks cannot,
+    /// because it never reaches the round mathematics. Register a
+    /// `Clone` handle (e.g. [`crate::telemetry::TraceWriter`]) both here
+    /// and via `add_observer` to capture the full picture.
+    pub fn add_probe(&mut self, probe: Box<dyn TickProbe>) {
+        self.probes.push(probe);
+    }
+
+    fn emit(&mut self, ev: ClusterEvent) -> anyhow::Result<()> {
+        for p in &mut self.probes {
+            p.on_cluster_event(&ev)?;
+        }
+        Ok(())
     }
 
     pub fn phase(&self) -> Phase {
@@ -291,30 +319,43 @@ impl ClusterRun {
             return Ok(None);
         }
         self.ticks += 1;
-        if self.ticks > self.cfg.max_ticks {
+        let before = self.phase;
+        let summary = if self.ticks > self.cfg.max_ticks {
             self.enter_finished()?;
-            return Ok(None);
+            None
+        } else {
+            match before {
+                Phase::WaitingForMembers => {
+                    self.tick_waiting()?;
+                    None
+                }
+                Phase::Warmup { ticks_left } => {
+                    self.tick_warmup(ticks_left)?;
+                    None
+                }
+                Phase::RoundTrain => {
+                    self.tick_round_train(factory, data)?;
+                    None
+                }
+                Phase::Aggregate => Some(self.tick_aggregate()?),
+                Phase::Cooldown { ticks_left } => {
+                    self.tick_cooldown(ticks_left)?;
+                    None
+                }
+                Phase::Finished => None,
+            }
+        };
+        // discriminant comparison, not equality: Warmup{2} → Warmup{1}
+        // is a countdown, not a transition worth an event
+        if std::mem::discriminant(&before) != std::mem::discriminant(&self.phase) {
+            self.emit(ClusterEvent::Phase {
+                tick: self.ticks,
+                sim_s: self.sim_clock_s,
+                from: before.label(),
+                to: self.phase.label(),
+            })?;
         }
-        match self.phase {
-            Phase::WaitingForMembers => {
-                self.tick_waiting();
-                Ok(None)
-            }
-            Phase::Warmup { ticks_left } => {
-                self.tick_warmup(ticks_left);
-                Ok(None)
-            }
-            Phase::RoundTrain => {
-                self.tick_round_train(factory, data)?;
-                Ok(None)
-            }
-            Phase::Aggregate => Ok(Some(self.tick_aggregate()?)),
-            Phase::Cooldown { ticks_left } => {
-                self.tick_cooldown(ticks_left)?;
-                Ok(None)
-            }
-            Phase::Finished => Ok(None),
-        }
+        Ok(summary)
     }
 
     /// Drive ticks until the next closed round; `Ok(None)` once finished.
@@ -331,7 +372,7 @@ impl ClusterRun {
         Ok(None)
     }
 
-    fn tick_waiting(&mut self) {
+    fn tick_waiting(&mut self) -> anyhow::Result<()> {
         self.sim_clock_s += self.cfg.tick_seconds;
         if self.membership.active_count() < self.cfg.min_members {
             self.stats.quorum_stalls += 1;
@@ -341,33 +382,47 @@ impl ClusterRun {
             let ev = self.membership.tick_bootstrap(0.25, self.cfg.join_rate);
             self.stats.joins += ev.joins as u64;
             self.stats.rejoins += ev.rejoins as u64;
+            if ev.joins + ev.rejoins > 0 {
+                self.emit(ClusterEvent::Membership {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    joins: ev.joins,
+                    rejoins: ev.rejoins,
+                    dropouts: 0,
+                })?;
+            }
         }
         if self.membership.active_count() >= self.cfg.min_members {
             self.phase = Phase::Warmup { ticks_left: self.cfg.warmup_ticks };
         }
+        Ok(())
     }
 
-    fn tick_warmup(&mut self, ticks_left: usize) {
+    fn tick_warmup(&mut self, ticks_left: usize) -> anyhow::Result<()> {
         self.sim_clock_s += self.cfg.tick_seconds;
         if ticks_left > 1 {
             self.phase = Phase::Warmup { ticks_left: ticks_left - 1 };
-            return;
+            return Ok(());
         }
         // bring every active client up to the current global model; free
         // at server round 0, a billed §V-B catch-up after a quorum outage
         let ids: Vec<usize> = (0..self.session.clients.len())
             .filter(|&id| self.membership.is_active(id))
             .collect();
-        self.sync_clients(&ids);
+        self.sync_clients(&ids)?;
         self.phase = Phase::RoundTrain;
+        Ok(())
     }
 
     /// Bill the given clients' synchronisations through the partial-sum
     /// cache, scheduling the downloads as one batch on the shared server
     /// egress (they all start at the same instant, so they contend).
+    /// Every synchronisation — including the free 0-bit up-to-date case
+    /// — is reported through [`Session::notify_sync`], so observers and
+    /// transcript sync frames see the same pricing the ledger bills.
     /// Returns per-client outcomes in `ids` order plus the batch's
     /// contention seconds.
-    fn sync_clients(&mut self, ids: &[usize]) -> (Vec<SyncOutcome>, f64) {
+    fn sync_clients(&mut self, ids: &[usize]) -> anyhow::Result<(Vec<SyncOutcome>, f64)> {
         let reqs: Vec<TransferReq> = ids
             .iter()
             .map(|&id| TransferReq {
@@ -396,8 +451,20 @@ impl ClusterRun {
                     self.stats.catch_up_syncs += 1;
                     self.stats.catch_up_bits += bits;
                 }
+                self.emit(ClusterEvent::Transfer {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    dir: Direction::Down,
+                    client_id: id,
+                    bits,
+                    ready_s: 0.0,
+                    duration_s: secs,
+                    queue_s: sched.timings[k].queue_s,
+                    end_s: sched.timings[k].end_s,
+                })?;
             }
             self.session.clients[id].last_sync_round = self.session.server.round;
+            self.session.notify_sync(id, bits)?;
             out.push(SyncOutcome { bits, lag, secs });
         }
         self.session.ledger.note_down_concurrency(sched.telemetry.peak_concurrency);
@@ -406,7 +473,7 @@ impl ClusterRun {
             .stats
             .peak_down_concurrency
             .max(sched.telemetry.peak_concurrency as u64);
-        (out, sched.telemetry.queue_seconds)
+        Ok((out, sched.telemetry.queue_seconds))
     }
 
     fn tick_round_train(
@@ -425,12 +492,24 @@ impl ClusterRun {
         for &id in &ids {
             if !self.membership.is_active(id) {
                 self.stats.no_shows += 1;
+                self.emit(ClusterEvent::Participant {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    client_id: id,
+                    kind: ParticipantEvent::NoShow,
+                })?;
                 continue;
             }
             if self.cfg.dropout_rate > 0.0 && self.event_rng.f64() < self.cfg.dropout_rate {
                 self.membership.set_offline(id);
                 self.stats.midround_dropouts += 1;
                 dropped += 1;
+                self.emit(ClusterEvent::Participant {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    client_id: id,
+                    kind: ParticipantEvent::MidRoundDropout,
+                })?;
                 continue;
             }
             participant_ids.push(id);
@@ -441,7 +520,7 @@ impl ClusterRun {
         // the downloads share the server egress as one batch
         self.pending_catchup_clients = 0;
         self.pending_catchup_bits = 0;
-        let (outcomes, down_queue_secs) = self.sync_clients(&participant_ids);
+        let (outcomes, down_queue_secs) = self.sync_clients(&participant_ids)?;
         self.pending_queue_secs = down_queue_secs;
         let mut down_secs = Vec::with_capacity(outcomes.len());
         for o in &outcomes {
@@ -479,6 +558,20 @@ impl ClusterRun {
             .max(sched.telemetry.peak_concurrency as u64);
         self.session.ledger.note_up_concurrency(sched.telemetry.peak_concurrency);
 
+        for (req, tim) in reqs.iter().zip(&sched.timings) {
+            self.emit(ClusterEvent::Transfer {
+                tick: self.ticks,
+                sim_s: self.sim_clock_s,
+                dir: Direction::Up,
+                client_id: req.client_id,
+                bits: req.bits,
+                ready_s: req.ready_s,
+                duration_s: tim.duration_s,
+                queue_s: tim.queue_s,
+                end_s: tim.end_s,
+            })?;
+        }
+
         let transport = &self.transport;
         self.pending = results
             .into_iter()
@@ -508,6 +601,15 @@ impl ClusterRun {
         if pending.is_empty() {
             self.stats.empty_rounds += 1;
             self.sim_clock_s += self.cfg.tick_seconds;
+            self.emit(ClusterEvent::RoundClose {
+                tick: self.ticks,
+                sim_s: self.sim_clock_s,
+                round: self.session.server.round,
+                aggregated: 0,
+                late: 0,
+                deadline_s: self.cfg.tick_seconds,
+                queue_s: queue_secs,
+            })?;
             return Ok(RoundSummary {
                 round: self.session.server.round,
                 selected: self.pending_selected,
@@ -557,6 +659,13 @@ impl ClusterRun {
             } else {
                 late += 1;
                 self.stats.late_uploads += 1;
+                self.emit(ClusterEvent::LateUpload {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    client_id: p.client_id,
+                    arrival_s: p.arrival_s,
+                    deadline_s: deadline,
+                })?;
                 // The server never saw it. Error-feedback methods
                 // (top-k/STC) re-bank the decoded update in the residual
                 // so the work is deferred to the next upload; methods
@@ -580,6 +689,15 @@ impl ClusterRun {
         self.session.commit_round(&msgs, mean_loss)?;
         self.rounds_done += 1;
         self.sim_clock_s += deadline;
+        self.emit(ClusterEvent::RoundClose {
+            tick: self.ticks,
+            sim_s: self.sim_clock_s,
+            round: self.session.server.round,
+            aggregated,
+            late,
+            deadline_s: deadline,
+            queue_s: queue_secs,
+        })?;
 
         Ok(RoundSummary {
             round: self.session.server.round,
@@ -610,6 +728,15 @@ impl ClusterRun {
         self.stats.churn_dropouts += ev.dropouts as u64;
         self.stats.rejoins += ev.rejoins as u64;
         self.stats.joins += ev.joins as u64;
+        if ev.joins + ev.rejoins + ev.dropouts > 0 {
+            self.emit(ClusterEvent::Membership {
+                tick: self.ticks,
+                sim_s: self.sim_clock_s,
+                joins: ev.joins,
+                rejoins: ev.rejoins,
+                dropouts: ev.dropouts,
+            })?;
+        }
 
         if self.rounds_done >= self.target_rounds() {
             self.enter_finished()?;
@@ -629,7 +756,7 @@ impl ClusterRun {
         let ids: Vec<usize> = (0..self.session.clients.len())
             .filter(|&id| self.membership.has_joined(id))
             .collect();
-        self.sync_clients(&ids);
+        self.sync_clients(&ids)?;
         // settlement was billed through the contended sync batch above;
         // record the fact so transcripts carry a truthful end frame
         self.session.note_settled();
@@ -863,6 +990,82 @@ mod tests {
         assert!(tight.sim_clock_s > free.sim_clock_s);
         assert!(tight.stats.peak_up_concurrency >= 2, "{:?}", tight.stats);
         assert!(free.stats.peak_up_concurrency >= 1);
+    }
+
+    #[test]
+    fn probes_see_lifecycle_events_without_perturbing_the_run() {
+        use std::sync::{Arc, Mutex};
+
+        #[derive(Default)]
+        struct Counts {
+            phases: usize,
+            membership: usize,
+            participants: usize,
+            transfers_up: usize,
+            transfers_down: usize,
+            late: usize,
+            closes: usize,
+        }
+
+        #[derive(Clone, Default)]
+        struct Probe(Arc<Mutex<Counts>>);
+
+        impl TickProbe for Probe {
+            fn on_cluster_event(&mut self, ev: &ClusterEvent) -> anyhow::Result<()> {
+                let mut c = self.0.lock().unwrap();
+                match ev {
+                    ClusterEvent::Phase { .. } => c.phases += 1,
+                    ClusterEvent::Membership { .. } => c.membership += 1,
+                    ClusterEvent::Participant { .. } => c.participants += 1,
+                    ClusterEvent::Transfer { dir: Direction::Up, .. } => c.transfers_up += 1,
+                    ClusterEvent::Transfer { dir: Direction::Down, .. } => c.transfers_down += 1,
+                    ClusterEvent::LateUpload { .. } => c.late += 1,
+                    ClusterEvent::RoundClose { .. } => c.closes += 1,
+                }
+                Ok(())
+            }
+        }
+
+        let mk = |probe: Option<Probe>| {
+            let mut ccfg =
+                ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6));
+            ccfg.straggler_frac = 0.2;
+            ccfg.dropout_rate = 0.2;
+            ccfg.churn = 0.1;
+            let (mut run, train) = build(ccfg);
+            if let Some(p) = probe {
+                run.add_probe(Box::new(p));
+            }
+            let factory = NativeLogregFactory { batch_size: 10 };
+            while !run.finished() {
+                run.tick(&factory, &train).unwrap();
+            }
+            run
+        };
+        let probe = Probe::default();
+        let observed = mk(Some(probe.clone()));
+        let bare = mk(None);
+        // a probe is a pure observer: attaching one changes nothing
+        assert_eq!(observed.server.params, bare.server.params, "probe perturbed the run");
+        assert_eq!(observed.ledger.total_up_bits, bare.ledger.total_up_bits);
+        assert_eq!(observed.ledger.total_down_bits, bare.ledger.total_down_bits);
+
+        // event counts reconcile with the run's own books
+        let c = probe.0.lock().unwrap();
+        assert_eq!(
+            c.closes,
+            observed.rounds_done + observed.stats.empty_rounds as usize,
+            "one round_close per aggregation tick"
+        );
+        assert_eq!(c.late, observed.stats.late_uploads as usize);
+        assert_eq!(
+            c.participants,
+            (observed.stats.no_shows + observed.stats.midround_dropouts) as usize
+        );
+        assert_eq!(c.transfers_up as u64, observed.ledger.uploads);
+        assert_eq!(c.transfers_down as u64, observed.ledger.downloads);
+        assert!(c.phases >= 5, "full lifecycle crosses at least 5 phase boundaries");
+        assert!(c.membership > 0 || observed.stats.churn_dropouts == 0);
     }
 
     #[test]

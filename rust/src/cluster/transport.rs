@@ -307,10 +307,23 @@ impl Transport {
     }
 }
 
-#[derive(Clone, Copy, PartialEq, Eq)]
-enum Direction {
+/// Transfer direction on the shared server medium (also the `dir`
+/// label on telemetry events and metrics).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Direction {
+    /// client → server (ingress)
     Up,
+    /// server → client (egress)
     Down,
+}
+
+impl Direction {
+    pub fn label(self) -> &'static str {
+        match self {
+            Direction::Up => "up",
+            Direction::Down => "down",
+        }
+    }
 }
 
 /// One transfer's in-flight scheduler state. Progress is tracked in
@@ -740,6 +753,8 @@ mod tests {
         assert_eq!(ContentionPolicy::parse("fifo").unwrap(), ContentionPolicy::Fifo);
         assert!(ContentionPolicy::parse("magic").is_err());
         assert_eq!(ContentionPolicy::FairShare.label(), "fair");
+        assert_eq!(Direction::Up.label(), "up");
+        assert_eq!(Direction::Down.label(), "down");
     }
 
     #[test]

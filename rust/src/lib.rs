@@ -50,6 +50,12 @@
 //!   run bit-for-bit without ever constructing a trainer.
 //! * [`sim`] — the federated learning simulation engine driving complete
 //!   experiments, and the sign-congruence analysis of Fig. 3.
+//! * [`telemetry`] — structured JSONL run traces, a Prometheus-style
+//!   metrics registry, and live progress reporting, all implemented as
+//!   pure [`session::Observer`]s / [`telemetry::TickProbe`]s
+//!   (`--trace` / `--metrics` / `--progress`): attaching them never
+//!   perturbs a run, and trace timestamps are simulated time so traces
+//!   are deterministic.
 //! * [`config`] / [`cli`] — experiment configuration and a small CLI.
 //! * [`metrics`] — training curves, communication accounting, CSV/JSON.
 //! * [`util`] — in-tree substrates (PRNG, bit/stat helpers, JSON writer,
@@ -68,6 +74,7 @@ pub mod protocol;
 pub mod runtime;
 pub mod session;
 pub mod sim;
+pub mod telemetry;
 pub mod util;
 
 /// Crate-wide result type.

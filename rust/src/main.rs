@@ -28,6 +28,7 @@ use fedstc::runtime::{Engine, HloTrainer};
 use fedstc::session::{replay, Observer, Transcript, TranscriptWriter};
 use fedstc::sim::alpha::{AlphaAnalysis, BatchRegime};
 use fedstc::sim::{cluster_report_csv, cluster_report_json, CurveBuilder, Experiment};
+use fedstc::telemetry::{MetricsHub, ProgressObserver, TraceWriter};
 use fedstc::util::{bits_to_mb, Timer};
 
 fn main() {
@@ -70,6 +71,9 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
             // CLI-only keys that are not FedConfig fields
             "backend" | "out" | "config" | "verbose" | "key" | "values" | "ks" | "trials" => {}
             "record" if records => {}
+            // telemetry flags (pure observers; cmd_train/cmd_cluster
+            // read them through telemetry_from_args)
+            "trace" | "metrics" | "progress" if records => {}
             // cluster-only keys (cmd_cluster reads them separately); on
             // any other subcommand they fall through to apply_kv and are
             // rejected as unknown instead of being silently ignored
@@ -81,6 +85,37 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
         }
     }
     Ok(cfg)
+}
+
+/// Parse the shared telemetry flags into observers. `--trace FILE`
+/// writes a deterministic JSONL event stream (plus a sibling
+/// `FILE.perf.jsonl` wall-clock channel), `--metrics FILE` a
+/// Prometheus-text (or, for `.json`, JSON) snapshot at run end,
+/// `--progress` a live one-line report on stderr. The trace/metrics
+/// handles are also returned so `cmd_cluster` can register the same
+/// objects as tick probes — all three are pure observers and never
+/// change what a run computes.
+fn telemetry_from_args(
+    args: &Args,
+    total_rounds: usize,
+) -> anyhow::Result<(Vec<Box<dyn Observer>>, Option<TraceWriter>, Option<MetricsHub>)> {
+    let mut observers: Vec<Box<dyn Observer>> = Vec::new();
+    let mut trace = None;
+    let mut metrics = None;
+    if let Some(path) = args.get("trace") {
+        let w = TraceWriter::create(std::path::Path::new(&path))?;
+        observers.push(Box::new(w.clone()));
+        trace = Some(w);
+    }
+    if let Some(path) = args.get("metrics") {
+        let h = MetricsHub::with_output(std::path::Path::new(&path));
+        observers.push(Box::new(h.clone()));
+        metrics = Some(h);
+    }
+    if args.flag("progress") {
+        observers.push(Box::new(ProgressObserver::new(total_rounds)));
+    }
+    Ok((observers, trace, metrics))
 }
 
 fn make_trainer(cfg: &FedConfig, backend: &str) -> anyhow::Result<Box<dyn Trainer>> {
@@ -106,13 +141,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let backend = args.get_or("backend", default_backend);
     let out = args.get("out");
     let record = args.get("record");
+    let trace = args.get("trace");
+    let metrics = args.get("metrics");
+    let (mut observers, _, _) = telemetry_from_args(args, cfg.rounds())?;
     args.finish()?;
 
     println!("# {}", cfg.describe());
     let timer = Timer::start();
     let exp = Experiment::new(cfg)?;
     let mut trainer = make_trainer(&exp.cfg, &backend)?;
-    let mut observers: Vec<Box<dyn Observer>> = Vec::new();
     if let Some(path) = &record {
         observers.push(Box::new(TranscriptWriter::create(std::path::Path::new(path), true)?));
     }
@@ -142,6 +179,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(path) = record {
         println!("# recorded transcript {path} (verify/re-run with: repro replay {path})");
+    }
+    if let Some(path) = trace {
+        println!("# wrote trace {path} (wall-clock channel: sibling .perf.jsonl)");
+    }
+    if let Some(path) = metrics {
+        println!("# wrote metrics snapshot {path}");
     }
     Ok(())
 }
@@ -278,6 +321,9 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     }
     let out = args.get("out");
     let record = args.get("record");
+    let trace_path = args.get("trace");
+    let metrics_path = args.get("metrics");
+    let (observers, trace, metrics) = telemetry_from_args(args, ccfg.fed.rounds())?;
     args.finish()?;
 
     println!(
@@ -297,6 +343,17 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     let mut cluster = ClusterRun::new(ccfg, &exp.train, init)?;
     if let Some(path) = &record {
         cluster.record_to(std::path::Path::new(path))?;
+    }
+    for ob in observers {
+        cluster.add_observer(ob);
+    }
+    // the same handles watch the tick machine: phase transitions,
+    // membership churn, simulated transfers, late uploads, round closes
+    if let Some(w) = trace {
+        cluster.add_probe(Box::new(w));
+    }
+    if let Some(h) = metrics {
+        cluster.add_probe(Box::new(h));
     }
     let factory = NativeLogregFactory { batch_size: exp.cfg.batch_size };
     let mut eval_trainer = NativeLogreg::new(exp.cfg.batch_size);
@@ -403,6 +460,12 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     }
     if let Some(path) = record {
         println!("# recorded transcript {path} (verify with: repro replay {path})");
+    }
+    if let Some(path) = trace_path {
+        println!("# wrote trace {path} (wall-clock channel: sibling .perf.jsonl)");
+    }
+    if let Some(path) = metrics_path {
+        println!("# wrote metrics snapshot {path}");
     }
     Ok(())
 }
@@ -525,6 +588,7 @@ examples:
   repro train --model logreg --method stc:p_up=0.01,p_down=0.04 --iters 400
   repro train --model cnn --backend hlo --method fedavg:25 --iters 200
   repro train --method stc:0.01 --iters 200 --record run.fstx
+  repro train --method stc:0.01 --iters 200 --trace t.jsonl --metrics m.prom --progress
   repro replay run.fstx --verbose
   repro cluster --workers 4 --dropout-rate 0.2 --straggler-frac 0.1 \\
       --churn 0.1 --clients 100 --iters 400 --method stc:0.01
@@ -536,7 +600,15 @@ examples:
 
 record/replay: --record FILE persists a versioned round transcript
   (every upload's wire bytes + per-round model checksums); repro replay
-  re-executes it bit-for-bit with zero trainer invocations.
+  re-executes it bit-for-bit with zero trainer invocations. Cluster
+  recordings additionally carry every §V-B sync event, so replay also
+  re-prices and verifies the download ledger.
+
+telemetry (train + cluster, pure observers — never change the run):
+  --trace FILE.jsonl   deterministic JSONL event stream (simulated time;
+                       wall-clock perf goes to sibling FILE.perf.jsonl)
+  --metrics FILE       Prometheus-text snapshot at run end (.json = JSON)
+  --progress           live one-line progress on stderr
 
 cluster-only keys: --workers N  --dropout-rate F  --straggler-frac F
   --churn F  --initial-frac F  --join-rate F  --min-members N

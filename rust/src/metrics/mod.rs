@@ -112,6 +112,24 @@ impl CommLedger {
     pub fn down_bits_per_client(&self) -> u64 {
         self.total_down_bits / self.num_clients.max(1) as u64
     }
+
+    /// JSON export of the full ledger (used by the telemetry metrics
+    /// dump and diagnostics reports).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("total_up_bits", Json::Num(self.total_up_bits as f64))
+            .set("total_down_bits", Json::Num(self.total_down_bits as f64))
+            .set("num_clients", Json::Num(self.num_clients as f64))
+            .set("uploads", Json::Num(self.uploads as f64))
+            .set("downloads", Json::Num(self.downloads as f64))
+            .set("up_seconds", Json::Num(self.up_seconds))
+            .set("down_seconds", Json::Num(self.down_seconds))
+            .set("up_queue_seconds", Json::Num(self.up_queue_seconds))
+            .set("down_queue_seconds", Json::Num(self.down_queue_seconds))
+            .set("peak_up_concurrent", Json::Num(self.peak_up_concurrent as f64))
+            .set("peak_down_concurrent", Json::Num(self.peak_down_concurrent as f64));
+        o
+    }
 }
 
 /// Complete record of one training run.
@@ -290,6 +308,17 @@ mod tests {
         l.note_down_concurrency(7);
         assert_eq!(l.peak_up_concurrent, 3);
         assert_eq!(l.peak_down_concurrent, 7);
+    }
+
+    #[test]
+    fn ledger_json_export() {
+        let mut l = CommLedger::new(3);
+        l.record_upload_contended(100, 2.0, 0.5);
+        l.record_download(40);
+        let j = Json::parse(&l.to_json().dump()).unwrap();
+        assert_eq!(j.get("total_up_bits").unwrap().as_usize(), Some(100));
+        assert_eq!(j.get("downloads").unwrap().as_usize(), Some(1));
+        assert_eq!(j.get("up_queue_seconds").unwrap().as_f64(), Some(0.5));
     }
 
     #[test]

@@ -110,6 +110,9 @@ pub struct RoundRecord<'a> {
     /// the global model after applying the broadcast
     pub params: &'a [f32],
     pub ledger: &'a CommLedger,
+    /// mean client residual norm after the round (staleness
+    /// diagnostic, §VI-C; 0 for residual-free protocols)
+    pub mean_residual_norm: f64,
 }
 
 /// Final state handed to [`Observer::on_finish`].
@@ -133,6 +136,15 @@ pub trait Observer {
     /// A round is starting: `round` is the server round counter before
     /// aggregation (0-based), `participants` the drawn client ids.
     fn on_round_start(&mut self, _round: usize, _participants: &[usize]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// One client synchronised with the server (§V-B): it downloaded
+    /// the partial sum — or full model — covering the rounds missed
+    /// since its last sync. `bits` is the billed download (0 when the
+    /// client was already current). Fires for round-start syncs in both
+    /// drivers and for the cluster's settlement sweep.
+    fn on_sync(&mut self, _client_id: usize, _bits: u64) -> anyhow::Result<()> {
         Ok(())
     }
 
@@ -366,6 +378,18 @@ impl Session {
         pool.execute_round(factory, &self.server.params, data, parts, &plan)
     }
 
+    /// Notify observers of one §V-B sync (see [`Observer::on_sync`]).
+    /// Safe to call before the first participant draw (the cluster
+    /// warmup syncs members early): the run-start notification fires
+    /// first if it has not already.
+    pub fn notify_sync(&mut self, client_id: usize, bits: u64) -> anyhow::Result<()> {
+        self.notify_run_start()?;
+        for o in &mut self.observers {
+            o.on_sync(client_id, bits)?;
+        }
+        Ok(())
+    }
+
     /// Notify observers of one upload that reached the server (already
     /// wire-decoded). Drivers that bill transfers themselves (the
     /// cluster transport) call this for every message they aggregate so
@@ -388,6 +412,7 @@ impl Session {
     /// billed broadcast bits.
     pub fn commit_round(&mut self, msgs: &[Message], mean_loss: f32) -> anyhow::Result<usize> {
         let down_bits = self.server.aggregate_and_apply(msgs)?;
+        let mean_residual_norm = self.mean_residual_norm();
         let rec = RoundRecord {
             round: self.server.round,
             participants: &self.last_participants,
@@ -395,6 +420,7 @@ impl Session {
             down_bits,
             params: &self.server.params,
             ledger: &self.ledger,
+            mean_residual_norm,
         };
         for o in &mut self.observers {
             o.on_broadcast(&rec)?;
@@ -428,6 +454,7 @@ impl Session {
                 self.ledger.record_download(down_bits);
             }
             self.clients[id].last_sync_round = self.server.round;
+            self.notify_sync(id, down_bits as u64)?;
         }
 
         // 2+3. local training from the (now current) global model, then
@@ -622,6 +649,7 @@ mod tests {
     struct Counts {
         run_start: usize,
         round_start: usize,
+        syncs: usize,
         uploads: usize,
         broadcasts: usize,
         evals: usize,
@@ -640,6 +668,11 @@ mod tests {
         fn on_round_start(&mut self, _r: usize, p: &[usize]) -> anyhow::Result<()> {
             assert!(!p.is_empty());
             self.0.borrow_mut().round_start += 1;
+            Ok(())
+        }
+        fn on_sync(&mut self, c: usize, _bits: u64) -> anyhow::Result<()> {
+            assert!(c < 10);
+            self.0.borrow_mut().syncs += 1;
             Ok(())
         }
         fn on_upload(&mut self, _c: usize, m: &Message, bits: u64) -> anyhow::Result<()> {
@@ -688,6 +721,7 @@ mod tests {
         let c = counts.borrow();
         assert_eq!(c.run_start, 1);
         assert_eq!(c.round_start, 3);
+        assert_eq!(c.syncs, 15, "every participant syncs once per round");
         assert_eq!(c.uploads, 15, "5 participants × 3 rounds");
         assert_eq!(c.broadcasts, 3);
         assert_eq!(c.evals, 1);

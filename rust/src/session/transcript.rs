@@ -5,13 +5,19 @@
 //! verified and diffed bit-for-bit long after the process died — the
 //! "frame header for replay debugging" the protocol layer was missing.
 //!
-//! ## Format (version 1, all integers little-endian)
+//! ## Format (version 2, all integers little-endian)
 //!
 //! ```text
 //! header:  magic "FSTX" · u16 version · u8 flags
 //!          u16 spec_len · method spec (registry grammar, parseable)
 //!          u32 num_clients · u32 cache_rounds · u64 seed
 //!          u32 dim · dim × f32 init params W⁽⁰⁾
+//! sync:    u8 tag=3 · u32 n · n × { u32 client · u64 bits }
+//!          (version ≥ 2 only, written when [`FLAG_SYNC_EVENTS`] is
+//!          set: the §V-B downloads billed since the previous frame,
+//!          in billing order — including 0-bit syncs of current
+//!          clients. Absent from derivable recordings, whose sync
+//!          discipline is implied by the participant lists.)
 //! round:   u8 tag=1 · u32 round · f32 mean_loss
 //!          u32 n · n × u32 participant ids
 //!          u32 m · m × { u32 client · u32 len · Message::to_bytes }
@@ -21,6 +27,9 @@
 //!          u64 total_up_bits · u64 total_down_bits
 //!          u64 uploads · u64 downloads · u64 final_checksum
 //! ```
+//!
+//! Version 1 files (no sync frames, no [`FLAG_SYNC_EVENTS`]) remain
+//! fully readable; the checked-in golden fixture pins that.
 //!
 //! Upload payloads are exactly [`Message::to_bytes`] frames — the same
 //! bytes that crossed the simulated wire — so the transcript reuses (and
@@ -37,9 +46,13 @@
 //! recordings flagged [`FLAG_SYNC_DERIVABLE`] (serial sessions) the
 //! download ledger is re-derived from the participant lists and checked
 //! against the recorded snapshots too. Cluster recordings clear the
-//! flag: their download accounting depends on membership/transport
-//! state the transcript does not carry, and late uploads are billed but
-//! never aggregated, so only the round mathematics is re-verified.
+//! flag — their sync discipline depends on membership/transport state —
+//! but from version 2 they carry explicit sync frames
+//! ([`FLAG_SYNC_EVENTS`]): replay re-prices every recorded sync against
+//! the server's §V-B `straggler_download_bits` and verifies the
+//! download side of the ledger exactly. Upload totals stay unverified
+//! for cluster recordings (late uploads are billed but never
+//! aggregated, so the transcript does not carry them).
 
 use super::{Observer, RoundRecord, RunEnd, RunMeta};
 use crate::compression::Message;
@@ -51,14 +64,21 @@ use std::path::Path;
 
 /// First four bytes of every transcript.
 pub const TRANSCRIPT_MAGIC: [u8; 4] = *b"FSTX";
-/// Current format version (readers reject anything else).
-pub const TRANSCRIPT_VERSION: u16 = 1;
+/// Current format version (readers accept 1..=this).
+pub const TRANSCRIPT_VERSION: u16 = 2;
+/// Oldest version this build still reads.
+pub const TRANSCRIPT_MIN_VERSION: u16 = 1;
 /// Header flag: download accounting is re-derivable from the recorded
 /// participant lists (serial sync discipline).
 pub const FLAG_SYNC_DERIVABLE: u8 = 0b0000_0001;
+/// Header flag (version ≥ 2): the recording carries explicit §V-B sync
+/// frames, so replay can verify the download ledger even though the
+/// sync discipline is not derivable (cluster recordings).
+pub const FLAG_SYNC_EVENTS: u8 = 0b0000_0010;
 
 const FRAME_ROUND: u8 = 1;
 const FRAME_END: u8 = 2;
+const FRAME_SYNC: u8 = 3;
 
 /// FNV-1a 64 over the little-endian f32 bit patterns — the model
 /// fingerprint recorded per round and re-checked at replay.
@@ -105,6 +125,9 @@ pub struct TranscriptWriter {
     /// current round buffer, flushed as one frame at `on_broadcast`
     participants: Vec<u32>,
     uploads: Vec<(u32, Vec<u8>)>,
+    /// §V-B syncs observed since the last flushed frame, in billing
+    /// order; only buffered for non-derivable recordings
+    pending_syncs: Vec<(u32, u64)>,
 }
 
 impl TranscriptWriter {
@@ -123,7 +146,26 @@ impl TranscriptWriter {
             header_written: false,
             participants: Vec::new(),
             uploads: Vec::new(),
+            pending_syncs: Vec::new(),
         }
+    }
+
+    /// Write any buffered sync events as one `FRAME_SYNC` ahead of the
+    /// next round/end frame.
+    fn flush_syncs(&mut self) -> anyhow::Result<()> {
+        if self.pending_syncs.is_empty() {
+            return Ok(());
+        }
+        let mut buf = Vec::new();
+        buf.push(FRAME_SYNC);
+        put_u32(&mut buf, self.pending_syncs.len());
+        for (client, bits) in &self.pending_syncs {
+            put_u32(&mut buf, *client as usize);
+            put_u64(&mut buf, *bits);
+        }
+        self.sink.write_all(&buf)?;
+        self.pending_syncs.clear();
+        Ok(())
     }
 }
 
@@ -132,7 +174,7 @@ impl Observer for TranscriptWriter {
         let mut buf = Vec::new();
         buf.extend_from_slice(&TRANSCRIPT_MAGIC);
         put_u16(&mut buf, TRANSCRIPT_VERSION);
-        buf.push(if self.sync_derivable { FLAG_SYNC_DERIVABLE } else { 0 });
+        buf.push(if self.sync_derivable { FLAG_SYNC_DERIVABLE } else { FLAG_SYNC_EVENTS });
         let spec = meta.method_spec.as_bytes();
         anyhow::ensure!(spec.len() <= u16::MAX as usize, "method spec too long");
         put_u16(&mut buf, spec.len() as u16);
@@ -159,6 +201,16 @@ impl Observer for TranscriptWriter {
         Ok(())
     }
 
+    fn on_sync(&mut self, client_id: usize, bits: u64) -> anyhow::Result<()> {
+        // derivable recordings imply their syncs from the participant
+        // lists; recording them too would bloat the file for nothing
+        if !self.sync_derivable {
+            self.pending_syncs
+                .push((u32::try_from(client_id).expect("client id exceeds u32"), bits));
+        }
+        Ok(())
+    }
+
     fn on_upload(
         &mut self,
         client_id: usize,
@@ -171,6 +223,7 @@ impl Observer for TranscriptWriter {
     }
 
     fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
+        self.flush_syncs()?;
         let mut buf = Vec::new();
         buf.push(FRAME_ROUND);
         put_u32(&mut buf, rec.round);
@@ -203,6 +256,7 @@ impl Observer for TranscriptWriter {
             self.header_written,
             "transcript recording finished before any round started (nothing recorded)"
         );
+        self.flush_syncs()?; // settlement sweep syncs belong to the end frame
         let mut buf = Vec::new();
         buf.push(FRAME_END);
         buf.push(fin.settled as u8);
@@ -237,6 +291,10 @@ pub struct TranscriptRound {
     /// cumulative ledger snapshot after this round
     pub total_up_bits: u64,
     pub total_down_bits: u64,
+    /// §V-B syncs billed before this round's aggregation, in billing
+    /// order (version ≥ 2 recordings with [`FLAG_SYNC_EVENTS`]; empty
+    /// otherwise)
+    pub pre_syncs: Vec<(usize, u64)>,
 }
 
 /// The end-of-run frame.
@@ -262,12 +320,21 @@ pub struct Transcript {
     pub init_params: Vec<f32>,
     pub rounds: Vec<TranscriptRound>,
     pub end: TranscriptEnd,
+    /// syncs billed after the last round (the settlement sweep), in
+    /// billing order (version ≥ 2 with [`FLAG_SYNC_EVENTS`])
+    pub end_syncs: Vec<(usize, u64)>,
 }
 
 impl Transcript {
     /// Whether download accounting can be re-derived at replay time.
     pub fn sync_derivable(&self) -> bool {
         self.flags & FLAG_SYNC_DERIVABLE != 0
+    }
+
+    /// Whether the recording carries explicit sync frames (so replay
+    /// can verify downloads without a derivable sync discipline).
+    pub fn has_sync_events(&self) -> bool {
+        self.flags & FLAG_SYNC_EVENTS != 0
     }
 
     /// Read and parse a transcript file.
@@ -285,8 +352,9 @@ impl Transcript {
         anyhow::ensure!(magic == TRANSCRIPT_MAGIC, "not a transcript (bad magic {magic:02x?})");
         let version = r.u16()?;
         anyhow::ensure!(
-            version == TRANSCRIPT_VERSION,
-            "unsupported transcript version {version} (this build reads {TRANSCRIPT_VERSION})"
+            (TRANSCRIPT_MIN_VERSION..=TRANSCRIPT_VERSION).contains(&version),
+            "unsupported transcript version {version} \
+             (this build reads {TRANSCRIPT_MIN_VERSION}..={TRANSCRIPT_VERSION})"
         );
         let flags = r.u8()?;
         let spec_len = r.u16()? as usize;
@@ -302,8 +370,23 @@ impl Transcript {
         }
 
         let mut rounds = Vec::new();
+        let mut pending_syncs: Vec<(usize, u64)> = Vec::new();
+        let mut end_syncs: Vec<(usize, u64)> = Vec::new();
         let end = loop {
             match r.u8().map_err(|_| anyhow::anyhow!("transcript truncated: no end frame"))? {
+                FRAME_SYNC => {
+                    anyhow::ensure!(
+                        version >= 2,
+                        "sync frame in a version {version} transcript (introduced in version 2)"
+                    );
+                    let n = r.u32()? as usize;
+                    pending_syncs.reserve(n.min(1 << 20));
+                    for _ in 0..n {
+                        let client = r.u32()? as usize;
+                        let bits = r.u64()?;
+                        pending_syncs.push((client, bits));
+                    }
+                }
                 FRAME_ROUND => {
                     let round = r.u32()? as usize;
                     let mean_loss = r.f32()?;
@@ -329,9 +412,11 @@ impl Transcript {
                         params_checksum: r.u64()?,
                         total_up_bits: r.u64()?,
                         total_down_bits: r.u64()?,
+                        pre_syncs: std::mem::take(&mut pending_syncs),
                     });
                 }
                 FRAME_END => {
+                    end_syncs = std::mem::take(&mut pending_syncs);
                     break TranscriptEnd {
                         settled: r.u8()? != 0,
                         total_up_bits: r.u64()?,
@@ -359,6 +444,7 @@ impl Transcript {
             init_params,
             rounds,
             end,
+            end_syncs,
         })
     }
 }
@@ -414,11 +500,16 @@ pub struct ReplayOutcome {
     pub final_params: Vec<f32>,
     /// the replayed communication ledger
     pub ledger: CommLedger,
-    /// true when download accounting was re-derived and verified
-    /// (serial recordings); false when the recording's sync discipline
-    /// is not derivable (cluster runs) and only the round mathematics
-    /// was verified
+    /// true when the download side of the ledger was verified — either
+    /// re-derived from the participant lists (serial recordings) or
+    /// re-priced from explicit sync frames (version ≥ 2 cluster
+    /// recordings); false for version 1 cluster recordings, where only
+    /// the round mathematics was verified
     pub downloads_verified: bool,
+    /// true when the upload side was verified too (derivable/serial
+    /// recordings only: cluster runs bill late uploads the transcript
+    /// never aggregates)
+    pub uploads_verified: bool,
 }
 
 /// Re-execute a transcript through a fresh [`Server`] — no trainer is
@@ -432,6 +523,30 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
     let mut ledger = CommLedger::new(t.num_clients);
     let mut last_sync = vec![0usize; t.num_clients];
     let derivable = t.sync_derivable();
+    let verify_syncs = !derivable && t.has_sync_events();
+
+    // Re-price one recorded sync event at the current server state and
+    // bill it; the recording is wrong if the price moved.
+    let apply_sync = |server: &Server,
+                          ledger: &mut CommLedger,
+                          last_sync: &mut [usize],
+                          id: usize,
+                          bits: u64,
+                          at: &str|
+     -> anyhow::Result<()> {
+        anyhow::ensure!(id < t.num_clients, "{at}: synced client {id} out of range 0..{}", t.num_clients);
+        let expect = server.straggler_download_bits(last_sync[id]) as u64;
+        anyhow::ensure!(
+            expect == bits,
+            "{at}: recorded sync of client {id} bills {bits} bits, \
+             replayed §V-B pricing says {expect}"
+        );
+        if bits > 0 {
+            ledger.record_download(bits as usize);
+        }
+        last_sync[id] = server.round;
+        Ok(())
+    };
 
     for r in &t.rounds {
         if derivable {
@@ -447,6 +562,17 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
                     ledger.record_download(bits);
                 }
                 last_sync[id] = server.round;
+            }
+        } else if verify_syncs {
+            for &(id, bits) in &r.pre_syncs {
+                apply_sync(
+                    &server,
+                    &mut ledger,
+                    &mut last_sync,
+                    id,
+                    bits,
+                    &format!("round {}", r.round),
+                )?;
             }
         }
         let msgs: Vec<Message> = r.uploads.iter().map(|(_, m)| m.clone()).collect();
@@ -479,6 +605,14 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
                 r.total_up_bits,
                 r.total_down_bits
             );
+        } else if verify_syncs {
+            anyhow::ensure!(
+                ledger.total_down_bits == r.total_down_bits,
+                "round {}: replayed download ledger ({}) != recorded snapshot ({})",
+                r.round,
+                ledger.total_down_bits,
+                r.total_down_bits
+            );
         }
     }
 
@@ -490,6 +624,11 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
                 ledger.record_download(bits);
             }
             *last = server.round;
+        }
+    } else if verify_syncs {
+        // the cluster settlement sweep was recorded explicitly
+        for &(id, bits) in &t.end_syncs {
+            apply_sync(&server, &mut ledger, &mut last_sync, id, bits, "settlement")?;
         }
     }
     anyhow::ensure!(
@@ -513,13 +652,25 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
             t.end.uploads,
             t.end.downloads
         );
+    } else if verify_syncs {
+        anyhow::ensure!(
+            ledger.total_down_bits == t.end.total_down_bits
+                && ledger.downloads == t.end.downloads,
+            "final download ledger diverged: replay ({} bits, {} downloads) vs \
+             recording ({} bits, {} downloads)",
+            ledger.total_down_bits,
+            ledger.downloads,
+            t.end.total_down_bits,
+            t.end.downloads
+        );
     }
 
     Ok(ReplayOutcome {
         rounds: t.rounds.len(),
         final_params: server.params.clone(),
         ledger,
-        downloads_verified: derivable,
+        downloads_verified: derivable || verify_syncs,
+        uploads_verified: derivable,
     })
 }
 
@@ -567,6 +718,7 @@ mod tests {
             down_bits: 128,
             params: &params1,
             ledger: &ledger,
+            mean_residual_norm: 0.0,
         })
         .unwrap();
 
@@ -588,6 +740,7 @@ mod tests {
             down_bits: 128,
             params: &params2,
             ledger: &ledger,
+            mean_residual_norm: 0.0,
         })
         .unwrap();
 
@@ -595,6 +748,106 @@ mod tests {
         ledger.record_download(128);
         ledger.record_download(128);
         w.on_finish(&RunEnd { params: &params2, ledger: &ledger, settled: true }).unwrap();
+    }
+
+    /// Cluster-style recording: not derivable, explicit sync frames.
+    /// Same round mathematics as [`record_baseline`]; `tampered_sync`
+    /// mis-prices one recorded sync so replay must reject it.
+    fn record_with_sync_events(path: &Path, tampered_sync: bool) {
+        let mut w = TranscriptWriter::create(path, false).unwrap();
+        let init = vec![0.0f32; 4];
+        w.on_run_start(&RunMeta {
+            method_spec: "baseline",
+            num_clients: 2,
+            cache_rounds: 10,
+            seed: 1,
+            init_params: &init,
+        })
+        .unwrap();
+
+        let mut ledger = CommLedger::new(2);
+        // round 1: both clients sync at lag 0 (free)
+        let r1 = [dense(&[1.0, 0.0, 2.0, -2.0]), dense(&[3.0, 0.0, 0.0, 2.0])];
+        w.on_round_start(0, &[0, 1]).unwrap();
+        w.on_sync(0, 0).unwrap();
+        w.on_sync(1, 0).unwrap();
+        for (c, m) in r1.iter().enumerate() {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+        }
+        let params1 = [2.0f32, 0.0, 1.0, 0.0];
+        w.on_broadcast(&RoundRecord {
+            round: 1,
+            participants: &[0, 1],
+            mean_loss: 0.25,
+            down_bits: 128,
+            params: &params1,
+            ledger: &ledger,
+            mean_residual_norm: 0.0,
+        })
+        .unwrap();
+
+        // round 2: both one round behind (128 bits each)
+        let r2 = [dense(&[1.0; 4]), dense(&[1.0; 4])];
+        w.on_round_start(1, &[0, 1]).unwrap();
+        for c in 0..2usize {
+            ledger.record_download(128);
+            let recorded = if tampered_sync && c == 0 { 64 } else { 128 };
+            w.on_sync(c, recorded).unwrap();
+        }
+        for (c, m) in r2.iter().enumerate() {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+        }
+        let params2 = [3.0f32, 1.0, 2.0, 1.0];
+        w.on_broadcast(&RoundRecord {
+            round: 2,
+            participants: &[0, 1],
+            mean_loss: 0.125,
+            down_bits: 128,
+            params: &params2,
+            ledger: &ledger,
+            mean_residual_norm: 0.0,
+        })
+        .unwrap();
+
+        // settlement sweep, recorded explicitly
+        for c in 0..2usize {
+            ledger.record_download(128);
+            w.on_sync(c, 128).unwrap();
+        }
+        w.on_finish(&RunEnd { params: &params2, ledger: &ledger, settled: true }).unwrap();
+    }
+
+    #[test]
+    fn sync_event_recordings_verify_downloads() {
+        let path = temp_path("syncev");
+        record_with_sync_events(&path, false);
+        let t = Transcript::read_file(&path).unwrap();
+        assert_eq!(t.version, TRANSCRIPT_VERSION);
+        assert!(!t.sync_derivable());
+        assert!(t.has_sync_events());
+        assert_eq!(t.rounds[0].pre_syncs, vec![(0, 0), (1, 0)]);
+        assert_eq!(t.rounds[1].pre_syncs, vec![(0, 128), (1, 128)]);
+        assert_eq!(t.end_syncs, vec![(0, 128), (1, 128)]);
+
+        let out = replay(&t).unwrap();
+        assert!(out.downloads_verified);
+        assert!(!out.uploads_verified);
+        assert_eq!(out.ledger.total_down_bits, 512);
+        assert_eq!(out.ledger.downloads, 4);
+        assert_eq!(out.final_params, vec![3.0, 1.0, 2.0, 1.0]);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_rejects_mispriced_sync_events() {
+        let path = temp_path("syncbad");
+        record_with_sync_events(&path, true);
+        let t = Transcript::read_file(&path).unwrap();
+        let err = replay(&t).unwrap_err().to_string();
+        assert!(err.contains("recorded sync"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]
@@ -624,6 +877,7 @@ mod tests {
         assert_eq!(out.ledger.uploads, 4);
         assert_eq!(out.ledger.downloads, 4);
         assert!(out.downloads_verified);
+        assert!(out.uploads_verified);
         let _ = std::fs::remove_file(&path);
     }
 

@@ -1,0 +1,535 @@
+//! Named counters / gauges / log-bucketed histograms with Prometheus
+//! text and JSON snapshot writers.
+//!
+//! [`MetricsRegistry`] is the storage: `BTreeMap`-backed so snapshots
+//! are deterministically ordered, dependency-free, and labels are plain
+//! `(key, value)` pairs. [`MetricsHub`] is the wiring: a `Clone` shared
+//! handle implementing both [`Observer`] and [`TickProbe`] that feeds
+//! the registry from a live run and writes the snapshot on finish.
+//!
+//! # Reconciliation guarantee
+//!
+//! `fedstc_comm_bits_total{dir,protocol}` and
+//! `fedstc_comm_msgs_total{dir,protocol}` are *mirrored* from the
+//! session's [`CommLedger`](crate::metrics::CommLedger) at every
+//! broadcast and at finish — never counted independently — so they
+//! equal the ledger's totals exactly, for every protocol and for both
+//! the serial and cluster drivers (late uploads, settlement downloads
+//! included). Pinned by `tests/property_telemetry.rs`.
+//!
+//! # Wall-clock metrics
+//!
+//! `fedstc_round_wall_ms`, `fedstc_encode_ns` and `fedstc_decode_ns`
+//! are real measurements (the codec timings re-roundtrip the observed
+//! message through `to_wire`/`from_bytes` on the observer side, leaving
+//! the hot path untouched). They are excluded from determinism checks;
+//! everything else in the registry is simulated/semantic and
+//! deterministic.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::compression::Message;
+use crate::metrics::EvalPoint;
+use crate::session::{Observer, RoundRecord, RunEnd, RunMeta};
+use crate::telemetry::trace::variant_name;
+use crate::telemetry::{ClusterEvent, TickProbe};
+use crate::util::json::Json;
+
+/// Metric identity: name plus sorted label pairs.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+struct Key {
+    name: String,
+    labels: Vec<(String, String)>,
+}
+
+fn key(name: &str, labels: &[(&str, &str)]) -> Key {
+    let mut l: Vec<(String, String)> =
+        labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    l.sort();
+    Key { name: name.to_string(), labels: l }
+}
+
+fn render_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let inner: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "\\\""))).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Log₂-bucketed histogram: bucket `i` holds samples with value in
+/// `(2^(i-1), 2^i]` (bucket 0: `(-inf, 1]`), plus an overflow bucket.
+/// Covers ns-scale codec timings through multi-second round times with
+/// 64 buckets and no configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Histogram {
+    /// per-bucket (non-cumulative) counts, indexed by power; index 64
+    /// is the overflow (+Inf-only) bucket
+    buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+const HIST_OVERFLOW: usize = 64;
+
+fn bucket_index(v: f64) -> usize {
+    if !(v > 1.0) {
+        return 0; // NaN and everything ≤ 1 land in the first bucket
+    }
+    let idx = v.log2().ceil() as i64;
+    if idx >= HIST_OVERFLOW as i64 {
+        HIST_OVERFLOW
+    } else {
+        idx.max(1) as usize
+    }
+}
+
+impl Histogram {
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.sum += v;
+        let idx = bucket_index(v);
+        if self.buckets.len() <= idx {
+            self.buckets.resize(idx + 1, 0);
+        }
+        self.buckets[idx] += 1;
+    }
+
+    /// Cumulative `(upper_bound, count)` pairs for every bucket up to
+    /// the highest non-empty one; the +Inf bucket is implicit
+    /// (`self.count`).
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0u64;
+        let mut out = Vec::new();
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if i < HIST_OVERFLOW {
+                out.push(((1u128 << i) as f64, acc));
+            }
+        }
+        out
+    }
+}
+
+/// Deterministically ordered metric storage. See the module docs.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<Key, u64>,
+    gauges: BTreeMap<Key, f64>,
+    histograms: BTreeMap<Key, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn counter_add(&mut self, name: &str, labels: &[(&str, &str)], v: u64) {
+        *self.counters.entry(key(name, labels)).or_insert(0) += v;
+    }
+
+    /// Overwrite a counter with an externally maintained monotonic
+    /// total (used to mirror the `CommLedger` exactly).
+    pub fn counter_set(&mut self, name: &str, labels: &[(&str, &str)], v: u64) {
+        self.counters.insert(key(name, labels), v);
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        self.counters.get(&key(name, labels)).copied()
+    }
+
+    pub fn gauge_set(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.gauges.insert(key(name, labels), v);
+    }
+
+    pub fn gauge_add(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        *self.gauges.entry(key(name, labels)).or_insert(0.0) += v;
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.gauges.get(&key(name, labels)).copied()
+    }
+
+    pub fn observe(&mut self, name: &str, labels: &[(&str, &str)], v: f64) {
+        self.histograms.entry(key(name, labels)).or_default().observe(v);
+    }
+
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Option<&Histogram> {
+        self.histograms.get(&key(name, labels))
+    }
+
+    /// Prometheus text exposition format, one `# TYPE` line per metric
+    /// name. Deterministic ordering (counters, gauges, histograms; each
+    /// sorted by name then labels).
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut last: Option<&str> = None;
+        for (k, v) in &self.counters {
+            if last != Some(k.name.as_str()) {
+                let _ = writeln!(out, "# TYPE {} counter", k.name);
+                last = Some(&k.name);
+            }
+            let _ = writeln!(out, "{}{} {}", k.name, render_labels(&k.labels), v);
+        }
+        last = None;
+        for (k, v) in &self.gauges {
+            if last != Some(k.name.as_str()) {
+                let _ = writeln!(out, "# TYPE {} gauge", k.name);
+                last = Some(&k.name);
+            }
+            let _ = writeln!(out, "{}{} {}", k.name, render_labels(&k.labels), v);
+        }
+        last = None;
+        for (k, h) in &self.histograms {
+            if last != Some(k.name.as_str()) {
+                let _ = writeln!(out, "# TYPE {} histogram", k.name);
+                last = Some(&k.name);
+            }
+            for (le, c) in h.cumulative() {
+                let mut labels = k.labels.clone();
+                labels.push(("le".to_string(), format!("{le}")));
+                let _ = writeln!(out, "{}_bucket{} {}", k.name, render_labels(&labels), c);
+            }
+            let mut labels = k.labels.clone();
+            labels.push(("le".to_string(), "+Inf".to_string()));
+            let _ = writeln!(out, "{}_bucket{} {}", k.name, render_labels(&labels), h.count);
+            let _ = writeln!(out, "{}_sum{} {}", k.name, render_labels(&k.labels), h.sum);
+            let _ = writeln!(out, "{}_count{} {}", k.name, render_labels(&k.labels), h.count);
+        }
+        out
+    }
+
+    /// JSON snapshot: metric keys rendered `name{label="v"}`-style,
+    /// reusing [`crate::util::json::Json`] so key order is stable.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(&format!("{}{}", k.name, render_labels(&k.labels)), Json::Num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(&format!("{}{}", k.name, render_labels(&k.labels)), Json::Num(*v));
+        }
+        let mut histograms = Json::obj();
+        for (k, h) in &self.histograms {
+            let mut o = Json::obj();
+            o.set("count", Json::Num(h.count as f64)).set("sum", Json::Num(h.sum)).set(
+                "buckets",
+                Json::Arr(
+                    h.cumulative()
+                        .into_iter()
+                        .map(|(le, c)| {
+                            Json::Arr(vec![Json::Num(le), Json::Num(c as f64)])
+                        })
+                        .collect(),
+                ),
+            );
+            histograms.set(&format!("{}{}", k.name, render_labels(&k.labels)), o);
+        }
+        let mut root = Json::obj();
+        root.set("counters", counters).set("gauges", gauges).set("histograms", histograms);
+        root
+    }
+}
+
+struct Hub {
+    reg: MetricsRegistry,
+    /// protocol label applied to the comm counters (from `RunMeta`)
+    protocol: String,
+    out: Option<PathBuf>,
+    round_wall: Option<Instant>,
+}
+
+impl Hub {
+    /// Mirror the authoritative ledger into the comm counters (the
+    /// reconciliation guarantee in the module docs).
+    fn mirror_ledger(&mut self, ledger: &crate::metrics::CommLedger) {
+        let proto = self.protocol.clone();
+        let p = proto.as_str();
+        let r = &mut self.reg;
+        r.counter_set("fedstc_comm_bits_total", &[("dir", "up"), ("protocol", p)], ledger.total_up_bits);
+        r.counter_set("fedstc_comm_bits_total", &[("dir", "down"), ("protocol", p)], ledger.total_down_bits);
+        r.counter_set("fedstc_comm_msgs_total", &[("dir", "up"), ("protocol", p)], ledger.uploads);
+        r.counter_set("fedstc_comm_msgs_total", &[("dir", "down"), ("protocol", p)], ledger.downloads);
+        r.gauge_set("fedstc_transfer_seconds_total", &[("dir", "up")], ledger.up_seconds);
+        r.gauge_set("fedstc_transfer_seconds_total", &[("dir", "down")], ledger.down_seconds);
+        r.gauge_set("fedstc_queue_seconds_total", &[("dir", "up")], ledger.up_queue_seconds);
+        r.gauge_set("fedstc_queue_seconds_total", &[("dir", "down")], ledger.down_queue_seconds);
+        r.gauge_set("fedstc_peak_concurrent", &[("dir", "up")], ledger.peak_up_concurrent as f64);
+        r.gauge_set("fedstc_peak_concurrent", &[("dir", "down")], ledger.peak_down_concurrent as f64);
+    }
+}
+
+/// Shared metrics sink: register (clones of) one hub as a session
+/// [`Observer`] and a cluster [`TickProbe`]; read it back after the run
+/// or let [`Observer::on_finish`] write the snapshot file.
+#[derive(Clone)]
+pub struct MetricsHub {
+    inner: Arc<Mutex<Hub>>,
+}
+
+impl Default for MetricsHub {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsHub {
+    pub fn new() -> Self {
+        MetricsHub {
+            inner: Arc::new(Mutex::new(Hub {
+                reg: MetricsRegistry::default(),
+                protocol: String::new(),
+                out: None,
+                round_wall: None,
+            })),
+        }
+    }
+
+    /// On finish, write the snapshot to `path`: Prometheus text unless
+    /// the extension is `.json` (then the JSON dump).
+    pub fn with_output(path: &Path) -> Self {
+        let hub = Self::new();
+        hub.inner.lock().unwrap().out = Some(path.to_path_buf());
+        hub
+    }
+
+    fn lock(&self) -> anyhow::Result<std::sync::MutexGuard<'_, Hub>> {
+        self.inner.lock().map_err(|e| anyhow::anyhow!("metrics hub lock poisoned: {e}"))
+    }
+
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Option<u64> {
+        self.inner.lock().unwrap().reg.counter(name, labels)
+    }
+
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Option<f64> {
+        self.inner.lock().unwrap().reg.gauge(name, labels)
+    }
+
+    pub fn prometheus(&self) -> String {
+        self.inner.lock().unwrap().reg.to_prometheus()
+    }
+
+    pub fn json(&self) -> Json {
+        self.inner.lock().unwrap().reg.to_json()
+    }
+}
+
+impl Observer for MetricsHub {
+    fn on_run_start(&mut self, meta: &RunMeta) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        g.protocol = meta.method_spec.to_string();
+        g.reg.gauge_set("fedstc_num_clients", &[], meta.num_clients as f64);
+        g.reg.gauge_set("fedstc_model_dim", &[], meta.init_params.len() as f64);
+        g.reg.gauge_set("fedstc_cache_rounds", &[], meta.cache_rounds as f64);
+        Ok(())
+    }
+
+    fn on_round_start(&mut self, _round: usize, _participants: &[usize]) -> anyhow::Result<()> {
+        self.lock()?.round_wall = Some(Instant::now());
+        Ok(())
+    }
+
+    fn on_sync(&mut self, _client_id: usize, bits: u64) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        g.reg.counter_add("fedstc_syncs_total", &[], 1);
+        g.reg.counter_add("fedstc_sync_bits_total", &[], bits);
+        Ok(())
+    }
+
+    fn on_upload(&mut self, _client_id: usize, msg: &Message, wire_bits: u64) -> anyhow::Result<()> {
+        let variant = variant_name(msg);
+        // Re-roundtrip the codec on the observer side so the hot path
+        // carries no timing instrumentation.
+        let t0 = Instant::now();
+        let wire = msg.to_wire();
+        let encode_ns = t0.elapsed().as_nanos() as f64;
+        let t1 = Instant::now();
+        let decoded = Message::from_bytes(&wire.bytes)?;
+        let decode_ns = t1.elapsed().as_nanos() as f64;
+        std::hint::black_box(&decoded);
+
+        let mut g = self.lock()?;
+        g.reg.counter_add("fedstc_uploads_total", &[("variant", variant)], 1);
+        g.reg.counter_add("fedstc_upload_wire_bits_total", &[("variant", variant)], wire_bits);
+        if wire_bits > 0 {
+            let dense_bits = 32.0 * msg.tensor_len() as f64;
+            g.reg.gauge_set(
+                "fedstc_compression_ratio",
+                &[("variant", variant)],
+                dense_bits / wire_bits as f64,
+            );
+        }
+        g.reg.observe("fedstc_encode_ns", &[("variant", variant)], encode_ns);
+        g.reg.observe("fedstc_decode_ns", &[("variant", variant)], decode_ns);
+        Ok(())
+    }
+
+    fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        g.reg.counter_set("fedstc_rounds_total", &[], rec.round as u64);
+        g.reg.counter_add("fedstc_broadcast_bits_total", &[], rec.down_bits as u64);
+        g.reg.gauge_set("fedstc_mean_loss", &[], rec.mean_loss as f64);
+        g.reg.gauge_set("fedstc_residual_norm", &[], rec.mean_residual_norm);
+        g.mirror_ledger(rec.ledger);
+        if let Some(t0) = g.round_wall.take() {
+            let ms = t0.elapsed().as_secs_f64() * 1e3;
+            g.reg.observe("fedstc_round_wall_ms", &[], ms);
+        }
+        Ok(())
+    }
+
+    fn on_eval(&mut self, point: &EvalPoint) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        g.reg.gauge_set("fedstc_accuracy", &[], point.accuracy);
+        g.reg.gauge_set("fedstc_eval_loss", &[], point.loss);
+        g.reg.gauge_set("fedstc_train_loss", &[], point.train_loss);
+        Ok(())
+    }
+
+    fn on_finish(&mut self, fin: &RunEnd) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        g.reg.gauge_set("fedstc_settled", &[], if fin.settled { 1.0 } else { 0.0 });
+        g.mirror_ledger(fin.ledger);
+        if let Some(path) = g.out.clone() {
+            let text = if path.extension().and_then(|e| e.to_str()) == Some("json") {
+                g.reg.to_json().dump()
+            } else {
+                g.reg.to_prometheus()
+            };
+            std::fs::write(&path, text).map_err(|e| {
+                anyhow::anyhow!("cannot write metrics snapshot {}: {e}", path.display())
+            })?;
+        }
+        Ok(())
+    }
+}
+
+impl TickProbe for MetricsHub {
+    fn on_cluster_event(&mut self, ev: &ClusterEvent) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        match *ev {
+            ClusterEvent::Phase { to, .. } => {
+                g.reg.counter_add("fedstc_phase_transitions_total", &[("to", to)], 1);
+            }
+            ClusterEvent::Membership { joins, rejoins, dropouts, .. } => {
+                let r = &mut g.reg;
+                if joins > 0 {
+                    r.counter_add("fedstc_membership_total", &[("kind", "join")], joins as u64);
+                }
+                if rejoins > 0 {
+                    r.counter_add("fedstc_membership_total", &[("kind", "rejoin")], rejoins as u64);
+                }
+                if dropouts > 0 {
+                    r.counter_add("fedstc_membership_total", &[("kind", "dropout")], dropouts as u64);
+                }
+            }
+            ClusterEvent::Participant { kind, .. } => {
+                g.reg.counter_add("fedstc_participant_events_total", &[("kind", kind.label())], 1);
+            }
+            ClusterEvent::Transfer { dir, duration_s, queue_s, .. } => {
+                let d = dir.label();
+                g.reg.counter_add("fedstc_transfers_total", &[("dir", d)], 1);
+                g.reg.observe("fedstc_transfer_duration_s", &[("dir", d)], duration_s);
+                g.reg.observe("fedstc_transfer_queue_s", &[("dir", d)], queue_s);
+            }
+            ClusterEvent::LateUpload { .. } => {
+                g.reg.counter_add("fedstc_late_uploads_total", &[], 1);
+            }
+            ClusterEvent::RoundClose { aggregated, deadline_s, .. } => {
+                g.reg.observe("fedstc_round_sim_s", &[], deadline_s);
+                if aggregated == 0 {
+                    g.reg.counter_add("fedstc_empty_rounds_total", &[], 1);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let mut r = MetricsRegistry::default();
+        r.counter_add("c", &[("a", "x")], 2);
+        r.counter_add("c", &[("a", "x")], 3);
+        r.counter_add("c", &[("a", "y")], 1);
+        r.counter_set("c", &[("a", "y")], 7);
+        assert_eq!(r.counter("c", &[("a", "x")]), Some(5));
+        assert_eq!(r.counter("c", &[("a", "y")]), Some(7));
+        assert_eq!(r.counter("c", &[]), None);
+        r.gauge_set("g", &[], 1.5);
+        r.gauge_add("g", &[], 1.0);
+        assert_eq!(r.gauge("g", &[]), Some(2.5));
+    }
+
+    #[test]
+    fn label_order_does_not_matter() {
+        let mut r = MetricsRegistry::default();
+        r.counter_add("c", &[("a", "1"), ("b", "2")], 4);
+        assert_eq!(r.counter("c", &[("b", "2"), ("a", "1")]), Some(4));
+    }
+
+    #[test]
+    fn histogram_buckets_are_log2_cumulative() {
+        let mut h = Histogram::default();
+        for v in [0.5, 1.0, 3.0, 4.0, 1000.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count, 5);
+        assert!((h.sum - 1008.5).abs() < 1e-9);
+        let cum = h.cumulative();
+        // le=1 holds 0.5 and 1.0; le=4 adds 3.0 and 4.0; le=1024 adds 1000.0
+        assert_eq!(cum[0], (1.0, 2));
+        assert_eq!(cum[2], (4.0, 4));
+        assert_eq!(*cum.last().unwrap(), (1024.0, 5));
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let mut h = Histogram::default();
+        h.observe(1e30);
+        assert_eq!(h.count, 1);
+        // nothing below +Inf holds the sample
+        assert!(h.cumulative().iter().all(|&(_, c)| c == 0));
+    }
+
+    #[test]
+    fn prometheus_text_format() {
+        let mut r = MetricsRegistry::default();
+        r.counter_add("fedstc_x_total", &[("dir", "up")], 3);
+        r.counter_add("fedstc_x_total", &[("dir", "down")], 1);
+        r.gauge_set("fedstc_g", &[], 0.5);
+        r.observe("fedstc_h", &[], 3.0);
+        let text = r.to_prometheus();
+        assert!(text.contains("# TYPE fedstc_x_total counter"));
+        assert!(text.contains("fedstc_x_total{dir=\"up\"} 3"));
+        assert!(text.contains("fedstc_x_total{dir=\"down\"} 1"));
+        assert!(text.contains("# TYPE fedstc_g gauge"));
+        assert!(text.contains("fedstc_g 0.5"));
+        assert!(text.contains("# TYPE fedstc_h histogram"));
+        assert!(text.contains("fedstc_h_bucket{le=\"4\"} 1"));
+        assert!(text.contains("fedstc_h_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("fedstc_h_sum 3"));
+        assert!(text.contains("fedstc_h_count 1"));
+        // exactly one TYPE line per metric name
+        assert_eq!(text.matches("# TYPE fedstc_x_total").count(), 1);
+    }
+
+    #[test]
+    fn json_snapshot_parses() {
+        let mut r = MetricsRegistry::default();
+        r.counter_add("c_total", &[("k", "v")], 9);
+        r.observe("h", &[], 2.0);
+        let j = Json::parse(&r.to_json().dump()).unwrap();
+        assert_eq!(
+            j.get("counters").unwrap().get("c_total{k=\"v\"}").unwrap().as_usize(),
+            Some(9)
+        );
+        assert_eq!(j.get("histograms").unwrap().get("h").unwrap().get("count").unwrap().as_usize(), Some(1));
+    }
+}

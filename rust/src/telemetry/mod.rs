@@ -1,0 +1,125 @@
+//! Telemetry: structured tracing, a metrics registry, and progress
+//! reporting — all behind the [`Observer`](crate::session::Observer) API.
+//!
+//! The paper's claims are quantitative (bits per round, bits to target
+//! accuracy, robustness under stragglers), so the repro needs a lens on
+//! every stage of a run, not just the end-of-run curve export. This
+//! module provides three dependency-free pieces:
+//!
+//! * [`trace::TraceWriter`] — span-style JSONL events for the round
+//!   lifecycle (participant draw → §V-B sync → upload → aggregate →
+//!   broadcast) and, in cluster mode, for the tick machine (phase
+//!   transitions, membership churn, simulated transfers with queueing).
+//! * [`metrics::MetricsHub`] — named counters / gauges / log-bucketed
+//!   histograms with a Prometheus-text snapshot writer and a JSON dump.
+//! * [`progress::ProgressObserver`] — a one-line live progress report
+//!   on stderr.
+//!
+//! # Determinism contract
+//!
+//! Telemetry is a **pure observer**: attaching any combination of these
+//! objects to a [`Session`](crate::session::Session) or
+//! [`ClusterRun`](crate::cluster::ClusterRun) must not perturb the run.
+//! Transcripts, parameters, and ledgers stay bit-identical to a bare
+//! run (pinned by `tests/property_telemetry.rs`).
+//!
+//! Event *timestamps* in the main trace stream are **simulated** time
+//! (tick index and transport seconds), so two runs with the same seed
+//! produce byte-identical traces. Wall-clock measurements (per-round
+//! wall time, encode/decode ns) are real `Instant` readings and are
+//! therefore routed to a *separate* channel — a sibling `.perf` JSONL
+//! file for the trace, and clearly-named `*_wall_*` / `*_ns` metrics —
+//! which is excluded from any determinism check.
+
+pub mod metrics;
+pub mod progress;
+pub mod trace;
+
+pub use metrics::{MetricsHub, MetricsRegistry};
+pub use progress::ProgressObserver;
+pub use trace::{perf_path, TraceWriter};
+
+use crate::cluster::transport::Direction;
+
+/// Cluster-only happenings that never reach the serial [`Observer`]
+/// hooks: tick-machine state, membership churn, and the simulated
+/// transport. Emitted by `ClusterRun` to every registered [`TickProbe`].
+///
+/// All times are *simulated*: `tick` is the lifecycle tick index and
+/// `sim_s` the cluster's event clock in seconds, so probes observing
+/// only these fields stay deterministic.
+#[derive(Clone, Debug)]
+pub enum ClusterEvent {
+    /// The tick machine moved between phases (labels from `Phase::label`).
+    Phase { tick: usize, sim_s: f64, from: &'static str, to: &'static str },
+    /// Membership churn during a lifecycle tick (aggregate counts).
+    Membership { tick: usize, sim_s: f64, joins: usize, rejoins: usize, dropouts: usize },
+    /// A drawn participant never started (offline at draw) or dropped
+    /// out mid-round before uploading.
+    Participant { tick: usize, sim_s: f64, client_id: usize, kind: ParticipantEvent },
+    /// One transfer finished on the simulated shared medium. `queue_s`
+    /// is contention-induced waiting beyond the solo transfer time.
+    Transfer {
+        tick: usize,
+        sim_s: f64,
+        dir: Direction,
+        client_id: usize,
+        bits: u64,
+        ready_s: f64,
+        duration_s: f64,
+        queue_s: f64,
+        end_s: f64,
+    },
+    /// An upload arrived after the round deadline; its update was
+    /// re-banked into the client residual instead of aggregated.
+    LateUpload { tick: usize, sim_s: f64, client_id: usize, arrival_s: f64, deadline_s: f64 },
+    /// A cluster round closed (possibly empty).
+    RoundClose {
+        tick: usize,
+        sim_s: f64,
+        round: usize,
+        aggregated: usize,
+        late: usize,
+        deadline_s: f64,
+        queue_s: f64,
+    },
+}
+
+/// How a drawn participant left the round without uploading.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParticipantEvent {
+    /// Offline when the round was drawn.
+    NoShow,
+    /// Went offline between draw and upload; its residual keeps the
+    /// computed update (error feedback, §IV).
+    MidRoundDropout,
+}
+
+impl ParticipantEvent {
+    pub fn label(self) -> &'static str {
+        match self {
+            ParticipantEvent::NoShow => "no_show",
+            ParticipantEvent::MidRoundDropout => "dropout",
+        }
+    }
+}
+
+/// Callback for [`ClusterEvent`]s. The cluster counterpart of
+/// [`Observer`](crate::session::Observer): an object can implement both
+/// and be registered twice (session observer + tick probe) to see the
+/// full picture; [`TraceWriter`] and [`MetricsHub`] are `Clone` shared
+/// handles for exactly that reason.
+pub trait TickProbe {
+    fn on_cluster_event(&mut self, ev: &ClusterEvent) -> anyhow::Result<()>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn participant_event_labels() {
+        assert_eq!(ParticipantEvent::NoShow.label(), "no_show");
+        assert_eq!(ParticipantEvent::MidRoundDropout.label(), "dropout");
+    }
+}

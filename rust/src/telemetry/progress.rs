@@ -1,0 +1,79 @@
+//! Live one-line progress reporting on stderr (`--progress`).
+//!
+//! Pure observer: writes only to stderr, never touches run state, and
+//! stays silent on a non-broadcast round (nothing to report). The line
+//! is rewritten in place (`\r`) so long runs do not scroll the
+//! terminal; `on_finish` terminates it with a newline.
+
+use crate::metrics::EvalPoint;
+use crate::session::{Observer, RoundRecord, RunEnd, RunMeta};
+use crate::util::bits_to_mb;
+use std::io::Write;
+
+pub struct ProgressObserver {
+    /// total rounds expected (0 = unknown; the bar shows `?`)
+    total_rounds: usize,
+    method: String,
+    last_accuracy: Option<f64>,
+}
+
+impl ProgressObserver {
+    pub fn new(total_rounds: usize) -> Self {
+        ProgressObserver { total_rounds, method: String::new(), last_accuracy: None }
+    }
+
+    fn denom(&self) -> String {
+        if self.total_rounds == 0 {
+            "?".to_string()
+        } else {
+            self.total_rounds.to_string()
+        }
+    }
+}
+
+impl Observer for ProgressObserver {
+    fn on_run_start(&mut self, meta: &RunMeta) -> anyhow::Result<()> {
+        self.method = meta.method_spec.to_string();
+        eprintln!(
+            "[{}] {} clients, dim {}, seed {}",
+            self.method,
+            meta.num_clients,
+            meta.init_params.len(),
+            meta.seed
+        );
+        Ok(())
+    }
+
+    fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
+        let acc = self
+            .last_accuracy
+            .map(|a| format!(" acc {:.3}", a))
+            .unwrap_or_default();
+        eprint!(
+            "\rround {:>5}/{} loss {:.4}{} up {:.2} MB down {:.2} MB",
+            rec.round,
+            self.denom(),
+            rec.mean_loss,
+            acc,
+            bits_to_mb(rec.ledger.total_up_bits),
+            bits_to_mb(rec.ledger.total_down_bits),
+        );
+        std::io::stderr().flush()?;
+        Ok(())
+    }
+
+    fn on_eval(&mut self, point: &EvalPoint) -> anyhow::Result<()> {
+        self.last_accuracy = Some(point.accuracy);
+        Ok(())
+    }
+
+    fn on_finish(&mut self, fin: &RunEnd) -> anyhow::Result<()> {
+        eprintln!(
+            "\ndone: up {:.2} MB, down {:.2} MB{}",
+            bits_to_mb(fin.ledger.total_up_bits),
+            bits_to_mb(fin.ledger.total_down_bits),
+            if fin.settled { " (settled)" } else { "" }
+        );
+        Ok(())
+    }
+}

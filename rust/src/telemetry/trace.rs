@@ -1,0 +1,345 @@
+//! Structured JSONL run traces.
+//!
+//! One event per line, each a flat JSON object with at least `"ev"`
+//! (event kind) and `"seq"` (strictly increasing sequence number). The
+//! stream covers the full round lifecycle — `run_start`, `round_start`,
+//! `sync` (§V-B partial-sum downloads), `upload`, `broadcast`, `eval`,
+//! `finish` — and, when the writer is also registered as a
+//! [`TickProbe`], the cluster tick machine: `phase`, `membership`,
+//! `no_show` / `dropout`, `transfer`, `late_upload`, `round_close`.
+//!
+//! # Two channels
+//!
+//! The main stream carries only *simulated* time (tick index, transport
+//! seconds) and run semantics, so it is byte-identical across runs with
+//! the same seed — CI and the property tests rely on that. Wall-clock
+//! measurements (`perf_round` / `perf_run`, in milliseconds) go to a
+//! sibling `<stem>.perf.jsonl` file and are excluded from determinism
+//! checks.
+//!
+//! The writer is a cheap `Clone` handle over a shared sink, so one
+//! `TraceWriter` can be registered both as a session [`Observer`] and a
+//! cluster [`TickProbe`] and interleave both event families in order.
+
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::compression::Message;
+use crate::metrics::EvalPoint;
+use crate::session::transcript::params_checksum;
+use crate::session::{Observer, RoundRecord, RunEnd, RunMeta};
+use crate::telemetry::{ClusterEvent, TickProbe};
+use crate::util::json::Json;
+
+/// Human-stable name of a [`Message`] variant, used as the `variant`
+/// field of `upload` events and as a metrics label.
+pub fn variant_name(msg: &Message) -> &'static str {
+    match msg {
+        Message::Dense { .. } => "dense",
+        Message::Sparse { .. } => "sparse",
+        Message::Ternary(_) => "ternary",
+        Message::Sign { .. } => "sign",
+    }
+}
+
+/// Sibling path for the wall-clock channel: `t.jsonl` → `t.perf.jsonl`,
+/// extensionless `t` → `t.perf.jsonl`.
+pub fn perf_path(trace: &Path) -> PathBuf {
+    let stem = trace.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    trace.with_file_name(format!("{stem}.perf.jsonl"))
+}
+
+struct Inner {
+    events: Box<dyn Write + Send>,
+    perf: Option<Box<dyn Write + Send>>,
+    seq: u64,
+    perf_seq: u64,
+    round_wall: Option<Instant>,
+    run_wall: Option<Instant>,
+}
+
+impl Inner {
+    fn emit(&mut self, mut obj: Json) -> anyhow::Result<()> {
+        obj.set("seq", Json::Num(self.seq as f64));
+        self.seq += 1;
+        writeln!(self.events, "{}", obj.dump())?;
+        Ok(())
+    }
+
+    fn emit_perf(&mut self, mut obj: Json) -> anyhow::Result<()> {
+        if let Some(perf) = &mut self.perf {
+            obj.set("seq", Json::Num(self.perf_seq as f64));
+            self.perf_seq += 1;
+            writeln!(perf, "{}", obj.dump())?;
+        }
+        Ok(())
+    }
+}
+
+/// JSONL trace writer; see the module docs for the event schema.
+#[derive(Clone)]
+pub struct TraceWriter {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl TraceWriter {
+    /// Open `path` for the deterministic event stream and the sibling
+    /// [`perf_path`] for wall-clock measurements.
+    pub fn create(path: &Path) -> anyhow::Result<TraceWriter> {
+        let events = std::fs::File::create(path)
+            .map_err(|e| anyhow::anyhow!("cannot create trace file {}: {e}", path.display()))?;
+        let perf = std::fs::File::create(perf_path(path)).map_err(|e| {
+            anyhow::anyhow!("cannot create perf trace {}: {e}", perf_path(path).display())
+        })?;
+        Ok(Self::from_sinks(
+            Box::new(std::io::BufWriter::new(events)),
+            Some(Box::new(std::io::BufWriter::new(perf))),
+        ))
+    }
+
+    /// Build over arbitrary sinks (tests, in-memory capture). `perf:
+    /// None` drops the wall-clock channel entirely.
+    pub fn from_sinks(
+        events: Box<dyn Write + Send>,
+        perf: Option<Box<dyn Write + Send>>,
+    ) -> TraceWriter {
+        TraceWriter {
+            inner: Arc::new(Mutex::new(Inner {
+                events,
+                perf,
+                seq: 0,
+                perf_seq: 0,
+                round_wall: None,
+                run_wall: None,
+            })),
+        }
+    }
+
+    fn lock(&self) -> anyhow::Result<std::sync::MutexGuard<'_, Inner>> {
+        self.inner.lock().map_err(|e| anyhow::anyhow!("trace writer lock poisoned: {e}"))
+    }
+}
+
+fn ev(kind: &str) -> Json {
+    let mut j = Json::obj();
+    j.set("ev", Json::Str(kind.to_string()));
+    j
+}
+
+impl Observer for TraceWriter {
+    fn on_run_start(&mut self, meta: &RunMeta) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        g.run_wall = Some(Instant::now());
+        let mut j = ev("run_start");
+        j.set("method", Json::Str(meta.method_spec.to_string()))
+            .set("num_clients", Json::Num(meta.num_clients as f64))
+            .set("cache_rounds", Json::Num(meta.cache_rounds as f64))
+            .set("seed", Json::Num(meta.seed as f64))
+            .set("dim", Json::Num(meta.init_params.len() as f64));
+        g.emit(j)
+    }
+
+    fn on_round_start(&mut self, round: usize, participants: &[usize]) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        g.round_wall = Some(Instant::now());
+        let mut j = ev("round_start");
+        j.set("round", Json::Num(round as f64)).set(
+            "participants",
+            Json::Arr(participants.iter().map(|&p| Json::Num(p as f64)).collect()),
+        );
+        g.emit(j)
+    }
+
+    fn on_sync(&mut self, client_id: usize, bits: u64) -> anyhow::Result<()> {
+        let mut j = ev("sync");
+        j.set("client", Json::Num(client_id as f64)).set("bits", Json::Num(bits as f64));
+        self.lock()?.emit(j)
+    }
+
+    fn on_upload(&mut self, client_id: usize, msg: &Message, wire_bits: u64) -> anyhow::Result<()> {
+        let mut j = ev("upload");
+        j.set("client", Json::Num(client_id as f64))
+            .set("variant", Json::Str(variant_name(msg).to_string()))
+            .set("wire_bits", Json::Num(wire_bits as f64))
+            .set("len", Json::Num(msg.tensor_len() as f64))
+            .set("nnz", Json::Num(msg.nnz() as f64));
+        self.lock()?.emit(j)
+    }
+
+    fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        let mut j = ev("broadcast");
+        j.set("round", Json::Num(rec.round as f64))
+            .set("mean_loss", Json::Num(rec.mean_loss as f64))
+            .set("down_bits", Json::Num(rec.down_bits as f64))
+            .set("up_bits_total", Json::Num(rec.ledger.total_up_bits as f64))
+            .set("down_bits_total", Json::Num(rec.ledger.total_down_bits as f64))
+            .set("residual_norm", Json::Num(rec.mean_residual_norm))
+            .set("params_fnv", Json::Str(format!("{:016x}", params_checksum(rec.params))));
+        g.emit(j)?;
+        if let Some(t0) = g.round_wall.take() {
+            let mut p = ev("perf_round");
+            p.set("round", Json::Num(rec.round as f64))
+                .set("wall_ms", Json::Num(t0.elapsed().as_secs_f64() * 1e3));
+            g.emit_perf(p)?;
+        }
+        Ok(())
+    }
+
+    fn on_eval(&mut self, point: &EvalPoint) -> anyhow::Result<()> {
+        let mut j = ev("eval");
+        j.set("iteration", Json::Num(point.iteration as f64))
+            .set("round", Json::Num(point.round as f64))
+            .set("accuracy", Json::Num(point.accuracy))
+            .set("loss", Json::Num(point.loss))
+            .set("train_loss", Json::Num(point.train_loss));
+        self.lock()?.emit(j)
+    }
+
+    fn on_finish(&mut self, fin: &RunEnd) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        let mut j = ev("finish");
+        j.set("settled", Json::Bool(fin.settled))
+            .set("up_bits_total", Json::Num(fin.ledger.total_up_bits as f64))
+            .set("down_bits_total", Json::Num(fin.ledger.total_down_bits as f64))
+            .set("uploads", Json::Num(fin.ledger.uploads as f64))
+            .set("downloads", Json::Num(fin.ledger.downloads as f64))
+            .set("params_fnv", Json::Str(format!("{:016x}", params_checksum(fin.params))));
+        g.emit(j)?;
+        if let Some(t0) = g.run_wall.take() {
+            let mut p = ev("perf_run");
+            p.set("wall_ms", Json::Num(t0.elapsed().as_secs_f64() * 1e3));
+            g.emit_perf(p)?;
+        }
+        g.events.flush()?;
+        if let Some(perf) = &mut g.perf {
+            perf.flush()?;
+        }
+        Ok(())
+    }
+}
+
+impl TickProbe for TraceWriter {
+    fn on_cluster_event(&mut self, event: &ClusterEvent) -> anyhow::Result<()> {
+        let at = |mut j: Json, tick: usize, sim_s: f64| -> Json {
+            j.set("tick", Json::Num(tick as f64)).set("t_sim", Json::Num(sim_s));
+            j
+        };
+        let j = match *event {
+            ClusterEvent::Phase { tick, sim_s, from, to } => {
+                let mut j = ev("phase");
+                j.set("from", Json::Str(from.to_string())).set("to", Json::Str(to.to_string()));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::Membership { tick, sim_s, joins, rejoins, dropouts } => {
+                let mut j = ev("membership");
+                j.set("joins", Json::Num(joins as f64))
+                    .set("rejoins", Json::Num(rejoins as f64))
+                    .set("dropouts", Json::Num(dropouts as f64));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::Participant { tick, sim_s, client_id, kind } => {
+                let mut j = ev(kind.label());
+                j.set("client", Json::Num(client_id as f64));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::Transfer {
+                tick,
+                sim_s,
+                dir,
+                client_id,
+                bits,
+                ready_s,
+                duration_s,
+                queue_s,
+                end_s,
+            } => {
+                let mut j = ev("transfer");
+                j.set("dir", Json::Str(dir.label().to_string()))
+                    .set("client", Json::Num(client_id as f64))
+                    .set("bits", Json::Num(bits as f64))
+                    .set("ready_s", Json::Num(ready_s))
+                    .set("duration_s", Json::Num(duration_s))
+                    .set("queue_s", Json::Num(queue_s))
+                    .set("end_s", Json::Num(end_s));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::LateUpload { tick, sim_s, client_id, arrival_s, deadline_s } => {
+                let mut j = ev("late_upload");
+                j.set("client", Json::Num(client_id as f64))
+                    .set("arrival_s", Json::Num(arrival_s))
+                    .set("deadline_s", Json::Num(deadline_s));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::RoundClose { tick, sim_s, round, aggregated, late, deadline_s, queue_s } => {
+                let mut j = ev("round_close");
+                j.set("round", Json::Num(round as f64))
+                    .set("aggregated", Json::Num(aggregated as f64))
+                    .set("late", Json::Num(late as f64))
+                    .set("deadline_s", Json::Num(deadline_s))
+                    .set("queue_s", Json::Num(queue_s));
+                at(j, tick, sim_s)
+            }
+        };
+        self.lock()?.emit(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A `Write` sink whose bytes stay reachable after the writer is
+    /// boxed away into the session.
+    #[derive(Clone, Default)]
+    pub struct SharedBuf(pub Arc<Mutex<Vec<u8>>>);
+
+    impl Write for SharedBuf {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn perf_path_is_a_sibling() {
+        assert_eq!(perf_path(Path::new("/tmp/t.jsonl")), PathBuf::from("/tmp/t.perf.jsonl"));
+        assert_eq!(perf_path(Path::new("trace")), PathBuf::from("trace.perf.jsonl"));
+    }
+
+    #[test]
+    fn events_are_jsonl_with_seq() {
+        let buf = SharedBuf::default();
+        let mut w = TraceWriter::from_sinks(Box::new(buf.clone()), None);
+        w.on_sync(3, 128).unwrap();
+        w.on_cluster_event(&ClusterEvent::Phase {
+            tick: 1,
+            sim_s: 0.5,
+            from: "warmup",
+            to: "round_train",
+        })
+        .unwrap();
+        let text = String::from_utf8(buf.0.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for (i, line) in lines.iter().enumerate() {
+            let j = Json::parse(line).unwrap();
+            assert_eq!(j.get("seq").unwrap().as_usize(), Some(i));
+            assert!(j.get("ev").unwrap().as_str().is_some());
+        }
+        assert_eq!(Json::parse(lines[1]).unwrap().get("to").unwrap().as_str(), Some("round_train"));
+    }
+
+    #[test]
+    fn variant_names_cover_all_messages() {
+        let dense = Message::Dense { values: vec![0.0_f32; 4] };
+        assert_eq!(variant_name(&dense), "dense");
+        let sparse = Message::Sparse { len: 4, indices: vec![1], values: vec![0.5] };
+        assert_eq!(variant_name(&sparse), "sparse");
+    }
+}

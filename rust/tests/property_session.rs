@@ -331,6 +331,7 @@ fn record_replay_reproduces_every_registered_protocol() {
         assert_eq!(out.ledger.uploads, session.ledger.uploads, "{name}: uploads");
         assert_eq!(out.ledger.downloads, session.ledger.downloads, "{name}: downloads");
         assert!(out.downloads_verified, "{name}: serial recording must verify downloads");
+        assert!(out.uploads_verified, "{name}: serial recording must verify uploads");
         let _ = std::fs::remove_file(&path);
     }
 }
@@ -404,12 +405,20 @@ fn cluster_record_replay(straggler_frac: f64, tag: &str) {
 
     let t = Transcript::read_file(&path).unwrap();
     assert!(!t.sync_derivable(), "cluster recordings are not sync-derivable");
+    assert!(t.has_sync_events(), "cluster recordings carry explicit sync frames (v2)");
     assert_eq!(t.rounds.len(), run.rounds_done);
     let out = replay(&t).unwrap();
     let live: Vec<u32> = run.server.params.iter().map(|x| x.to_bits()).collect();
     let replayed: Vec<u32> = out.final_params.iter().map(|x| x.to_bits()).collect();
     assert_eq!(live, replayed, "{tag}: replayed cluster model diverged");
-    assert!(!out.downloads_verified);
+    // v2 sync frames let replay re-price every §V-B download and verify
+    // the download side of the ledger against the live run…
+    assert!(out.downloads_verified, "{tag}: sync events must verify downloads");
+    assert_eq!(out.ledger.total_down_bits, run.ledger.total_down_bits, "{tag}: down bits");
+    assert_eq!(out.ledger.downloads, run.ledger.downloads, "{tag}: download count");
+    // …while uploads stay unverified: late uploads are billed by the
+    // cluster but never reach the transcript
+    assert!(!out.uploads_verified);
     let _ = std::fs::remove_file(&path);
 }
 

@@ -1,0 +1,331 @@
+//! Property tests for the telemetry layer.
+//!
+//! Two guarantees, pinned for both the serial and cluster drivers:
+//!
+//! 1. **Purity** — attaching the full telemetry stack (trace writer,
+//!    metrics hub, both observer and tick-probe registrations) changes
+//!    *nothing*: the recorded transcript is byte-identical to a bare
+//!    run's, and params/ledger match bit for bit. The deterministic
+//!    trace channel is itself byte-identical across identical runs.
+//! 2. **Reconciliation** — the mirrored communication metrics
+//!    (`fedstc_comm_bits_total` / `fedstc_comm_msgs_total`) equal the
+//!    session's `CommLedger` exactly, for every registered protocol and
+//!    under cluster stragglers/late uploads.
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::config::{FedConfig, Method};
+use fedstc::data::synth::task_dataset;
+use fedstc::data::Dataset;
+use fedstc::metrics::CommLedger;
+use fedstc::protocol;
+use fedstc::session::{Execution, Oracle, Session};
+use fedstc::telemetry::{perf_path, MetricsHub, TraceWriter};
+use fedstc::util::json::Json;
+
+fn fed_cfg(method: Method, rounds: usize) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 8,
+        participation: 0.5,
+        classes_per_client: 5,
+        batch_size: 10,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: rounds * method.local_iters(),
+        method,
+        eval_every: 1_000_000,
+        seed: 29,
+        train_examples: 600,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+fn dataset() -> Dataset {
+    let (train, _) = task_dataset("mnist", 29).unwrap();
+    train.subset(&(0..600).collect::<Vec<_>>())
+}
+
+fn init_params(cfg: &FedConfig) -> Vec<f32> {
+    fedstc::models::ModelSpec::by_name("logreg").unwrap().init_flat(cfg.seed)
+}
+
+fn temp(tag: &str, ext: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "fedstc_prop_telemetry_{}_{}.{ext}",
+        std::process::id(),
+        tag.replace([':', ',', '='], "_")
+    ))
+}
+
+/// Drive a serial session to completion, optionally with the full
+/// telemetry stack attached, recording a transcript to `record`.
+fn serial_run(
+    cfg: &FedConfig,
+    train: &Dataset,
+    record: &std::path::Path,
+    telemetry: Option<(&TraceWriter, &MetricsHub)>,
+) -> (Vec<f32>, CommLedger) {
+    let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+    let mut session =
+        Session::new(cfg.clone(), train, init_params(cfg), Execution::Serial).unwrap();
+    session.record_transcript(record, true).unwrap();
+    if let Some((trace, metrics)) = telemetry {
+        session.add_observer(Box::new(trace.clone()));
+        session.add_observer(Box::new(metrics.clone()));
+    }
+    for _ in 0..cfg.rounds() {
+        session.run_round(Oracle::Factory(&factory), train).unwrap();
+    }
+    session.settle_final_downloads();
+    session.finish().unwrap();
+    (session.server.params.clone(), session.ledger.clone())
+}
+
+/// Drive a cluster run to completion, optionally with the telemetry
+/// stack attached as both observers and tick probes.
+fn cluster_run(
+    ccfg: ClusterConfig,
+    train: &Dataset,
+    record: &std::path::Path,
+    telemetry: Option<(&TraceWriter, &MetricsHub)>,
+) -> ClusterRun {
+    let factory = NativeLogregFactory { batch_size: ccfg.fed.batch_size };
+    let init = init_params(&ccfg.fed);
+    let mut run = ClusterRun::new(ccfg, train, init).unwrap();
+    run.record_to(record).unwrap();
+    if let Some((trace, metrics)) = telemetry {
+        run.add_observer(Box::new(trace.clone()));
+        run.add_observer(Box::new(metrics.clone()));
+        run.add_probe(Box::new(trace.clone()));
+        run.add_probe(Box::new(metrics.clone()));
+    }
+    while !run.finished() {
+        run.tick(&factory, train).unwrap();
+    }
+    run
+}
+
+/// Every comm counter the hub mirrors must equal the ledger exactly.
+fn assert_reconciled(hub: &MetricsHub, proto: &str, ledger: &CommLedger, tag: &str) {
+    let c = |dir: &str| {
+        hub.counter("fedstc_comm_bits_total", &[("dir", dir), ("protocol", proto)])
+            .unwrap_or_else(|| panic!("{tag}: missing comm_bits dir={dir} protocol={proto}"))
+    };
+    let m = |dir: &str| {
+        hub.counter("fedstc_comm_msgs_total", &[("dir", dir), ("protocol", proto)])
+            .unwrap_or_else(|| panic!("{tag}: missing comm_msgs dir={dir} protocol={proto}"))
+    };
+    assert_eq!(c("up"), ledger.total_up_bits, "{tag}: up bits");
+    assert_eq!(c("down"), ledger.total_down_bits, "{tag}: down bits");
+    assert_eq!(m("up"), ledger.uploads, "{tag}: uploads");
+    assert_eq!(m("down"), ledger.downloads, "{tag}: downloads");
+}
+
+// ---------------------------------------------------------------------
+// 1. Purity
+// ---------------------------------------------------------------------
+
+#[test]
+fn serial_run_with_telemetry_is_bit_identical_to_bare_run() {
+    let train = dataset();
+    let cfg = fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 5);
+
+    let bare_rec = temp("serial_bare", "fstx");
+    let (bare_params, bare_ledger) = serial_run(&cfg, &train, &bare_rec, None);
+
+    let laden_rec = temp("serial_laden", "fstx");
+    let trace_path = temp("serial_laden", "jsonl");
+    let trace = TraceWriter::create(&trace_path).unwrap();
+    let metrics = MetricsHub::new();
+    let (laden_params, laden_ledger) =
+        serial_run(&cfg, &train, &laden_rec, Some((&trace, &metrics)));
+
+    let a: Vec<u32> = bare_params.iter().map(|x| x.to_bits()).collect();
+    let b: Vec<u32> = laden_params.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(a, b, "telemetry perturbed the model");
+    assert_eq!(bare_ledger.total_up_bits, laden_ledger.total_up_bits);
+    assert_eq!(bare_ledger.total_down_bits, laden_ledger.total_down_bits);
+    assert_eq!(
+        std::fs::read(&bare_rec).unwrap(),
+        std::fs::read(&laden_rec).unwrap(),
+        "telemetry perturbed the recorded transcript"
+    );
+
+    // and the deterministic trace channel is itself reproducible
+    let rec2 = temp("serial_laden2", "fstx");
+    let trace_path2 = temp("serial_laden2", "jsonl");
+    let trace2 = TraceWriter::create(&trace_path2).unwrap();
+    let metrics2 = MetricsHub::new();
+    serial_run(&cfg, &train, &rec2, Some((&trace2, &metrics2)));
+    assert_eq!(
+        std::fs::read(&trace_path).unwrap(),
+        std::fs::read(&trace_path2).unwrap(),
+        "trace stream is not deterministic"
+    );
+
+    for p in [&bare_rec, &laden_rec, &rec2] {
+        let _ = std::fs::remove_file(p);
+    }
+    for p in [&trace_path, &trace_path2] {
+        let _ = std::fs::remove_file(p);
+        let _ = std::fs::remove_file(perf_path(p));
+    }
+}
+
+#[test]
+fn cluster_run_with_telemetry_is_bit_identical_to_bare_run() {
+    let train = dataset();
+    let mk_ccfg = || {
+        let mut ccfg = ClusterConfig::new(fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6));
+        ccfg.workers = 2;
+        ccfg.straggler_frac = 0.25;
+        ccfg.dropout_rate = 0.15;
+        ccfg.churn = 0.1;
+        ccfg
+    };
+
+    let bare_rec = temp("cluster_bare", "fstx");
+    let bare = cluster_run(mk_ccfg(), &train, &bare_rec, None);
+
+    let laden_rec = temp("cluster_laden", "fstx");
+    let trace_path = temp("cluster_laden", "jsonl");
+    let trace = TraceWriter::create(&trace_path).unwrap();
+    let metrics = MetricsHub::new();
+    let laden = cluster_run(mk_ccfg(), &train, &laden_rec, Some((&trace, &metrics)));
+
+    let a: Vec<u32> = bare.server.params.iter().map(|x| x.to_bits()).collect();
+    let b: Vec<u32> = laden.server.params.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(a, b, "telemetry perturbed the cluster model");
+    assert_eq!(bare.ledger.total_up_bits, laden.ledger.total_up_bits);
+    assert_eq!(bare.ledger.total_down_bits, laden.ledger.total_down_bits);
+    assert_eq!(bare.sim_clock_s.to_bits(), laden.sim_clock_s.to_bits());
+    assert_eq!(
+        std::fs::read(&bare_rec).unwrap(),
+        std::fs::read(&laden_rec).unwrap(),
+        "telemetry perturbed the recorded cluster transcript"
+    );
+
+    let _ = std::fs::remove_file(&bare_rec);
+    let _ = std::fs::remove_file(&laden_rec);
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(perf_path(&trace_path));
+}
+
+// ---------------------------------------------------------------------
+// 2. Reconciliation
+// ---------------------------------------------------------------------
+
+#[test]
+fn metrics_reconcile_with_ledger_for_every_registered_protocol() {
+    let train = dataset();
+    for name in protocol::names() {
+        let method = Method::parse(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let cfg = fed_cfg(method, 3);
+        // the hub labels comm metrics with the canonical protocol spec
+        let proto = cfg.method.protocol().unwrap().name();
+        let rec = temp(&format!("reconcile_{name}"), "fstx");
+        let metrics = MetricsHub::new();
+        let trace = TraceWriter::from_sinks(Box::new(std::io::sink()), None);
+        let (_, ledger) = serial_run(&cfg, &train, &rec, Some((&trace, &metrics)));
+        assert_reconciled(&metrics, &proto, &ledger, &name);
+        // sync accounting: one notification per participant sync (the
+        // serial settlement sweep is billed but not a per-round sync)
+        let syncs = metrics.counter("fedstc_syncs_total", &[]).unwrap();
+        assert_eq!(syncs as usize, cfg.rounds() * cfg.clients_per_round(), "{name}: sync count");
+        let sync_bits = metrics.counter("fedstc_sync_bits_total", &[]).unwrap();
+        assert!(sync_bits <= ledger.total_down_bits, "{name}: sync bits exceed the ledger");
+        let _ = std::fs::remove_file(&rec);
+    }
+}
+
+#[test]
+fn cluster_metrics_reconcile_under_stragglers_and_late_uploads() {
+    let train = dataset();
+    let mut ccfg = ClusterConfig::new(fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 8));
+    ccfg.workers = 2;
+    ccfg.straggler_frac = 0.4;
+    let proto = ccfg.fed.method.protocol().unwrap().name();
+
+    let rec = temp("cluster_reconcile", "fstx");
+    let metrics = MetricsHub::new();
+    let trace = TraceWriter::from_sinks(Box::new(std::io::sink()), None);
+    let run = cluster_run(ccfg, &train, &rec, Some((&trace, &metrics)));
+    assert!(run.stats.late_uploads > 0, "scenario never exercised late uploads");
+
+    // mirrored comm counters equal the authoritative ledger — late
+    // uploads (billed, never aggregated) and settlement included
+    assert_reconciled(&metrics, &proto, &run.ledger, "cluster");
+    // tick-probe counters agree with the run's own books
+    assert_eq!(
+        metrics.counter("fedstc_late_uploads_total", &[]).unwrap(),
+        run.stats.late_uploads
+    );
+    assert_eq!(
+        metrics.counter("fedstc_transfers_total", &[("dir", "up")]).unwrap(),
+        run.ledger.uploads
+    );
+    assert_eq!(
+        metrics.counter("fedstc_transfers_total", &[("dir", "down")]).unwrap(),
+        run.ledger.downloads
+    );
+    assert_eq!(
+        metrics.counter("fedstc_sync_bits_total", &[]).unwrap(),
+        run.ledger.total_down_bits,
+        "sync bits must equal the ledger's down bits"
+    );
+    let _ = std::fs::remove_file(&rec);
+}
+
+// ---------------------------------------------------------------------
+// 3. Trace schema
+// ---------------------------------------------------------------------
+
+#[test]
+fn trace_lines_parse_with_required_keys_and_ordered_seq() {
+    let train = dataset();
+    let mut ccfg = ClusterConfig::new(fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 8));
+    ccfg.straggler_frac = 0.4;
+    ccfg.workers = 2;
+    let rec = temp("schema", "fstx");
+    let trace_path = temp("schema", "jsonl");
+    let trace = TraceWriter::create(&trace_path).unwrap();
+    let metrics = MetricsHub::new();
+    let run = cluster_run(ccfg, &train, &rec, Some((&trace, &metrics)));
+    assert!(run.stats.late_uploads > 0, "scenario never exercised late uploads");
+
+    let text = std::fs::read_to_string(&trace_path).unwrap();
+    let mut kinds = std::collections::BTreeSet::new();
+    let mut last_seq = None;
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("unparseable trace line: {e}"));
+        let seq = j.get("seq").and_then(|s| s.as_usize()).expect("every event carries seq");
+        let ev = j.get("ev").and_then(|e| e.as_str()).expect("every event carries ev");
+        kinds.insert(ev.to_string());
+        if let Some(prev) = last_seq {
+            assert_eq!(seq, prev + 1, "seq must increase by 1");
+        }
+        last_seq = Some(seq);
+        // simulated time only: the deterministic stream never carries
+        // wall-clock keys
+        assert!(j.get("wall_ms").is_none(), "wall clock leaked into the trace: {line}");
+    }
+    for required in
+        ["run_start", "round_start", "sync", "upload", "broadcast", "finish", "phase",
+         "transfer", "late_upload", "round_close"]
+    {
+        assert!(kinds.contains(required), "trace never emitted '{required}'");
+    }
+
+    // the wall-clock channel is a separate parseable JSONL file
+    let perf = std::fs::read_to_string(perf_path(&trace_path)).unwrap();
+    assert!(!perf.is_empty(), "perf channel is empty");
+    for line in perf.lines() {
+        let j = Json::parse(line).unwrap();
+        assert!(j.get("ev").unwrap().as_str().unwrap().starts_with("perf_"));
+    }
+
+    let _ = std::fs::remove_file(&rec);
+    let _ = std::fs::remove_file(&trace_path);
+    let _ = std::fs::remove_file(perf_path(&trace_path));
+}

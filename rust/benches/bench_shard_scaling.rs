@@ -1,0 +1,166 @@
+//! bench_shard_scaling — the sharded aggregation tree vs the flat
+//! single-server cluster, over shard count × client population.
+//!
+//! The tree is bit-identical to the flat run by construction (the root
+//! aggregates the original decoded messages; shard partial sums are
+//! transport/billing artifacts — see rust/tests/property_execution.rs),
+//! so this bench measures what the tree *costs and buys*:
+//!
+//! * wall rounds/sec — the fold/planning overhead of the shard layer
+//! * sim seconds/round — round latency once shard→root hops ride a
+//!   finite link (the flat arm has no such hops)
+//! * hop MB/round — the explicitly-billed shard→root traffic
+//!
+//! Each cell also re-checks the bit-identity pin against its flat arm
+//! (PASS/MISS in the table).
+//!
+//!     cargo bench --bench bench_shard_scaling [-- --rounds N]
+//!
+//! Emits `BENCH_shard_scaling.json` (see `benchkit::emit_json`).
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::config::{FedConfig, Method};
+use fedstc::sim::Experiment;
+use fedstc::util::benchkit::{banner, bench_args, emit_json, Table};
+use fedstc::util::json::Json;
+use fedstc::util::{bits_to_mb, Timer};
+
+const BATCH: usize = 20;
+const WARMUP_ROUNDS: usize = 2;
+const SHARD_BPS: f64 = 1e8;
+
+fn cfg(clients: usize, timed_rounds: usize) -> FedConfig {
+    let method = Method::Stc { p_up: 0.02, p_down: 0.02 };
+    let iters_per_round = method.local_iters();
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: clients,
+        participation: 1.0,
+        classes_per_client: 5,
+        batch_size: BATCH,
+        method,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: (WARMUP_ROUNDS + timed_rounds + 1) * iters_per_round,
+        eval_every: 1_000_000,
+        seed: 11,
+        train_examples: 2400,
+        test_examples: 200,
+        ..Default::default()
+    }
+}
+
+struct Cell {
+    rounds_per_sec: f64,
+    sim_s_per_round: f64,
+    hop_mb_per_round: f64,
+    params: Vec<u32>,
+}
+
+/// Drive one cluster arm (shards = 0 means flat) for the timed rounds.
+fn run_arm(c: &FedConfig, shards: usize, timed_rounds: usize) -> anyhow::Result<Cell> {
+    let exp = Experiment::new(c.clone())?;
+    let init = exp.spec.init_flat(c.seed);
+    let mut ccfg = ClusterConfig::new(c.clone());
+    ccfg.workers = 4;
+    ccfg.shards = shards;
+    if shards > 0 {
+        ccfg.shard_up_bps = SHARD_BPS;
+        ccfg.shard_down_bps = SHARD_BPS;
+    }
+    let mut run = ClusterRun::new(ccfg, &exp.train, init)?;
+    let factory = NativeLogregFactory { batch_size: c.batch_size };
+    for _ in 0..WARMUP_ROUNDS {
+        run.next_round(&factory, &exp.train)?;
+    }
+    let sim_before = run.sim_clock_s;
+    let hop_before = run.stats.shard_hop_up_bits + run.stats.shard_hop_down_bits;
+    let t = Timer::start();
+    for _ in 0..timed_rounds {
+        run.next_round(&factory, &exp.train)?;
+    }
+    let wall = t.secs();
+    let hop_bits = run.stats.shard_hop_up_bits + run.stats.shard_hop_down_bits - hop_before;
+    Ok(Cell {
+        rounds_per_sec: timed_rounds as f64 / wall,
+        sim_s_per_round: (run.sim_clock_s - sim_before) / timed_rounds as f64,
+        hop_mb_per_round: bits_to_mb(hop_bits) / timed_rounds as f64,
+        params: run.server.params.iter().map(|x| x.to_bits()).collect(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args()?;
+    let timed_rounds: usize = args.get_parse("rounds")?.unwrap_or(10);
+    args.finish()?;
+
+    banner(
+        "shard scaling",
+        "aggregation tree vs flat server, shard count x population (stc, logreg)",
+    );
+
+    let populations = [32usize, 96];
+    let shard_counts = [0usize, 2, 4, 8, 16];
+
+    let mut table = Table::new(&[
+        "clients", "arm", "rounds/s", "sim s/round", "hop MB/round", "bit-identical",
+    ]);
+    let mut rows = Vec::new();
+    let mut all_identical = true;
+    for &clients in &populations {
+        let c = cfg(clients, timed_rounds);
+        let flat = run_arm(&c, 0, timed_rounds)?;
+        table.row(&[
+            clients.to_string(),
+            "flat".into(),
+            format!("{:.1}", flat.rounds_per_sec),
+            format!("{:.2}", flat.sim_s_per_round),
+            "0.000".into(),
+            "-".into(),
+        ]);
+        for &shards in &shard_counts[1..] {
+            let cell = run_arm(&c, shards, timed_rounds)?;
+            let identical = cell.params == flat.params;
+            all_identical &= identical;
+            table.row(&[
+                clients.to_string(),
+                format!("{shards} shards"),
+                format!("{:.1}", cell.rounds_per_sec),
+                format!("{:.2}", cell.sim_s_per_round),
+                format!("{:.3}", cell.hop_mb_per_round),
+                (if identical { "PASS" } else { "MISS" }).into(),
+            ]);
+            let mut row = Json::obj();
+            row.set("clients", Json::Num(clients as f64))
+                .set("shards", Json::Num(shards as f64))
+                .set("rounds_per_sec", Json::Num(cell.rounds_per_sec))
+                .set("flat_rounds_per_sec", Json::Num(flat.rounds_per_sec))
+                .set("sim_s_per_round", Json::Num(cell.sim_s_per_round))
+                .set("flat_sim_s_per_round", Json::Num(flat.sim_s_per_round))
+                .set("hop_mb_per_round", Json::Num(cell.hop_mb_per_round))
+                .set("bit_identical", Json::Bool(identical));
+            rows.push(row);
+        }
+    }
+    table.print();
+
+    println!(
+        "\n{} every sharded arm reproduced its flat arm bit-for-bit",
+        if all_identical { "PASS" } else { "MISS" }
+    );
+    println!(
+        "Expected shape: rounds/s within noise of flat (the fold is one dense \
+         pass over each round's uploads); sim s/round and hop MB/round grow \
+         with shard count — each shard ships one dense frame per direction."
+    );
+
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("shard_scaling".into()))
+        .set("timed_rounds", Json::Num(timed_rounds as f64))
+        .set("shard_bps", Json::Num(SHARD_BPS))
+        .set("all_bit_identical", Json::Bool(all_identical))
+        .set("cells", Json::Arr(rows));
+    let path = emit_json("shard_scaling", &out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

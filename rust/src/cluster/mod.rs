@@ -101,6 +101,15 @@ pub struct ClusterConfig {
     pub server_down_bps: f64,
     /// how concurrent transfers share the server link
     pub contention_policy: ContentionPolicy,
+    /// intermediate aggregators for the sharded topology
+    /// ([`crate::session::Execution::Sharded`]); 0 = flat single-server
+    /// aggregation (the default). When > 0, every shard→root hop is
+    /// scheduled through the contention scheduler on its own link.
+    pub shards: usize,
+    /// aggregate shard→root ingress all shard hops share, bits/second
+    pub shard_up_bps: f64,
+    /// aggregate root→shard egress all broadcast relays share, bits/second
+    pub shard_down_bps: f64,
     /// hard tick budget so pathological configs (everyone offline) always
     /// terminate
     pub max_ticks: usize,
@@ -126,6 +135,9 @@ impl ClusterConfig {
             server_up_bps: f64::INFINITY,
             server_down_bps: f64::INFINITY,
             contention_policy: ContentionPolicy::FairShare,
+            shards: 0,
+            shard_up_bps: f64::INFINITY,
+            shard_down_bps: f64::INFINITY,
             // WaitingForMembers + Warmup + 3 phases/round + slack for
             // empty rounds and churn stalls
             max_ticks: rounds * 8 + 1000,
@@ -157,6 +169,15 @@ impl ClusterConfig {
         anyhow::ensure!(self.straggler_slowdown >= 1.0, "straggler_slowdown >= 1");
         anyhow::ensure!(self.tick_seconds > 0.0, "tick_seconds > 0");
         self.server_link().validate()?;
+        if self.shards > 0 {
+            anyhow::ensure!(
+                self.shards <= self.fed.num_clients,
+                "shards must be <= num_clients ({} > {})",
+                self.shards,
+                self.fed.num_clients
+            );
+            self.shard_link().validate()?;
+        }
         Ok(())
     }
 
@@ -171,6 +192,15 @@ impl ClusterConfig {
         ServerLink {
             up_bps: self.server_up_bps,
             down_bps: self.server_down_bps,
+            policy: self.contention_policy,
+        }
+    }
+
+    /// The shared shard→root link (sharded topology only).
+    pub fn shard_link(&self) -> ServerLink {
+        ServerLink {
+            up_bps: self.shard_up_bps,
+            down_bps: self.shard_down_bps,
             policy: self.contention_policy,
         }
     }
@@ -221,6 +251,28 @@ mod tests {
         let mut c = ClusterConfig::new(FedConfig::default());
         c.server_up_bps = 1e6;
         c.contention_policy = ContentionPolicy::Fifo;
+        assert!(c.validate().is_ok());
+    }
+
+    #[test]
+    fn validate_rejects_bad_shard_plan() {
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.shards = c.fed.num_clients + 1;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.shards = 2;
+        c.shard_up_bps = 0.0;
+        assert!(c.validate().is_err());
+
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.shards = 2;
+        c.shard_up_bps = 1e6;
+        assert!(c.validate().is_ok());
+
+        // shard link knobs are ignored (and legal) when sharding is off
+        let mut c = ClusterConfig::new(FedConfig::default());
+        c.shard_up_bps = 0.0;
         assert!(c.validate().is_ok());
     }
 

@@ -26,7 +26,7 @@ use super::transport::{Direction, TransferReq, Transport};
 use super::ClusterConfig;
 use crate::compression::Message;
 use crate::data::Dataset;
-use crate::session::{Execution, Session};
+use crate::session::{execution, Execution, Session, ShardPlan};
 use crate::telemetry::{ClusterEvent, ParticipantEvent, TickProbe};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -92,6 +92,14 @@ pub struct ClusterStats {
     pub peak_up_concurrency: u64,
     /// most downloads simultaneously on the server wire
     pub peak_down_concurrency: u64,
+    /// shard→root partial-sum transfers (sharded topology only)
+    pub shard_hops_up: u64,
+    /// root→shard broadcast relays
+    pub shard_hops_down: u64,
+    /// bits billed to shard→root hops
+    pub shard_hop_up_bits: u64,
+    /// bits billed to root→shard relays
+    pub shard_hop_down_bits: u64,
 }
 
 impl ClusterStats {
@@ -112,7 +120,11 @@ impl ClusterStats {
             .set("up_queue_seconds", Json::Num(self.up_queue_seconds))
             .set("down_queue_seconds", Json::Num(self.down_queue_seconds))
             .set("peak_up_concurrency", Json::Num(self.peak_up_concurrency as f64))
-            .set("peak_down_concurrency", Json::Num(self.peak_down_concurrency as f64));
+            .set("peak_down_concurrency", Json::Num(self.peak_down_concurrency as f64))
+            .set("shard_hops_up", Json::Num(self.shard_hops_up as f64))
+            .set("shard_hops_down", Json::Num(self.shard_hops_down as f64))
+            .set("shard_hop_up_bits", Json::Num(self.shard_hop_up_bits as f64))
+            .set("shard_hop_down_bits", Json::Num(self.shard_hop_down_bits as f64));
         o
     }
 }
@@ -181,6 +193,9 @@ pub struct ClusterRun {
     session: Session,
     pub membership: Membership,
     pub transport: Transport,
+    /// the shard→root link (sharded topology only): one "client" per
+    /// shard, no stragglers, its own contended up/down bandwidth
+    shard_transport: Option<Transport>,
     pub stats: ClusterStats,
     /// successfully aggregated rounds
     pub rounds_done: usize,
@@ -226,12 +241,12 @@ impl ClusterRun {
     /// superstructure.
     pub fn new(cfg: ClusterConfig, train: &Dataset, init_params: Vec<f32>) -> anyhow::Result<Self> {
         cfg.validate()?;
-        let session = Session::new(
-            cfg.fed.clone(),
-            train,
-            init_params,
-            Execution::ThreadPool(WorkerPool::new(cfg.workers)),
-        )?;
+        let exec = if cfg.shards > 0 {
+            Execution::Sharded(ShardPlan::new(cfg.shards, cfg.workers)?)
+        } else {
+            Execution::ThreadPool(WorkerPool::new(cfg.workers))
+        };
+        let session = Session::new(cfg.fed.clone(), train, init_params, exec)?;
         let event_rng = Pcg64::new(cfg.fed.seed, 0xe7e7);
         let membership = Membership::new(cfg.fed.num_clients, cfg.fed.seed, cfg.initial_members());
         let transport = Transport::with_server(
@@ -241,10 +256,16 @@ impl ClusterRun {
             cfg.straggler_slowdown,
             cfg.server_link(),
         );
+        // one "client" per shard on its own shared medium; no straggler
+        // process of its own (aggregators are infrastructure, not users)
+        let shard_transport = (cfg.shards > 0).then(|| {
+            Transport::with_server(cfg.shards, cfg.fed.seed, 0.0, 1.0, cfg.shard_link())
+        });
         Ok(ClusterRun {
             session,
             membership,
             transport,
+            shard_transport,
             stats: ClusterStats::default(),
             rounds_done: 0,
             ticks: 0,
@@ -292,6 +313,13 @@ impl ClusterRun {
             p.on_cluster_event(&ev)?;
         }
         Ok(())
+    }
+
+    /// Which shard a client's transfers belong to; `None` when the
+    /// topology is flat.
+    fn shard_of_client(&self, id: usize) -> Option<usize> {
+        (self.cfg.shards > 0)
+            .then(|| execution::shard_of(id, self.cfg.shards, self.cfg.fed.num_clients))
     }
 
     pub fn phase(&self) -> Phase {
@@ -451,11 +479,13 @@ impl ClusterRun {
                     self.stats.catch_up_syncs += 1;
                     self.stats.catch_up_bits += bits;
                 }
+                let shard = self.shard_of_client(id);
                 self.emit(ClusterEvent::Transfer {
                     tick: self.ticks,
                     sim_s: self.sim_clock_s,
                     dir: Direction::Down,
                     client_id: id,
+                    shard,
                     bits,
                     ready_s: 0.0,
                     duration_s: secs,
@@ -559,11 +589,13 @@ impl ClusterRun {
         self.session.ledger.note_up_concurrency(sched.telemetry.peak_concurrency);
 
         for (req, tim) in reqs.iter().zip(&sched.timings) {
+            let shard = self.shard_of_client(req.client_id);
             self.emit(ClusterEvent::Transfer {
                 tick: self.ticks,
                 sim_s: self.sim_clock_s,
                 dir: Direction::Up,
                 client_id: req.client_id,
+                shard,
                 bits: req.bits,
                 ready_s: req.ready_s,
                 duration_s: tim.duration_s,
@@ -594,7 +626,7 @@ impl ClusterRun {
 
     fn tick_aggregate(&mut self) -> anyhow::Result<RoundSummary> {
         let pending = std::mem::take(&mut self.pending);
-        let queue_secs = self.pending_queue_secs;
+        let mut queue_secs = self.pending_queue_secs;
         self.pending_queue_secs = 0.0;
         self.phase = Phase::Cooldown { ticks_left: self.cfg.cooldown_ticks };
 
@@ -607,6 +639,7 @@ impl ClusterRun {
                 round: self.session.server.round,
                 aggregated: 0,
                 late: 0,
+                shards: 0,
                 deadline_s: self.cfg.tick_seconds,
                 queue_s: queue_secs,
             })?;
@@ -640,6 +673,8 @@ impl ClusterRun {
         let deadline = base * self.cfg.deadline_grace;
 
         let mut msgs: Vec<Message> = Vec::with_capacity(pending.len());
+        let mut agg_ids: Vec<usize> = Vec::with_capacity(pending.len());
+        let mut arrival_of = vec![0.0f64; self.cfg.fed.num_clients];
         let mut loss_sum = 0.0f64;
         let trained = pending.len();
         let mut late = 0usize;
@@ -655,6 +690,8 @@ impl ClusterRun {
                 // only messages the server actually aggregates reach the
                 // observers (transcripts replay exactly these)
                 self.session.notify_upload(p.client_id, &p.msg, p.up_bits)?;
+                agg_ids.push(p.client_id);
+                arrival_of[p.client_id] = p.arrival_s;
                 msgs.push(p.msg);
             } else {
                 late += 1;
@@ -681,20 +718,131 @@ impl ClusterRun {
         }
         let aggregated = msgs.len();
         let mean_loss = (loss_sum / trained as f64) as f32;
+
+        // Aggregation tree (Execution::Sharded): fold the on-time uploads
+        // into per-shard partial sums and schedule every shard→root hop on
+        // the shard link. The hops are billed *before* the commit so the
+        // round's ledger snapshot (and transcript frame) carries the hop
+        // bits; the root still reduces the original messages in slot
+        // order, which keeps the params bit-identical to the flat run.
+        let shard_rounds = if self.shard_transport.is_some() && !msgs.is_empty() {
+            execution::plan_shards(
+                self.cfg.shards,
+                self.cfg.fed.num_clients,
+                self.session.server.dim(),
+                &agg_ids,
+                &msgs,
+            )?
+        } else {
+            Vec::new()
+        };
+        let mut agg_ready_s = deadline;
+        if !shard_rounds.is_empty() {
+            let reqs: Vec<TransferReq> = shard_rounds
+                .iter()
+                .map(|s| TransferReq {
+                    client_id: s.id,
+                    bits: s.hop_up_bits,
+                    // a shard forwards once its last member's upload landed
+                    ready_s: s
+                        .members
+                        .iter()
+                        .map(|&m| arrival_of[m])
+                        .fold(0.0f64, f64::max),
+                })
+                .collect();
+            let sched = self
+                .shard_transport
+                .as_ref()
+                .expect("shard transport exists whenever shard_rounds is non-empty")
+                .schedule_uploads(&reqs);
+            self.stats.up_queue_seconds += sched.telemetry.queue_seconds;
+            queue_secs += sched.telemetry.queue_seconds;
+            for ((s, req), tim) in shard_rounds.iter().zip(&reqs).zip(&sched.timings) {
+                self.session.ledger.record_upload_contended(
+                    s.hop_up_bits as usize,
+                    tim.duration_s,
+                    tim.queue_s,
+                );
+                self.stats.shard_hops_up += 1;
+                self.stats.shard_hop_up_bits += s.hop_up_bits;
+                agg_ready_s = agg_ready_s.max(tim.end_s);
+                self.emit(ClusterEvent::ShardHop {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    dir: Direction::Up,
+                    shard: s.id,
+                    members: s.members.len(),
+                    bits: s.hop_up_bits,
+                    ready_s: req.ready_s,
+                    duration_s: tim.duration_s,
+                    queue_s: tim.queue_s,
+                    end_s: tim.end_s,
+                })?;
+            }
+            // membership + hop billing reach the observers (transcript v3
+            // shard frames) before the round frame snapshots the ledger
+            self.session.notify_shards(&shard_rounds)?;
+        }
+
         // the deadline always covers the slowest eligible participant
         // (grace ≥ 1), so msgs is non-empty whenever anyone trained;
         // all-dropped rounds were counted as empty above — and if a
         // future bug ever breaks that invariant, aggregation now reports
         // a clean error instead of panicking
-        self.session.commit_round(&msgs, mean_loss)?;
+        let down_bits = self.session.commit_round(&msgs, mean_loss)?;
         self.rounds_done += 1;
-        self.sim_clock_s += deadline;
+
+        // root→shard return hop: each shard relays the broadcast onward
+        let mut round_end_s = agg_ready_s;
+        if !shard_rounds.is_empty() && down_bits > 0 {
+            let reqs: Vec<TransferReq> = shard_rounds
+                .iter()
+                .map(|s| TransferReq {
+                    client_id: s.id,
+                    bits: down_bits as u64,
+                    ready_s: agg_ready_s,
+                })
+                .collect();
+            let sched = self
+                .shard_transport
+                .as_ref()
+                .expect("shard transport exists whenever shard_rounds is non-empty")
+                .schedule_downloads(&reqs);
+            self.stats.down_queue_seconds += sched.telemetry.queue_seconds;
+            queue_secs += sched.telemetry.queue_seconds;
+            for (s, tim) in shard_rounds.iter().zip(&sched.timings) {
+                self.session.ledger.record_download_contended(
+                    down_bits,
+                    tim.duration_s,
+                    tim.queue_s,
+                );
+                self.stats.shard_hops_down += 1;
+                self.stats.shard_hop_down_bits += down_bits as u64;
+                round_end_s = round_end_s.max(tim.end_s);
+                self.emit(ClusterEvent::ShardHop {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    dir: Direction::Down,
+                    shard: s.id,
+                    members: s.members.len(),
+                    bits: down_bits as u64,
+                    ready_s: agg_ready_s,
+                    duration_s: tim.duration_s,
+                    queue_s: tim.queue_s,
+                    end_s: tim.end_s,
+                })?;
+            }
+        }
+
+        self.sim_clock_s += round_end_s;
         self.emit(ClusterEvent::RoundClose {
             tick: self.ticks,
             sim_s: self.sim_clock_s,
             round: self.session.server.round,
             aggregated,
             late,
+            shards: shard_rounds.len(),
             deadline_s: deadline,
             queue_s: queue_secs,
         })?;
@@ -708,7 +856,7 @@ impl ClusterRun {
             mean_loss,
             catch_up_clients: self.pending_catchup_clients,
             catch_up_bits: self.pending_catchup_bits,
-            round_secs: deadline,
+            round_secs: round_end_s,
             queue_secs,
         })
     }
@@ -1003,6 +1151,7 @@ mod tests {
             participants: usize,
             transfers_up: usize,
             transfers_down: usize,
+            shard_hops: usize,
             late: usize,
             closes: usize,
         }
@@ -1019,6 +1168,7 @@ mod tests {
                     ClusterEvent::Participant { .. } => c.participants += 1,
                     ClusterEvent::Transfer { dir: Direction::Up, .. } => c.transfers_up += 1,
                     ClusterEvent::Transfer { dir: Direction::Down, .. } => c.transfers_down += 1,
+                    ClusterEvent::ShardHop { .. } => c.shard_hops += 1,
                     ClusterEvent::LateUpload { .. } => c.late += 1,
                     ClusterEvent::RoundClose { .. } => c.closes += 1,
                 }
@@ -1064,6 +1214,7 @@ mod tests {
         );
         assert_eq!(c.transfers_up as u64, observed.ledger.uploads);
         assert_eq!(c.transfers_down as u64, observed.ledger.downloads);
+        assert_eq!(c.shard_hops, 0, "flat run emits no shard hops");
         assert!(c.phases >= 5, "full lifecycle crosses at least 5 phase boundaries");
         assert!(c.membership > 0 || observed.stats.churn_dropouts == 0);
     }
@@ -1089,5 +1240,47 @@ mod tests {
         // both see contention, but they price it differently
         assert!(fair.stats.up_queue_seconds > 0.0);
         assert!(fifo.stats.up_queue_seconds > 0.0);
+    }
+
+    #[test]
+    fn sharded_cluster_matches_flat_modulo_hop_bits() {
+        // The tentpole pin, cluster edition: an aggregation tree changes
+        // *where* bits flow (extra shard→root hops on their own link) but
+        // not *what* the root aggregates — even under stragglers, dropout
+        // and churn, because shards fold exactly the on-time messages.
+        let mk = |shards: usize| {
+            let mut ccfg =
+                ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6));
+            ccfg.straggler_frac = 0.2;
+            ccfg.dropout_rate = 0.2;
+            ccfg.churn = 0.1;
+            ccfg.shards = shards;
+            ccfg.shard_up_bps = 1e6;
+            ccfg.shard_down_bps = 1e6;
+            let (mut run, train) = build(ccfg);
+            let factory = NativeLogregFactory { batch_size: 10 };
+            while !run.finished() {
+                run.tick(&factory, &train).unwrap();
+            }
+            run
+        };
+        let flat = mk(0);
+        let tree = mk(4);
+        assert_eq!(flat.server.params, tree.server.params, "sharding changed the math");
+        assert_eq!(flat.rounds_done, tree.rounds_done);
+        assert!(tree.stats.shard_hops_up > 0, "{:?}", tree.stats);
+        // ledger totals reconcile exactly: flat totals + the billed hops
+        assert_eq!(
+            tree.ledger.total_up_bits,
+            flat.ledger.total_up_bits + tree.stats.shard_hop_up_bits,
+        );
+        assert_eq!(
+            tree.ledger.total_down_bits,
+            flat.ledger.total_down_bits + tree.stats.shard_hop_down_bits,
+        );
+        assert_eq!(tree.ledger.uploads, flat.ledger.uploads + tree.stats.shard_hops_up);
+        assert_eq!(tree.ledger.downloads, flat.ledger.downloads + tree.stats.shard_hops_down);
+        // the finite shard link costs simulated time
+        assert!(tree.sim_clock_s > flat.sim_clock_s);
     }
 }

@@ -43,11 +43,20 @@
 //!   wall-clock time — including queueing delay — alongside bits.
 //! * [`session`] — the unified session layer: **one round engine** behind
 //!   the serial and cluster runs ([`session::Session`], parameterised by
-//!   an execution strategy and observer hooks), plus versioned on-disk
-//!   round transcripts ([`session::TranscriptWriter`] /
-//!   [`session::Transcript`]) and deterministic record/replay
-//!   ([`session::replay`], `repro replay`) that re-executes a recorded
-//!   run bit-for-bit without ever constructing a trainer.
+//!   an execution strategy and observer hooks). Execution strategies are
+//!   an open, string-keyed registry mirroring the protocol one
+//!   ([`session::execution::by_name`] — `serial`, `pool:8`,
+//!   `sharded:16x4` — extended via [`session::execution::register`]);
+//!   [`session::Execution::Sharded`] routes uploads through a tree of
+//!   intermediate shard aggregators whose partial-sum hops are billed on
+//!   their own link, while staying bit-identical to the flat run. Plus
+//!   versioned on-disk round transcripts ([`session::TranscriptWriter`] /
+//!   [`session::Transcript`], v3 frames carrying shard membership + hop
+//!   billing), deterministic record/replay ([`session::replay`],
+//!   `repro replay`) that re-executes a recorded run bit-for-bit without
+//!   ever constructing a trainer, and transcript diffing
+//!   ([`session::diff_bytes`], `repro replay --against`) that reports
+//!   the first diverging frame.
 //! * [`sim`] — the federated learning simulation engine driving complete
 //!   experiments, and the sign-congruence analysis of Fig. 3.
 //! * [`telemetry`] — structured JSONL run traces, a Prometheus-style

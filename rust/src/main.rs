@@ -4,9 +4,11 @@
 //!   train      run one federated training experiment and print the curve
 //!   cluster    run the tick-driven parallel cluster simulation (dynamic
 //!              membership: joins, dropouts, stragglers, churn)
-//!   replay     re-execute / verify a recorded transcript (no trainer)
+//!   replay     re-execute / verify a recorded transcript (no trainer),
+//!              or diff two transcripts (--against)
 //!   alpha      gradient sign-congruence analysis (paper Fig. 3)
 //!   protocols  list the registered compression protocols (--method names)
+//!   executions list the registered execution strategies (--execution)
 //!   info       artifact + model inventory
 //!   sweep      grid over one config key (comma-separated values)
 //!   help       this text
@@ -25,10 +27,12 @@ use fedstc::metrics::EvalPoint;
 use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
 use fedstc::protocol::Protocol;
 use fedstc::runtime::{Engine, HloTrainer};
-use fedstc::session::{replay, Observer, Transcript, TranscriptWriter};
+use fedstc::session::{
+    diff_bytes, execution, replay, Execution, Transcript, TranscriptWriter,
+};
 use fedstc::sim::alpha::{AlphaAnalysis, BatchRegime};
 use fedstc::sim::{cluster_report_csv, cluster_report_json, CurveBuilder, Experiment};
-use fedstc::telemetry::{MetricsHub, ProgressObserver, TraceWriter};
+use fedstc::telemetry::{MetricsHub, ProgressObserver, TelemetryHandles, TraceWriter};
 use fedstc::util::{bits_to_mb, Timer};
 
 fn main() {
@@ -46,6 +50,7 @@ fn run() -> anyhow::Result<()> {
         "replay" => cmd_replay(&args),
         "alpha" => cmd_alpha(&args),
         "protocols" => cmd_protocols(&args),
+        "executions" => cmd_executions(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),
         _ => {
@@ -71,6 +76,9 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
             // CLI-only keys that are not FedConfig fields
             "backend" | "out" | "config" | "verbose" | "key" | "values" | "ks" | "trials" => {}
             "record" if records => {}
+            // the execution strategy (`execution::by_name` spec) is read
+            // by cmd_train/cmd_cluster, not by FedConfig
+            "execution" if records => {}
             // telemetry flags (pure observers; cmd_train/cmd_cluster
             // read them through telemetry_from_args)
             "trace" | "metrics" | "progress" if records => {}
@@ -80,6 +88,7 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
             "workers" | "dropout-rate" | "straggler-frac" | "churn" | "initial-frac"
             | "join-rate" | "min-members" | "warmup" | "cooldown" | "grace"
             | "server-up-bps" | "server-down-bps" | "contention-policy"
+            | "shards" | "shard-up-bps" | "shard-down-bps"
                 if is_cluster => {}
             _ => cfg.apply_kv(&k, &v)?,
         }
@@ -87,35 +96,30 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
     Ok(cfg)
 }
 
-/// Parse the shared telemetry flags into observers. `--trace FILE`
-/// writes a deterministic JSONL event stream (plus a sibling
-/// `FILE.perf.jsonl` wall-clock channel), `--metrics FILE` a
+/// Parse the shared telemetry flags into one [`TelemetryHandles`].
+/// `--trace FILE` writes a deterministic JSONL event stream (plus a
+/// sibling `FILE.perf.jsonl` wall-clock channel), `--metrics FILE` a
 /// Prometheus-text (or, for `.json`, JSON) snapshot at run end,
 /// `--progress` a live one-line report on stderr. The trace/metrics
-/// handles are also returned so `cmd_cluster` can register the same
-/// objects as tick probes — all three are pure observers and never
-/// change what a run computes.
-fn telemetry_from_args(
-    args: &Args,
-    total_rounds: usize,
-) -> anyhow::Result<(Vec<Box<dyn Observer>>, Option<TraceWriter>, Option<MetricsHub>)> {
-    let mut observers: Vec<Box<dyn Observer>> = Vec::new();
-    let mut trace = None;
-    let mut metrics = None;
+/// handles ride alongside the boxed observers so `cmd_cluster` can
+/// register the same objects as tick probes — all three are pure
+/// observers and never change what a run computes.
+fn telemetry_from_args(args: &Args, total_rounds: usize) -> anyhow::Result<TelemetryHandles> {
+    let mut handles = TelemetryHandles::default();
     if let Some(path) = args.get("trace") {
         let w = TraceWriter::create(std::path::Path::new(&path))?;
-        observers.push(Box::new(w.clone()));
-        trace = Some(w);
+        handles.observers.push(Box::new(w.clone()));
+        handles.trace = Some(w);
     }
     if let Some(path) = args.get("metrics") {
         let h = MetricsHub::with_output(std::path::Path::new(&path));
-        observers.push(Box::new(h.clone()));
-        metrics = Some(h);
+        handles.observers.push(Box::new(h.clone()));
+        handles.metrics = Some(h);
     }
     if args.flag("progress") {
-        observers.push(Box::new(ProgressObserver::new(total_rounds)));
+        handles.observers.push(Box::new(ProgressObserver::new(total_rounds)));
     }
-    Ok((observers, trace, metrics))
+    Ok(handles)
 }
 
 fn make_trainer(cfg: &FedConfig, backend: &str) -> anyhow::Result<Box<dyn Trainer>> {
@@ -143,17 +147,39 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let record = args.get("record");
     let trace = args.get("trace");
     let metrics = args.get("metrics");
-    let (mut observers, _, _) = telemetry_from_args(args, cfg.rounds())?;
+    let exec = match args.get("execution") {
+        Some(spec) => execution::by_name(&spec)?,
+        None => Execution::Serial,
+    };
+    // the serial driver trains in-thread (the Trainer is a borrowed
+    // oracle, not shippable to a pool); multi-worker specs belong to
+    // `repro cluster --execution`
+    let pooled = match exec {
+        Execution::Serial => false,
+        Execution::ThreadPool(_) => true,
+        Execution::Sharded(plan) => plan.pool.workers() > 1,
+    };
+    anyhow::ensure!(
+        !pooled,
+        "execution '{}' trains on a worker pool; `repro train` runs in-thread — \
+         use `repro cluster --execution {0}` (or a 1-worker spec like `sharded:4x1`)",
+        execution::spec_of(&exec)
+    );
+    let mut tele = telemetry_from_args(args, cfg.rounds())?;
     args.finish()?;
 
     println!("# {}", cfg.describe());
+    if !matches!(exec, Execution::Serial) {
+        println!("# execution: {}", execution::spec_of(&exec));
+    }
     let timer = Timer::start();
     let exp = Experiment::new(cfg)?;
     let mut trainer = make_trainer(&exp.cfg, &backend)?;
     if let Some(path) = &record {
-        observers.push(Box::new(TranscriptWriter::create(std::path::Path::new(path), true)?));
+        tele.observers
+            .push(Box::new(TranscriptWriter::create(std::path::Path::new(path), true)?));
     }
-    let log = exp.run_observed(trainer.as_mut(), observers)?;
+    let log = exp.run_observed_with(trainer.as_mut(), tele.observers, exec)?;
 
     println!("iter  round  accuracy  loss     trainloss  upMB      downMB");
     for p in &log.points {
@@ -192,14 +218,39 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
 /// `repro replay <file>` — re-execute a recorded transcript through a
 /// fresh server, with **zero trainer invocations**, verifying the
 /// recorded per-round broadcast bits and model checksums (and, for
-/// serial recordings, the full communication ledger).
+/// serial recordings, the full communication ledger). With
+/// `--against other.fstx`, diff the two recordings instead and report
+/// the first diverging frame (round, field, byte offset).
 fn cmd_replay(args: &Args) -> anyhow::Result<()> {
-    let file = args
-        .positional(0)
-        .or_else(|| args.get("file"))
-        .ok_or_else(|| anyhow::anyhow!("usage: repro replay <file.fstx> [--verbose]"))?;
+    let file = args.positional(0).or_else(|| args.get("file")).ok_or_else(|| {
+        anyhow::anyhow!("usage: repro replay <file.fstx> [--verbose] [--against other.fstx]")
+    })?;
     let verbose = args.flag("verbose");
+    let against = args.get("against");
     args.finish()?;
+
+    if let Some(other) = against {
+        let a = std::fs::read(&file)?;
+        let b = std::fs::read(&other)?;
+        return match diff_bytes(&a, &b)? {
+            None => {
+                println!("OK: transcripts identical ({} bytes)", a.len());
+                Ok(())
+            }
+            Some(d) => {
+                println!(
+                    "transcripts diverge at {} (first differing byte: offset {}):",
+                    match d.round {
+                        Some(r) => format!("round {r}, field {}", d.field),
+                        None => format!("field {}", d.field),
+                    },
+                    d.byte_offset
+                );
+                println!("  {file} vs {other}: {}", d.detail);
+                anyhow::bail!("transcripts differ")
+            }
+        };
+    }
 
     let t = Transcript::read_file(std::path::Path::new(&file))?;
     println!(
@@ -319,11 +370,33 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     if let Some(v) = args.get("contention-policy") {
         ccfg.contention_policy = ContentionPolicy::parse(&v)?;
     }
+    // aggregation tree: 0 shards (the default) = flat single-server
+    if let Some(v) = args.get_parse("shards")? {
+        ccfg.shards = v;
+    }
+    if let Some(v) = args.get_parse("shard-up-bps")? {
+        ccfg.shard_up_bps = v;
+    }
+    if let Some(v) = args.get_parse("shard-down-bps")? {
+        ccfg.shard_down_bps = v;
+    }
+    // --execution is the registry spelling of the same knobs (workers +
+    // shard count in one spec); it wins over --workers/--shards
+    if let Some(spec) = args.get("execution") {
+        match execution::by_name(&spec)? {
+            Execution::Serial => ccfg.workers = 1,
+            Execution::ThreadPool(p) => ccfg.workers = p.workers(),
+            Execution::Sharded(plan) => {
+                ccfg.shards = plan.shards;
+                ccfg.workers = plan.pool.workers();
+            }
+        }
+    }
     let out = args.get("out");
     let record = args.get("record");
     let trace_path = args.get("trace");
     let metrics_path = args.get("metrics");
-    let (observers, trace, metrics) = telemetry_from_args(args, ccfg.fed.rounds())?;
+    let tele = telemetry_from_args(args, ccfg.fed.rounds())?;
     args.finish()?;
 
     println!(
@@ -338,21 +411,28 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         "# server link: up {} bps / down {} bps, policy {}",
         ccfg.server_up_bps, ccfg.server_down_bps, ccfg.contention_policy.label()
     );
+    if ccfg.shards > 0 {
+        println!(
+            "# aggregation tree: {} shards, shard link up {} bps / down {} bps",
+            ccfg.shards, ccfg.shard_up_bps, ccfg.shard_down_bps
+        );
+    }
     let exp = Experiment::new(ccfg.fed.clone())?;
     let init = exp.spec.init_flat(exp.cfg.seed);
     let mut cluster = ClusterRun::new(ccfg, &exp.train, init)?;
     if let Some(path) = &record {
         cluster.record_to(std::path::Path::new(path))?;
     }
-    for ob in observers {
+    for ob in tele.observers {
         cluster.add_observer(ob);
     }
     // the same handles watch the tick machine: phase transitions,
-    // membership churn, simulated transfers, late uploads, round closes
-    if let Some(w) = trace {
+    // membership churn, simulated transfers, shard hops, late uploads,
+    // round closes
+    if let Some(w) = tele.trace {
         cluster.add_probe(Box::new(w));
     }
-    if let Some(h) = metrics {
+    if let Some(h) = tele.metrics {
         cluster.add_probe(Box::new(h));
     }
     let factory = NativeLogregFactory { batch_size: exp.cfg.batch_size };
@@ -519,6 +599,35 @@ fn cmd_protocols(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro executions` — the registry behind `--execution`: every
+/// execution strategy (built-ins + anything registered at runtime via
+/// `fedstc::session::execution::register`).
+fn cmd_executions(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    println!("registered execution strategies (use as --execution <spec>):");
+    println!("{:<10} {:<42} {}", "name", "spec forms", "strategy");
+    for name in execution::names() {
+        let (forms, what) = match name.as_str() {
+            "serial" => ("serial", "in-thread round loop (train default)"),
+            "pool" => ("pool:8 | pool:workers=8", "worker-pool training, flat aggregation"),
+            "sharded" => (
+                "sharded:16x4 | sharded:shards=16,pool=4",
+                "aggregation tree: shard partial sums feed the root",
+            ),
+            _ => ("<name>[:args]", "externally registered"),
+        };
+        println!("{name:<10} {forms:<42} {what}");
+    }
+    println!(
+        "\nargs: positional (sharded:16x4 = 16 shards, 4 workers) or named\n\
+         (sharded:shards=16,pool=4); `repro train` accepts in-thread specs,\n\
+         `repro cluster --execution` maps pool/shard counts onto\n\
+         --workers/--shards; external strategies register via\n\
+         fedstc::session::execution::register"
+    );
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     args.finish()?;
     println!("fedstc {} — Sparse Ternary Compression for Federated Learning", fedstc::VERSION);
@@ -581,7 +690,7 @@ fn print_help() {
     println!(
         "repro — fedstc launcher (Sparse Ternary Compression, Sattler et al. 2019)
 
-usage: repro <train|cluster|replay|alpha|protocols|info|sweep|help> [--key value]...
+usage: repro <train|cluster|replay|alpha|protocols|executions|info|sweep|help> [--key value]...
 
 examples:
   repro train --model logreg --method stc:0.0025 --classes 1 --iters 400
@@ -590,19 +699,29 @@ examples:
   repro train --method stc:0.01 --iters 200 --record run.fstx
   repro train --method stc:0.01 --iters 200 --trace t.jsonl --metrics m.prom --progress
   repro replay run.fstx --verbose
+  repro replay run.fstx --against other.fstx
   repro cluster --workers 4 --dropout-rate 0.2 --straggler-frac 0.1 \\
       --churn 0.1 --clients 100 --iters 400 --method stc:0.01
+  repro cluster --execution sharded:8x4 --shard-up-bps 1e6 --iters 200
   repro cluster --iters 100 --record cluster.fstx
   repro alpha --ks 1,8,64 --trials 100
   repro protocols
+  repro executions
   repro sweep --key classes --values 1,2,4,10 --method stc:0.01 --iters 300
   repro info
 
 record/replay: --record FILE persists a versioned round transcript
   (every upload's wire bytes + per-round model checksums); repro replay
   re-executes it bit-for-bit with zero trainer invocations. Cluster
-  recordings additionally carry every §V-B sync event, so replay also
-  re-prices and verifies the download ledger.
+  recordings additionally carry every §V-B sync event — and, on sharded
+  runs, per-round shard membership + hop billing — so replay also
+  re-prices and verifies the download ledger. repro replay A --against B
+  diffs two recordings and reports the first diverging frame.
+
+execution (train + cluster): --execution <spec> picks the strategy from
+  the open registry (see repro executions): serial | pool:8 |
+  sharded:16x4 | sharded:shards=16,pool=4. On cluster runs the spec maps
+  onto --workers/--shards.
 
 telemetry (train + cluster, pure observers — never change the run):
   --trace FILE.jsonl   deterministic JSONL event stream (simulated time;
@@ -615,6 +734,8 @@ cluster-only keys: --workers N  --dropout-rate F  --straggler-frac F
   --warmup N  --cooldown N  --grace F
   --server-up-bps BPS  --server-down-bps BPS  (finite = shared medium;
   'inf' = independent links)  --contention-policy fair|fifo
+  --shards N  (aggregation tree: 0 = flat single server)
+  --shard-up-bps BPS  --shard-down-bps BPS  (the shard→root link)
   --out FILE.csv|FILE.json  (curve + cluster stats export)
   (plus any train config key)"
     );

@@ -1,0 +1,366 @@
+//! Execution strategies as an **open registry**, plus the sharded
+//! aggregation-tree plan.
+//!
+//! [`Execution`] says how a session executes one round: where local
+//! training runs (in-thread or over the [`WorkerPool`]) and what
+//! aggregation topology the uploads flow through (straight to the root
+//! server, or folded through a layer of shard aggregators first —
+//! [`Execution::Sharded`]). Like protocols, strategies are constructed
+//! from strings: [`by_name`] mirrors [`crate::protocol::by_name`]
+//! (`serial`, `pool:8`, `sharded:16x4`, `sharded:shards=16,pool=4`) and
+//! [`register`] lets external code add strategies without touching this
+//! crate; the enum variants stay thin, `Copy`-able values so existing
+//! call sites keep compiling.
+//!
+//! ## The aggregation tree
+//!
+//! Under [`Execution::Sharded`] the round's clients are partitioned into
+//! `shards` contiguous blocks ([`shard_of`]); each shard folds its
+//! decoded upload frames into a **partial sum** — the same algebra the
+//! §V-B partial-sum cache exploits, legal because every protocol's
+//! pre-vote reduction is an associative sum over decoded messages — and
+//! ships that one dense frame to the root over the shard→root hop. The
+//! hop is *billing and transport topology only*: the root still reduces
+//! the original decoded messages in canonical participant order
+//! (f32 addition is not associative, and signSGD's majority vote is not
+//! linear, so re-associating the actual arithmetic would break the
+//! bit-identity pin). An N-shard run is therefore bit-identical to the
+//! single-server run in params, residuals and transcript rounds; the
+//! ledgers differ by exactly the explicitly-billed hop bits
+//! ([`ShardRound::hop_up_bits`] up, `down_bits` per non-empty shard
+//! down). Pinned in `rust/tests/property_execution.rs`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::Execution;
+use crate::cluster::executor::WorkerPool;
+use crate::compression::Message;
+use crate::protocol::ProtocolArgs;
+
+/// The sharded strategy's static plan: how many intermediate
+/// aggregators, and the worker pool local training runs on.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardPlan {
+    /// number of intermediate aggregators (≥ 1)
+    pub shards: usize,
+    /// local-training executor (same role as [`Execution::ThreadPool`])
+    pub pool: WorkerPool,
+}
+
+impl ShardPlan {
+    pub fn new(shards: usize, workers: usize) -> anyhow::Result<ShardPlan> {
+        anyhow::ensure!(shards >= 1, "shard plan needs at least one shard");
+        anyhow::ensure!(workers >= 1, "shard plan needs at least one worker");
+        Ok(ShardPlan { shards, pool: WorkerPool::new(workers) })
+    }
+}
+
+/// Deterministic shard assignment: contiguous client-id blocks,
+/// `shard_of = id·shards / num_clients` — every shard gets
+/// ⌊n/s⌋ or ⌈n/s⌉ clients and the mapping is a pure function of the
+/// population, so membership is stable across rounds and identical in
+/// the serial and cluster drivers.
+pub fn shard_of(client_id: usize, shards: usize, num_clients: usize) -> usize {
+    debug_assert!(client_id < num_clients, "client {client_id} outside population {num_clients}");
+    debug_assert!(shards >= 1);
+    (client_id * shards) / num_clients.max(1)
+}
+
+/// One shard's slice of one round: which participants landed in it and
+/// what its shard→root hop costs.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardRound {
+    /// shard index in `0..plan.shards`
+    pub id: usize,
+    /// member client ids, in the round's canonical reduction order
+    pub members: Vec<usize>,
+    /// billed shard→root hop: the folded partial sum travels as one
+    /// dense frame, priced by the real wire encoder
+    pub hop_up_bits: u64,
+}
+
+/// Fold one round's decoded uploads into per-shard partial sums and
+/// price each shard's hop to the root. `ids` and `msgs` are parallel
+/// (the round's reduction order); only non-empty shards are returned.
+/// The partial sums themselves are transport payloads — callers keep
+/// aggregating the original `msgs` at the root (see the module docs for
+/// why).
+pub fn plan_shards(
+    shards: usize,
+    num_clients: usize,
+    dim: usize,
+    ids: &[usize],
+    msgs: &[Message],
+) -> anyhow::Result<Vec<ShardRound>> {
+    anyhow::ensure!(shards >= 1, "plan_shards needs at least one shard");
+    anyhow::ensure!(
+        ids.len() == msgs.len(),
+        "plan_shards: {} ids for {} messages",
+        ids.len(),
+        msgs.len()
+    );
+    let mut partials: Vec<Option<(Vec<usize>, Vec<f32>)>> = vec![None; shards];
+    for (&id, msg) in ids.iter().zip(msgs) {
+        anyhow::ensure!(id < num_clients, "client {id} outside population {num_clients}");
+        let s = shard_of(id, shards, num_clients);
+        let (members, partial) =
+            partials[s].get_or_insert_with(|| (Vec::new(), vec![0.0f32; dim]));
+        members.push(id);
+        msg.add_to(partial, 1.0);
+    }
+    Ok(partials
+        .into_iter()
+        .enumerate()
+        .filter_map(|(id, slot)| {
+            slot.map(|(members, partial)| {
+                let hop_up_bits =
+                    Message::Dense { values: partial }.to_wire().payload_bits as u64;
+                ShardRound { id, members, hop_up_bits }
+            })
+        })
+        .collect())
+}
+
+/// Canonical registry spec for an execution value (inverse of
+/// [`by_name`] for the built-ins; used by `repro executions` and run
+/// banners).
+pub fn spec_of(exec: &Execution) -> String {
+    match exec {
+        Execution::Serial => "serial".to_string(),
+        Execution::ThreadPool(p) => format!("pool:{}", p.workers()),
+        Execution::Sharded(plan) => {
+            format!("sharded:{}x{}", plan.shards, plan.pool.workers())
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// The registry (mirrors `protocol::by_name` exactly)
+// ---------------------------------------------------------------------
+
+type Builder = Arc<dyn Fn(&ProtocolArgs) -> anyhow::Result<Execution> + Send + Sync>;
+
+fn registry() -> &'static Mutex<BTreeMap<String, Builder>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Builder>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        type Ctor = fn(&ProtocolArgs) -> anyhow::Result<Execution>;
+        let mut m: BTreeMap<String, Builder> = BTreeMap::new();
+        let mut put = |name: &str, b: Ctor| {
+            m.insert(name.to_string(), Arc::new(b));
+        };
+        put("serial", |a| {
+            a.expect_keys(&[], 0)?;
+            Ok(Execution::Serial)
+        });
+        put("pool", |a| {
+            a.expect_keys(&["workers"], 1)?;
+            let workers: usize = a.parse_or("workers", 0, 1)?;
+            anyhow::ensure!(workers >= 1, "pool needs at least one worker");
+            Ok(Execution::ThreadPool(WorkerPool::new(workers)))
+        });
+        put("sharded", |a| {
+            a.expect_keys(&["shards", "pool"], 1)?;
+            // positional form: one `N` or `NxP` token (`sharded:16x4`).
+            // "positional" is not a known named key, so get() can only
+            // resolve it through the positional slot.
+            let (mut shards, mut pool): (Option<usize>, Option<usize>) = (None, None);
+            if let Some(tok) = a.get("positional", 0) {
+                let (s, p) = match tok.split_once('x') {
+                    Some((s, p)) => (s, Some(p)),
+                    None => (tok, None),
+                };
+                shards = Some(
+                    s.parse().map_err(|e| anyhow::anyhow!("shard count '{s}': {e}"))?,
+                );
+                if let Some(p) = p {
+                    pool = Some(
+                        p.parse().map_err(|e| anyhow::anyhow!("pool size '{p}': {e}"))?,
+                    );
+                }
+            }
+            // named args win over the positional token (registry grammar)
+            let shards = a.parse_opt::<usize>("shards", usize::MAX)?.or(shards).ok_or_else(
+                || anyhow::anyhow!("sharded needs a shard count (`sharded:16x4` or `sharded:shards=16`)"),
+            )?;
+            let pool = a.parse_opt::<usize>("pool", usize::MAX)?.or(pool).unwrap_or(1);
+            Ok(Execution::Sharded(ShardPlan::new(shards, pool)?))
+        });
+        Mutex::new(m)
+    })
+}
+
+/// Construct an execution strategy from a spec string: `<name>[:args]`.
+/// Args accept positional (`sharded:16x4`) and named
+/// (`sharded:shards=16,pool=4`) forms. Unknown names list the registry.
+pub fn by_name(spec: &str) -> anyhow::Result<Execution> {
+    let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    // fetch-then-drop: the builder runs (and any error path re-reads the
+    // registry for its message) without the lock held
+    let builder: Option<Builder> =
+        registry().lock().expect("execution registry poisoned").get(name).cloned();
+    let builder = builder.ok_or_else(|| {
+        anyhow::anyhow!("unknown execution '{name}' (registered: {})", names().join("|"))
+    })?;
+    (builder.as_ref())(&ProtocolArgs::parse(rest))
+        .map_err(|e| anyhow::anyhow!("execution '{spec}': {e}"))
+}
+
+/// Whether `name` (the part before any `:`) resolves in the registry.
+pub fn is_registered(spec: &str) -> bool {
+    let name = spec.split(':').next().unwrap_or(spec);
+    registry().lock().expect("execution registry poisoned").contains_key(name)
+}
+
+/// Register a new execution strategy under `name`. External crates call
+/// this once at startup; afterwards `--execution <name>:<args>` works
+/// everywhere a strategy string is accepted. Errors on duplicate names
+/// (built-ins cannot be shadowed).
+pub fn register(
+    name: &str,
+    builder: impl Fn(&ProtocolArgs) -> anyhow::Result<Execution> + Send + Sync + 'static,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+        "execution name '{name}' must be non-empty [A-Za-z0-9_-]"
+    );
+    let mut reg = registry().lock().expect("execution registry poisoned");
+    anyhow::ensure!(!reg.contains_key(name), "execution '{name}' is already registered");
+    reg.insert(name.to_string(), Arc::new(builder));
+    Ok(())
+}
+
+/// All registered strategy names, sorted.
+pub fn names() -> Vec<String> {
+    registry().lock().expect("execution registry poisoned").keys().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_every_builtin() {
+        let n = names();
+        for want in ["serial", "pool", "sharded"] {
+            assert!(n.iter().any(|x| x == want), "missing '{want}' in {n:?}");
+        }
+    }
+
+    #[test]
+    fn by_name_parses_every_documented_form() {
+        assert!(matches!(by_name("serial").unwrap(), Execution::Serial));
+        match by_name("pool:8").unwrap() {
+            Execution::ThreadPool(p) => assert_eq!(p.workers(), 8),
+            e => panic!("wrong variant {e:?}"),
+        }
+        match by_name("pool:workers=3").unwrap() {
+            Execution::ThreadPool(p) => assert_eq!(p.workers(), 3),
+            e => panic!("wrong variant {e:?}"),
+        }
+        match by_name("sharded:16x4").unwrap() {
+            Execution::Sharded(s) => {
+                assert_eq!(s.shards, 16);
+                assert_eq!(s.pool.workers(), 4);
+            }
+            e => panic!("wrong variant {e:?}"),
+        }
+        match by_name("sharded:shards=16,pool=4").unwrap() {
+            Execution::Sharded(s) => {
+                assert_eq!(s.shards, 16);
+                assert_eq!(s.pool.workers(), 4);
+            }
+            e => panic!("wrong variant {e:?}"),
+        }
+        // shard count alone: pool defaults to 1
+        match by_name("sharded:5").unwrap() {
+            Execution::Sharded(s) => {
+                assert_eq!(s.shards, 5);
+                assert_eq!(s.pool.workers(), 1);
+            }
+            e => panic!("wrong variant {e:?}"),
+        }
+    }
+
+    #[test]
+    fn spec_of_roundtrips_through_by_name() {
+        for spec in ["serial", "pool:8", "sharded:16x4", "sharded:3x1"] {
+            let e = by_name(spec).unwrap();
+            assert_eq!(spec_of(&e), spec);
+            let e2 = by_name(&spec_of(&e)).unwrap();
+            assert_eq!(spec_of(&e2), spec_of(&e));
+        }
+    }
+
+    #[test]
+    fn by_name_rejects_unknowns_and_nonsense() {
+        let e = by_name("quantum").unwrap_err().to_string();
+        assert!(e.contains("unknown execution 'quantum'"), "{e}");
+        assert!(e.contains("sharded"), "error should list the registry: {e}");
+        assert!(by_name("pool:0").is_err(), "zero workers");
+        assert!(by_name("sharded:0x4").is_err(), "zero shards");
+        assert!(by_name("sharded:4x0").is_err(), "zero pool");
+        assert!(by_name("sharded").is_err(), "missing shard count");
+        assert!(by_name("sharded:axb").is_err(), "non-numeric");
+        assert!(by_name("sharded:shardz=4").is_err(), "typo key");
+        assert!(by_name("pool:2:3").is_err(), "excess positional args");
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_bad_names() {
+        assert!(register("serial", |_| Ok(Execution::Serial)).is_err());
+        assert!(register("no colons", |_| Ok(Execution::Serial)).is_err());
+        register("unit-test-exec", |a| {
+            a.expect_keys(&[], 0)?;
+            Ok(Execution::Serial)
+        })
+        .unwrap();
+        assert!(is_registered("unit-test-exec"));
+        assert!(by_name("unit-test-exec").is_ok());
+        assert!(register("unit-test-exec", |_| Ok(Execution::Serial)).is_err());
+    }
+
+    #[test]
+    fn shard_of_is_a_contiguous_balanced_partition() {
+        for (shards, n) in [(1, 10), (2, 10), (3, 10), (8, 64), (7, 8), (10, 10)] {
+            let mut last = 0;
+            let mut counts = vec![0usize; shards];
+            for id in 0..n {
+                let s = shard_of(id, shards, n);
+                assert!(s < shards);
+                assert!(s >= last, "assignment must be monotone in client id");
+                last = s;
+                counts[s] += 1;
+            }
+            let (lo, hi) = (n / shards, n.div_ceil(shards));
+            for (s, &c) in counts.iter().enumerate() {
+                assert!(c >= lo.min(1) && c <= hi, "shard {s} has {c} of {n} (s={shards})");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_shards_folds_partial_sums_and_prices_hops() {
+        let dim = 4;
+        let msgs: Vec<Message> = (0..6)
+            .map(|i| Message::Dense { values: vec![i as f32; dim] })
+            .collect();
+        let ids: Vec<usize> = (0..6).collect();
+        let plan = plan_shards(2, 6, dim, &ids, &msgs).unwrap();
+        assert_eq!(plan.len(), 2);
+        assert_eq!(plan[0].members, vec![0, 1, 2]);
+        assert_eq!(plan[1].members, vec![3, 4, 5]);
+        // a dense frame of `dim` values, priced by the real encoder
+        let dense_bits =
+            Message::Dense { values: vec![0.0; dim] }.to_wire().payload_bits as u64;
+        assert_eq!(plan[0].hop_up_bits, dense_bits);
+        assert_eq!(plan[1].hop_up_bits, dense_bits);
+        // only non-empty shards appear
+        let sparse = plan_shards(8, 64, dim, &[0, 63], &msgs[..2]).unwrap();
+        assert_eq!(sparse.len(), 2);
+        assert_eq!(sparse[0].id, 0);
+        assert_eq!(sparse[1].id, 7);
+        // id/msg length mismatch is a clean error
+        assert!(plan_shards(2, 6, dim, &ids[..3], &msgs).is_err());
+    }
+}

@@ -45,11 +45,13 @@
 //! recorded messages — and verifies the replayed model and ledger
 //! against the recorded per-round checksums. See `repro replay`.
 
+pub mod execution;
 pub mod transcript;
 
+pub use execution::{plan_shards, shard_of, ShardPlan, ShardRound};
 pub use transcript::{
-    params_checksum, replay, ReplayOutcome, Transcript, TranscriptEnd, TranscriptRound,
-    TranscriptWriter,
+    diff_bytes, params_checksum, replay, ReplayOutcome, Transcript, TranscriptDiff,
+    TranscriptEnd, TranscriptRound, TranscriptWriter,
 };
 
 use crate::cluster::executor::{ClientResult, RoundPlan, TrainerFactory, WorkerPool};
@@ -63,7 +65,11 @@ use crate::models::Trainer;
 use crate::protocol::Protocol;
 use crate::util::rng::Pcg64;
 
-/// How a session executes one round's local training.
+/// How a session executes one round: where local training runs and what
+/// aggregation topology the uploads flow through. Constructed directly
+/// or from a registry spec string via [`execution::by_name`]
+/// (`serial` | `pool:8` | `sharded:16x4`); external strategies register
+/// through [`execution::register`].
 #[derive(Clone, Copy, Debug)]
 pub enum Execution {
     /// in-thread, one client after another (the reference path)
@@ -71,6 +77,12 @@ pub enum Execution {
     /// sharded over the cluster subsystem's worker pool (bit-identical
     /// to serial for any worker count)
     ThreadPool(WorkerPool),
+    /// aggregation tree: uploads fold into per-shard partial sums that
+    /// hop shard→root, each hop billed on top of the client uploads;
+    /// local training runs on the plan's worker pool. Bit-identical to
+    /// the flat topologies modulo the explicitly-billed hop bits (see
+    /// [`execution`] module docs).
+    Sharded(ShardPlan),
 }
 
 /// Who supplies gradient oracles for one round.
@@ -156,6 +168,14 @@ pub trait Observer {
         _msg: &Message,
         _wire_bits: u64,
     ) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// The round's shard plan is final (sharded execution only): every
+    /// non-empty shard has folded its partial sum and its shard→root
+    /// hop has been billed. Fires after the round's uploads and before
+    /// [`Observer::on_broadcast`].
+    fn on_shard_round(&mut self, _shards: &[ShardRound]) -> anyhow::Result<()> {
         Ok(())
     }
 
@@ -349,6 +369,7 @@ impl Session {
     ) -> Vec<ClientResult> {
         let pool = match &self.exec {
             Execution::ThreadPool(p) => *p,
+            Execution::Sharded(plan) => plan.pool,
             Execution::Serial => WorkerPool::new(1),
         };
         let plan = RoundPlan {
@@ -386,6 +407,18 @@ impl Session {
         self.notify_run_start()?;
         for o in &mut self.observers {
             o.on_sync(client_id, bits)?;
+        }
+        Ok(())
+    }
+
+    /// Notify observers of the round's final shard plan (see
+    /// [`Observer::on_shard_round`]). Drivers that bill the shard hops
+    /// through their own transport (the cluster tick machine) call this
+    /// after billing and before [`Session::commit_round`], so transcripts
+    /// record membership + hop billing in order.
+    pub fn notify_shards(&mut self, shards: &[ShardRound]) -> anyhow::Result<()> {
+        for o in &mut self.observers {
+            o.on_shard_round(shards)?;
         }
         Ok(())
     }
@@ -465,8 +498,16 @@ impl Session {
         let mut loss_sum = 0.0f64;
         match oracle {
             Oracle::Trainer(trainer) => {
+                // sharding changes the aggregation topology, not where
+                // training runs — a one-worker sharded plan still trains
+                // in-thread, so the caller-owned trainer is fine there
+                let in_thread = match self.exec {
+                    Execution::Serial => true,
+                    Execution::Sharded(plan) => plan.pool.workers() == 1,
+                    Execution::ThreadPool(_) => false,
+                };
                 anyhow::ensure!(
-                    matches!(self.exec, Execution::Serial),
+                    in_thread,
                     "Oracle::Trainer drives in-thread training only; thread-pool \
                      execution needs Oracle::Factory (trainers are built per worker)"
                 );
@@ -508,6 +549,29 @@ impl Session {
             }
         }
 
+        // 3b. aggregation tree: fold the uploads into per-shard partial
+        //     sums and bill every shard→root hop *before* the commit, so
+        //     the round's ledger snapshot (and transcript frame) carries
+        //     the hop bits. The root still aggregates the original
+        //     messages in participant order (see `execution` module docs).
+        let shard_rounds = match self.exec {
+            Execution::Sharded(plan) => {
+                let rounds = execution::plan_shards(
+                    plan.shards,
+                    self.cfg.num_clients,
+                    self.server.dim(),
+                    &ids,
+                    &self.round_msgs,
+                )?;
+                for s in &rounds {
+                    self.ledger.record_upload(s.hop_up_bits as usize);
+                }
+                self.notify_shards(&rounds)?;
+                rounds
+            }
+            _ => Vec::new(),
+        };
+
         // 4. server aggregates, applies, and enqueues the broadcast; the
         //    broadcast's download cost is charged to clients when they
         //    next synchronise (straggler_download_bits).
@@ -515,6 +579,15 @@ impl Session {
         let mean_loss = (loss_sum / ids.len() as f64) as f32;
         let down_bits = self.commit_round(&msgs, mean_loss)?;
         self.round_msgs = msgs;
+
+        // 5. root→shard return hop: every non-empty shard relays the
+        //    broadcast once (billed after the commit — `down_bits` is the
+        //    aggregation's output, so the round frame cannot carry it).
+        if down_bits > 0 {
+            for _ in &shard_rounds {
+                self.ledger.record_download(down_bits);
+            }
+        }
 
         Ok(RoundReport { round: self.server.round, mean_loss, down_bits })
     }
@@ -632,6 +705,62 @@ mod tests {
         }
         assert_eq!(a.server.params, b.server.params);
         assert_eq!(a.ledger.total_up_bits, b.ledger.total_up_bits);
+    }
+
+    /// Tallies shard-hop billing so the test can reconcile the sharded
+    /// ledger against the flat one exactly.
+    #[derive(Default)]
+    struct HopTally {
+        up: u64,
+        down: u64,
+        pending_shards: u64,
+    }
+
+    struct ShardCapture(Rc<RefCell<HopTally>>);
+
+    impl Observer for ShardCapture {
+        fn on_shard_round(&mut self, shards: &[ShardRound]) -> anyhow::Result<()> {
+            let mut t = self.0.borrow_mut();
+            t.pending_shards = shards.len() as u64;
+            t.up += shards.iter().map(|s| s.hop_up_bits).sum::<u64>();
+            Ok(())
+        }
+        fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
+            let mut t = self.0.borrow_mut();
+            t.down += t.pending_shards * rec.down_bits as u64;
+            t.pending_shards = 0;
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn sharded_session_matches_serial_modulo_hop_bits() {
+        let method = Method::Stc { p_up: 0.02, p_down: 0.02 };
+        let (mut flat, train_a) = build(method.clone(), Execution::Serial);
+        let (mut tree, train_b) =
+            build(method, Execution::Sharded(ShardPlan::new(3, 2).unwrap()));
+        let tally = Rc::new(RefCell::new(HopTally::default()));
+        tree.add_observer(Box::new(ShardCapture(tally.clone())));
+        let mut trainer = NativeLogreg::new(10);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        for _ in 0..4 {
+            let a = flat.run_round(Oracle::Trainer(&mut trainer), &train_a).unwrap();
+            let b = tree.run_round(Oracle::Factory(&factory), &train_b).unwrap();
+            assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits());
+            assert_eq!(a.down_bits, b.down_bits);
+        }
+        // the model and residuals never see the tree — bit-identical
+        assert_eq!(flat.server.params, tree.server.params);
+        assert_eq!(flat.last_participants, tree.last_participants);
+        assert_eq!(
+            flat.mean_residual_norm().to_bits(),
+            tree.mean_residual_norm().to_bits()
+        );
+        // the ledgers differ by exactly the explicitly-billed hop bits
+        let t = tally.borrow();
+        assert!(t.up > 0, "hops must have been billed");
+        assert_eq!(tree.ledger.total_up_bits, flat.ledger.total_up_bits + t.up);
+        assert_eq!(tree.ledger.total_down_bits, flat.ledger.total_down_bits + t.down);
     }
 
     #[test]

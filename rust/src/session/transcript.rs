@@ -5,7 +5,7 @@
 //! verified and diffed bit-for-bit long after the process died — the
 //! "frame header for replay debugging" the protocol layer was missing.
 //!
-//! ## Format (version 2, all integers little-endian)
+//! ## Format (version 3, all integers little-endian)
 //!
 //! ```text
 //! header:  magic "FSTX" · u16 version · u8 flags
@@ -18,6 +18,15 @@
 //!          in billing order — including 0-bit syncs of current
 //!          clients. Absent from derivable recordings, whose sync
 //!          discipline is implied by the participant lists.)
+//! shard:   u8 tag=4 · u32 n
+//!          n × { u32 shard id · u64 hop_up_bits
+//!                u32 m · m × u32 member client ids }
+//!          (version ≥ 3 only, written immediately before the round
+//!          frame it belongs to on sharded runs
+//!          ([`Execution::Sharded`](super::Execution)): the aggregation
+//!          tree's membership and billed shard→root hop bits. Flat runs
+//!          never write it, so their v3 files differ from v2 only by
+//!          the version word.)
 //! round:   u8 tag=1 · u32 round · f32 mean_loss
 //!          u32 n · n × u32 participant ids
 //!          u32 m · m × { u32 client · u32 len · Message::to_bytes }
@@ -28,8 +37,9 @@
 //!          u64 uploads · u64 downloads · u64 final_checksum
 //! ```
 //!
-//! Version 1 files (no sync frames, no [`FLAG_SYNC_EVENTS`]) remain
-//! fully readable; the checked-in golden fixture pins that.
+//! Version 1 files (no sync frames, no [`FLAG_SYNC_EVENTS`]) and
+//! version 2 files (no shard frames) remain fully readable; the
+//! checked-in golden fixture pins that.
 //!
 //! Upload payloads are exactly [`Message::to_bytes`] frames — the same
 //! bytes that crossed the simulated wire — so the transcript reuses (and
@@ -54,7 +64,7 @@
 //! for cluster recordings (late uploads are billed but never
 //! aggregated, so the transcript does not carry them).
 
-use super::{Observer, RoundRecord, RunEnd, RunMeta};
+use super::{Observer, RoundRecord, RunEnd, RunMeta, ShardRound};
 use crate::compression::Message;
 use crate::config::Method;
 use crate::coordinator::Server;
@@ -65,7 +75,7 @@ use std::path::Path;
 /// First four bytes of every transcript.
 pub const TRANSCRIPT_MAGIC: [u8; 4] = *b"FSTX";
 /// Current format version (readers accept 1..=this).
-pub const TRANSCRIPT_VERSION: u16 = 2;
+pub const TRANSCRIPT_VERSION: u16 = 3;
 /// Oldest version this build still reads.
 pub const TRANSCRIPT_MIN_VERSION: u16 = 1;
 /// Header flag: download accounting is re-derivable from the recorded
@@ -79,6 +89,7 @@ pub const FLAG_SYNC_EVENTS: u8 = 0b0000_0010;
 const FRAME_ROUND: u8 = 1;
 const FRAME_END: u8 = 2;
 const FRAME_SYNC: u8 = 3;
+const FRAME_SHARD: u8 = 4;
 
 /// FNV-1a 64 over the little-endian f32 bit patterns — the model
 /// fingerprint recorded per round and re-checked at replay.
@@ -128,6 +139,10 @@ pub struct TranscriptWriter {
     /// §V-B syncs observed since the last flushed frame, in billing
     /// order; only buffered for non-derivable recordings
     pending_syncs: Vec<(u32, u64)>,
+    /// shard memberships + hop billing for the round being buffered
+    /// (sharded runs only); flushed as a `FRAME_SHARD` ahead of the
+    /// round frame
+    pending_shards: Vec<ShardRound>,
 }
 
 impl TranscriptWriter {
@@ -147,6 +162,7 @@ impl TranscriptWriter {
             participants: Vec::new(),
             uploads: Vec::new(),
             pending_syncs: Vec::new(),
+            pending_shards: Vec::new(),
         }
     }
 
@@ -165,6 +181,28 @@ impl TranscriptWriter {
         }
         self.sink.write_all(&buf)?;
         self.pending_syncs.clear();
+        Ok(())
+    }
+
+    /// Write the buffered shard memberships as one `FRAME_SHARD` ahead
+    /// of the round frame they belong to.
+    fn flush_shards(&mut self) -> anyhow::Result<()> {
+        if self.pending_shards.is_empty() {
+            return Ok(());
+        }
+        let mut buf = Vec::new();
+        buf.push(FRAME_SHARD);
+        put_u32(&mut buf, self.pending_shards.len());
+        for s in &self.pending_shards {
+            put_u32(&mut buf, s.id);
+            put_u64(&mut buf, s.hop_up_bits);
+            put_u32(&mut buf, s.members.len());
+            for &m in &s.members {
+                put_u32(&mut buf, m);
+            }
+        }
+        self.sink.write_all(&buf)?;
+        self.pending_shards.clear();
         Ok(())
     }
 }
@@ -222,8 +260,14 @@ impl Observer for TranscriptWriter {
         Ok(())
     }
 
+    fn on_shard_round(&mut self, shards: &[ShardRound]) -> anyhow::Result<()> {
+        self.pending_shards = shards.to_vec();
+        Ok(())
+    }
+
     fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
         self.flush_syncs()?;
+        self.flush_shards()?;
         let mut buf = Vec::new();
         buf.push(FRAME_ROUND);
         put_u32(&mut buf, rec.round);
@@ -295,6 +339,10 @@ pub struct TranscriptRound {
     /// order (version ≥ 2 recordings with [`FLAG_SYNC_EVENTS`]; empty
     /// otherwise)
     pub pre_syncs: Vec<(usize, u64)>,
+    /// aggregation-tree shards that fed this round's root reduction,
+    /// with their billed shard→root hop bits (version ≥ 3 sharded
+    /// recordings; empty on flat runs and older files)
+    pub shards: Vec<ShardRound>,
 }
 
 /// The end-of-run frame.
@@ -371,6 +419,7 @@ impl Transcript {
 
         let mut rounds = Vec::new();
         let mut pending_syncs: Vec<(usize, u64)> = Vec::new();
+        let mut pending_shards: Vec<ShardRound> = Vec::new();
         let mut end_syncs: Vec<(usize, u64)> = Vec::new();
         let end = loop {
             match r.u8().map_err(|_| anyhow::anyhow!("transcript truncated: no end frame"))? {
@@ -385,6 +434,24 @@ impl Transcript {
                         let client = r.u32()? as usize;
                         let bits = r.u64()?;
                         pending_syncs.push((client, bits));
+                    }
+                }
+                FRAME_SHARD => {
+                    anyhow::ensure!(
+                        version >= 3,
+                        "shard frame in a version {version} transcript (introduced in version 3)"
+                    );
+                    let n = r.u32()? as usize;
+                    pending_shards.reserve(n.min(1 << 20));
+                    for _ in 0..n {
+                        let id = r.u32()? as usize;
+                        let hop_up_bits = r.u64()?;
+                        let m = r.u32()? as usize;
+                        let mut members = Vec::with_capacity(m.min(1 << 20));
+                        for _ in 0..m {
+                            members.push(r.u32()? as usize);
+                        }
+                        pending_shards.push(ShardRound { id, members, hop_up_bits });
                     }
                 }
                 FRAME_ROUND => {
@@ -413,9 +480,14 @@ impl Transcript {
                         total_up_bits: r.u64()?,
                         total_down_bits: r.u64()?,
                         pre_syncs: std::mem::take(&mut pending_syncs),
+                        shards: std::mem::take(&mut pending_shards),
                     });
                 }
                 FRAME_END => {
+                    anyhow::ensure!(
+                        pending_shards.is_empty(),
+                        "shard frame not followed by a round frame"
+                    );
                     end_syncs = std::mem::take(&mut pending_syncs);
                     break TranscriptEnd {
                         settled: r.u8()? != 0,
@@ -579,6 +651,18 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
         for m in &msgs {
             ledger.record_upload(m.wire_bits());
         }
+        // shard→root hops were billed before the recorded ledger
+        // snapshot, so replay mirrors that order exactly
+        for s in &r.shards {
+            anyhow::ensure!(
+                s.members.iter().all(|&m| m < t.num_clients),
+                "round {}: shard {} has a member out of range 0..{}",
+                r.round,
+                s.id,
+                t.num_clients
+            );
+            ledger.record_upload(s.hop_up_bits as usize);
+        }
         let down = server.aggregate_and_apply(&msgs)?;
         anyhow::ensure!(
             down as u64 == r.down_bits,
@@ -613,6 +697,14 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
                 ledger.total_down_bits,
                 r.total_down_bits
             );
+        }
+        // root→shard return hops are billed after the broadcast (the
+        // run billed them after `commit_round`), so they land in the
+        // *next* round's snapshot
+        if down > 0 {
+            for _ in &r.shards {
+                ledger.record_download(down);
+            }
         }
     }
 
@@ -674,6 +766,172 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
     })
 }
 
+// ---------------------------------------------------------------------
+// Diff
+// ---------------------------------------------------------------------
+
+/// Where two transcripts first diverge (see [`diff_bytes`]).
+#[derive(Debug)]
+pub struct TranscriptDiff {
+    /// server round counter of the diverging frame; `None` when the
+    /// divergence is in the header or the end frame
+    pub round: Option<usize>,
+    /// dotted field path, e.g. `"round.params_checksum"`
+    pub field: String,
+    /// offset of the first differing byte between the two raw files
+    pub byte_offset: usize,
+    /// human-readable left-vs-right rendering of the diverging values
+    pub detail: String,
+}
+
+/// Compare two transcripts byte-for-byte and report the first diverging
+/// frame — `Ok(None)` when the files are identical. Both inputs must
+/// parse. The byte offset pinpoints the raw divergence; `round`/`field`
+/// name the first *semantic* difference in file order, so a drifted
+/// model shows up as `round.params_checksum` at round k rather than a
+/// bare "files differ".
+pub fn diff_bytes(a: &[u8], b: &[u8]) -> anyhow::Result<Option<TranscriptDiff>> {
+    if a == b {
+        return Ok(None);
+    }
+    let byte_offset =
+        a.iter().zip(b.iter()).position(|(x, y)| x != y).unwrap_or_else(|| a.len().min(b.len()));
+    let ta = Transcript::from_bytes(a)?;
+    let tb = Transcript::from_bytes(b)?;
+    Ok(Some(semantic_diff(&ta, &tb, byte_offset)))
+}
+
+fn semantic_diff(a: &Transcript, b: &Transcript, byte_offset: usize) -> TranscriptDiff {
+    let hit = |round: Option<usize>, field: &str, detail: String| TranscriptDiff {
+        round,
+        field: field.to_string(),
+        byte_offset,
+        detail,
+    };
+    let two = |l: &dyn std::fmt::Debug, r: &dyn std::fmt::Debug| format!("{l:?} vs {r:?}");
+
+    // header, in file order
+    if a.version != b.version {
+        return hit(None, "header.version", two(&a.version, &b.version));
+    }
+    if a.flags != b.flags {
+        return hit(None, "header.flags", two(&a.flags, &b.flags));
+    }
+    if a.method_spec != b.method_spec {
+        return hit(None, "header.method_spec", two(&a.method_spec, &b.method_spec));
+    }
+    if a.num_clients != b.num_clients {
+        return hit(None, "header.num_clients", two(&a.num_clients, &b.num_clients));
+    }
+    if a.cache_rounds != b.cache_rounds {
+        return hit(None, "header.cache_rounds", two(&a.cache_rounds, &b.cache_rounds));
+    }
+    if a.seed != b.seed {
+        return hit(None, "header.seed", two(&a.seed, &b.seed));
+    }
+    if a.init_params.len() != b.init_params.len() {
+        return hit(None, "header.dim", two(&a.init_params.len(), &b.init_params.len()));
+    }
+    if let Some(i) = (0..a.init_params.len())
+        .find(|&i| a.init_params[i].to_bits() != b.init_params[i].to_bits())
+    {
+        return hit(
+            None,
+            "header.init_params",
+            format!("[{i}]: {:?} vs {:?}", a.init_params[i], b.init_params[i]),
+        );
+    }
+
+    for (ra, rb) in a.rounds.iter().zip(&b.rounds) {
+        let round = Some(ra.round);
+        if ra.pre_syncs != rb.pre_syncs {
+            return hit(round, "round.pre_syncs", two(&ra.pre_syncs, &rb.pre_syncs));
+        }
+        if ra.shards != rb.shards {
+            return hit(round, "round.shards", two(&ra.shards, &rb.shards));
+        }
+        if ra.round != rb.round {
+            return hit(round, "round.round", two(&ra.round, &rb.round));
+        }
+        if ra.mean_loss.to_bits() != rb.mean_loss.to_bits() {
+            return hit(round, "round.mean_loss", two(&ra.mean_loss, &rb.mean_loss));
+        }
+        if ra.participants != rb.participants {
+            return hit(round, "round.participants", two(&ra.participants, &rb.participants));
+        }
+        if ra.uploads != rb.uploads {
+            let i = (0..ra.uploads.len().min(rb.uploads.len()))
+                .find(|&i| ra.uploads[i] != rb.uploads[i]);
+            let detail = match i {
+                Some(i) => format!(
+                    "upload {i}: client {} vs {}, payloads {}",
+                    ra.uploads[i].0,
+                    rb.uploads[i].0,
+                    if ra.uploads[i].1 == rb.uploads[i].1 { "equal" } else { "differ" },
+                ),
+                None => format!("{} vs {} uploads", ra.uploads.len(), rb.uploads.len()),
+            };
+            return hit(round, "round.uploads", detail);
+        }
+        if ra.down_bits != rb.down_bits {
+            return hit(round, "round.down_bits", two(&ra.down_bits, &rb.down_bits));
+        }
+        if ra.params_checksum != rb.params_checksum {
+            return hit(
+                round,
+                "round.params_checksum",
+                format!("{:#018x} vs {:#018x}", ra.params_checksum, rb.params_checksum),
+            );
+        }
+        if ra.total_up_bits != rb.total_up_bits {
+            return hit(round, "round.total_up_bits", two(&ra.total_up_bits, &rb.total_up_bits));
+        }
+        if ra.total_down_bits != rb.total_down_bits {
+            return hit(
+                round,
+                "round.total_down_bits",
+                two(&ra.total_down_bits, &rb.total_down_bits),
+            );
+        }
+    }
+    if a.rounds.len() != b.rounds.len() {
+        return hit(None, "rounds.len", two(&a.rounds.len(), &b.rounds.len()));
+    }
+
+    if a.end_syncs != b.end_syncs {
+        return hit(None, "end.syncs", two(&a.end_syncs, &b.end_syncs));
+    }
+    if a.end.settled != b.end.settled {
+        return hit(None, "end.settled", two(&a.end.settled, &b.end.settled));
+    }
+    if a.end.total_up_bits != b.end.total_up_bits {
+        return hit(None, "end.total_up_bits", two(&a.end.total_up_bits, &b.end.total_up_bits));
+    }
+    if a.end.total_down_bits != b.end.total_down_bits {
+        return hit(
+            None,
+            "end.total_down_bits",
+            two(&a.end.total_down_bits, &b.end.total_down_bits),
+        );
+    }
+    if a.end.uploads != b.end.uploads {
+        return hit(None, "end.uploads", two(&a.end.uploads, &b.end.uploads));
+    }
+    if a.end.downloads != b.end.downloads {
+        return hit(None, "end.downloads", two(&a.end.downloads, &b.end.downloads));
+    }
+    if a.end.final_checksum != b.end.final_checksum {
+        return hit(
+            None,
+            "end.final_checksum",
+            format!("{:#018x} vs {:#018x}", a.end.final_checksum, b.end.final_checksum),
+        );
+    }
+    // canonical encoding means parse-equal implies byte-equal; if we
+    // ever get here the files differ in a way the parser normalized
+    hit(None, "bytes", format!("files differ at byte {byte_offset} but parse identically"))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -691,6 +949,12 @@ mod tests {
     /// run (the same scenario as the checked-in golden fixture) and
     /// return the transcript bytes.
     fn record_baseline(path: &Path) {
+        record_baseline_loss(path, 0.125);
+    }
+
+    /// [`record_baseline`] with a configurable round-2 loss, so tests
+    /// can produce two recordings that diverge at a known frame/field.
+    fn record_baseline_loss(path: &Path, loss2: f32) {
         let mut w = TranscriptWriter::create(path, true).unwrap();
         let init = vec![0.0f32; 4];
         w.on_run_start(&RunMeta {
@@ -736,7 +1000,7 @@ mod tests {
         w.on_broadcast(&RoundRecord {
             round: 2,
             participants: &[0, 1],
-            mean_loss: 0.125,
+            mean_loss: loss2,
             down_bits: 128,
             params: &params2,
             ledger: &ledger,
@@ -745,6 +1009,76 @@ mod tests {
         .unwrap();
 
         // settlement: both clients one round behind again
+        ledger.record_download(128);
+        ledger.record_download(128);
+        w.on_finish(&RunEnd { params: &params2, ledger: &ledger, settled: true }).unwrap();
+    }
+
+    /// Derivable recording of the same run aggregated through a single
+    /// shard: `billed_hop` goes into the ledger before each round
+    /// frame's snapshot (as the live drivers do), `recorded_hop` into
+    /// the shard frame — split so tests can tamper with one side.
+    fn record_sharded(path: &Path, billed_hop: u64, recorded_hop: u64) {
+        let mut w = TranscriptWriter::create(path, true).unwrap();
+        let init = vec![0.0f32; 4];
+        w.on_run_start(&RunMeta {
+            method_spec: "baseline",
+            num_clients: 2,
+            cache_rounds: 10,
+            seed: 1,
+            init_params: &init,
+        })
+        .unwrap();
+
+        let mut ledger = CommLedger::new(2);
+        let shard = vec![ShardRound { id: 0, members: vec![0, 1], hop_up_bits: recorded_hop }];
+
+        let r1 = [dense(&[1.0, 0.0, 2.0, -2.0]), dense(&[3.0, 0.0, 0.0, 2.0])];
+        w.on_round_start(0, &[0, 1]).unwrap();
+        for (c, m) in r1.iter().enumerate() {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+        }
+        ledger.record_upload(billed_hop as usize);
+        w.on_shard_round(&shard).unwrap();
+        let params1 = [2.0f32, 0.0, 1.0, 0.0];
+        w.on_broadcast(&RoundRecord {
+            round: 1,
+            participants: &[0, 1],
+            mean_loss: 0.25,
+            down_bits: 128,
+            params: &params1,
+            ledger: &ledger,
+            mean_residual_norm: 0.0,
+        })
+        .unwrap();
+        // root→shard broadcast relay, billed after the snapshot
+        ledger.record_download(128);
+
+        let r2 = [dense(&[1.0; 4]), dense(&[1.0; 4])];
+        w.on_round_start(1, &[0, 1]).unwrap();
+        ledger.record_download(128);
+        ledger.record_download(128);
+        for (c, m) in r2.iter().enumerate() {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+        }
+        ledger.record_upload(billed_hop as usize);
+        w.on_shard_round(&shard).unwrap();
+        let params2 = [3.0f32, 1.0, 2.0, 1.0];
+        w.on_broadcast(&RoundRecord {
+            round: 2,
+            participants: &[0, 1],
+            mean_loss: 0.125,
+            down_bits: 128,
+            params: &params2,
+            ledger: &ledger,
+            mean_residual_norm: 0.0,
+        })
+        .unwrap();
+        ledger.record_download(128); // relay again
+
+        // settlement sweep
         ledger.record_download(128);
         ledger.record_download(128);
         w.on_finish(&RunEnd { params: &params2, ledger: &ledger, settled: true }).unwrap();
@@ -923,6 +1257,71 @@ mod tests {
         long.push(0xAB);
         assert!(Transcript::from_bytes(&long).is_err());
         let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn sharded_v3_roundtrip_replays_hop_billing() {
+        let path = temp_path("sharded");
+        record_sharded(&path, 256, 256);
+        let t = Transcript::read_file(&path).unwrap();
+        assert_eq!(t.version, TRANSCRIPT_VERSION);
+        assert_eq!(
+            t.rounds[0].shards,
+            vec![ShardRound { id: 0, members: vec![0, 1], hop_up_bits: 256 }]
+        );
+        assert_eq!(t.rounds[1].shards.len(), 1);
+
+        let out = replay(&t).unwrap();
+        assert!(out.uploads_verified && out.downloads_verified);
+        // 4 client uploads + 2 shard hops; 2 round-2 syncs + 2 broadcast
+        // relays + 2 settlement downloads
+        assert_eq!(out.ledger.uploads, 6);
+        assert_eq!(out.ledger.downloads, 6);
+        assert_eq!(out.ledger.total_up_bits, t.end.total_up_bits);
+        assert_eq!(out.ledger.total_down_bits, t.end.total_down_bits);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_rejects_tampered_hop_billing() {
+        // the shard frame claims 64 hop bits but the run billed 256:
+        // replay re-bills from the frame and the snapshot catches it
+        let path = temp_path("shardbad");
+        record_sharded(&path, 256, 64);
+        let t = Transcript::read_file(&path).unwrap();
+        let err = replay(&t).unwrap_err().to_string();
+        assert!(err.contains("replayed ledger"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn diff_reports_first_diverging_frame() {
+        let p1 = temp_path("diff1");
+        let p2 = temp_path("diff2");
+        record_baseline(&p1);
+        record_baseline(&p2);
+        let a = std::fs::read(&p1).unwrap();
+        let b = std::fs::read(&p2).unwrap();
+        assert!(diff_bytes(&a, &b).unwrap().is_none(), "identical recordings diff clean");
+
+        // same run, round 2 records a different mean loss
+        record_baseline_loss(&p2, 0.5);
+        let b = std::fs::read(&p2).unwrap();
+        let d = diff_bytes(&a, &b).unwrap().expect("recordings differ");
+        assert_eq!(d.round, Some(2));
+        assert_eq!(d.field, "round.mean_loss");
+        assert!(d.byte_offset > 0 && d.byte_offset < a.len());
+        assert!(d.detail.contains("0.125") && d.detail.contains("0.5"), "{}", d.detail);
+
+        // structurally different recordings diverge at the header
+        record_with_sync_events(&p2, false);
+        let b = std::fs::read(&p2).unwrap();
+        let d = diff_bytes(&a, &b).unwrap().expect("flags differ");
+        assert_eq!(d.round, None);
+        assert_eq!(d.field, "header.flags");
+
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
     }
 
     #[test]

@@ -97,6 +97,20 @@ impl Experiment {
         trainer: &mut dyn Trainer,
         observers: Vec<Box<dyn Observer>>,
     ) -> anyhow::Result<TrainingLog> {
+        self.run_observed_with(trainer, observers, Execution::Serial)
+    }
+
+    /// [`Experiment::run_observed`] under an explicit [`Execution`]
+    /// strategy (`repro train --execution`). The single `trainer` is
+    /// driven in-thread, so the strategy must be in-thread-compatible:
+    /// `Serial` or `Sharded` with a 1-worker pool — thread pools need
+    /// the cluster driver's per-worker trainer factory.
+    pub fn run_observed_with(
+        &self,
+        trainer: &mut dyn Trainer,
+        observers: Vec<Box<dyn Observer>>,
+        exec: Execution,
+    ) -> anyhow::Result<TrainingLog> {
         anyhow::ensure!(
             trainer.batch_size() == self.cfg.batch_size,
             "trainer batch size {} != config batch size {}",
@@ -104,7 +118,7 @@ impl Experiment {
             self.cfg.batch_size
         );
         let init = self.spec.init_flat(self.cfg.seed);
-        let mut session = Session::new(self.cfg.clone(), &self.train, init, Execution::Serial)?;
+        let mut session = Session::new(self.cfg.clone(), &self.train, init, exec)?;
         for o in observers {
             session.add_observer(o);
         }

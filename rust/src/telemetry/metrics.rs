@@ -34,7 +34,7 @@ use std::time::Instant;
 
 use crate::compression::Message;
 use crate::metrics::EvalPoint;
-use crate::session::{Observer, RoundRecord, RunEnd, RunMeta};
+use crate::session::{Observer, RoundRecord, RunEnd, RunMeta, ShardRound};
 use crate::telemetry::trace::variant_name;
 use crate::telemetry::{ClusterEvent, TickProbe};
 use crate::util::json::Json;
@@ -366,6 +366,14 @@ impl Observer for MetricsHub {
         Ok(())
     }
 
+    fn on_shard_round(&mut self, shards: &[ShardRound]) -> anyhow::Result<()> {
+        let mut g = self.lock()?;
+        g.reg.gauge_set("fedstc_shards_active", &[], shards.len() as f64);
+        let bits: u64 = shards.iter().map(|s| s.hop_up_bits).sum();
+        g.reg.counter_add("fedstc_shard_fold_bits_total", &[], bits);
+        Ok(())
+    }
+
     fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
         let mut g = self.lock()?;
         g.reg.counter_set("fedstc_rounds_total", &[], rec.round as u64);
@@ -433,6 +441,13 @@ impl TickProbe for MetricsHub {
                 g.reg.counter_add("fedstc_transfers_total", &[("dir", d)], 1);
                 g.reg.observe("fedstc_transfer_duration_s", &[("dir", d)], duration_s);
                 g.reg.observe("fedstc_transfer_queue_s", &[("dir", d)], queue_s);
+            }
+            ClusterEvent::ShardHop { dir, bits, duration_s, queue_s, .. } => {
+                let d = dir.label();
+                g.reg.counter_add("fedstc_shard_hops_total", &[("dir", d)], 1);
+                g.reg.counter_add("fedstc_shard_hop_bits_total", &[("dir", d)], bits);
+                g.reg.observe("fedstc_shard_hop_duration_s", &[("dir", d)], duration_s);
+                g.reg.observe("fedstc_shard_hop_queue_s", &[("dir", d)], queue_s);
             }
             ClusterEvent::LateUpload { .. } => {
                 g.reg.counter_add("fedstc_late_uploads_total", &[], 1);

@@ -59,11 +59,31 @@ pub enum ClusterEvent {
     Participant { tick: usize, sim_s: f64, client_id: usize, kind: ParticipantEvent },
     /// One transfer finished on the simulated shared medium. `queue_s`
     /// is contention-induced waiting beyond the solo transfer time.
+    /// `shard` is the client's intermediate aggregator under
+    /// [`Execution::Sharded`](crate::session::Execution); `None` on flat
+    /// single-server runs.
     Transfer {
         tick: usize,
         sim_s: f64,
         dir: Direction,
         client_id: usize,
+        shard: Option<usize>,
+        bits: u64,
+        ready_s: f64,
+        duration_s: f64,
+        queue_s: f64,
+        end_s: f64,
+    },
+    /// A shard↔root hop on the aggregation tree's own link finished:
+    /// `Up` carries the shard's folded partial sum to the root, `Down`
+    /// relays the broadcast back. `members` is how many on-time uploads
+    /// the shard folded. Only emitted on sharded runs.
+    ShardHop {
+        tick: usize,
+        sim_s: f64,
+        dir: Direction,
+        shard: usize,
+        members: usize,
         bits: u64,
         ready_s: f64,
         duration_s: f64,
@@ -73,13 +93,15 @@ pub enum ClusterEvent {
     /// An upload arrived after the round deadline; its update was
     /// re-banked into the client residual instead of aggregated.
     LateUpload { tick: usize, sim_s: f64, client_id: usize, arrival_s: f64, deadline_s: f64 },
-    /// A cluster round closed (possibly empty).
+    /// A cluster round closed (possibly empty). `shards` is the number
+    /// of shard partial sums that fed the root (0 on flat runs).
     RoundClose {
         tick: usize,
         sim_s: f64,
         round: usize,
         aggregated: usize,
         late: usize,
+        shards: usize,
         deadline_s: f64,
         queue_s: f64,
     },
@@ -111,6 +133,21 @@ impl ParticipantEvent {
 /// handles for exactly that reason.
 pub trait TickProbe {
     fn on_cluster_event(&mut self, ev: &ClusterEvent) -> anyhow::Result<()>;
+}
+
+/// Everything a driver needs to register telemetry in one call: boxed
+/// session [`Observer`](crate::session::Observer)s plus the cloneable
+/// trace/metrics handles, so cluster drivers can re-register the same
+/// objects as [`TickProbe`]s without a second parse of the flags.
+#[derive(Default)]
+pub struct TelemetryHandles {
+    /// session observers, in registration order
+    pub observers: Vec<Box<dyn crate::session::Observer>>,
+    /// the trace writer, if `--trace` was given (same object as the
+    /// boxed observer — `TraceWriter` is a shared handle)
+    pub trace: Option<TraceWriter>,
+    /// the metrics hub, if `--metrics` was given
+    pub metrics: Option<MetricsHub>,
 }
 
 #[cfg(test)]

@@ -6,7 +6,8 @@
 //! `sync` (§V-B partial-sum downloads), `upload`, `broadcast`, `eval`,
 //! `finish` — and, when the writer is also registered as a
 //! [`TickProbe`], the cluster tick machine: `phase`, `membership`,
-//! `no_show` / `dropout`, `transfer`, `late_upload`, `round_close`.
+//! `no_show` / `dropout`, `transfer`, `shard_hop`, `late_upload`,
+//! `round_close`.
 //!
 //! # Two channels
 //!
@@ -250,6 +251,7 @@ impl TickProbe for TraceWriter {
                 sim_s,
                 dir,
                 client_id,
+                shard,
                 bits,
                 ready_s,
                 duration_s,
@@ -258,7 +260,33 @@ impl TickProbe for TraceWriter {
             } => {
                 let mut j = ev("transfer");
                 j.set("dir", Json::Str(dir.label().to_string()))
-                    .set("client", Json::Num(client_id as f64))
+                    .set("client", Json::Num(client_id as f64));
+                if let Some(shard) = shard {
+                    j.set("shard", Json::Num(shard as f64));
+                }
+                j.set("bits", Json::Num(bits as f64))
+                    .set("ready_s", Json::Num(ready_s))
+                    .set("duration_s", Json::Num(duration_s))
+                    .set("queue_s", Json::Num(queue_s))
+                    .set("end_s", Json::Num(end_s));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::ShardHop {
+                tick,
+                sim_s,
+                dir,
+                shard,
+                members,
+                bits,
+                ready_s,
+                duration_s,
+                queue_s,
+                end_s,
+            } => {
+                let mut j = ev("shard_hop");
+                j.set("dir", Json::Str(dir.label().to_string()))
+                    .set("shard", Json::Num(shard as f64))
+                    .set("members", Json::Num(members as f64))
                     .set("bits", Json::Num(bits as f64))
                     .set("ready_s", Json::Num(ready_s))
                     .set("duration_s", Json::Num(duration_s))
@@ -273,11 +301,21 @@ impl TickProbe for TraceWriter {
                     .set("deadline_s", Json::Num(deadline_s));
                 at(j, tick, sim_s)
             }
-            ClusterEvent::RoundClose { tick, sim_s, round, aggregated, late, deadline_s, queue_s } => {
+            ClusterEvent::RoundClose {
+                tick,
+                sim_s,
+                round,
+                aggregated,
+                late,
+                shards,
+                deadline_s,
+                queue_s,
+            } => {
                 let mut j = ev("round_close");
                 j.set("round", Json::Num(round as f64))
                     .set("aggregated", Json::Num(aggregated as f64))
                     .set("late", Json::Num(late as f64))
+                    .set("shards", Json::Num(shards as f64))
                     .set("deadline_s", Json::Num(deadline_s))
                     .set("queue_s", Json::Num(queue_s));
                 at(j, tick, sim_s)

@@ -1,0 +1,373 @@
+//! Property tests for the execution registry and the sharded
+//! aggregation tree.
+//!
+//! Three guarantees:
+//!
+//! 1. **Shard-count invariance** — a sharded run is bit-identical to the
+//!    flat single-server run (params, residuals, transcript round
+//!    frames) for every registered protocol, in both the serial and the
+//!    cluster driver (including straggler/dropout/churn scenarios); the
+//!    ledgers differ by exactly the explicitly-billed shard→root hop
+//!    bits.
+//! 2. **Registry** — `execution::by_name` parses every documented spec
+//!    form and `spec_of` round-trips through it.
+//! 3. **v3 transcripts** — sharded recordings carry shard membership +
+//!    hop billing, replay re-prices the hops against the recorded
+//!    ledger, and the mirrored MetricsHub comm counters reconcile with
+//!    a sharded run's ledger exactly (hop bits included).
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::config::{FedConfig, Method};
+use fedstc::data::synth::task_dataset;
+use fedstc::data::Dataset;
+use fedstc::metrics::CommLedger;
+use fedstc::protocol;
+use fedstc::session::transcript::TRANSCRIPT_VERSION;
+use fedstc::session::{
+    execution, replay, Execution, Observer, Oracle, RoundRecord, Session, ShardPlan, ShardRound,
+    Transcript,
+};
+use fedstc::telemetry::MetricsHub;
+
+fn fed_cfg(method: Method, rounds: usize) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 8,
+        participation: 0.5,
+        classes_per_client: 5,
+        batch_size: 10,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: rounds * method.local_iters(),
+        method,
+        eval_every: 1_000_000,
+        seed: 31,
+        train_examples: 600,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+fn dataset() -> Dataset {
+    let (train, _) = task_dataset("mnist", 31).unwrap();
+    train.subset(&(0..600).collect::<Vec<_>>())
+}
+
+fn init_params(cfg: &FedConfig) -> Vec<f32> {
+    fedstc::models::ModelSpec::by_name("logreg").unwrap().init_flat(cfg.seed)
+}
+
+fn temp(tag: &str, ext: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "fedstc_prop_execution_{}_{}.{ext}",
+        std::process::id(),
+        tag.replace([':', ',', '='], "_")
+    ))
+}
+
+/// Tallies shard-hop billing via the observer hooks so runs can be
+/// reconciled against the flat ledger exactly.
+#[derive(Default)]
+struct HopTally {
+    up: u64,
+    down: u64,
+    pending_shards: u64,
+}
+
+struct ShardCapture(Rc<RefCell<HopTally>>);
+
+impl Observer for ShardCapture {
+    fn on_shard_round(&mut self, shards: &[ShardRound]) -> anyhow::Result<()> {
+        let mut t = self.0.borrow_mut();
+        t.pending_shards = shards.len() as u64;
+        t.up += shards.iter().map(|s| s.hop_up_bits).sum::<u64>();
+        Ok(())
+    }
+    fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
+        let mut t = self.0.borrow_mut();
+        t.down += t.pending_shards * rec.down_bits as u64;
+        t.pending_shards = 0;
+        Ok(())
+    }
+}
+
+/// Drive a serial-driver session (flat or sharded, 1-worker pool so it
+/// runs in-thread) to completion, recording a transcript.
+fn serial_run(
+    cfg: &FedConfig,
+    train: &Dataset,
+    exec: Execution,
+    record: &std::path::Path,
+    tally: Option<Rc<RefCell<HopTally>>>,
+) -> (Vec<f32>, f64, CommLedger) {
+    let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+    let mut session = Session::new(cfg.clone(), train, init_params(cfg), exec).unwrap();
+    session.record_transcript(record, true).unwrap();
+    if let Some(t) = tally {
+        session.add_observer(Box::new(ShardCapture(t)));
+    }
+    for _ in 0..cfg.rounds() {
+        session.run_round(Oracle::Factory(&factory), train).unwrap();
+    }
+    session.settle_final_downloads();
+    session.finish().unwrap();
+    (session.server.params.clone(), session.mean_residual_norm(), session.ledger.clone())
+}
+
+fn bits(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|x| x.to_bits()).collect()
+}
+
+// ---------------------------------------------------------------------
+// 1. Shard-count invariance
+// ---------------------------------------------------------------------
+
+#[test]
+fn sharded_runs_are_bit_identical_to_flat_for_every_protocol() {
+    let train = dataset();
+    for name in protocol::names() {
+        let method = Method::parse(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let cfg = fed_cfg(method, 3);
+
+        let flat_rec = temp(&format!("flat_{name}"), "fstx");
+        let (flat_params, flat_resid, flat_ledger) =
+            serial_run(&cfg, &train, Execution::Serial, &flat_rec, None);
+        let flat_t = Transcript::read_file(&flat_rec).unwrap();
+
+        for shards in [1usize, 2, 8] {
+            let tag = format!("{name} shards={shards}");
+            let rec = temp(&format!("tree_{name}_{shards}"), "fstx");
+            let tally = Rc::new(RefCell::new(HopTally::default()));
+            let exec = Execution::Sharded(ShardPlan::new(shards, 1).unwrap());
+            let (params, resid, ledger) =
+                serial_run(&cfg, &train, exec, &rec, Some(tally.clone()));
+
+            // the model and residuals never see the tree
+            assert_eq!(bits(&flat_params), bits(&params), "{tag}: params diverged");
+            assert_eq!(flat_resid.to_bits(), resid.to_bits(), "{tag}: residuals diverged");
+
+            // ledgers differ by exactly the explicitly-billed hop bits
+            let t = tally.borrow();
+            assert!(t.up > 0, "{tag}: hops were never billed");
+            assert_eq!(ledger.total_up_bits, flat_ledger.total_up_bits + t.up, "{tag}: up");
+            assert_eq!(
+                ledger.total_down_bits,
+                flat_ledger.total_down_bits + t.down,
+                "{tag}: down"
+            );
+
+            // transcript round frames carry the same training content
+            let tree_t = Transcript::read_file(&rec).unwrap();
+            assert_eq!(flat_t.rounds.len(), tree_t.rounds.len(), "{tag}: round count");
+            for (a, b) in flat_t.rounds.iter().zip(&tree_t.rounds) {
+                assert_eq!(a.participants, b.participants, "{tag}: participants");
+                assert_eq!(a.params_checksum, b.params_checksum, "{tag}: checksum");
+                assert_eq!(a.mean_loss.to_bits(), b.mean_loss.to_bits(), "{tag}: loss");
+                assert_eq!(a.uploads, b.uploads, "{tag}: uploads");
+            }
+            assert!(
+                tree_t.rounds.iter().all(|r| !r.shards.is_empty()),
+                "{tag}: sharded recording lost its shard frames"
+            );
+
+            // and the sharded recording replays bit-for-bit, hop billing
+            // included (serial recordings re-derive the full ledger)
+            let outcome = replay(&tree_t).unwrap_or_else(|e| panic!("{tag}: replay: {e}"));
+            assert_eq!(bits(&outcome.final_params), bits(&params), "{tag}: replayed params");
+            assert_eq!(outcome.ledger.total_up_bits, ledger.total_up_bits, "{tag}: replay up");
+            let _ = std::fs::remove_file(&rec);
+        }
+        let _ = std::fs::remove_file(&flat_rec);
+    }
+}
+
+#[test]
+fn sharded_cluster_is_bit_identical_to_flat_under_churn_for_every_protocol() {
+    let train = dataset();
+    for name in protocol::names() {
+        let method = Method::parse(&name).unwrap_or_else(|e| panic!("{name}: {e}"));
+        let mk = |shards: usize| {
+            let mut ccfg = ClusterConfig::new(fed_cfg(method.clone(), 5));
+            ccfg.workers = 2;
+            ccfg.straggler_frac = 0.25;
+            ccfg.dropout_rate = 0.15;
+            ccfg.churn = 0.1;
+            ccfg.shards = shards;
+            if shards > 0 {
+                ccfg.shard_up_bps = 1e6;
+                ccfg.shard_down_bps = 1e6;
+            }
+            ccfg
+        };
+        let drive = |ccfg: ClusterConfig| {
+            let factory = NativeLogregFactory { batch_size: ccfg.fed.batch_size };
+            let init = init_params(&ccfg.fed);
+            let mut run = ClusterRun::new(ccfg, &train, init).unwrap();
+            while !run.finished() {
+                run.tick(&factory, &train).unwrap();
+            }
+            run
+        };
+
+        let flat = drive(mk(0));
+        for shards in [2usize, 8] {
+            let tag = format!("{name} shards={shards}");
+            let tree = drive(mk(shards));
+            assert_eq!(
+                bits(&flat.server.params),
+                bits(&tree.server.params),
+                "{tag}: params diverged"
+            );
+            assert_eq!(flat.rounds_done, tree.rounds_done, "{tag}: round count");
+            assert!(tree.stats.shard_hops_up > 0, "{tag}: no up hops billed");
+            assert_eq!(
+                tree.ledger.total_up_bits,
+                flat.ledger.total_up_bits + tree.stats.shard_hop_up_bits,
+                "{tag}: up bits"
+            );
+            assert_eq!(
+                tree.ledger.total_down_bits,
+                flat.ledger.total_down_bits + tree.stats.shard_hop_down_bits,
+                "{tag}: down bits"
+            );
+            assert_eq!(
+                tree.ledger.uploads,
+                flat.ledger.uploads + tree.stats.shard_hops_up,
+                "{tag}: upload count"
+            );
+            assert_eq!(
+                tree.ledger.downloads,
+                flat.ledger.downloads + tree.stats.shard_hops_down,
+                "{tag}: download count"
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. The registry
+// ---------------------------------------------------------------------
+
+#[test]
+fn by_name_parses_every_documented_spec_form() {
+    assert!(matches!(execution::by_name("serial").unwrap(), Execution::Serial));
+    match execution::by_name("pool:8").unwrap() {
+        Execution::ThreadPool(p) => assert_eq!(p.workers(), 8),
+        e => panic!("wrong variant {e:?}"),
+    }
+    match execution::by_name("pool:workers=3").unwrap() {
+        Execution::ThreadPool(p) => assert_eq!(p.workers(), 3),
+        e => panic!("wrong variant {e:?}"),
+    }
+    for spec in ["sharded:16x4", "sharded:shards=16,pool=4"] {
+        match execution::by_name(spec).unwrap() {
+            Execution::Sharded(s) => {
+                assert_eq!(s.shards, 16, "{spec}");
+                assert_eq!(s.pool.workers(), 4, "{spec}");
+            }
+            e => panic!("{spec}: wrong variant {e:?}"),
+        }
+    }
+    // the registry lists exactly what `repro executions` shows
+    let names = execution::names();
+    for builtin in ["serial", "pool", "sharded"] {
+        assert!(names.iter().any(|n| n == builtin), "missing {builtin} in {names:?}");
+        assert!(execution::is_registered(builtin));
+    }
+}
+
+#[test]
+fn spec_of_roundtrips_and_unknowns_are_clean_errors() {
+    for spec in ["serial", "pool:4", "sharded:8x2", "sharded:2x1"] {
+        let e = execution::by_name(spec).unwrap();
+        assert_eq!(execution::spec_of(&e), spec);
+        let e2 = execution::by_name(&execution::spec_of(&e)).unwrap();
+        assert_eq!(execution::spec_of(&e2), spec);
+    }
+    let err = execution::by_name("warp-drive").unwrap_err().to_string();
+    assert!(err.contains("unknown execution"), "{err}");
+    assert!(err.contains("sharded"), "error should list the registry: {err}");
+    assert!(execution::by_name("sharded:0x2").is_err(), "zero shards");
+    assert!(execution::by_name("pool:0").is_err(), "zero workers");
+}
+
+// ---------------------------------------------------------------------
+// 3. v3 transcripts and metrics reconciliation
+// ---------------------------------------------------------------------
+
+#[test]
+fn sharded_cluster_recording_replays_with_hop_billing_verified() {
+    let train = dataset();
+    let mut ccfg = ClusterConfig::new(fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6));
+    ccfg.workers = 2;
+    ccfg.straggler_frac = 0.25;
+    ccfg.shards = 3;
+    ccfg.shard_up_bps = 1e6;
+    ccfg.shard_down_bps = 1e6;
+    let proto = ccfg.fed.method.protocol().unwrap().name();
+
+    let rec = temp("cluster_v3", "fstx");
+    let factory = NativeLogregFactory { batch_size: ccfg.fed.batch_size };
+    let init = init_params(&ccfg.fed);
+    let metrics = MetricsHub::new();
+    let mut run = ClusterRun::new(ccfg, &train, init).unwrap();
+    run.record_to(&rec).unwrap();
+    run.add_observer(Box::new(metrics.clone()));
+    run.add_probe(Box::new(metrics.clone()));
+    while !run.finished() {
+        run.tick(&factory, &train).unwrap();
+    }
+    assert!(run.stats.shard_hops_up > 0, "scenario never exercised shard hops");
+
+    // the recording is a v3 file whose round frames carry the shard plan
+    let t = Transcript::read_file(&rec).unwrap();
+    assert_eq!(t.version, TRANSCRIPT_VERSION);
+    let recorded_hop_up: u64 = t
+        .rounds
+        .iter()
+        .flat_map(|r| r.shards.iter())
+        .map(|s| s.hop_up_bits)
+        .sum();
+    assert_eq!(recorded_hop_up, run.stats.shard_hop_up_bits, "recorded hop bits");
+    for r in &t.rounds {
+        for s in &r.shards {
+            assert!(!s.members.is_empty(), "round {}: empty shard frame", r.round);
+            assert!(
+                s.members.iter().all(|&m| r.participants.contains(&m)),
+                "round {}: shard member outside the round",
+                r.round
+            );
+        }
+    }
+
+    // replay re-prices the hops and verifies the full download ledger
+    let outcome = replay(&t).unwrap();
+    assert!(outcome.downloads_verified, "cluster recording must verify downloads");
+    assert_eq!(bits(&outcome.final_params), bits(&run.server.params));
+
+    // the mirrored comm counters equal the authoritative ledger exactly —
+    // shard hop bits included, so the tree cannot hide traffic
+    let c = |n: &str, dir: &str| {
+        metrics
+            .counter(n, &[("dir", dir), ("protocol", proto.as_str())])
+            .unwrap_or_else(|| panic!("missing {n} dir={dir}"))
+    };
+    assert_eq!(c("fedstc_comm_bits_total", "up"), run.ledger.total_up_bits);
+    assert_eq!(c("fedstc_comm_bits_total", "down"), run.ledger.total_down_bits);
+    assert_eq!(c("fedstc_comm_msgs_total", "up"), run.ledger.uploads);
+    assert_eq!(c("fedstc_comm_msgs_total", "down"), run.ledger.downloads);
+    // and the dedicated hop counters agree with the run's own books
+    assert_eq!(
+        metrics.counter("fedstc_shard_hop_bits_total", &[("dir", "up")]).unwrap(),
+        run.stats.shard_hop_up_bits
+    );
+    assert_eq!(
+        metrics.counter("fedstc_shard_hops_total", &[("dir", "up")]).unwrap(),
+        run.stats.shard_hops_up
+    );
+
+    let _ = std::fs::remove_file(&rec);
+}

@@ -1,0 +1,217 @@
+//! bench_fault_resilience — protocol robustness under injected transport
+//! faults, over fault rate × compression protocol.
+//!
+//! Each arm drives a contended cluster with a [`fedstc::fault::FaultPlan`]
+//! arming frame corruption and transfer loss at the same rate, retransmit
+//! with exponential backoff (4 attempts), and a 50% quorum-commit gate.
+//! The sweep measures what the recovery machinery *costs*:
+//!
+//! * wall round-attempts/sec — scheduler + checksum + retry overhead
+//! * committed vs aborted rounds — how often the quorum gate fires
+//! * retransmits and re-billed MB — the §V-B ledger surcharge faults add
+//!
+//! The rate-0 arm keeps the plan *active* (quorum gate armed, all rates
+//! zero) and re-checks the bit-identity pin against a plan-free clean run
+//! (PASS/MISS in the table): an active plan that never fires must not
+//! perturb a single bit of params or billing.
+//!
+//!     cargo bench --bench bench_fault_resilience [-- --rounds N]
+//!
+//! Emits `BENCH_fault_resilience.json` (see `benchkit::emit_json`).
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::config::{FedConfig, Method};
+use fedstc::fault::FaultPlan;
+use fedstc::sim::Experiment;
+use fedstc::util::benchkit::{banner, bench_args, emit_json, Table};
+use fedstc::util::json::Json;
+use fedstc::util::{bits_to_mb, Timer};
+
+const BATCH: usize = 20;
+const WARMUP_ROUNDS: usize = 2;
+const SERVER_BPS: f64 = 1e9;
+
+fn cfg(method: Method, timed_rounds: usize) -> FedConfig {
+    let iters_per_round = method.local_iters();
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 24,
+        participation: 0.5,
+        classes_per_client: 5,
+        batch_size: BATCH,
+        method,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: (WARMUP_ROUNDS + timed_rounds + 1) * iters_per_round,
+        eval_every: 1_000_000,
+        seed: 11,
+        train_examples: 2400,
+        test_examples: 200,
+        ..Default::default()
+    }
+}
+
+/// The plan a non-negative `rate` arms: corruption and loss at `rate`,
+/// retransmit with backoff, and the 50% quorum gate (active even at 0).
+fn plan(rate: f64) -> FaultPlan {
+    FaultPlan {
+        corrupt: rate,
+        loss: rate,
+        shard_crash: 0.0,
+        flaky_server: 0.0,
+        quorum: 0.5,
+        max_attempts: 4,
+        backoff_s: 0.25,
+    }
+}
+
+struct Cell {
+    attempts_per_sec: f64,
+    committed: u64,
+    aborts: u64,
+    retransmits: u64,
+    rebilled_mb: f64,
+    failed_uploads: u64,
+    total_up_bits: u64,
+    params: Vec<u32>,
+}
+
+/// Drive one cluster arm (`faults = None` means the clean reference) for
+/// `WARMUP_ROUNDS + timed_rounds` round attempts.
+fn run_arm(c: &FedConfig, faults: Option<FaultPlan>, timed_rounds: usize) -> anyhow::Result<Cell> {
+    let exp = Experiment::new(c.clone())?;
+    let init = exp.spec.init_flat(c.seed);
+    let mut ccfg = ClusterConfig::new(c.clone());
+    ccfg.workers = 4;
+    ccfg.server_up_bps = SERVER_BPS;
+    ccfg.server_down_bps = SERVER_BPS;
+    ccfg.faults = faults;
+    let mut run = ClusterRun::new(ccfg, &exp.train, init)?;
+    let factory = NativeLogregFactory { batch_size: c.batch_size };
+    for _ in 0..WARMUP_ROUNDS {
+        if run.next_round(&factory, &exp.train)?.is_none() {
+            break;
+        }
+    }
+    let committed_before = run.rounds_done as u64;
+    let aborts_before = run.stats.round_aborts;
+    let retrans_before = run.stats.retransmits;
+    let rebilled_before = run.stats.retransmit_bits;
+    let failed_before = run.stats.failed_uploads;
+    let t = Timer::start();
+    let mut attempts = 0usize;
+    for _ in 0..timed_rounds {
+        if run.next_round(&factory, &exp.train)?.is_none() {
+            break;
+        }
+        attempts += 1;
+    }
+    let wall = t.secs();
+    Ok(Cell {
+        attempts_per_sec: attempts as f64 / wall,
+        committed: run.rounds_done as u64 - committed_before,
+        aborts: run.stats.round_aborts - aborts_before,
+        retransmits: run.stats.retransmits - retrans_before,
+        rebilled_mb: bits_to_mb(run.stats.retransmit_bits - rebilled_before),
+        failed_uploads: run.stats.failed_uploads - failed_before,
+        total_up_bits: run.ledger.total_up_bits,
+        params: run.server.params.iter().map(|x| x.to_bits()).collect(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args()?;
+    let timed_rounds: usize = args.get_parse("rounds")?.unwrap_or(10);
+    args.finish()?;
+
+    banner(
+        "fault resilience",
+        "fault rate x protocol under retransmit + quorum commit (logreg)",
+    );
+
+    let protocols: [(&str, Method); 3] = [
+        ("stc 2%", Method::Stc { p_up: 0.02, p_down: 0.02 }),
+        ("topk 1%", Method::TopK { p: 0.01 }),
+        ("fedavg n=25", Method::FedAvg { n: 25 }),
+    ];
+    let rates = [0.0f64, 0.02, 0.05, 0.15];
+
+    let mut table = Table::new(&[
+        "protocol",
+        "fault rate",
+        "attempts/s",
+        "committed",
+        "aborts",
+        "retransmits",
+        "re-billed MB",
+        "failed uploads",
+        "zero-rate identical",
+    ]);
+    let mut rows = Vec::new();
+    let mut all_identical = true;
+    for (name, method) in &protocols {
+        let c = cfg(method.clone(), timed_rounds);
+        let clean = run_arm(&c, None, timed_rounds)?;
+        for &rate in &rates {
+            let cell = run_arm(&c, Some(plan(rate)), timed_rounds)?;
+            // The zero-rate plan keeps the quorum gate armed but never
+            // fires: params AND the billed ledger must match the clean
+            // run exactly.
+            let identity = if rate == 0.0 {
+                let identical = cell.params == clean.params
+                    && cell.total_up_bits == clean.total_up_bits;
+                all_identical &= identical;
+                if identical { "PASS" } else { "MISS" }
+            } else {
+                "-"
+            };
+            table.row(&[
+                (*name).into(),
+                format!("{rate:.2}"),
+                format!("{:.1}", cell.attempts_per_sec),
+                cell.committed.to_string(),
+                cell.aborts.to_string(),
+                cell.retransmits.to_string(),
+                format!("{:.3}", cell.rebilled_mb),
+                cell.failed_uploads.to_string(),
+                identity.into(),
+            ]);
+            let mut row = Json::obj();
+            row.set("protocol", Json::Str((*name).into()))
+                .set("fault_rate", Json::Num(rate))
+                .set("attempts_per_sec", Json::Num(cell.attempts_per_sec))
+                .set("clean_attempts_per_sec", Json::Num(clean.attempts_per_sec))
+                .set("committed", Json::Num(cell.committed as f64))
+                .set("aborts", Json::Num(cell.aborts as f64))
+                .set("retransmits", Json::Num(cell.retransmits as f64))
+                .set("rebilled_mb", Json::Num(cell.rebilled_mb))
+                .set("failed_uploads", Json::Num(cell.failed_uploads as f64))
+                .set("zero_rate_identical", Json::Bool(rate > 0.0 || identity == "PASS"));
+            rows.push(row);
+        }
+    }
+    table.print();
+
+    println!(
+        "\n{} every zero-rate armed plan reproduced its clean arm bit-for-bit",
+        if all_identical { "PASS" } else { "MISS" }
+    );
+    println!(
+        "Expected shape: retransmits and re-billed MB grow with the fault \
+         rate; aborts appear once loss x attempts overwhelms the 50% quorum; \
+         attempts/s dips only slightly — the checksum and retry scheduling \
+         ride the existing contention machinery."
+    );
+
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("fault_resilience".into()))
+        .set("timed_rounds", Json::Num(timed_rounds as f64))
+        .set("server_bps", Json::Num(SERVER_BPS))
+        .set("quorum", Json::Num(0.5))
+        .set("max_attempts", Json::Num(4.0))
+        .set("all_zero_rate_identical", Json::Bool(all_identical))
+        .set("cells", Json::Arr(rows));
+    let path = emit_json("fault_resilience", &out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

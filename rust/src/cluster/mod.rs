@@ -53,6 +53,7 @@ pub use transport::{
 };
 
 use crate::config::FedConfig;
+use crate::fault::FaultPlan;
 
 /// Everything the cluster simulation adds on top of a [`FedConfig`].
 ///
@@ -113,6 +114,11 @@ pub struct ClusterConfig {
     /// hard tick budget so pathological configs (everyone offline) always
     /// terminate
     pub max_ticks: usize,
+    /// fault-injection plan (`--faults`, see [`crate::fault`]): frame
+    /// corruption, transfer loss, shard crashes, a flaky coordinator and
+    /// the quorum-commit gate. `None` (and inactive plans) leave the run
+    /// bit-identical to a fault-free build.
+    pub faults: Option<FaultPlan>,
 }
 
 impl ClusterConfig {
@@ -141,6 +147,7 @@ impl ClusterConfig {
             // WaitingForMembers + Warmup + 3 phases/round + slack for
             // empty rounds and churn stalls
             max_ticks: rounds * 8 + 1000,
+            faults: None,
         }
     }
 
@@ -177,6 +184,9 @@ impl ClusterConfig {
                 self.fed.num_clients
             );
             self.shard_link().validate()?;
+        }
+        if let Some(plan) = &self.faults {
+            plan.validate()?;
         }
         Ok(())
     }

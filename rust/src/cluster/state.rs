@@ -26,7 +26,8 @@ use super::transport::{Direction, TransferReq, Transport};
 use super::ClusterConfig;
 use crate::compression::Message;
 use crate::data::Dataset;
-use crate::session::{execution, Execution, Session, ShardPlan};
+use crate::fault::FaultPlan;
+use crate::session::{execution, Execution, FaultRecord, Session, ShardPlan};
 use crate::telemetry::{ClusterEvent, ParticipantEvent, TickProbe};
 use crate::util::json::Json;
 use crate::util::rng::Pcg64;
@@ -100,6 +101,21 @@ pub struct ClusterStats {
     pub shard_hop_up_bits: u64,
     /// bits billed to root→shard relays
     pub shard_hop_down_bits: u64,
+    /// upload frames rejected by the integrity trailer (fault injection)
+    pub corrupt_frames: u64,
+    /// upload transfers dropped in flight (fault injection)
+    pub lost_transfers: u64,
+    /// retransmit attempts scheduled after a loss or corruption
+    pub retransmits: u64,
+    /// bits billed to retransmit attempts
+    pub retransmit_bits: u64,
+    /// uploads that exhausted the retransmit budget (or ran past the
+    /// round deadline) without ever delivering a valid frame
+    pub failed_uploads: u64,
+    /// shard aggregators that crashed; members fell back to direct-to-root
+    pub shard_failovers: u64,
+    /// rounds aborted by the quorum gate or a flaky coordinator
+    pub round_aborts: u64,
 }
 
 impl ClusterStats {
@@ -124,7 +140,14 @@ impl ClusterStats {
             .set("shard_hops_up", Json::Num(self.shard_hops_up as f64))
             .set("shard_hops_down", Json::Num(self.shard_hops_down as f64))
             .set("shard_hop_up_bits", Json::Num(self.shard_hop_up_bits as f64))
-            .set("shard_hop_down_bits", Json::Num(self.shard_hop_down_bits as f64));
+            .set("shard_hop_down_bits", Json::Num(self.shard_hop_down_bits as f64))
+            .set("corrupt_frames", Json::Num(self.corrupt_frames as f64))
+            .set("lost_transfers", Json::Num(self.lost_transfers as f64))
+            .set("retransmits", Json::Num(self.retransmits as f64))
+            .set("retransmit_bits", Json::Num(self.retransmit_bits as f64))
+            .set("failed_uploads", Json::Num(self.failed_uploads as f64))
+            .set("shard_failovers", Json::Num(self.shard_failovers as f64))
+            .set("round_aborts", Json::Num(self.round_aborts as f64));
         o
     }
 }
@@ -211,6 +234,9 @@ pub struct ClusterRun {
     /// never perturb sampling or training)
     event_rng: Pcg64,
     pending: Vec<PendingUpload>,
+    /// the round's full participant draw (incl. no-shows/dropouts); the
+    /// quorum gate measures valid deliveries against this denominator
+    pending_drawn: Vec<usize>,
     pending_selected: usize,
     pending_dropped: usize,
     pending_catchup_clients: usize,
@@ -246,7 +272,10 @@ impl ClusterRun {
         } else {
             Execution::ThreadPool(WorkerPool::new(cfg.workers))
         };
-        let session = Session::new(cfg.fed.clone(), train, init_params, exec)?;
+        let mut session = Session::new(cfg.fed.clone(), train, init_params, exec)?;
+        if let Some(plan) = &cfg.faults {
+            session.set_fault_plan(plan.clone())?;
+        }
         let event_rng = Pcg64::new(cfg.fed.seed, 0xe7e7);
         let membership = Membership::new(cfg.fed.num_clients, cfg.fed.seed, cfg.initial_members());
         let transport = Transport::with_server(
@@ -274,6 +303,7 @@ impl ClusterRun {
             probes: Vec::new(),
             event_rng,
             pending: Vec::new(),
+            pending_drawn: Vec::new(),
             pending_selected: 0,
             pending_dropped: 0,
             pending_catchup_clients: 0,
@@ -295,6 +325,11 @@ impl ClusterRun {
     /// mathematics (uploads → aggregation → model).
     pub fn record_to(&mut self, path: &std::path::Path) -> anyhow::Result<()> {
         self.session.record_transcript(path, false)
+    }
+
+    /// The fault plan this run was armed with ([`ClusterConfig::faults`]).
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.session.fault_plan()
     }
 
     /// Register a [`TickProbe`] for cluster lifecycle events. Probes see
@@ -515,6 +550,7 @@ impl ClusterRun {
         // stream as the serial path; notifies observers/transcripts)
         let ids = self.session.draw_participants()?;
         self.pending_selected = ids.len();
+        self.pending_drawn = ids.clone();
 
         // lifecycle: offline no-shows, then mid-round dropouts
         let mut participant_ids: Vec<usize> = Vec::with_capacity(ids.len());
@@ -672,6 +708,15 @@ impl ClusterRun {
         };
         let deadline = base * self.cfg.deadline_grace;
 
+        // faults are drawn from the session's dedicated fault stream in a
+        // fixed order (loss → corrupt → bit index, per upload in pending
+        // order; then shard crashes in shard order; then one flaky-server
+        // draw) — the same leg order as the serial session, so a `None`
+        // (or inactive) plan leaves this function bit-identical to the
+        // pre-fault implementation
+        let plan = self.session.fault.clone().filter(|p| p.is_active());
+        let mut fault_rec = FaultRecord::default();
+
         let mut msgs: Vec<Message> = Vec::with_capacity(pending.len());
         let mut agg_ids: Vec<usize> = Vec::with_capacity(pending.len());
         let mut arrival_of = vec![0.0f64; self.cfg.fed.num_clients];
@@ -686,12 +731,101 @@ impl ClusterRun {
                 p.up_queue_s,
             );
             loss_sum += p.loss as f64;
-            if p.arrival_s <= deadline {
+            let mut arrival_s = p.arrival_s;
+            let mut delivered = true;
+            if let Some(plan) = &plan {
+                // chaos leg 1: in-flight loss and frame corruption, with
+                // retransmits rescheduled through the contention scheduler
+                // under exponential backoff — every retry is re-billed and
+                // folded into the fault frame's extras
+                let mut attempt = 1u32;
+                loop {
+                    let ok = if self.session.fault_rng.f64() < plan.loss {
+                        fault_rec.lost_transfers += 1;
+                        self.stats.lost_transfers += 1;
+                        false
+                    } else if self.session.fault_rng.f64() < plan.corrupt {
+                        let mut frame = p.msg.to_checksummed_bytes();
+                        let bit = self.session.fault_rng.below(frame.len() * 8);
+                        frame[bit / 8] ^= 1 << (bit % 8);
+                        match Message::decode_frame(&frame) {
+                            // a flip the trailer failed to catch still
+                            // decodes; FNV-1a catches every single-bit flip
+                            Ok(_) => true,
+                            Err(_) => {
+                                fault_rec.corrupt_frames += 1;
+                                self.stats.corrupt_frames += 1;
+                                self.emit(ClusterEvent::CorruptFrame {
+                                    tick: self.ticks,
+                                    sim_s: self.sim_clock_s,
+                                    client_id: p.client_id,
+                                    attempt,
+                                    bits: p.up_bits,
+                                })?;
+                                false
+                            }
+                        }
+                    } else {
+                        true
+                    };
+                    if ok {
+                        break;
+                    }
+                    if attempt >= plan.max_attempts || arrival_s > deadline {
+                        delivered = false;
+                        break;
+                    }
+                    attempt += 1;
+                    let backoff_s = plan.backoff_delay_s(attempt);
+                    let req = TransferReq {
+                        client_id: p.client_id,
+                        bits: p.up_bits,
+                        ready_s: arrival_s + backoff_s,
+                    };
+                    let sched = self.transport.schedule_uploads(std::slice::from_ref(&req));
+                    let (dur_s, q_s, end_s) = (
+                        sched.timings[0].duration_s,
+                        sched.timings[0].queue_s,
+                        sched.timings[0].end_s,
+                    );
+                    self.session.ledger.record_upload_contended(p.up_bits as usize, dur_s, q_s);
+                    self.stats.up_queue_seconds += q_s;
+                    queue_secs += q_s;
+                    fault_rec.retransmits += 1;
+                    fault_rec.retransmit_bits += p.up_bits;
+                    fault_rec.extra_up_msgs += 1;
+                    fault_rec.extra_up_bits += p.up_bits;
+                    self.stats.retransmits += 1;
+                    self.stats.retransmit_bits += p.up_bits;
+                    self.emit(ClusterEvent::Retransmit {
+                        tick: self.ticks,
+                        sim_s: self.sim_clock_s,
+                        client_id: p.client_id,
+                        attempt,
+                        backoff_s,
+                        bits: p.up_bits,
+                    })?;
+                    arrival_s = end_s;
+                }
+            }
+            if !delivered {
+                // recovery budget exhausted: the server never held valid
+                // bytes. The billed first attempt has no round frame to
+                // re-derive it, so it rides the fault frame's extras; the
+                // update re-banks like a late upload
+                fault_rec.extra_up_msgs += 1;
+                fault_rec.extra_up_bits += p.up_bits;
+                self.stats.failed_uploads += 1;
+                let residual = &mut self.session.clients[p.client_id].residual;
+                if !residual.is_empty() {
+                    p.msg.add_to(residual, 1.0);
+                }
+            } else if arrival_s <= deadline {
                 // only messages the server actually aggregates reach the
                 // observers (transcripts replay exactly these)
                 self.session.notify_upload(p.client_id, &p.msg, p.up_bits)?;
                 agg_ids.push(p.client_id);
-                arrival_of[p.client_id] = p.arrival_s;
+                arrival_of[p.client_id] = arrival_s;
                 msgs.push(p.msg);
             } else {
                 late += 1;
@@ -700,7 +834,7 @@ impl ClusterRun {
                     tick: self.ticks,
                     sim_s: self.sim_clock_s,
                     client_id: p.client_id,
-                    arrival_s: p.arrival_s,
+                    arrival_s,
                     deadline_s: deadline,
                 })?;
                 // The server never saw it. Error-feedback methods
@@ -719,13 +853,26 @@ impl ClusterRun {
         let aggregated = msgs.len();
         let mean_loss = (loss_sum / trained as f64) as f32;
 
+        // quorum-commit gate: the round commits only if enough of the
+        // *drawn* participants (no-shows and dropouts count against the
+        // quorum — that is the point of one) delivered valid on-time
+        // uploads; otherwise the round aborts with parameters untouched
+        if let Some(plan) = &plan {
+            let needed = plan.quorum_needed(self.pending_drawn.len()).max(1);
+            if msgs.len() < needed {
+                return self.abort_round(
+                    fault_rec, msgs, agg_ids, needed, mean_loss, late, deadline, queue_secs,
+                );
+            }
+        }
+
         // Aggregation tree (Execution::Sharded): fold the on-time uploads
         // into per-shard partial sums and schedule every shard→root hop on
         // the shard link. The hops are billed *before* the commit so the
         // round's ledger snapshot (and transcript frame) carries the hop
         // bits; the root still reduces the original messages in slot
         // order, which keeps the params bit-identical to the flat run.
-        let shard_rounds = if self.shard_transport.is_some() && !msgs.is_empty() {
+        let mut shard_rounds = if self.shard_transport.is_some() && !msgs.is_empty() {
             execution::plan_shards(
                 self.cfg.shards,
                 self.cfg.fed.num_clients,
@@ -736,6 +883,31 @@ impl ClusterRun {
         } else {
             Vec::new()
         };
+        // chaos leg 2: shard-aggregator crashes. A crashed shard's members
+        // fall back to direct-to-root — their uploads already crossed the
+        // client→server link and the root still reduces them in slot
+        // order (the maths is untouched); only the shard's partial-sum
+        // hop and return relay disappear from the bill.
+        if let Some(plan) = &plan {
+            if !shard_rounds.is_empty() {
+                let mut survivors = Vec::with_capacity(shard_rounds.len());
+                for s in shard_rounds {
+                    if self.session.fault_rng.f64() < plan.shard_crash {
+                        fault_rec.failed_shards.push(s.id as u32);
+                        self.stats.shard_failovers += 1;
+                        self.emit(ClusterEvent::ShardFailover {
+                            tick: self.ticks,
+                            sim_s: self.sim_clock_s,
+                            shard: s.id,
+                            members: s.members.len(),
+                        })?;
+                    } else {
+                        survivors.push(s);
+                    }
+                }
+                shard_rounds = survivors;
+            }
+        }
         let mut agg_ready_s = deadline;
         if !shard_rounds.is_empty() {
             let reqs: Vec<TransferReq> = shard_rounds
@@ -783,6 +955,36 @@ impl ClusterRun {
             // membership + hop billing reach the observers (transcript v3
             // shard frames) before the round frame snapshots the ledger
             self.session.notify_shards(&shard_rounds)?;
+        }
+
+        // chaos leg 3: a flaky coordinator dies after collecting (and
+        // billing) the shard hops but before committing. The hops fold
+        // into the fault frame's extras and the round aborts with an
+        // impossible quorum (`needed = drawn + 1`) marking the failure.
+        if let Some(plan) = &plan {
+            if self.session.fault_rng.f64() < plan.flaky_server {
+                for s in &shard_rounds {
+                    fault_rec.extra_up_msgs += 1;
+                    fault_rec.extra_up_bits += s.hop_up_bits;
+                }
+                let needed = self.pending_drawn.len() + 1;
+                return self.abort_round(
+                    fault_rec,
+                    msgs,
+                    agg_ids,
+                    needed,
+                    mean_loss,
+                    late,
+                    agg_ready_s,
+                    queue_secs,
+                );
+            }
+            if fault_rec.has_activity() {
+                fault_rec.valid = msgs.len() as u32;
+                fault_rec.drawn = self.pending_drawn.len() as u32;
+                fault_rec.needed = plan.quorum_needed(self.pending_drawn.len()).max(1) as u32;
+                self.session.notify_fault(std::mem::take(&mut fault_rec))?;
+            }
         }
 
         // the deadline always covers the slowest eligible participant
@@ -853,6 +1055,64 @@ impl ClusterRun {
             dropped: self.pending_dropped,
             late,
             aggregated,
+            mean_loss,
+            catch_up_clients: self.pending_catchup_clients,
+            catch_up_bits: self.pending_catchup_bits,
+            round_secs: round_end_s,
+            queue_secs,
+        })
+    }
+
+    /// Fail the in-flight round: re-bank every delivered-but-discarded
+    /// upload into its client's residual (error-feedback methods defer
+    /// the work, residual-free methods genuinely lose it — same asymmetry
+    /// as a late upload), record the abort in the fault frame and leave
+    /// the global parameters untouched. `rounds_done` does not advance,
+    /// so the machine simply tries again after cooldown.
+    #[allow(clippy::too_many_arguments)]
+    fn abort_round(
+        &mut self,
+        mut rec: FaultRecord,
+        msgs: Vec<Message>,
+        agg_ids: Vec<usize>,
+        needed: usize,
+        mean_loss: f32,
+        late: usize,
+        round_end_s: f64,
+        queue_secs: f64,
+    ) -> anyhow::Result<RoundSummary> {
+        for (msg, &id) in msgs.iter().zip(&agg_ids) {
+            // billed on arrival, discarded before aggregation: no round
+            // frame re-derives these bits, so they ride the extras
+            rec.extra_up_msgs += 1;
+            rec.extra_up_bits += msg.wire_bits() as u64;
+            let residual = &mut self.session.clients[id].residual;
+            if !residual.is_empty() {
+                msg.add_to(residual, 1.0);
+            }
+        }
+        rec.aborted = true;
+        rec.valid = msgs.len() as u32;
+        rec.drawn = self.pending_drawn.len() as u32;
+        rec.needed = needed as u32;
+        rec.participants = self.pending_drawn.iter().map(|&id| id as u32).collect();
+        self.session.notify_fault(rec)?;
+        self.stats.round_aborts += 1;
+        self.sim_clock_s += round_end_s;
+        self.emit(ClusterEvent::RoundAbort {
+            tick: self.ticks,
+            sim_s: self.sim_clock_s,
+            round: self.session.server.round,
+            valid: msgs.len(),
+            drawn: self.pending_drawn.len(),
+            needed,
+        })?;
+        Ok(RoundSummary {
+            round: self.session.server.round,
+            selected: self.pending_selected,
+            dropped: self.pending_dropped,
+            late,
+            aggregated: 0,
             mean_loss,
             catch_up_clients: self.pending_catchup_clients,
             catch_up_bits: self.pending_catchup_bits,
@@ -1154,6 +1414,7 @@ mod tests {
             shard_hops: usize,
             late: usize,
             closes: usize,
+            faults: usize,
         }
 
         #[derive(Clone, Default)]
@@ -1171,6 +1432,10 @@ mod tests {
                     ClusterEvent::ShardHop { .. } => c.shard_hops += 1,
                     ClusterEvent::LateUpload { .. } => c.late += 1,
                     ClusterEvent::RoundClose { .. } => c.closes += 1,
+                    ClusterEvent::CorruptFrame { .. }
+                    | ClusterEvent::Retransmit { .. }
+                    | ClusterEvent::ShardFailover { .. }
+                    | ClusterEvent::RoundAbort { .. } => c.faults += 1,
                 }
                 Ok(())
             }
@@ -1215,6 +1480,7 @@ mod tests {
         assert_eq!(c.transfers_up as u64, observed.ledger.uploads);
         assert_eq!(c.transfers_down as u64, observed.ledger.downloads);
         assert_eq!(c.shard_hops, 0, "flat run emits no shard hops");
+        assert_eq!(c.faults, 0, "fault-free run emits no fault events");
         assert!(c.phases >= 5, "full lifecycle crosses at least 5 phase boundaries");
         assert!(c.membership > 0 || observed.stats.churn_dropouts == 0);
     }
@@ -1282,5 +1548,96 @@ mod tests {
         assert_eq!(tree.ledger.downloads, flat.ledger.downloads + tree.stats.shard_hops_down);
         // the finite shard link costs simulated time
         assert!(tree.sim_clock_s > flat.sim_clock_s);
+    }
+
+    #[test]
+    fn faulted_cluster_retransmits_and_reconciles() {
+        use crate::fault::FaultPlan;
+
+        let mut ccfg =
+            ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6));
+        ccfg.faults = Some(FaultPlan { loss: 0.25, corrupt: 0.15, ..FaultPlan::default() });
+        let (mut run, train) = build(ccfg);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        while !run.finished() {
+            run.tick(&factory, &train).unwrap();
+        }
+        assert!(
+            run.stats.lost_transfers + run.stats.corrupt_frames > 0,
+            "{:?}",
+            run.stats
+        );
+        assert!(run.stats.retransmits > 0, "{:?}", run.stats);
+        assert!(run.stats.retransmit_bits > 0);
+        // every attempted round bills its 5 first attempts whatever the
+        // chaos layer does to them; retries come on top — the ledger's
+        // upload count reconciles exactly
+        let attempted = run.rounds_done as u64 + run.stats.round_aborts;
+        assert_eq!(run.ledger.uploads, attempted * 5 + run.stats.retransmits);
+        assert_eq!(run.rounds_done, 6, "recovery must still finish the budget");
+    }
+
+    #[test]
+    fn quorum_abort_leaves_params_untouched() {
+        use crate::fault::FaultPlan;
+        use crate::models::ModelSpec;
+
+        let mut ccfg =
+            ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 3));
+        // every transfer is lost and never retried: no round can reach
+        // the full-participation quorum, so nothing ever commits
+        ccfg.faults = Some(FaultPlan {
+            loss: 1.0,
+            max_attempts: 1,
+            quorum: 1.0,
+            ..FaultPlan::default()
+        });
+        ccfg.max_ticks = 40;
+        let (mut run, train) = build(ccfg);
+        let init = ModelSpec::by_name("logreg").unwrap().init_flat(13);
+        let factory = NativeLogregFactory { batch_size: 10 };
+        while !run.finished() {
+            run.tick(&factory, &train).unwrap();
+        }
+        assert_eq!(run.rounds_done, 0);
+        assert!(run.stats.round_aborts > 0, "{:?}", run.stats);
+        assert!(run.stats.lost_transfers > 0, "{:?}", run.stats);
+        assert_eq!(run.stats.failed_uploads, run.stats.lost_transfers);
+        assert_eq!(run.server.params, init, "aborted rounds must not move the model");
+        assert!(run.ledger.total_up_bits > 0, "doomed transfers still billed");
+    }
+
+    #[test]
+    fn crashed_shards_degrade_members_to_direct_to_root() {
+        use crate::fault::FaultPlan;
+
+        let mk = |shards: usize, crash: f64| {
+            let mut ccfg =
+                ClusterConfig::new(small_fed(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6));
+            ccfg.shards = shards;
+            ccfg.shard_up_bps = 1e6;
+            ccfg.shard_down_bps = 1e6;
+            if crash > 0.0 {
+                ccfg.faults = Some(FaultPlan { shard_crash: crash, ..FaultPlan::default() });
+            }
+            let (mut run, train) = build(ccfg);
+            let factory = NativeLogregFactory { batch_size: 10 };
+            while !run.finished() {
+                run.tick(&factory, &train).unwrap();
+            }
+            run
+        };
+        let flat = mk(0, 0.0);
+        let crashed = mk(4, 1.0);
+        // every shard crashes every round, so every member degrades to
+        // direct-to-root: the root aggregates the same messages and the
+        // ledger matches the flat run exactly — no hop was ever billed
+        assert_eq!(flat.server.params, crashed.server.params, "failover changed the math");
+        assert_eq!(flat.ledger.total_up_bits, crashed.ledger.total_up_bits);
+        assert_eq!(flat.ledger.total_down_bits, crashed.ledger.total_down_bits);
+        assert!(crashed.stats.shard_failovers > 0, "{:?}", crashed.stats);
+        assert_eq!(crashed.stats.shard_hops_up, 0);
+        assert_eq!(crashed.stats.shard_hops_down, 0);
+        assert_eq!(crashed.stats.round_aborts, 0);
     }
 }

@@ -18,6 +18,22 @@
 //! [`WireFrame::payload_bits`] counts only the former; for ternary
 //! messages that includes the 72-bit (μ, count, b*) header exactly as
 //! before.
+//!
+//! ## Framing versions
+//!
+//! The original (v1) frame starts with a variant tag in `0..=3`. The
+//! fault layer ([`crate::fault`]) introduces a *checksummed* framing
+//! version ([`Message::to_checksummed_bytes`]): marker byte
+//! [`TAG_CHECKSUMMED`], the untouched v1 frame, then an FNV-1a-64
+//! trailer over those inner bytes. [`Message::from_bytes`] decodes both
+//! versions, so old recordings keep replaying, and a corrupted or
+//! truncated checksummed frame is rejected with a typed
+//! [`DecodeError::ChecksumMismatch`] instead of silently aggregating
+//! garbage. The 64-bit trailer is integrity framing, not billable
+//! payload — [`WireFrame::payload_bits`] (and therefore the
+//! [`crate::metrics::CommLedger`]) is identical whichever framing a run
+//! uses, which is what keeps zero-fault runs bit-identical to pre-fault
+//! ones.
 
 use super::golomb::{self, GolombEncoded};
 use crate::util::stats::entropy_from_counts;
@@ -111,6 +127,66 @@ const TAG_SPARSE: u8 = 1;
 const TAG_TERNARY: u8 = 2;
 const TAG_SIGN: u8 = 3;
 
+/// Marker byte of the checksummed framing version: a v1 frame wrapped
+/// with an FNV-1a-64 integrity trailer. Deliberately far from the v1
+/// tag range so the two framings can never be confused.
+pub const TAG_CHECKSUMMED: u8 = 0xC5;
+
+/// Why a received frame failed to decode. Every failure mode of
+/// [`Message::from_bytes`] is one of these — the decoder returns `Err`,
+/// never panics, on arbitrary input (pinned by the fuzz property in
+/// `rust/tests/property_faults.rs`). The fault layer matches on
+/// [`DecodeError::ChecksumMismatch`] to treat a corrupted upload exactly
+/// like a round-dropout (§V-B residual semantics).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DecodeError {
+    /// frame ended before a fixed-size field or declared payload
+    Truncated { needed: usize, what: &'static str },
+    /// first byte is neither a v1 variant tag nor [`TAG_CHECKSUMMED`]
+    UnknownTag(u8),
+    /// bytes left over after a complete frame
+    TrailingBytes(usize),
+    /// checksummed framing: the FNV-1a-64 trailer does not match the
+    /// inner frame (bit-flips in flight land here)
+    ChecksumMismatch { expected: u64, actual: u64 },
+    /// structurally invalid contents (out-of-range index, implausible
+    /// codec parameters, Golomb bitstream errors, …)
+    Malformed(String),
+}
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Truncated { needed, what } => {
+                write!(f, "message frame truncated: {needed} more bytes needed for {what}")
+            }
+            DecodeError::UnknownTag(tag) => write!(f, "unknown message tag {tag}"),
+            DecodeError::TrailingBytes(n) => {
+                write!(f, "{n} trailing bytes after message frame")
+            }
+            DecodeError::ChecksumMismatch { expected, actual } => write!(
+                f,
+                "frame checksum mismatch: trailer {expected:#018x}, payload hashes to {actual:#018x}"
+            ),
+            DecodeError::Malformed(why) => f.write_str(why),
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
+
+/// FNV-1a-64 over a byte slice — the integrity hash of the checksummed
+/// framing version (same parameters as the transcript layer's
+/// `params_checksum`).
+pub fn frame_checksum(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
 /// A sparse gap word of all ones is an escape: add 65 535 to the running
 /// distance and read the next word. Keeps the paper's "16 fixed bits per
 /// distance" layout (§V-C) decodable for tensors whose gaps overflow u16
@@ -203,16 +279,65 @@ impl Message {
         self.to_wire().bytes
     }
 
-    /// Decode a frame produced by [`Message::to_bytes`]; exact inverse
-    /// for every variant (pinned by property tests). Errors cleanly on
-    /// unknown tags, truncation and trailing garbage.
+    /// The checksummed framing version (see the module docs): marker
+    /// byte, the v1 frame, then an FNV-1a-64 trailer over the inner
+    /// bytes. Same billable payload as [`Message::to_bytes`]; the fault
+    /// layer uses this framing so in-flight corruption is *detected* at
+    /// [`Message::from_bytes`] rather than aggregated.
+    pub fn to_checksummed_bytes(&self) -> Vec<u8> {
+        let inner = self.to_bytes();
+        let mut bytes = Vec::with_capacity(inner.len() + 9);
+        bytes.push(TAG_CHECKSUMMED);
+        bytes.extend_from_slice(&inner);
+        bytes.extend_from_slice(&frame_checksum(&inner).to_le_bytes());
+        bytes
+    }
+
+    /// Decode a frame produced by [`Message::to_bytes`] or
+    /// [`Message::to_checksummed_bytes`]; exact inverse for every
+    /// variant (pinned by property tests). Errors cleanly on unknown
+    /// tags, truncation, checksum mismatch and trailing garbage — see
+    /// [`Message::decode_frame`] for the typed error.
     pub fn from_bytes(bytes: &[u8]) -> anyhow::Result<Message> {
+        Self::decode_frame(bytes).map_err(anyhow::Error::from)
+    }
+
+    /// Typed-error twin of [`Message::from_bytes`]: the recovery paths
+    /// match on the [`DecodeError`] variant (a `ChecksumMismatch` is a
+    /// retransmittable fault; an `UnknownTag` is a programming error).
+    pub fn decode_frame(bytes: &[u8]) -> Result<Message, DecodeError> {
+        match bytes.first() {
+            Some(&TAG_CHECKSUMMED) => {
+                // marker + at least an empty inner frame's tag + trailer
+                if bytes.len() < 1 + 1 + 8 {
+                    return Err(DecodeError::Truncated {
+                        needed: 1 + 1 + 8 - bytes.len(),
+                        what: "checksummed frame",
+                    });
+                }
+                let inner = &bytes[1..bytes.len() - 8];
+                let expected =
+                    u64::from_le_bytes(bytes[bytes.len() - 8..].try_into().unwrap());
+                let actual = frame_checksum(inner);
+                if expected != actual {
+                    return Err(DecodeError::ChecksumMismatch { expected, actual });
+                }
+                Self::decode_v1(inner)
+            }
+            _ => Self::decode_v1(bytes),
+        }
+    }
+
+    /// Decode the original (v1) framing: a variant tag followed by the
+    /// variant's payload.
+    fn decode_v1(bytes: &[u8]) -> Result<Message, DecodeError> {
         let mut r = ByteReader { buf: bytes, pos: 0 };
         let msg = match r.u8()? {
             TAG_DENSE => {
                 let n = r.u32()? as usize;
                 r.expect_remaining(4 * n, "dense values")?;
-                let values = (0..n).map(|_| r.f32()).collect::<anyhow::Result<Vec<f32>>>()?;
+                let values =
+                    (0..n).map(|_| r.f32()).collect::<Result<Vec<f32>, DecodeError>>()?;
                 Message::Dense { values }
             }
             TAG_SPARSE => {
@@ -234,10 +359,11 @@ impl Message {
                         }
                     }
                     let idx = prev + v as i64 + 1;
-                    anyhow::ensure!(
-                        (idx as u64) < len as u64,
-                        "sparse index {idx} out of range 0..{len}"
-                    );
+                    if (idx as u64) >= len as u64 {
+                        return Err(DecodeError::Malformed(format!(
+                            "sparse index {idx} out of range 0..{len}"
+                        )));
+                    }
                     indices.push(idx as u32);
                     values.push(r.f32()?);
                     prev = idx;
@@ -251,10 +377,11 @@ impl Message {
                 // parameterisation requires it); rejecting here keeps
                 // the decoded message re-encodable, upholding the
                 // clean-error contract on arbitrary input
-                anyhow::ensure!(
-                    p.is_finite() && p > 0.0 && p < 1.0,
-                    "ternary sparsity parameter {p} outside (0,1)"
-                );
+                if !(p.is_finite() && p > 0.0 && p < 1.0) {
+                    return Err(DecodeError::Malformed(format!(
+                        "ternary sparsity parameter {p} outside (0,1)"
+                    )));
+                }
                 let len_bits = r.u32()? as usize;
                 let mu = r.f32()?;
                 let nnz = r.u32()? as usize;
@@ -262,15 +389,26 @@ impl Message {
                 // sanity before any nnz-sized allocation: each element
                 // needs ≥ 2 payload bits (unary terminator + sign), and
                 // shifts by b* must stay defined
-                anyhow::ensure!(nnz <= len, "ternary nnz {nnz} exceeds tensor length {len}");
-                anyhow::ensure!(
-                    nnz == 0 || 2 * nnz <= len_bits,
-                    "ternary payload of {len_bits} bits cannot hold {nnz} elements"
-                );
-                anyhow::ensure!(b_star < 64, "implausible Golomb parameter b*={b_star}");
+                if nnz > len {
+                    return Err(DecodeError::Malformed(format!(
+                        "ternary nnz {nnz} exceeds tensor length {len}"
+                    )));
+                }
+                if nnz > 0 && 2 * nnz > len_bits {
+                    return Err(DecodeError::Malformed(format!(
+                        "ternary payload of {len_bits} bits cannot hold {nnz} elements"
+                    )));
+                }
+                if b_star >= 64 {
+                    return Err(DecodeError::Malformed(format!(
+                        "implausible Golomb parameter b*={b_star}"
+                    )));
+                }
                 let payload = r.bytes(len_bits.div_ceil(8))?.to_vec();
                 let enc = GolombEncoded { bytes: payload, len_bits, b_star };
-                Message::Ternary(TernaryTensor::decode(&enc, nnz, len, mu, p)?)
+                let t = TernaryTensor::decode(&enc, nnz, len, mu, p)
+                    .map_err(|e| DecodeError::Malformed(e.to_string()))?;
+                Message::Ternary(t)
             }
             TAG_SIGN => {
                 let n = r.u32()? as usize;
@@ -280,13 +418,11 @@ impl Message {
                     (0..n).map(|i| (packed[i / 8] >> (7 - i % 8)) & 1 == 1).collect();
                 Message::Sign { signs }
             }
-            tag => anyhow::bail!("unknown message tag {tag}"),
+            tag => return Err(DecodeError::UnknownTag(tag)),
         };
-        anyhow::ensure!(
-            r.pos == bytes.len(),
-            "{} trailing bytes after message frame",
-            bytes.len() - r.pos
-        );
+        if r.pos != bytes.len() {
+            return Err(DecodeError::TrailingBytes(bytes.len() - r.pos));
+        }
         Ok(msg)
     }
 
@@ -441,39 +577,40 @@ struct ByteReader<'a> {
 }
 
 impl<'a> ByteReader<'a> {
-    fn expect_remaining(&self, n: usize, what: &str) -> anyhow::Result<()> {
-        anyhow::ensure!(
-            self.buf.len() - self.pos >= n,
-            "message frame truncated: {} more bytes needed for {what}",
-            n - (self.buf.len() - self.pos)
-        );
+    fn expect_remaining(&self, n: usize, what: &'static str) -> Result<(), DecodeError> {
+        if self.buf.len() - self.pos < n {
+            return Err(DecodeError::Truncated {
+                needed: n - (self.buf.len() - self.pos),
+                what,
+            });
+        }
         Ok(())
     }
 
-    fn bytes(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
         self.expect_remaining(n, "payload")?;
         let out = &self.buf[self.pos..self.pos + n];
         self.pos += n;
         Ok(out)
     }
 
-    fn u8(&mut self) -> anyhow::Result<u8> {
+    fn u8(&mut self) -> Result<u8, DecodeError> {
         Ok(self.bytes(1)?[0])
     }
 
-    fn u16(&mut self) -> anyhow::Result<u16> {
+    fn u16(&mut self) -> Result<u16, DecodeError> {
         Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
     }
 
-    fn u32(&mut self) -> anyhow::Result<u32> {
+    fn u32(&mut self) -> Result<u32, DecodeError> {
         Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
 
-    fn f32(&mut self) -> anyhow::Result<f32> {
+    fn f32(&mut self) -> Result<f32, DecodeError> {
         Ok(f32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
 
-    fn f64(&mut self) -> anyhow::Result<f64> {
+    fn f64(&mut self) -> Result<f64, DecodeError> {
         Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 }
@@ -690,6 +827,76 @@ mod tests {
         // sparse index walking past the declared tensor length
         let bad = Message::Sparse { len: 4, indices: vec![2, 9], values: vec![1.0, 2.0] };
         assert!(Message::from_bytes(&bad.to_bytes()).is_err());
+    }
+
+    #[test]
+    fn checksummed_frames_roundtrip_every_variant() {
+        for m in [
+            Message::Dense { values: vec![1.5, -2.25, 0.0] },
+            Message::Sparse { len: 1000, indices: vec![0, 7, 999], values: vec![1.0, -2.0, 0.5] },
+            Message::Ternary(tern()),
+            Message::Sign { signs: vec![true, false, true, true, false] },
+        ] {
+            let framed = m.to_checksummed_bytes();
+            assert_eq!(framed[0], TAG_CHECKSUMMED);
+            assert_eq!(framed.len(), m.to_bytes().len() + 9);
+            assert_eq!(Message::from_bytes(&framed).unwrap(), m);
+            // the trailer is integrity framing: billing is unchanged
+            assert_eq!(m.to_wire().payload_bits, m.wire_bits());
+        }
+    }
+
+    #[test]
+    fn checksummed_frames_detect_any_single_bit_flip() {
+        let m = Message::Ternary(tern());
+        let clean = m.to_checksummed_bytes();
+        for bit in 0..clean.len() * 8 {
+            let mut dirty = clean.clone();
+            dirty[bit / 8] ^= 1 << (bit % 8);
+            let got = Message::decode_frame(&dirty);
+            assert!(got.is_err(), "bit {bit} flip went undetected");
+        }
+    }
+
+    #[test]
+    fn decode_frame_errors_are_typed() {
+        // corrupt the inner payload: the checksum trailer catches it
+        let mut framed = Message::Sign { signs: vec![true; 20] }.to_checksummed_bytes();
+        framed[5] ^= 0x40;
+        match Message::decode_frame(&framed) {
+            Err(DecodeError::ChecksumMismatch { expected, actual }) => {
+                assert_ne!(expected, actual)
+            }
+            other => panic!("expected ChecksumMismatch, got {other:?}"),
+        }
+        // and the typed error survives the anyhow boundary
+        let err = Message::from_bytes(&framed).unwrap_err();
+        assert!(err.downcast_ref::<DecodeError>().is_some(), "{err}");
+        assert!(
+            matches!(Message::decode_frame(&[]), Err(DecodeError::Truncated { .. })),
+            "empty input"
+        );
+        assert!(matches!(
+            Message::decode_frame(&[9, 0, 0, 0]),
+            Err(DecodeError::UnknownTag(9))
+        ));
+        let mut ok = Message::Sign { signs: vec![true; 3] }.to_bytes();
+        ok.push(0xAB);
+        assert!(matches!(
+            Message::decode_frame(&ok),
+            Err(DecodeError::TrailingBytes(1))
+        ));
+        // a truncated checksummed frame is rejected before the trailer
+        // could be misread as payload
+        let short = &Message::Dense { values: vec![1.0] }.to_checksummed_bytes()[..6];
+        assert!(Message::decode_frame(short).is_err());
+    }
+
+    #[test]
+    fn frame_checksum_is_fnv1a64() {
+        // pinned reference values (offset basis / one-byte fold)
+        assert_eq!(frame_checksum(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(frame_checksum(b"a"), 0xaf63_dc4c_8601_ec8c);
     }
 
     #[test]

@@ -28,7 +28,7 @@ pub mod golomb;
 pub mod message;
 pub mod stc;
 
-pub use message::{Message, TernaryTensor};
+pub use message::{DecodeError, Message, TernaryTensor};
 
 use crate::util::rng::Pcg64;
 

@@ -1,0 +1,386 @@
+//! Deterministic fault injection and recovery.
+//!
+//! The cluster simulation models *benign* faults — clients that drop
+//! out, straggle, or churn. This module adds the malign ones: frames
+//! that corrupt in flight, transfers that vanish, shard aggregators
+//! that crash, and a coordinator that occasionally fails to commit. A
+//! [`FaultPlan`] is a small bundle of per-event probabilities plus the
+//! recovery knobs (retransmit attempts, backoff, commit quorum); the
+//! drivers draw every fault decision from a **dedicated RNG stream**
+//! ([`FAULT_STREAM`], `Pcg64::new(seed, 0xfa17)`) so that a run with no
+//! plan — or an all-zero plan — is bit-identical to a run built before
+//! this module existed: no other stream ever sees an extra draw.
+//!
+//! ## Draw order (the determinism contract)
+//!
+//! Within one cluster round the fault stream is consumed in a fixed
+//! order, documented here because transcripts replay against it:
+//!
+//! 1. per upload, in participant order: one `loss` draw; if not lost,
+//!    one `corrupt` draw; if corrupt, one draw for the flipped bit —
+//!    repeated per retransmit attempt;
+//! 2. per non-empty shard, in shard order: one `shard_crash` draw;
+//! 3. one `flaky_server` draw for the round.
+//!
+//! The serial driver ([`crate::session::Session::run_round`]) uses leg 1
+//! and 3 only (it has no shard transport).
+//!
+//! ## Recovery legs
+//!
+//! * **frame integrity** — with a plan active, uploads travel as
+//!   checksummed frames ([`crate::compression::Message::to_checksummed_bytes`]);
+//!   corruption is *detected* at decode ([`DecodeError::ChecksumMismatch`])
+//!   instead of silently aggregating garbage.
+//! * **retransmit** — a lost or corrupt transfer reschedules through the
+//!   contention scheduler with exponential backoff
+//!   ([`FaultPlan::backoff_delay_s`]), every attempt billed into the
+//!   [`crate::metrics::CommLedger`]; attempts are capped and the round
+//!   deadline still applies.
+//! * **shard failover** — a crashed shard aggregator degrades its
+//!   members to direct-to-root for the round: the shard's partial-sum
+//!   hop is not billed (the member uploads already travelled the main
+//!   link), and the failover is recorded.
+//! * **quorum commit** — the round commits only if the number of valid
+//!   on-time uploads reaches [`FaultPlan::quorum_needed`]; otherwise the
+//!   round is recorded as failed, parameters untouched, and every valid
+//!   update is re-banked into its client's residual (§V-B dropout
+//!   semantics: the update is delayed, never lost).
+//!
+//! Like protocols and executions, fault processes form an open
+//! string-keyed registry: [`by_name`] resolves `<name>[:args]`
+//! (`random:corrupt=0.01,loss=0.02`), [`parse`] additionally accepts the
+//! bare-args shorthand the CLI uses (`--faults corrupt=0.01,loss=0.02`
+//! means `random:…`), and [`register`] lets external code add fault
+//! processes without touching this crate.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::protocol::ProtocolArgs;
+use crate::util::rng::Pcg64;
+
+/// Stream id of the dedicated fault RNG (`Pcg64::new(seed, FAULT_STREAM)`).
+/// Sampler (0x5a3b), transport (0x7a11) and lifecycle (0xe7e7) streams
+/// are never perturbed by fault draws.
+pub const FAULT_STREAM: u64 = 0xfa17;
+
+/// A deterministic chaos schedule: what goes wrong, how often, and how
+/// hard the system tries to recover.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// per-attempt probability an upload frame is bit-flipped in flight
+    pub corrupt: f64,
+    /// per-attempt probability an upload transfer vanishes entirely
+    pub loss: f64,
+    /// per-round, per-shard probability the shard aggregator crashes
+    pub shard_crash: f64,
+    /// per-round probability the coordinator fails to commit
+    pub flaky_server: f64,
+    /// fraction of drawn participants that must deliver valid uploads
+    /// for the round to commit (0 disables the quorum gate)
+    pub quorum: f64,
+    /// total transfer attempts per upload (1 = no retransmit)
+    pub max_attempts: u32,
+    /// base backoff before the first retransmit; doubles per attempt
+    pub backoff_s: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            corrupt: 0.0,
+            loss: 0.0,
+            shard_crash: 0.0,
+            flaky_server: 0.0,
+            quorum: 0.0,
+            max_attempts: 3,
+            backoff_s: 0.5,
+        }
+    }
+}
+
+impl FaultPlan {
+    /// Validate every knob; called by the registry builders and the
+    /// cluster config check.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        for (name, v) in [
+            ("corrupt", self.corrupt),
+            ("loss", self.loss),
+            ("shard_crash", self.shard_crash),
+            ("flaky_server", self.flaky_server),
+        ] {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&v),
+                "fault rate {name}={v} outside [0,1]"
+            );
+        }
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&self.quorum),
+            "quorum={} outside [0,1]",
+            self.quorum
+        );
+        anyhow::ensure!(self.max_attempts >= 1, "attempts must be >= 1");
+        anyhow::ensure!(
+            self.backoff_s.is_finite() && self.backoff_s >= 0.0,
+            "backoff_s={} must be finite and >= 0",
+            self.backoff_s
+        );
+        Ok(())
+    }
+
+    /// Whether the plan can ever change a run's outcome. An inactive
+    /// plan draws from the fault stream but every draw compares against
+    /// a zero rate, so the run stays bit-identical to a no-plan run —
+    /// pinned in `rust/tests/property_faults.rs`.
+    pub fn is_active(&self) -> bool {
+        self.corrupt > 0.0
+            || self.loss > 0.0
+            || self.shard_crash > 0.0
+            || self.flaky_server > 0.0
+            || self.quorum > 0.0
+    }
+
+    /// The dedicated fault RNG for a run seed.
+    pub fn rng(seed: u64) -> Pcg64 {
+        Pcg64::new(seed, FAULT_STREAM)
+    }
+
+    /// Exponential backoff before retransmit attempt `attempt`
+    /// (2, 3, …): `backoff_s · 2^(attempt-2)`.
+    pub fn backoff_delay_s(&self, attempt: u32) -> f64 {
+        debug_assert!(attempt >= 2, "attempt 1 is the initial transfer");
+        self.backoff_s * f64::powi(2.0, attempt.saturating_sub(2) as i32)
+    }
+
+    /// Minimum number of valid uploads out of `drawn` participants for
+    /// the round to commit.
+    pub fn quorum_needed(&self, drawn: usize) -> usize {
+        (self.quorum * drawn as f64).ceil() as usize
+    }
+
+    /// Canonical spec string (inverse of [`parse`] for the built-in
+    /// `random` process); used by run banners.
+    pub fn spec(&self) -> String {
+        format!(
+            "random:corrupt={},loss={},shard_crash={},flaky_server={},quorum={},attempts={},backoff_s={}",
+            self.corrupt,
+            self.loss,
+            self.shard_crash,
+            self.flaky_server,
+            self.quorum,
+            self.max_attempts,
+            self.backoff_s
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// The registry (mirrors `protocol::by_name` / `execution::by_name`)
+// ---------------------------------------------------------------------
+
+type Builder = Arc<dyn Fn(&ProtocolArgs) -> anyhow::Result<FaultPlan> + Send + Sync>;
+
+const RANDOM_KEYS: [&str; 7] =
+    ["corrupt", "loss", "shard_crash", "flaky_server", "quorum", "attempts", "backoff_s"];
+
+fn random_builder(a: &ProtocolArgs) -> anyhow::Result<FaultPlan> {
+    a.expect_keys(&RANDOM_KEYS, 0)?;
+    let d = FaultPlan::default();
+    let plan = FaultPlan {
+        corrupt: a.parse_or("corrupt", usize::MAX, d.corrupt)?,
+        loss: a.parse_or("loss", usize::MAX, d.loss)?,
+        shard_crash: a.parse_or("shard_crash", usize::MAX, d.shard_crash)?,
+        flaky_server: a.parse_or("flaky_server", usize::MAX, d.flaky_server)?,
+        quorum: a.parse_or("quorum", usize::MAX, d.quorum)?,
+        max_attempts: a.parse_or("attempts", usize::MAX, d.max_attempts)?,
+        backoff_s: a.parse_or("backoff_s", usize::MAX, d.backoff_s)?,
+    };
+    plan.validate()?;
+    Ok(plan)
+}
+
+fn registry() -> &'static Mutex<BTreeMap<String, Builder>> {
+    static REGISTRY: OnceLock<Mutex<BTreeMap<String, Builder>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| {
+        type Ctor = fn(&ProtocolArgs) -> anyhow::Result<FaultPlan>;
+        let mut m: BTreeMap<String, Builder> = BTreeMap::new();
+        let mut put = |name: &str, b: Ctor| {
+            m.insert(name.to_string(), Arc::new(b));
+        };
+        // independent per-event coin flips at fixed rates — the chaos
+        // baseline every knob of `--faults` parameterises
+        put("random", random_builder);
+        // the explicit no-op plan: draws still come from the fault
+        // stream, rates are all zero (bit-identity pin fixture)
+        put("off", |a| {
+            a.expect_keys(&[], 0)?;
+            Ok(FaultPlan::default())
+        });
+        Mutex::new(m)
+    })
+}
+
+/// Construct a fault plan from a spec string: `<name>[:args]`
+/// (`random:corrupt=0.01,loss=0.02`). Unknown names list the registry.
+pub fn by_name(spec: &str) -> anyhow::Result<FaultPlan> {
+    let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    // fetch-then-drop: the builder runs (and any error path re-reads the
+    // registry for its message) without the lock held
+    let builder: Option<Builder> =
+        registry().lock().expect("fault registry poisoned").get(name).cloned();
+    let builder = builder.ok_or_else(|| {
+        anyhow::anyhow!("unknown fault process '{name}' (registered: {})", names().join("|"))
+    })?;
+    (builder.as_ref())(&ProtocolArgs::parse(rest))
+        .map_err(|e| anyhow::anyhow!("fault process '{spec}': {e}"))
+}
+
+/// CLI-friendly parse: a spec whose leading segment is a registered
+/// process name goes through [`by_name`]; anything else is shorthand
+/// for the built-in `random` process, so
+/// `--faults corrupt=0.01,loss=0.02` ≡ `--faults random:corrupt=0.01,loss=0.02`.
+pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+    let head = spec.split([':', ',']).next().unwrap_or(spec);
+    let head = head.split('=').next().unwrap_or(head);
+    if registry().lock().expect("fault registry poisoned").contains_key(head) {
+        by_name(spec)
+    } else {
+        by_name(&format!("random:{spec}"))
+    }
+}
+
+/// Whether `name` (the part before any `:`) resolves in the registry.
+pub fn is_registered(spec: &str) -> bool {
+    let name = spec.split(':').next().unwrap_or(spec);
+    registry().lock().expect("fault registry poisoned").contains_key(name)
+}
+
+/// Register a new fault process under `name`. External crates call this
+/// once at startup; afterwards `--faults <name>:<args>` works everywhere
+/// a fault spec is accepted. Errors on duplicate names (built-ins cannot
+/// be shadowed).
+pub fn register(
+    name: &str,
+    builder: impl Fn(&ProtocolArgs) -> anyhow::Result<FaultPlan> + Send + Sync + 'static,
+) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-'),
+        "fault process name '{name}' must be non-empty [A-Za-z0-9_-]"
+    );
+    let mut reg = registry().lock().expect("fault registry poisoned");
+    anyhow::ensure!(!reg.contains_key(name), "fault process '{name}' is already registered");
+    reg.insert(name.to_string(), Arc::new(builder));
+    Ok(())
+}
+
+/// All registered fault-process names, sorted.
+pub fn names() -> Vec<String> {
+    registry().lock().expect("fault registry poisoned").keys().cloned().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_knows_every_builtin() {
+        let n = names();
+        for want in ["random", "off"] {
+            assert!(n.iter().any(|x| x == want), "missing '{want}' in {n:?}");
+        }
+    }
+
+    #[test]
+    fn by_name_parses_every_documented_form() {
+        let p = by_name("random:corrupt=0.01,loss=0.02,shard_crash=0.005,flaky_server=0.001")
+            .unwrap();
+        assert_eq!(p.corrupt, 0.01);
+        assert_eq!(p.loss, 0.02);
+        assert_eq!(p.shard_crash, 0.005);
+        assert_eq!(p.flaky_server, 0.001);
+        assert!(p.is_active());
+        let p = by_name("random:quorum=0.8,attempts=5,backoff_s=0.25").unwrap();
+        assert_eq!(p.quorum, 0.8);
+        assert_eq!(p.max_attempts, 5);
+        assert_eq!(p.backoff_s, 0.25);
+        assert!(!by_name("off").unwrap().is_active());
+        assert!(!by_name("random").unwrap().is_active());
+    }
+
+    #[test]
+    fn parse_accepts_bare_args_shorthand() {
+        let full = by_name("random:corrupt=0.1,loss=0.2").unwrap();
+        assert_eq!(parse("corrupt=0.1,loss=0.2").unwrap(), full);
+        assert_eq!(parse("random:corrupt=0.1,loss=0.2").unwrap(), full);
+        assert_eq!(parse("off").unwrap(), by_name("off").unwrap());
+    }
+
+    #[test]
+    fn by_name_rejects_unknowns_and_nonsense() {
+        let e = by_name("gremlins").unwrap_err().to_string();
+        assert!(e.contains("unknown fault process 'gremlins'"), "{e}");
+        assert!(e.contains("random"), "error should list the registry: {e}");
+        assert!(by_name("random:corrupt=1.5").is_err(), "rate over 1");
+        assert!(by_name("random:loss=-0.1").is_err(), "negative rate");
+        assert!(by_name("random:quorum=2").is_err(), "quorum over 1");
+        assert!(by_name("random:attempts=0").is_err(), "zero attempts");
+        assert!(by_name("random:backoff_s=-1").is_err(), "negative backoff");
+        assert!(by_name("random:corupt=0.1").is_err(), "typo key");
+        assert!(by_name("random:0.1").is_err(), "positional args rejected");
+    }
+
+    #[test]
+    fn register_rejects_duplicates_and_bad_names() {
+        assert!(register("random", |_| Ok(FaultPlan::default())).is_err());
+        assert!(register("no colons", |_| Ok(FaultPlan::default())).is_err());
+        register("unit-test-faults", |a| {
+            a.expect_keys(&[], 0)?;
+            Ok(FaultPlan { loss: 0.5, ..FaultPlan::default() })
+        })
+        .unwrap();
+        assert!(is_registered("unit-test-faults"));
+        assert_eq!(by_name("unit-test-faults").unwrap().loss, 0.5);
+        assert!(register("unit-test-faults", |_| Ok(FaultPlan::default())).is_err());
+    }
+
+    #[test]
+    fn backoff_doubles_per_attempt() {
+        let p = FaultPlan { backoff_s: 0.5, ..FaultPlan::default() };
+        assert_eq!(p.backoff_delay_s(2), 0.5);
+        assert_eq!(p.backoff_delay_s(3), 1.0);
+        assert_eq!(p.backoff_delay_s(4), 2.0);
+    }
+
+    #[test]
+    fn quorum_needed_is_a_ceiling() {
+        let p = FaultPlan { quorum: 0.5, ..FaultPlan::default() };
+        assert_eq!(p.quorum_needed(10), 5);
+        assert_eq!(p.quorum_needed(9), 5);
+        assert_eq!(p.quorum_needed(0), 0);
+        let off = FaultPlan::default();
+        assert_eq!(off.quorum_needed(10), 0);
+        let all = FaultPlan { quorum: 1.0, ..FaultPlan::default() };
+        assert_eq!(all.quorum_needed(7), 7);
+    }
+
+    #[test]
+    fn dedicated_stream_is_stable() {
+        // the stream constant is part of the replay contract: two rngs
+        // for the same seed must agree, and the stream must not collide
+        // with the sampler/transport/lifecycle streams
+        let mut a = FaultPlan::rng(42);
+        let mut b = Pcg64::new(42, FAULT_STREAM);
+        for _ in 0..8 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        for other in [0x5a3b_u64, 0x7a11, 0xe7e7] {
+            assert_ne!(FAULT_STREAM, other);
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_through_by_name() {
+        let p = by_name("random:corrupt=0.25,quorum=0.5,attempts=2").unwrap();
+        assert_eq!(by_name(&p.spec()).unwrap(), p);
+    }
+}

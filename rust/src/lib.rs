@@ -57,6 +57,14 @@
 //!   ever constructing a trainer, and transcript diffing
 //!   ([`session::diff_bytes`], `repro replay --against`) that reports
 //!   the first diverging frame.
+//! * [`fault`] — deterministic fault injection and recovery: a
+//!   [`fault::FaultPlan`] (own string-keyed registry, `--faults
+//!   corrupt=0.01,loss=0.02,…`, extended via [`fault::register`]) drawing
+//!   from a dedicated RNG stream, with four recovery legs — checksummed
+//!   frame integrity, retransmit with exponential backoff through the
+//!   contention scheduler, shard failover to direct-to-root, and quorum
+//!   commit (failed rounds leave parameters untouched). A run without a
+//!   plan is bit-identical to one built before the fault layer existed.
 //! * [`sim`] — the federated learning simulation engine driving complete
 //!   experiments, and the sign-congruence analysis of Fig. 3.
 //! * [`telemetry`] — structured JSONL run traces, a Prometheus-style
@@ -77,6 +85,7 @@ pub mod compression;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod fault;
 pub mod metrics;
 pub mod models;
 pub mod protocol;

@@ -9,6 +9,7 @@
 //!   alpha      gradient sign-congruence analysis (paper Fig. 3)
 //!   protocols  list the registered compression protocols (--method names)
 //!   executions list the registered execution strategies (--execution)
+//!   faults     list the registered fault-injection processes (--faults)
 //!   info       artifact + model inventory
 //!   sweep      grid over one config key (comma-separated values)
 //!   help       this text
@@ -23,6 +24,7 @@ use fedstc::cli::Args;
 use fedstc::cluster::{ClusterConfig, ClusterRun, ContentionPolicy, NativeLogregFactory};
 use fedstc::config::FedConfig;
 use fedstc::data::synth::task_dataset;
+use fedstc::fault;
 use fedstc::metrics::EvalPoint;
 use fedstc::models::{native::NativeLogreg, ModelSpec, Trainer};
 use fedstc::protocol::Protocol;
@@ -51,6 +53,7 @@ fn run() -> anyhow::Result<()> {
         "alpha" => cmd_alpha(&args),
         "protocols" => cmd_protocols(&args),
         "executions" => cmd_executions(&args),
+        "faults" => cmd_faults(&args),
         "info" => cmd_info(&args),
         "sweep" => cmd_sweep(&args),
         _ => {
@@ -79,6 +82,9 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
             // the execution strategy (`execution::by_name` spec) is read
             // by cmd_train/cmd_cluster, not by FedConfig
             "execution" if records => {}
+            // the fault-injection plan (`fault::parse` spec) is likewise
+            // read by cmd_train/cmd_cluster
+            "faults" if records => {}
             // telemetry flags (pure observers; cmd_train/cmd_cluster
             // read them through telemetry_from_args)
             "trace" | "metrics" | "progress" if records => {}
@@ -165,6 +171,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
          use `repro cluster --execution {0}` (or a 1-worker spec like `sharded:4x1`)",
         execution::spec_of(&exec)
     );
+    let faults = match args.get("faults") {
+        Some(spec) => Some(fault::parse(&spec)?),
+        None => None,
+    };
     let mut tele = telemetry_from_args(args, cfg.rounds())?;
     args.finish()?;
 
@@ -172,14 +182,23 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if !matches!(exec, Execution::Serial) {
         println!("# execution: {}", execution::spec_of(&exec));
     }
+    if let Some(plan) = faults.as_ref().filter(|p| p.is_active()) {
+        println!("# faults: {}", plan.spec());
+    }
     let timer = Timer::start();
     let exp = Experiment::new(cfg)?;
     let mut trainer = make_trainer(&exp.cfg, &backend)?;
     if let Some(path) = &record {
-        tele.observers
-            .push(Box::new(TranscriptWriter::create(std::path::Path::new(path), true)?));
+        // faulted recordings carry v4 fault frames; unfaulted ones keep
+        // the base format so their bytes stay identical across builds
+        let fault_capable = faults.as_ref().is_some_and(|p| p.is_active());
+        tele.observers.push(Box::new(TranscriptWriter::create_with_faults(
+            std::path::Path::new(path),
+            true,
+            fault_capable,
+        )?));
     }
-    let log = exp.run_observed_with(trainer.as_mut(), tele.observers, exec)?;
+    let log = exp.run_observed_faulted(trainer.as_mut(), tele.observers, exec, faults)?;
 
     println!("iter  round  accuracy  loss     trainloss  upMB      downMB");
     for p in &log.points {
@@ -392,6 +411,11 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             }
         }
     }
+    // chaos: `--faults corrupt=0.01,loss=0.02,...` or a registered
+    // process spec (`--faults random:...`); see `repro faults`
+    if let Some(spec) = args.get("faults") {
+        ccfg.faults = Some(fault::parse(&spec)?);
+    }
     let out = args.get("out");
     let record = args.get("record");
     let trace_path = args.get("trace");
@@ -416,6 +440,9 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
             "# aggregation tree: {} shards, shard link up {} bps / down {} bps",
             ccfg.shards, ccfg.shard_up_bps, ccfg.shard_down_bps
         );
+    }
+    if let Some(plan) = ccfg.faults.as_ref().filter(|p| p.is_active()) {
+        println!("# faults: {}", plan.spec());
     }
     let exp = Experiment::new(ccfg.fed.clone())?;
     let init = exp.spec.init_flat(exp.cfg.seed);
@@ -524,6 +551,19 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         "# contention: queued {:.1}s up / {:.1}s down; peak wire concurrency {} up / {} down",
         st.up_queue_seconds, st.down_queue_seconds, st.peak_up_concurrency, st.peak_down_concurrency
     );
+    if cluster.fault_plan().is_some_and(|p| p.is_active()) {
+        println!(
+            "# faults: corrupt={} lost={} retransmits={} ({:.3} MB re-billed) \
+             failed_uploads={} shard_failovers={} round_aborts={}",
+            st.corrupt_frames,
+            st.lost_transfers,
+            st.retransmits,
+            bits_to_mb(st.retransmit_bits),
+            st.failed_uploads,
+            st.shard_failovers,
+            st.round_aborts
+        );
+    }
     println!(
         "# comm: {:.3} MB up / {:.3} MB down per client",
         bits_to_mb(cluster.ledger.up_bits_per_client()),
@@ -628,6 +668,37 @@ fn cmd_executions(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// `repro faults` — the registry behind `--faults`: every fault process
+/// (built-ins + anything registered at runtime via
+/// `fedstc::fault::register`), with the `random` process's knobs and
+/// defaults.
+fn cmd_faults(args: &Args) -> anyhow::Result<()> {
+    args.finish()?;
+    println!("registered fault processes (use as --faults <spec>):");
+    println!("{:<10} {}", "name", "process");
+    for name in fault::names() {
+        let what = match name.as_str() {
+            "random" => {
+                "independent per-event coin flips: corrupt/loss/shard_crash/flaky_server \
+                 rates, quorum fraction, attempts + backoff_s retransmit budget"
+            }
+            "off" => "explicit no-op plan (zero rates; bit-identical to no --faults)",
+            _ => "externally registered",
+        };
+        println!("{name:<10} {what}");
+    }
+    println!("\ndefaults: {}", fedstc::fault::FaultPlan::default().spec());
+    println!(
+        "\nargs: a bare knob list is shorthand for the random process\n\
+         (--faults corrupt=0.01,loss=0.02 ≡ --faults random:corrupt=0.01,loss=0.02);\n\
+         recovery: lost/corrupt uploads retransmit with exponential backoff\n\
+         (attempts/backoff_s), crashed shards degrade members to direct-to-root,\n\
+         rounds commit only if >= quorum of the drawn participants delivered\n\
+         valid uploads. External processes register via fedstc::fault::register."
+    );
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> anyhow::Result<()> {
     args.finish()?;
     println!("fedstc {} — Sparse Ternary Compression for Federated Learning", fedstc::VERSION);
@@ -690,7 +761,7 @@ fn print_help() {
     println!(
         "repro — fedstc launcher (Sparse Ternary Compression, Sattler et al. 2019)
 
-usage: repro <train|cluster|replay|alpha|protocols|executions|info|sweep|help> [--key value]...
+usage: repro <train|cluster|replay|alpha|protocols|executions|faults|info|sweep|help> [--key value]...
 
 examples:
   repro train --model logreg --method stc:0.0025 --classes 1 --iters 400
@@ -704,9 +775,12 @@ examples:
       --churn 0.1 --clients 100 --iters 400 --method stc:0.01
   repro cluster --execution sharded:8x4 --shard-up-bps 1e6 --iters 200
   repro cluster --iters 100 --record cluster.fstx
+  repro cluster --faults corrupt=0.01,loss=0.02,shard_crash=0.005 --iters 200
+  repro train --method stc:0.01 --iters 200 --faults loss=0.05,quorum=0.6
   repro alpha --ks 1,8,64 --trials 100
   repro protocols
   repro executions
+  repro faults
   repro sweep --key classes --values 1,2,4,10 --method stc:0.01 --iters 300
   repro info
 
@@ -722,6 +796,14 @@ execution (train + cluster): --execution <spec> picks the strategy from
   the open registry (see repro executions): serial | pool:8 |
   sharded:16x4 | sharded:shards=16,pool=4. On cluster runs the spec maps
   onto --workers/--shards.
+
+faults (train + cluster): --faults <spec> arms deterministic fault
+  injection from its own RNG stream (see repro faults): frame corruption
+  caught by the wire checksum, in-flight loss, retransmit with
+  exponential backoff (attempts=N,backoff_s=S), shard-aggregator crashes
+  with direct-to-root failover, flaky-coordinator aborts and a
+  quorum-commit gate (quorum=F of drawn participants). Faulted --record
+  runs write v4 fault frames so replay re-verifies recovery billing.
 
 telemetry (train + cluster, pure observers — never change the run):
   --trace FILE.jsonl   deterministic JSONL event stream (simulated time;

@@ -60,6 +60,7 @@ use crate::compression::Message;
 use crate::config::FedConfig;
 use crate::coordinator::{ClientState, LocalScratch, Server};
 use crate::data::{split_by_class, Dataset, SplitSpec};
+use crate::fault::FaultPlan;
 use crate::metrics::{CommLedger, EvalPoint};
 use crate::models::Trainer;
 use crate::protocol::Protocol;
@@ -135,6 +136,64 @@ pub struct RunEnd<'a> {
     pub settled: bool,
 }
 
+/// One round's fault activity under a [`FaultPlan`]: what the chaos
+/// layer injected, what recovery billed, and whether the round aborted.
+/// Handed to [`Observer::on_fault`] before the round's broadcast (or in
+/// place of it, for aborted rounds), and persisted as the transcript's
+/// v4 fault frame so `repro replay` re-verifies fault billing and
+/// quorum decisions.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultRecord {
+    /// server round counter when recorded (pre-commit, 0-based — the
+    /// matching round frame, if the round committed, carries `round+1`)
+    pub round: usize,
+    /// upload frames rejected at decode (checksum mismatch)
+    pub corrupt_frames: u32,
+    /// upload transfers that vanished in flight
+    pub lost_transfers: u32,
+    /// retransmit attempts scheduled (each one re-billed)
+    pub retransmits: u32,
+    /// bits the retransmits re-billed into the ledger
+    pub retransmit_bits: u64,
+    /// upload billings this round that no round-frame upload or shard
+    /// hop accounts for: every retransmit, every attempt of a client
+    /// whose upload never arrived validly, and — on aborted rounds —
+    /// the delivered-but-discarded uploads and already-folded shard
+    /// hops. Replay re-applies these so a faulted recording still
+    /// reconciles bit-for-bit.
+    pub extra_up_msgs: u32,
+    pub extra_up_bits: u64,
+    /// shard aggregators that crashed this round (members degraded to
+    /// direct-to-root; their partial-sum hop was not billed)
+    pub failed_shards: Vec<u32>,
+    /// the round failed to commit: parameters untouched, valid updates
+    /// re-banked into client residuals
+    pub aborted: bool,
+    /// valid on-time uploads delivered / participants drawn / quorum
+    /// threshold (for a flaky-server abort, `needed = drawn + 1`)
+    pub valid: u32,
+    pub drawn: u32,
+    pub needed: u32,
+    /// drawn participant ids; recorded only for aborted rounds (a
+    /// committed round's frame already carries them) so replay can
+    /// re-derive the aborted round's §V-B sync pricing and last-sync
+    /// bookkeeping
+    pub participants: Vec<u32>,
+}
+
+impl FaultRecord {
+    /// Whether anything happened worth recording (an all-quiet round
+    /// under an active plan emits no fault frame, keeping zero-rate
+    /// transcripts identical to no-plan ones).
+    pub fn has_activity(&self) -> bool {
+        self.corrupt_frames > 0
+            || self.lost_transfers > 0
+            || self.retransmits > 0
+            || !self.failed_shards.is_empty()
+            || self.aborted
+    }
+}
+
 /// Hook API over the round engine. Every method has a no-op default, so
 /// observers implement only what they consume; errors propagate out of
 /// the session driver (a failing transcript write aborts the run
@@ -176,6 +235,17 @@ pub trait Observer {
     /// hop has been billed. Fires after the round's uploads and before
     /// [`Observer::on_broadcast`].
     fn on_shard_round(&mut self, _shards: &[ShardRound]) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    /// The round saw fault activity under an active
+    /// [`FaultPlan`](crate::fault::FaultPlan): injected failures,
+    /// recovery billing, quorum outcome. Fires after the round's uploads
+    /// (and shard plan, if any) and before [`Observer::on_broadcast`] —
+    /// or *in place of* the broadcast when the round aborted. Quiet
+    /// rounds fire nothing, so zero-rate plans leave observer streams
+    /// untouched.
+    fn on_fault(&mut self, _rec: &FaultRecord) -> anyhow::Result<()> {
         Ok(())
     }
 
@@ -227,6 +297,16 @@ pub struct Session {
     work_params: Vec<f32>,
     /// participant message buffer reused across rounds
     round_msgs: Vec<Message>,
+    /// ids whose uploads were validly delivered this round, parallel to
+    /// `round_msgs` (equal to the drawn ids when no fault plan is active)
+    round_ids: Vec<usize>,
+    /// the armed fault-injection plan, if any (see [`crate::fault`])
+    pub(crate) fault: Option<FaultPlan>,
+    /// dedicated RNG stream for fault draws
+    /// ([`crate::fault::FAULT_STREAM`]); constructed unconditionally but
+    /// only advanced when an active plan is armed, so runs without
+    /// `--faults` stay bit-identical to pre-fault-layer builds
+    pub(crate) fault_rng: Pcg64,
     observers: Vec<Box<dyn Observer>>,
     started: bool,
     settled: bool,
@@ -261,6 +341,7 @@ impl Session {
 
         let server = Server::new(init_params, cfg.method.clone(), cfg.cache_rounds)?;
         let sampler = Pcg64::new(cfg.seed, 0x5a3b);
+        let fault_rng = FaultPlan::rng(cfg.seed);
         Ok(Session {
             ledger: CommLedger::new(cfg.num_clients),
             server,
@@ -272,6 +353,9 @@ impl Session {
             scratch: LocalScratch::default(),
             work_params: vec![0.0; dim],
             round_msgs: Vec::new(),
+            round_ids: Vec::new(),
+            fault: None,
+            fault_rng,
             observers: Vec::new(),
             started: false,
             settled: false,
@@ -283,6 +367,26 @@ impl Session {
     /// Attach an observer. Hooks fire in attachment order.
     pub fn add_observer(&mut self, observer: Box<dyn Observer>) {
         self.observers.push(observer);
+    }
+
+    /// Arm the fault-injection layer (see [`crate::fault`]). Must be
+    /// called before the first round; validates the plan. An inactive
+    /// plan (all rates zero, no quorum) is accepted and leaves the run
+    /// bit-identical to an unfaulted one — params, ledger and transcript
+    /// bytes — pinned by `tests/property_faults.rs`.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.server.round == 0 && !self.started,
+            "arm the fault plan before the first round"
+        );
+        plan.validate()?;
+        self.fault = Some(plan);
+        Ok(())
+    }
+
+    /// The armed fault plan, if any.
+    pub fn fault_plan(&self) -> Option<&FaultPlan> {
+        self.fault.as_ref()
     }
 
     /// Attach a transcript recorder writing to `path`. Must be called
@@ -300,7 +404,12 @@ impl Session {
             self.server.round == 0 && !self.started,
             "attach the transcript recorder before the first round"
         );
-        self.add_observer(Box::new(TranscriptWriter::create(path, sync_derivable)?));
+        // fault frames need the v4 format; unfaulted (and inactive-plan)
+        // recordings keep writing v3 so their bytes stay identical to
+        // pre-fault-layer builds
+        let fault_capable = self.fault.as_ref().is_some_and(|p| p.is_active());
+        let writer = TranscriptWriter::create_with_faults(path, sync_derivable, fault_capable)?;
+        self.add_observer(Box::new(writer));
         Ok(())
     }
 
@@ -461,6 +570,19 @@ impl Session {
         Ok(down_bits)
     }
 
+    /// Stamp the current round counter onto `rec` and notify observers
+    /// (see [`Observer::on_fault`]). Drivers call this at most once per
+    /// round, after the round's fault activity is final: before the
+    /// commit for rounds that survive the quorum gate, in place of it
+    /// for aborted rounds.
+    pub fn notify_fault(&mut self, mut rec: FaultRecord) -> anyhow::Result<()> {
+        rec.round = self.server.round;
+        for o in &mut self.observers {
+            o.on_fault(&rec)?;
+        }
+        Ok(())
+    }
+
     /// Notify observers of an evaluation the driver performed.
     pub fn notify_eval(&mut self, point: &EvalPoint) -> anyhow::Result<()> {
         for o in &mut self.observers {
@@ -494,7 +616,13 @@ impl Session {
         //      ΔW_i compressed with error feedback and uploaded through
         //      the real byte serialization: the ledger bills the
         //      measured frame and the server receives the decoded bytes.
+        //      Under an active fault plan each upload additionally runs
+        //      the loss/corruption/retransmit gauntlet (leg 1 of the
+        //      fault draw order) in `deliver_faulted`.
         self.round_msgs.clear();
+        self.round_ids.clear();
+        let faults_on = self.fault.as_ref().is_some_and(|p| p.is_active());
+        let mut fault_rec = FaultRecord::default();
         let mut loss_sum = 0.0f64;
         match oracle {
             Oracle::Trainer(trainer) => {
@@ -532,9 +660,32 @@ impl Session {
                     let msg = client.compress_update(delta, self.up_proto.as_mut());
                     let wire = msg.to_wire();
                     self.ledger.record_upload(wire.payload_bits);
-                    let decoded = Message::from_bytes(&wire.bytes)?;
-                    self.notify_upload(id, &decoded, wire.payload_bits as u64)?;
-                    self.round_msgs.push(decoded);
+                    if faults_on {
+                        match self.deliver_faulted(&msg, wire.payload_bits, &mut fault_rec) {
+                            Some(decoded) => {
+                                self.notify_upload(id, &decoded, wire.payload_bits as u64)?;
+                                self.round_ids.push(id);
+                                self.round_msgs.push(decoded);
+                            }
+                            None => {
+                                // every attempt failed: §V-B dropout
+                                // semantics — re-bank the update, and
+                                // account the first attempt's billing
+                                // (retransmits were accounted inline)
+                                fault_rec.extra_up_msgs += 1;
+                                fault_rec.extra_up_bits += wire.payload_bits as u64;
+                                let residual = &mut self.clients[id].residual;
+                                if !residual.is_empty() {
+                                    msg.add_to(residual, 1.0);
+                                }
+                            }
+                        }
+                    } else {
+                        let decoded = Message::from_bytes(&wire.bytes)?;
+                        self.notify_upload(id, &decoded, wire.payload_bits as u64)?;
+                        self.round_ids.push(id);
+                        self.round_msgs.push(decoded);
+                    }
                     self.work_params = vec![0.0; self.server.dim()];
                 }
             }
@@ -543,9 +694,40 @@ impl Session {
                 for r in results {
                     self.ledger.record_upload(r.up_bits as usize);
                     loss_sum += r.loss as f64;
-                    self.notify_upload(r.client_id, &r.msg, r.up_bits)?;
-                    self.round_msgs.push(r.msg);
+                    if faults_on {
+                        match self.deliver_faulted(&r.msg, r.up_bits as usize, &mut fault_rec) {
+                            Some(decoded) => {
+                                self.notify_upload(r.client_id, &decoded, r.up_bits)?;
+                                self.round_ids.push(r.client_id);
+                                self.round_msgs.push(decoded);
+                            }
+                            None => {
+                                fault_rec.extra_up_msgs += 1;
+                                fault_rec.extra_up_bits += r.up_bits;
+                                let residual = &mut self.clients[r.client_id].residual;
+                                if !residual.is_empty() {
+                                    r.msg.add_to(residual, 1.0);
+                                }
+                            }
+                        }
+                    } else {
+                        self.notify_upload(r.client_id, &r.msg, r.up_bits)?;
+                        self.round_ids.push(r.client_id);
+                        self.round_msgs.push(r.msg);
+                    }
                 }
+            }
+        }
+        let mean_loss = (loss_sum / ids.len() as f64) as f32;
+
+        // quorum gate, part one: a round with too few valid uploads can
+        // never commit, and an empty round has nothing to aggregate —
+        // abort before any shard folding happens.
+        if faults_on {
+            let plan = self.fault.clone().expect("faults_on implies a plan");
+            let needed = plan.quorum_needed(ids.len()).max(1);
+            if self.round_ids.len() < needed {
+                return self.abort_round(fault_rec, &ids, needed, mean_loss);
             }
         }
 
@@ -556,13 +738,30 @@ impl Session {
         //     messages in participant order (see `execution` module docs).
         let shard_rounds = match self.exec {
             Execution::Sharded(plan) => {
-                let rounds = execution::plan_shards(
+                let mut rounds = execution::plan_shards(
                     plan.shards,
                     self.cfg.num_clients,
                     self.server.dim(),
-                    &ids,
+                    &self.round_ids,
                     &self.round_msgs,
                 )?;
+                if faults_on {
+                    // leg 2 of the fault draw order: one crash draw per
+                    // non-empty shard, in shard order. A crashed
+                    // aggregator degrades its members to direct-to-root
+                    // for the round: no partial-sum hop billed, no down
+                    // relay (the root still aggregates the original
+                    // client messages, so the model is unaffected).
+                    let crash = self.fault.as_ref().expect("faults_on").shard_crash;
+                    rounds.retain(|s| {
+                        if self.fault_rng.f64() < crash {
+                            fault_rec.failed_shards.push(s.id as u32);
+                            false
+                        } else {
+                            true
+                        }
+                    });
+                }
                 for s in &rounds {
                     self.ledger.record_upload(s.hop_up_bits as usize);
                 }
@@ -572,11 +771,38 @@ impl Session {
             _ => Vec::new(),
         };
 
+        // quorum gate, part two (leg 3 of the fault draw order): the
+        // coordinator itself may flake after the tree folded. The
+        // already-billed shard hops become unaccounted-for extras so
+        // replay still reconciles; `needed = drawn + 1` marks the abort
+        // as flaky rather than quorum-driven.
+        if faults_on {
+            let flaky = self.fault.as_ref().expect("faults_on").flaky_server;
+            if self.fault_rng.f64() < flaky {
+                for s in &shard_rounds {
+                    fault_rec.extra_up_msgs += 1;
+                    fault_rec.extra_up_bits += s.hop_up_bits;
+                }
+                let needed = ids.len() + 1;
+                return self.abort_round(fault_rec, &ids, needed, mean_loss);
+            }
+        }
+
+        // the round commits; persist its fault activity (if any) before
+        // the broadcast so the transcript's fault frame precedes the
+        // round frame it annotates
+        if fault_rec.has_activity() {
+            let plan = self.fault.as_ref().expect("activity implies a plan");
+            fault_rec.valid = self.round_ids.len() as u32;
+            fault_rec.drawn = ids.len() as u32;
+            fault_rec.needed = plan.quorum_needed(ids.len()).max(1) as u32;
+            self.notify_fault(fault_rec)?;
+        }
+
         // 4. server aggregates, applies, and enqueues the broadcast; the
         //    broadcast's download cost is charged to clients when they
         //    next synchronise (straggler_download_bits).
         let msgs = std::mem::take(&mut self.round_msgs);
-        let mean_loss = (loss_sum / ids.len() as f64) as f32;
         let down_bits = self.commit_round(&msgs, mean_loss)?;
         self.round_msgs = msgs;
 
@@ -590,6 +816,87 @@ impl Session {
         }
 
         Ok(RoundReport { round: self.server.round, mean_loss, down_bits })
+    }
+
+    /// Serial-path delivery of one upload under the active fault plan:
+    /// per attempt, draw loss then corruption from the dedicated fault
+    /// stream, push the frame through the checksummed wire encoding
+    /// ([`Message::to_checksummed_bytes`]) and decode it back.
+    /// Corruption flips one frame bit, which the FNV-1a-64 trailer is
+    /// guaranteed to catch; a rejected or lost frame retransmits — each
+    /// retry re-billed into the ledger — up to the plan's attempt cap.
+    /// Returns `None` when every attempt failed (the caller re-banks the
+    /// update: §V-B dropout semantics). The serial driver has no
+    /// transport clock, so backoff delays are not modelled here; the
+    /// cluster driver schedules them for real.
+    fn deliver_faulted(
+        &mut self,
+        msg: &Message,
+        payload_bits: usize,
+        rec: &mut FaultRecord,
+    ) -> Option<Message> {
+        let plan = self.fault.clone().expect("deliver_faulted requires an armed plan");
+        for attempt in 1..=plan.max_attempts {
+            if attempt > 1 {
+                self.ledger.record_upload(payload_bits);
+                rec.retransmits += 1;
+                rec.retransmit_bits += payload_bits as u64;
+                rec.extra_up_msgs += 1;
+                rec.extra_up_bits += payload_bits as u64;
+            }
+            if self.fault_rng.f64() < plan.loss {
+                rec.lost_transfers += 1;
+                continue;
+            }
+            let mut frame = msg.to_checksummed_bytes();
+            if self.fault_rng.f64() < plan.corrupt {
+                let bit = self.fault_rng.below(frame.len() * 8);
+                frame[bit / 8] ^= 1 << (bit % 8);
+            }
+            match Message::decode_frame(&frame) {
+                Ok(decoded) => return Some(decoded),
+                // the integrity layer rejected the frame (checksum
+                // mismatch, or an unknown tag when the flip hit the
+                // framing marker itself)
+                Err(_) => rec.corrupt_frames += 1,
+            }
+        }
+        None
+    }
+
+    /// Abort the round at the commit gate: re-bank every delivered
+    /// update into its client's residual (§V-B dropout semantics applied
+    /// to the whole round), leave the global model and the server round
+    /// counter untouched, and notify observers through
+    /// [`Observer::on_fault`] only — no broadcast fires. The discarded
+    /// uploads' billing moves into the record's extras so replay still
+    /// reconciles the ledger.
+    fn abort_round(
+        &mut self,
+        mut rec: FaultRecord,
+        drawn_ids: &[usize],
+        needed: usize,
+        mean_loss: f32,
+    ) -> anyhow::Result<RoundReport> {
+        let msgs = std::mem::take(&mut self.round_msgs);
+        let valid_ids = std::mem::take(&mut self.round_ids);
+        for (msg, &id) in msgs.iter().zip(&valid_ids) {
+            rec.extra_up_msgs += 1;
+            rec.extra_up_bits += msg.wire_bits() as u64;
+            let residual = &mut self.clients[id].residual;
+            if !residual.is_empty() {
+                msg.add_to(residual, 1.0);
+            }
+        }
+        self.round_msgs = msgs;
+        self.round_msgs.clear();
+        rec.aborted = true;
+        rec.valid = valid_ids.len() as u32;
+        rec.drawn = drawn_ids.len() as u32;
+        rec.needed = needed as u32;
+        rec.participants = drawn_ids.iter().map(|&id| id as u32).collect();
+        self.notify_fault(rec)?;
+        Ok(RoundReport { round: self.server.round, mean_loss, down_bits: 0 })
     }
 
     /// Record that final-download settlement ran. Drivers that bill the

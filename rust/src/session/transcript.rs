@@ -27,6 +27,22 @@
 //!          tree's membership and billed shard→root hop bits. Flat runs
 //!          never write it, so their v3 files differ from v2 only by
 //!          the version word.)
+//! fault:   u8 tag=5 · u32 round
+//!          u32 corrupt_frames · u32 lost_transfers
+//!          u32 retransmits · u64 retransmit_bits
+//!          u32 extra_up_msgs · u64 extra_up_bits
+//!          u32 k · k × u32 failed shard ids
+//!          u8 aborted · u32 valid · u32 drawn · u32 needed
+//!          u32 p · p × u32 participant ids
+//!          (version ≥ 4 only, written by fault-capable recordings —
+//!          sessions with an *active* [`FaultPlan`](crate::fault) — for
+//!          rounds with fault activity. A non-aborted fault frame
+//!          precedes the round frame it annotates; an aborted one
+//!          stands alone (no round frame follows — the round never
+//!          committed) and carries the drawn participants so replay can
+//!          re-derive the aborted round's §V-B sync pricing. Unfaulted
+//!          recordings keep writing [`TRANSCRIPT_BASE_VERSION`], so
+//!          their bytes stay identical to pre-fault builds.)
 //! round:   u8 tag=1 · u32 round · f32 mean_loss
 //!          u32 n · n × u32 participant ids
 //!          u32 m · m × { u32 client · u32 len · Message::to_bytes }
@@ -64,7 +80,7 @@
 //! for cluster recordings (late uploads are billed but never
 //! aggregated, so the transcript does not carry them).
 
-use super::{Observer, RoundRecord, RunEnd, RunMeta, ShardRound};
+use super::{FaultRecord, Observer, RoundRecord, RunEnd, RunMeta, ShardRound};
 use crate::compression::Message;
 use crate::config::Method;
 use crate::coordinator::Server;
@@ -74,8 +90,13 @@ use std::path::Path;
 
 /// First four bytes of every transcript.
 pub const TRANSCRIPT_MAGIC: [u8; 4] = *b"FSTX";
-/// Current format version (readers accept 1..=this).
-pub const TRANSCRIPT_VERSION: u16 = 3;
+/// Current format version (readers accept 1..=this). Only fault-capable
+/// recordings (an *active* fault plan was armed) write it; everything
+/// else writes [`TRANSCRIPT_BASE_VERSION`] so unfaulted transcripts stay
+/// byte-identical to pre-fault builds.
+pub const TRANSCRIPT_VERSION: u16 = 4;
+/// Version written by recordings with no active fault plan.
+pub const TRANSCRIPT_BASE_VERSION: u16 = 3;
 /// Oldest version this build still reads.
 pub const TRANSCRIPT_MIN_VERSION: u16 = 1;
 /// Header flag: download accounting is re-derivable from the recorded
@@ -90,6 +111,7 @@ const FRAME_ROUND: u8 = 1;
 const FRAME_END: u8 = 2;
 const FRAME_SYNC: u8 = 3;
 const FRAME_SHARD: u8 = 4;
+const FRAME_FAULT: u8 = 5;
 
 /// FNV-1a 64 over the little-endian f32 bit patterns — the model
 /// fingerprint recorded per round and re-checked at replay.
@@ -132,6 +154,10 @@ fn put_f32(buf: &mut Vec<u8>, v: f32) {
 pub struct TranscriptWriter {
     sink: Box<dyn Write>,
     sync_derivable: bool,
+    /// write the version-4 format with fault frames (an active
+    /// [`FaultPlan`](crate::fault) was armed); plain recordings stay on
+    /// [`TRANSCRIPT_BASE_VERSION`] and byte-identical to older builds
+    fault_capable: bool,
     header_written: bool,
     /// current round buffer, flushed as one frame at `on_broadcast`
     participants: Vec<u32>,
@@ -143,14 +169,31 @@ pub struct TranscriptWriter {
     /// (sharded runs only); flushed as a `FRAME_SHARD` ahead of the
     /// round frame
     pending_shards: Vec<ShardRound>,
+    /// fault record of a round that will still commit, flushed as a
+    /// `FRAME_FAULT` ahead of its round frame (aborted records are
+    /// written immediately — no round frame ever follows them)
+    pending_fault: Option<FaultRecord>,
 }
 
 impl TranscriptWriter {
     /// Stream to a freshly created file at `path`.
     pub fn create(path: &Path, sync_derivable: bool) -> anyhow::Result<Self> {
+        Self::create_with_faults(path, sync_derivable, false)
+    }
+
+    /// [`TranscriptWriter::create`] with the fault-frame capability
+    /// switch: `fault_capable` recordings write the version-4 format and
+    /// accept [`Observer::on_fault`] events.
+    pub fn create_with_faults(
+        path: &Path,
+        sync_derivable: bool,
+        fault_capable: bool,
+    ) -> anyhow::Result<Self> {
         let file = std::fs::File::create(path)
             .map_err(|e| anyhow::anyhow!("creating transcript {}: {e}", path.display()))?;
-        Ok(Self::new(Box::new(std::io::BufWriter::new(file)), sync_derivable))
+        let mut w = Self::new(Box::new(std::io::BufWriter::new(file)), sync_derivable);
+        w.fault_capable = fault_capable;
+        Ok(w)
     }
 
     /// Stream to an arbitrary sink.
@@ -158,12 +201,19 @@ impl TranscriptWriter {
         TranscriptWriter {
             sink,
             sync_derivable,
+            fault_capable: false,
             header_written: false,
             participants: Vec::new(),
             uploads: Vec::new(),
             pending_syncs: Vec::new(),
             pending_shards: Vec::new(),
+            pending_fault: None,
         }
+    }
+
+    /// Enable fault frames on a sink-backed writer (tests/drivers).
+    pub fn set_fault_capable(&mut self, on: bool) {
+        self.fault_capable = on;
     }
 
     /// Write any buffered sync events as one `FRAME_SYNC` ahead of the
@@ -205,13 +255,52 @@ impl TranscriptWriter {
         self.pending_shards.clear();
         Ok(())
     }
+
+    /// Serialize one fault record as a `FRAME_FAULT`.
+    fn write_fault(&mut self, f: &FaultRecord) -> anyhow::Result<()> {
+        let mut buf = Vec::new();
+        buf.push(FRAME_FAULT);
+        put_u32(&mut buf, f.round);
+        put_u32(&mut buf, f.corrupt_frames as usize);
+        put_u32(&mut buf, f.lost_transfers as usize);
+        put_u32(&mut buf, f.retransmits as usize);
+        put_u64(&mut buf, f.retransmit_bits);
+        put_u32(&mut buf, f.extra_up_msgs as usize);
+        put_u64(&mut buf, f.extra_up_bits);
+        put_u32(&mut buf, f.failed_shards.len());
+        for &s in &f.failed_shards {
+            put_u32(&mut buf, s as usize);
+        }
+        buf.push(f.aborted as u8);
+        put_u32(&mut buf, f.valid as usize);
+        put_u32(&mut buf, f.drawn as usize);
+        put_u32(&mut buf, f.needed as usize);
+        put_u32(&mut buf, f.participants.len());
+        for &p in &f.participants {
+            put_u32(&mut buf, p as usize);
+        }
+        self.sink.write_all(&buf)?;
+        Ok(())
+    }
+
+    /// Write the buffered non-aborted fault record (if any) ahead of the
+    /// round frame it annotates.
+    fn flush_fault(&mut self) -> anyhow::Result<()> {
+        if let Some(f) = self.pending_fault.take() {
+            self.write_fault(&f)?;
+        }
+        Ok(())
+    }
 }
 
 impl Observer for TranscriptWriter {
     fn on_run_start(&mut self, meta: &RunMeta) -> anyhow::Result<()> {
         let mut buf = Vec::new();
         buf.extend_from_slice(&TRANSCRIPT_MAGIC);
-        put_u16(&mut buf, TRANSCRIPT_VERSION);
+        put_u16(
+            &mut buf,
+            if self.fault_capable { TRANSCRIPT_VERSION } else { TRANSCRIPT_BASE_VERSION },
+        );
         buf.push(if self.sync_derivable { FLAG_SYNC_DERIVABLE } else { FLAG_SYNC_EVENTS });
         let spec = meta.method_spec.as_bytes();
         anyhow::ensure!(spec.len() <= u16::MAX as usize, "method spec too long");
@@ -265,8 +354,31 @@ impl Observer for TranscriptWriter {
         Ok(())
     }
 
+    fn on_fault(&mut self, rec: &FaultRecord) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.fault_capable,
+            "fault activity reached a non-fault-capable transcript recorder \
+             (arm the fault plan before attaching the recorder)"
+        );
+        if rec.aborted {
+            // the aborted round's §V-B syncs precede its fault frame so
+            // the reader can attach them to the aborted entry; uploads
+            // and shard hops never persist — their billing lives in the
+            // record's extras
+            self.flush_syncs()?;
+            self.uploads.clear();
+            self.pending_shards.clear();
+            self.participants.clear();
+            self.write_fault(rec)?;
+        } else {
+            self.pending_fault = Some(rec.clone());
+        }
+        Ok(())
+    }
+
     fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
         self.flush_syncs()?;
+        self.flush_fault()?;
         self.flush_shards()?;
         let mut buf = Vec::new();
         buf.push(FRAME_ROUND);
@@ -300,6 +412,10 @@ impl Observer for TranscriptWriter {
             self.header_written,
             "transcript recording finished before any round started (nothing recorded)"
         );
+        anyhow::ensure!(
+            self.pending_fault.is_none(),
+            "a buffered fault record never saw its round frame"
+        );
         self.flush_syncs()?; // settlement sweep syncs belong to the end frame
         let mut buf = Vec::new();
         buf.push(FRAME_END);
@@ -319,9 +435,12 @@ impl Observer for TranscriptWriter {
 // Reader
 // ---------------------------------------------------------------------
 
-/// One recorded communication round.
+/// One recorded communication round — committed, or (version ≥ 4)
+/// aborted at the fault layer's quorum gate.
 pub struct TranscriptRound {
-    /// server round counter after the aggregation (1-based)
+    /// server round counter after the aggregation (1-based); for aborted
+    /// entries, the counter the round *would* have advanced past
+    /// (pre-commit, 0-based — the model never moved)
     pub round: usize,
     pub mean_loss: f32,
     /// client ids drawn for the round
@@ -343,6 +462,13 @@ pub struct TranscriptRound {
     /// with their billed shard→root hop bits (version ≥ 3 sharded
     /// recordings; empty on flat runs and older files)
     pub shards: Vec<ShardRound>,
+    /// the round's fault activity (version ≥ 4 recordings with an
+    /// active fault plan; `None` on quiet rounds and older files)
+    pub fault: Option<FaultRecord>,
+    /// true for aborted entries: no uploads/checksums were recorded
+    /// (the round never committed — `mean_loss` is NaN, billing lives
+    /// in `fault`'s extras, syncs in `pre_syncs` or `fault.participants`)
+    pub aborted: bool,
 }
 
 /// The end-of-run frame.
@@ -420,6 +546,7 @@ impl Transcript {
         let mut rounds = Vec::new();
         let mut pending_syncs: Vec<(usize, u64)> = Vec::new();
         let mut pending_shards: Vec<ShardRound> = Vec::new();
+        let mut pending_fault: Option<FaultRecord> = None;
         let mut end_syncs: Vec<(usize, u64)> = Vec::new();
         let end = loop {
             match r.u8().map_err(|_| anyhow::anyhow!("transcript truncated: no end frame"))? {
@@ -454,6 +581,74 @@ impl Transcript {
                         pending_shards.push(ShardRound { id, members, hop_up_bits });
                     }
                 }
+                FRAME_FAULT => {
+                    anyhow::ensure!(
+                        version >= 4,
+                        "fault frame in a version {version} transcript (introduced in version 4)"
+                    );
+                    let round = r.u32()? as usize;
+                    let corrupt_frames = r.u32()?;
+                    let lost_transfers = r.u32()?;
+                    let retransmits = r.u32()?;
+                    let retransmit_bits = r.u64()?;
+                    let extra_up_msgs = r.u32()?;
+                    let extra_up_bits = r.u64()?;
+                    let k = r.u32()? as usize;
+                    let mut failed_shards = Vec::with_capacity(k.min(1 << 20));
+                    for _ in 0..k {
+                        failed_shards.push(r.u32()?);
+                    }
+                    let aborted = r.u8()? != 0;
+                    let valid = r.u32()?;
+                    let drawn = r.u32()?;
+                    let needed = r.u32()?;
+                    let p = r.u32()? as usize;
+                    let mut participants = Vec::with_capacity(p.min(1 << 20));
+                    for _ in 0..p {
+                        participants.push(r.u32()?);
+                    }
+                    let f = FaultRecord {
+                        round,
+                        corrupt_frames,
+                        lost_transfers,
+                        retransmits,
+                        retransmit_bits,
+                        extra_up_msgs,
+                        extra_up_bits,
+                        failed_shards,
+                        aborted,
+                        valid,
+                        drawn,
+                        needed,
+                        participants,
+                    };
+                    anyhow::ensure!(
+                        pending_fault.is_none(),
+                        "two fault frames before a round frame"
+                    );
+                    if aborted {
+                        anyhow::ensure!(
+                            pending_shards.is_empty(),
+                            "shard frame precedes an aborted fault frame"
+                        );
+                        rounds.push(TranscriptRound {
+                            round,
+                            mean_loss: f32::NAN,
+                            participants: f.participants.iter().map(|&id| id as usize).collect(),
+                            uploads: Vec::new(),
+                            down_bits: 0,
+                            params_checksum: 0,
+                            total_up_bits: 0,
+                            total_down_bits: 0,
+                            pre_syncs: std::mem::take(&mut pending_syncs),
+                            shards: Vec::new(),
+                            fault: Some(f),
+                            aborted: true,
+                        });
+                    } else {
+                        pending_fault = Some(f);
+                    }
+                }
                 FRAME_ROUND => {
                     let round = r.u32()? as usize;
                     let mean_loss = r.f32()?;
@@ -481,12 +676,18 @@ impl Transcript {
                         total_down_bits: r.u64()?,
                         pre_syncs: std::mem::take(&mut pending_syncs),
                         shards: std::mem::take(&mut pending_shards),
+                        fault: pending_fault.take(),
+                        aborted: false,
                     });
                 }
                 FRAME_END => {
                     anyhow::ensure!(
                         pending_shards.is_empty(),
                         "shard frame not followed by a round frame"
+                    );
+                    anyhow::ensure!(
+                        pending_fault.is_none(),
+                        "fault frame not followed by a round frame"
                     );
                     end_syncs = std::mem::take(&mut pending_syncs);
                     break TranscriptEnd {
@@ -621,6 +822,55 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
     };
 
     for r in &t.rounds {
+        if r.aborted {
+            let f = r
+                .fault
+                .as_ref()
+                .ok_or_else(|| anyhow::anyhow!("aborted transcript entry carries no fault record"))?;
+            anyhow::ensure!(
+                f.valid < f.needed,
+                "round {}: recorded abort but quorum was satisfied \
+                 ({} valid ≥ {} needed of {} drawn)",
+                f.round,
+                f.valid,
+                f.needed,
+                f.drawn
+            );
+            // the aborted round still ran its §V-B syncs — re-derive
+            // them from the recorded participants (derivable) or
+            // re-price the explicit sync events — and billed its doomed
+            // uploads/hops, which ride the record's extras. The model
+            // and the server round counter stay untouched.
+            if derivable {
+                for &id in &r.participants {
+                    anyhow::ensure!(
+                        id < t.num_clients,
+                        "aborted round {}: participant {id} out of range 0..{}",
+                        f.round,
+                        t.num_clients
+                    );
+                    let bits = server.straggler_download_bits(last_sync[id]);
+                    if bits > 0 {
+                        ledger.record_download(bits);
+                    }
+                    last_sync[id] = server.round;
+                }
+            } else if verify_syncs {
+                for &(id, bits) in &r.pre_syncs {
+                    apply_sync(
+                        &server,
+                        &mut ledger,
+                        &mut last_sync,
+                        id,
+                        bits,
+                        &format!("aborted round {}", f.round),
+                    )?;
+                }
+            }
+            ledger.total_up_bits += f.extra_up_bits;
+            ledger.uploads += f.extra_up_msgs as u64;
+            continue;
+        }
         if derivable {
             for &id in &r.participants {
                 anyhow::ensure!(
@@ -650,6 +900,14 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
         let msgs: Vec<Message> = r.uploads.iter().map(|(_, m)| m.clone()).collect();
         for m in &msgs {
             ledger.record_upload(m.wire_bits());
+        }
+        // fault-layer billing the round frame cannot re-derive:
+        // retransmits and permanently-failed attempts (the fault frame
+        // precedes its round frame, so these extras belong *inside*
+        // this round's ledger snapshot)
+        if let Some(f) = &r.fault {
+            ledger.total_up_bits += f.extra_up_bits;
+            ledger.uploads += f.extra_up_msgs as u64;
         }
         // shard→root hops were billed before the recorded ledger
         // snapshot, so replay mirrors that order exactly
@@ -846,6 +1104,12 @@ fn semantic_diff(a: &Transcript, b: &Transcript, byte_offset: usize) -> Transcri
         let round = Some(ra.round);
         if ra.pre_syncs != rb.pre_syncs {
             return hit(round, "round.pre_syncs", two(&ra.pre_syncs, &rb.pre_syncs));
+        }
+        if ra.aborted != rb.aborted {
+            return hit(round, "round.aborted", two(&ra.aborted, &rb.aborted));
+        }
+        if ra.fault != rb.fault {
+            return hit(round, "round.fault", two(&ra.fault, &rb.fault));
         }
         if ra.shards != rb.shards {
             return hit(round, "round.shards", two(&ra.shards, &rb.shards));
@@ -1158,7 +1422,7 @@ mod tests {
         let path = temp_path("syncev");
         record_with_sync_events(&path, false);
         let t = Transcript::read_file(&path).unwrap();
-        assert_eq!(t.version, TRANSCRIPT_VERSION);
+        assert_eq!(t.version, TRANSCRIPT_BASE_VERSION);
         assert!(!t.sync_derivable());
         assert!(t.has_sync_events());
         assert_eq!(t.rounds[0].pre_syncs, vec![(0, 0), (1, 0)]);
@@ -1189,7 +1453,7 @@ mod tests {
         let path = temp_path("roundtrip");
         record_baseline(&path);
         let t = Transcript::read_file(&path).unwrap();
-        assert_eq!(t.version, TRANSCRIPT_VERSION);
+        assert_eq!(t.version, TRANSCRIPT_BASE_VERSION);
         assert!(t.sync_derivable());
         assert_eq!(t.method_spec, "baseline");
         assert_eq!(t.num_clients, 2);
@@ -1264,7 +1528,7 @@ mod tests {
         let path = temp_path("sharded");
         record_sharded(&path, 256, 256);
         let t = Transcript::read_file(&path).unwrap();
-        assert_eq!(t.version, TRANSCRIPT_VERSION);
+        assert_eq!(t.version, TRANSCRIPT_BASE_VERSION);
         assert_eq!(
             t.rounds[0].shards,
             vec![ShardRound { id: 0, members: vec![0, 1], hop_up_bits: 256 }]
@@ -1322,6 +1586,179 @@ mod tests {
 
         let _ = std::fs::remove_file(&p1);
         let _ = std::fs::remove_file(&p2);
+    }
+
+    /// Derivable fault-capable recording: round 1 commits with a
+    /// retransmit, the next round aborts at the quorum gate (one upload
+    /// delivered, one permanently lost), round 2 commits clean. The
+    /// simulated ledger bills exactly what the live drivers would:
+    /// every first attempt, the retransmit, and the aborted round's
+    /// §V-B syncs.
+    fn record_faulted(path: &Path, bogus_abort: bool) {
+        let mut w = TranscriptWriter::create_with_faults(path, true, true).unwrap();
+        let init = vec![0.0f32; 4];
+        w.on_run_start(&RunMeta {
+            method_spec: "baseline",
+            num_clients: 2,
+            cache_rounds: 10,
+            seed: 1,
+            init_params: &init,
+        })
+        .unwrap();
+
+        let mut ledger = CommLedger::new(2);
+        let wbits = dense(&[0.0; 4]).wire_bits() as u64;
+
+        // round 1: free syncs, both uploads delivered, client 1 needed
+        // one retransmit after a corrupt frame
+        let r1 = [dense(&[1.0, 0.0, 2.0, -2.0]), dense(&[3.0, 0.0, 0.0, 2.0])];
+        w.on_round_start(0, &[0, 1]).unwrap();
+        for (c, m) in r1.iter().enumerate() {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+        }
+        ledger.record_upload(wbits as usize); // the retransmit
+        w.on_fault(&FaultRecord {
+            round: 0,
+            corrupt_frames: 1,
+            retransmits: 1,
+            retransmit_bits: wbits,
+            extra_up_msgs: 1,
+            extra_up_bits: wbits,
+            valid: 2,
+            drawn: 2,
+            needed: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        let params1 = [2.0f32, 0.0, 1.0, 0.0];
+        w.on_broadcast(&RoundRecord {
+            round: 1,
+            participants: &[0, 1],
+            mean_loss: 0.25,
+            down_bits: 128,
+            params: &params1,
+            ledger: &ledger,
+            mean_residual_norm: 0.0,
+        })
+        .unwrap();
+
+        // aborted round: both sync (one round behind), both first
+        // attempts billed; client 0's upload arrives, client 1's is
+        // permanently lost; quorum needs 2 of 2 → abort. The delivered
+        // upload is buffered then discarded by the abort.
+        w.on_round_start(1, &[0, 1]).unwrap();
+        ledger.record_download(128);
+        ledger.record_download(128);
+        ledger.record_upload(wbits as usize);
+        ledger.record_upload(wbits as usize);
+        w.on_upload(0, &dense(&[9.0; 4]), wbits).unwrap();
+        w.on_fault(&FaultRecord {
+            round: 1,
+            lost_transfers: 1,
+            extra_up_msgs: 2,
+            extra_up_bits: 2 * wbits,
+            aborted: true,
+            valid: 1,
+            drawn: 2,
+            needed: if bogus_abort { 1 } else { 2 },
+            participants: vec![0, 1],
+            ..Default::default()
+        })
+        .unwrap();
+
+        // round 2: clients are current again (the abort never advanced
+        // the server), clean uploads
+        let r2 = [dense(&[1.0; 4]), dense(&[1.0; 4])];
+        w.on_round_start(1, &[0, 1]).unwrap();
+        for (c, m) in r2.iter().enumerate() {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+        }
+        let params2 = [3.0f32, 1.0, 2.0, 1.0];
+        w.on_broadcast(&RoundRecord {
+            round: 2,
+            participants: &[0, 1],
+            mean_loss: 0.125,
+            down_bits: 128,
+            params: &params2,
+            ledger: &ledger,
+            mean_residual_norm: 0.0,
+        })
+        .unwrap();
+
+        // settlement: both one round behind
+        ledger.record_download(128);
+        ledger.record_download(128);
+        w.on_finish(&RunEnd { params: &params2, ledger: &ledger, settled: true }).unwrap();
+    }
+
+    #[test]
+    fn faulted_v4_roundtrip_replays_extras_and_abort() {
+        let path = temp_path("faulted");
+        record_faulted(&path, false);
+        let t = Transcript::read_file(&path).unwrap();
+        assert_eq!(t.version, TRANSCRIPT_VERSION);
+        assert_eq!(t.rounds.len(), 3);
+        let f0 = t.rounds[0].fault.as_ref().expect("round 1 carries its fault record");
+        assert_eq!((f0.retransmits, f0.corrupt_frames), (1, 1));
+        assert!(!t.rounds[0].aborted);
+        let ab = &t.rounds[1];
+        assert!(ab.aborted);
+        assert!(ab.uploads.is_empty(), "discarded uploads never persist");
+        assert!(ab.mean_loss.is_nan());
+        assert_eq!(ab.participants, vec![0, 1]);
+        let fa = ab.fault.as_ref().unwrap();
+        assert_eq!((fa.valid, fa.drawn, fa.needed), (1, 2, 2));
+        assert!(t.rounds[2].fault.is_none());
+
+        let wbits = dense(&[0.0; 4]).wire_bits() as u64;
+        let out = replay(&t).unwrap();
+        assert_eq!(out.rounds, 3);
+        assert_eq!(out.final_params, vec![3.0, 1.0, 2.0, 1.0]);
+        assert!(out.uploads_verified && out.downloads_verified);
+        assert_eq!(out.ledger.total_up_bits, 7 * wbits);
+        assert_eq!(out.ledger.uploads, 7);
+        assert_eq!(out.ledger.total_down_bits, 512);
+        assert_eq!(out.ledger.downloads, 4);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_rejects_abort_with_quorum_satisfied() {
+        let path = temp_path("bogusabort");
+        record_faulted(&path, true);
+        let t = Transcript::read_file(&path).unwrap();
+        let err = replay(&t).unwrap_err().to_string();
+        assert!(err.contains("quorum was satisfied"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn diff_pinpoints_diverging_fault_frames() {
+        let p1 = temp_path("faultdiff1");
+        let p2 = temp_path("faultdiff2");
+        record_faulted(&p1, false);
+        record_faulted(&p2, false);
+        let a = std::fs::read(&p1).unwrap();
+        let b = std::fs::read(&p2).unwrap();
+        assert!(diff_bytes(&a, &b).unwrap().is_none());
+
+        record_faulted(&p2, true); // differs only in the abort's quorum threshold
+        let b = std::fs::read(&p2).unwrap();
+        let d = diff_bytes(&a, &b).unwrap().expect("recordings differ");
+        assert_eq!(d.field, "round.fault");
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
+    }
+
+    #[test]
+    fn plain_recorders_reject_fault_events() {
+        let path = temp_path("nofaultcap");
+        let mut w = TranscriptWriter::create(&path, true).unwrap();
+        let err = w.on_fault(&FaultRecord::default()).unwrap_err().to_string();
+        assert!(err.contains("non-fault-capable"), "{err}");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

@@ -8,6 +8,7 @@ use crate::cluster::{ClusterConfig, ClusterRun, ClusterStats, TrainerFactory};
 use crate::config::FedConfig;
 use crate::data::synth::{SynthFlavor, SynthSpec};
 use crate::data::Dataset;
+use crate::fault::FaultPlan;
 use crate::metrics::{CommLedger, EvalPoint, TrainingLog};
 use crate::models::{native::NativeLogreg, ModelSpec, Trainer};
 use crate::session::{Execution, Observer, Oracle, Session};
@@ -111,6 +112,22 @@ impl Experiment {
         observers: Vec<Box<dyn Observer>>,
         exec: Execution,
     ) -> anyhow::Result<TrainingLog> {
+        self.run_observed_faulted(trainer, observers, exec, None)
+    }
+
+    /// [`Experiment::run_observed_with`] with a fault-injection plan
+    /// armed on the session (`repro train --faults`). Each of the
+    /// `cfg.rounds()` loop iterations is a round *attempt*: a round the
+    /// quorum gate aborts consumes its iteration without advancing the
+    /// model. `None` (or an inactive plan) is bit-identical to the
+    /// unfaulted path.
+    pub fn run_observed_faulted(
+        &self,
+        trainer: &mut dyn Trainer,
+        observers: Vec<Box<dyn Observer>>,
+        exec: Execution,
+        faults: Option<FaultPlan>,
+    ) -> anyhow::Result<TrainingLog> {
         anyhow::ensure!(
             trainer.batch_size() == self.cfg.batch_size,
             "trainer batch size {} != config batch size {}",
@@ -119,6 +136,9 @@ impl Experiment {
         );
         let init = self.spec.init_flat(self.cfg.seed);
         let mut session = Session::new(self.cfg.clone(), &self.train, init, exec)?;
+        if let Some(plan) = faults {
+            session.set_fault_plan(plan)?;
+        }
         for o in observers {
             session.add_observer(o);
         }

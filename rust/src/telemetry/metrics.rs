@@ -458,6 +458,26 @@ impl TickProbe for MetricsHub {
                     g.reg.counter_add("fedstc_empty_rounds_total", &[], 1);
                 }
             }
+            ClusterEvent::CorruptFrame { bits, .. } => {
+                g.reg.counter_add("fedstc_fault_corrupt_frames_total", &[], 1);
+                g.reg.counter_add("fedstc_fault_corrupt_bits_total", &[], bits);
+            }
+            ClusterEvent::Retransmit { bits, backoff_s, .. } => {
+                g.reg.counter_add("fedstc_fault_retransmits_total", &[], 1);
+                g.reg.counter_add("fedstc_fault_retransmit_bits_total", &[], bits);
+                g.reg.observe("fedstc_fault_backoff_s", &[], backoff_s);
+            }
+            ClusterEvent::ShardFailover { members, .. } => {
+                g.reg.counter_add("fedstc_fault_shard_failovers_total", &[], 1);
+                g.reg.counter_add(
+                    "fedstc_fault_failover_members_total",
+                    &[],
+                    members as u64,
+                );
+            }
+            ClusterEvent::RoundAbort { .. } => {
+                g.reg.counter_add("fedstc_fault_round_aborts_total", &[], 1);
+            }
         }
         Ok(())
     }

@@ -105,6 +105,35 @@ pub enum ClusterEvent {
         deadline_s: f64,
         queue_s: f64,
     },
+    /// An upload frame failed integrity verification
+    /// ([`DecodeError::ChecksumMismatch`](crate::compression::DecodeError))
+    /// on arrival. `attempt` is 1-based; retransmission may follow.
+    /// Only emitted when a [`FaultPlan`](crate::fault::FaultPlan) is active.
+    CorruptFrame { tick: usize, sim_s: f64, client_id: usize, attempt: u32, bits: u64 },
+    /// A lost or corrupt transfer was rescheduled through the contention
+    /// scheduler with exponential backoff. `attempt` is the retry being
+    /// scheduled (2-based), `bits` what the retry re-bills.
+    Retransmit {
+        tick: usize,
+        sim_s: f64,
+        client_id: usize,
+        attempt: u32,
+        backoff_s: f64,
+        bits: u64,
+    },
+    /// A shard aggregator crashed for the round; its `members` on-time
+    /// uploads degraded to direct-to-root (no partial-sum hop billed).
+    ShardFailover { tick: usize, sim_s: f64, shard: usize, members: usize },
+    /// The round failed to commit: quorum not met (`valid < needed` of
+    /// `drawn`) or the coordinator was flaky. Parameters untouched.
+    RoundAbort {
+        tick: usize,
+        sim_s: f64,
+        round: usize,
+        valid: usize,
+        drawn: usize,
+        needed: usize,
+    },
 }
 
 /// How a drawn participant left the round without uploading.

@@ -7,7 +7,8 @@
 //! `finish` — and, when the writer is also registered as a
 //! [`TickProbe`], the cluster tick machine: `phase`, `membership`,
 //! `no_show` / `dropout`, `transfer`, `shard_hop`, `late_upload`,
-//! `round_close`.
+//! `round_close`, and — under a fault plan — `corrupt_frame`,
+//! `retransmit`, `shard_failover`, `round_abort`.
 //!
 //! # Two channels
 //!
@@ -318,6 +319,35 @@ impl TickProbe for TraceWriter {
                     .set("shards", Json::Num(shards as f64))
                     .set("deadline_s", Json::Num(deadline_s))
                     .set("queue_s", Json::Num(queue_s));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::CorruptFrame { tick, sim_s, client_id, attempt, bits } => {
+                let mut j = ev("corrupt_frame");
+                j.set("client", Json::Num(client_id as f64))
+                    .set("attempt", Json::Num(attempt as f64))
+                    .set("bits", Json::Num(bits as f64));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::Retransmit { tick, sim_s, client_id, attempt, backoff_s, bits } => {
+                let mut j = ev("retransmit");
+                j.set("client", Json::Num(client_id as f64))
+                    .set("attempt", Json::Num(attempt as f64))
+                    .set("backoff_s", Json::Num(backoff_s))
+                    .set("bits", Json::Num(bits as f64));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::ShardFailover { tick, sim_s, shard, members } => {
+                let mut j = ev("shard_failover");
+                j.set("shard", Json::Num(shard as f64))
+                    .set("members", Json::Num(members as f64));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::RoundAbort { tick, sim_s, round, valid, drawn, needed } => {
+                let mut j = ev("round_abort");
+                j.set("round", Json::Num(round as f64))
+                    .set("valid", Json::Num(valid as f64))
+                    .set("drawn", Json::Num(drawn as f64))
+                    .set("needed", Json::Num(needed as f64));
                 at(j, tick, sim_s)
             }
         };

@@ -1,0 +1,416 @@
+//! Property tests for the fault-injection and recovery layer.
+//!
+//! Five guarantees:
+//!
+//! 1. **Inactive plans are free** — a run armed with no plan, the `off`
+//!    plan, or an all-zero plan is bit-identical (params, ledger,
+//!    transcript bytes) to a run built before the fault layer existed,
+//!    for the serial session, the flat cluster and the sharded cluster.
+//!    An *active* plan whose rates are all zero (quorum gate armed) may
+//!    write a v4 transcript but still must not perturb params or
+//!    billing: fault draws live on their own RNG stream.
+//! 2. **The decoder never panics** — `Message::from_bytes` returns a
+//!    clean error on arbitrary, truncated and bit-flipped input across
+//!    every variant and both framings.
+//! 3. **Corruption is always detected** — every single-bit flip of a
+//!    checksummed frame fails `Message::decode_frame`.
+//! 4. **Retransmit billing reconciles** — a faulted cluster's ledger,
+//!    `fedstc_fault_*` counters and v4 fault frames all agree, and the
+//!    recording replays bit-for-bit.
+//! 5. **Quorum aborts are §V-B dropouts** — an aborted round leaves the
+//!    global parameters byte-identical while the first-attempt billing
+//!    stays on the books and updates are re-banked into residuals.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::compression::{Message, TernaryTensor};
+use fedstc::config::{FedConfig, Method};
+use fedstc::data::synth::task_dataset;
+use fedstc::data::Dataset;
+use fedstc::fault::{self, FaultPlan};
+use fedstc::metrics::CommLedger;
+use fedstc::session::transcript::{TRANSCRIPT_BASE_VERSION, TRANSCRIPT_VERSION};
+use fedstc::session::{replay, Execution, FaultRecord, Observer, Oracle, Session, Transcript};
+use fedstc::telemetry::MetricsHub;
+use fedstc::util::rng::Pcg64;
+
+fn fed_cfg(rounds: usize) -> FedConfig {
+    let method = Method::Stc { p_up: 0.02, p_down: 0.02 };
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 8,
+        participation: 0.5,
+        classes_per_client: 5,
+        batch_size: 10,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: rounds * method.local_iters(),
+        method,
+        eval_every: 1_000_000,
+        seed: 47,
+        train_examples: 600,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+fn dataset() -> Dataset {
+    let (train, _) = task_dataset("mnist", 47).unwrap();
+    train.subset(&(0..600).collect::<Vec<_>>())
+}
+
+fn init_params(cfg: &FedConfig) -> Vec<f32> {
+    fedstc::models::ModelSpec::by_name("logreg").unwrap().init_flat(cfg.seed)
+}
+
+fn temp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fedstc_prop_faults_{}_{tag}.fstx", std::process::id()))
+}
+
+fn bits(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|x| x.to_bits()).collect()
+}
+
+/// One specimen of every message variant (the fuzz corpus).
+fn specimens() -> Vec<Message> {
+    vec![
+        Message::Dense { values: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE, 3.75] },
+        Message::Sparse { len: 1000, indices: vec![0, 7, 999], values: vec![1.0, -2.0, 0.5] },
+        Message::Ternary(TernaryTensor {
+            len: 64,
+            indices: vec![1, 9, 30, 63],
+            signs: vec![true, false, true, true],
+            mu: 0.75,
+            p: 0.0625,
+        }),
+        Message::Sign { signs: (0..19).map(|i| i % 3 == 0).collect() },
+    ]
+}
+
+// ---------------------------------------------------------------------
+// 1. Inactive plans are free
+// ---------------------------------------------------------------------
+
+/// Drive a recorded serial session and return (params, ledger,
+/// transcript bytes).
+fn serial_run(
+    cfg: &FedConfig,
+    train: &Dataset,
+    plan: Option<FaultPlan>,
+) -> (Vec<u32>, CommLedger, Vec<u8>) {
+    let tag = match &plan {
+        None => "none".to_string(),
+        Some(p) => format!("plan_{}", p.spec().replace([':', ',', '=', '.'], "_")),
+    };
+    let rec = temp(&tag);
+    let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+    let mut session =
+        Session::new(cfg.clone(), train, init_params(cfg), Execution::Serial).unwrap();
+    if let Some(p) = plan {
+        session.set_fault_plan(p).unwrap();
+    }
+    session.record_transcript(&rec, true).unwrap();
+    for _ in 0..cfg.rounds() {
+        session.run_round(Oracle::Factory(&factory), train).unwrap();
+    }
+    session.settle_final_downloads();
+    session.finish().unwrap();
+    let bytes = std::fs::read(&rec).unwrap();
+    let _ = std::fs::remove_file(&rec);
+    (bits(&session.server.params), session.ledger.clone(), bytes)
+}
+
+#[test]
+fn inactive_plans_leave_serial_transcripts_byte_identical() {
+    let train = dataset();
+    let cfg = fed_cfg(3);
+    let (clean_params, clean_ledger, clean_bytes) = serial_run(&cfg, &train, None);
+
+    for plan in [fault::by_name("off").unwrap(), FaultPlan::default()] {
+        assert!(!plan.is_active());
+        let (params, ledger, bytes) = serial_run(&cfg, &train, Some(plan));
+        assert_eq!(clean_params, params, "inactive plan perturbed the model");
+        assert_eq!(clean_ledger.total_up_bits, ledger.total_up_bits);
+        assert_eq!(clean_ledger.total_down_bits, ledger.total_down_bits);
+        assert_eq!(clean_bytes, bytes, "inactive plan perturbed the recording bytes");
+    }
+    let t = Transcript::from_bytes(&clean_bytes).unwrap();
+    assert_eq!(t.version, TRANSCRIPT_BASE_VERSION, "unfaulted recordings stay on the base format");
+
+    // an ACTIVE plan whose rates are all zero arms the quorum gate (and
+    // the v4 format) but must not move a single model or ledger bit
+    let armed = FaultPlan { quorum: 0.5, max_attempts: 3, backoff_s: 1.0, ..FaultPlan::default() };
+    assert!(armed.is_active());
+    let (params, ledger, bytes) = serial_run(&cfg, &train, Some(armed));
+    assert_eq!(clean_params, params, "zero-rate active plan perturbed the model");
+    assert_eq!(clean_ledger.total_up_bits, ledger.total_up_bits);
+    assert_eq!(clean_ledger.total_down_bits, ledger.total_down_bits);
+    assert_eq!(Transcript::from_bytes(&bytes).unwrap().version, TRANSCRIPT_VERSION);
+}
+
+#[test]
+fn inactive_plans_leave_clusters_bit_identical_flat_pool_and_sharded() {
+    let train = dataset();
+    // a messy scenario: churn, dropouts, stragglers, finite links — the
+    // fault layer must stay invisible through all of it
+    let mk = |shards: usize, faults: Option<FaultPlan>| {
+        let mut ccfg = ClusterConfig::new(fed_cfg(5));
+        ccfg.workers = 2;
+        ccfg.straggler_frac = 0.25;
+        ccfg.dropout_rate = 0.15;
+        ccfg.churn = 0.1;
+        ccfg.server_up_bps = 1e6;
+        ccfg.server_down_bps = 1e6;
+        ccfg.shards = shards;
+        if shards > 0 {
+            ccfg.shard_up_bps = 1e6;
+            ccfg.shard_down_bps = 1e6;
+        }
+        ccfg.faults = faults;
+        ccfg
+    };
+    let drive = |ccfg: ClusterConfig| {
+        let factory = NativeLogregFactory { batch_size: ccfg.fed.batch_size };
+        let init = init_params(&ccfg.fed);
+        let mut run = ClusterRun::new(ccfg, &train, init).unwrap();
+        while !run.finished() {
+            run.tick(&factory, &train).unwrap();
+        }
+        run
+    };
+
+    for shards in [0usize, 3] {
+        let tag = format!("shards={shards}");
+        let clean = drive(mk(shards, None));
+        let off = drive(mk(shards, Some(fault::by_name("off").unwrap())));
+        assert_eq!(bits(&clean.server.params), bits(&off.server.params), "{tag}: params");
+        assert_eq!(clean.rounds_done, off.rounds_done, "{tag}: rounds");
+        assert_eq!(clean.ledger.total_up_bits, off.ledger.total_up_bits, "{tag}: up bits");
+        assert_eq!(clean.ledger.total_down_bits, off.ledger.total_down_bits, "{tag}: down bits");
+        assert_eq!(clean.ledger.uploads, off.ledger.uploads, "{tag}: uploads");
+        assert_eq!(
+            clean.sim_clock_s.to_bits(),
+            off.sim_clock_s.to_bits(),
+            "{tag}: simulated clock"
+        );
+        assert_eq!(off.stats.retransmits, 0, "{tag}: phantom retransmits");
+        assert_eq!(off.stats.round_aborts, 0, "{tag}: phantom aborts");
+    }
+
+    // active zero-rate plan on a healthy cluster: every drawn participant
+    // delivers, so the armed quorum gate never fires and the run matches
+    // the clean one bit-for-bit (fault draws use their own stream)
+    let healthy = |faults: Option<FaultPlan>| {
+        let mut ccfg = ClusterConfig::new(fed_cfg(4));
+        ccfg.workers = 2;
+        ccfg.faults = faults;
+        ccfg
+    };
+    let armed = FaultPlan { quorum: 0.75, max_attempts: 4, backoff_s: 0.5, ..FaultPlan::default() };
+    let clean = drive(healthy(None));
+    let gated = drive(healthy(Some(armed)));
+    assert_eq!(bits(&clean.server.params), bits(&gated.server.params), "armed-zero: params");
+    assert_eq!(clean.rounds_done, gated.rounds_done, "armed-zero: rounds");
+    assert_eq!(clean.ledger.total_up_bits, gated.ledger.total_up_bits, "armed-zero: up bits");
+    assert_eq!(clean.ledger.uploads, gated.ledger.uploads, "armed-zero: uploads");
+    assert_eq!(gated.stats.round_aborts, 0, "armed-zero: phantom aborts");
+}
+
+// ---------------------------------------------------------------------
+// 2. The decoder never panics
+// ---------------------------------------------------------------------
+
+#[test]
+fn decoder_never_panics_on_truncated_or_mutated_frames() {
+    for m in specimens() {
+        for frame in [m.to_bytes(), m.to_checksummed_bytes()] {
+            // every prefix (truncation at each byte boundary)
+            for cut in 0..frame.len() {
+                let _ = Message::from_bytes(&frame[..cut]);
+            }
+            // every single-bit flip
+            for bit in 0..frame.len() * 8 {
+                let mut bad = frame.clone();
+                bad[bit / 8] ^= 1 << (bit % 8);
+                let _ = Message::from_bytes(&bad);
+            }
+            // the frame itself still round-trips
+            assert_eq!(Message::from_bytes(&frame).unwrap(), m);
+        }
+    }
+}
+
+#[test]
+fn decoder_never_panics_on_arbitrary_bytes() {
+    let mut rng = Pcg64::new(47, 0xf022);
+    for i in 0..4000 {
+        let len = rng.below(192);
+        let mut buf: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        if !buf.is_empty() {
+            // steer a quarter of the soup at real tag bytes so each
+            // variant's payload parser sees garbage too
+            match i % 4 {
+                0 => buf[0] = (i % 5) as u8, // 0..=3 variant tags + one unknown
+                1 => buf[0] = 0xC5,          // checksummed marker
+                _ => {}
+            }
+        }
+        let _ = Message::from_bytes(&buf);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Corruption is always detected
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_single_bit_flip_of_a_checksummed_frame_is_rejected() {
+    for m in specimens() {
+        let frame = m.to_checksummed_bytes();
+        for bit in 0..frame.len() * 8 {
+            let mut bad = frame.clone();
+            bad[bit / 8] ^= 1 << (bit % 8);
+            assert!(
+                Message::decode_frame(&bad).is_err(),
+                "bit {bit} flip of a {m:?} frame decoded successfully"
+            );
+        }
+        assert_eq!(Message::decode_frame(&frame).unwrap(), m);
+    }
+}
+
+// ---------------------------------------------------------------------
+// 4. Retransmit billing reconciles everywhere it is recorded
+// ---------------------------------------------------------------------
+
+#[test]
+fn faulted_cluster_ledger_metrics_and_transcript_reconcile() {
+    let train = dataset();
+    let mut cfg = fed_cfg(6);
+    cfg.participation = 1.0; // healthy + full draw: pending == drawn == 8
+    let mut ccfg = ClusterConfig::new(cfg);
+    ccfg.workers = 2;
+    ccfg.faults = Some(FaultPlan {
+        corrupt: 0.2,
+        loss: 0.25,
+        shard_crash: 0.0,
+        flaky_server: 0.0,
+        quorum: 0.5,
+        max_attempts: 3,
+        backoff_s: 0.5,
+    });
+    let drawn_per_round = ccfg.fed.num_clients as u64;
+
+    let rec = temp("reconcile");
+    let factory = NativeLogregFactory { batch_size: ccfg.fed.batch_size };
+    let init = init_params(&ccfg.fed);
+    let metrics = MetricsHub::new();
+    let mut run = ClusterRun::new(ccfg, &train, init).unwrap();
+    run.record_to(&rec).unwrap();
+    run.add_observer(Box::new(metrics.clone()));
+    run.add_probe(Box::new(metrics.clone()));
+    while !run.finished() {
+        run.tick(&factory, &train).unwrap();
+    }
+    assert!(run.stats.retransmits > 0, "scenario never exercised a retransmit");
+    assert!(run.stats.corrupt_frames > 0, "scenario never exercised a corrupt frame");
+
+    // ledger: one billed first attempt per drawn participant per round
+    // attempt, plus every billed retransmit — nothing else
+    let attempts = run.rounds_done as u64 + run.stats.round_aborts;
+    assert_eq!(
+        run.ledger.uploads,
+        attempts * drawn_per_round + run.stats.retransmits,
+        "upload count does not reconcile with retransmits"
+    );
+
+    // metrics: the probe-side fault counters mirror the run's own books
+    let c = |n: &str| metrics.counter(n, &[]).unwrap_or_else(|| panic!("missing {n}"));
+    assert_eq!(c("fedstc_fault_retransmits_total"), run.stats.retransmits);
+    assert_eq!(c("fedstc_fault_retransmit_bits_total"), run.stats.retransmit_bits);
+    assert_eq!(c("fedstc_fault_corrupt_frames_total"), run.stats.corrupt_frames);
+    if run.stats.round_aborts > 0 {
+        assert_eq!(c("fedstc_fault_round_aborts_total"), run.stats.round_aborts);
+    }
+
+    // transcript: a v4 recording whose fault frames re-state the same
+    // counters, and which replays bit-for-bit (fault extras verified)
+    let t = Transcript::read_file(&rec).unwrap();
+    assert_eq!(t.version, TRANSCRIPT_VERSION);
+    let frames: Vec<&FaultRecord> = t.rounds.iter().filter_map(|r| r.fault.as_ref()).collect();
+    assert!(!frames.is_empty(), "faulted recording carries no fault frames");
+    let sum = |f: fn(&FaultRecord) -> u64| frames.iter().map(|r| f(r)).sum::<u64>();
+    assert_eq!(sum(|f| f.retransmits as u64), run.stats.retransmits, "recorded retransmits");
+    assert_eq!(sum(|f| f.retransmit_bits), run.stats.retransmit_bits, "recorded retransmit bits");
+    assert_eq!(sum(|f| f.corrupt_frames as u64), run.stats.corrupt_frames, "recorded corruption");
+    assert_eq!(sum(|f| f.lost_transfers as u64), run.stats.lost_transfers, "recorded losses");
+    assert_eq!(
+        t.rounds.iter().filter(|r| r.aborted).count() as u64,
+        run.stats.round_aborts,
+        "recorded aborts"
+    );
+
+    let outcome = replay(&t).unwrap();
+    assert_eq!(bits(&outcome.final_params), bits(&run.server.params), "replayed params");
+    assert_eq!(outcome.ledger.total_up_bits, run.ledger.total_up_bits, "replayed up bits");
+    let _ = std::fs::remove_file(&rec);
+}
+
+// ---------------------------------------------------------------------
+// 5. Quorum aborts are §V-B dropouts
+// ---------------------------------------------------------------------
+
+/// Captures every [`Observer::on_fault`] record.
+struct FaultLog(Rc<RefCell<Vec<FaultRecord>>>);
+
+impl Observer for FaultLog {
+    fn on_fault(&mut self, rec: &FaultRecord) -> anyhow::Result<()> {
+        self.0.borrow_mut().push(rec.clone());
+        Ok(())
+    }
+}
+
+#[test]
+fn quorum_abort_leaves_params_byte_identical_and_rebanks_updates() {
+    let train = dataset();
+    let cfg = fed_cfg(3);
+    let init = init_params(&cfg);
+    let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+    let mut session = Session::new(cfg.clone(), &train, init.clone(), Execution::Serial).unwrap();
+    // every transfer vanishes, no retries: every round must abort
+    session
+        .set_fault_plan(FaultPlan {
+            loss: 1.0,
+            quorum: 1.0,
+            max_attempts: 1,
+            backoff_s: 1.0,
+            ..FaultPlan::default()
+        })
+        .unwrap();
+    let log = Rc::new(RefCell::new(Vec::new()));
+    session.add_observer(Box::new(FaultLog(log.clone())));
+
+    for _ in 0..cfg.rounds() {
+        session.run_round(Oracle::Factory(&factory), &train).unwrap();
+    }
+
+    assert_eq!(bits(&init), bits(&session.server.params), "aborted rounds moved the model");
+    assert_eq!(session.server.round, 0, "aborted rounds advanced the round counter");
+    assert!(session.ledger.total_up_bits > 0, "first attempts must stay billed");
+    assert!(
+        session.mean_residual_norm() > 0.0,
+        "aborted updates must be re-banked into residuals"
+    );
+
+    let log = log.borrow();
+    assert_eq!(log.len(), cfg.rounds(), "one fault record per aborted round");
+    for rec in log.iter() {
+        assert!(rec.aborted);
+        assert_eq!(rec.valid, 0, "loss=1.0 delivered an upload");
+        assert_eq!(rec.drawn, rec.lost_transfers, "every drawn upload must be lost");
+        assert_eq!(rec.needed, rec.drawn, "quorum=1.0 needs every drawn participant");
+        assert!(!rec.participants.is_empty());
+    }
+}

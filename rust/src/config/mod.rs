@@ -126,6 +126,24 @@ impl Method {
         }
     }
 
+    /// Canonical machine-readable spec: the inverse of [`Method::parse`].
+    /// `Method::parse(&m.spec())` reconstructs `m` exactly (float params
+    /// round-trip through `Display`'s shortest representation). Used by the
+    /// net transport's `Welcome` handshake so remote clients rebuild the
+    /// identical protocol.
+    pub fn spec(&self) -> String {
+        match self {
+            Method::Baseline => "baseline".into(),
+            Method::FedAvg { n } => format!("fedavg:{n}"),
+            Method::SignSgd { delta } => format!("signsgd:{delta}"),
+            Method::TopK { p } => format!("topk:{p}"),
+            Method::SparseUpDown { p_up, p_down } => format!("sparse:{p_up}:{p_down}"),
+            Method::Stc { p_up, p_down } => format!("stc:{p_up}:{p_down}"),
+            Method::Hybrid { p, n } => format!("hybrid:{p}:{n}"),
+            Method::Custom(spec) => spec.clone(),
+        }
+    }
+
     /// Parse a method spec: `baseline`, `fedavg:400`, `signsgd:0.0002`,
     /// `topk:0.01`, `stc:0.0025`, `stc:0.0025:0.0025` (up:down),
     /// `sparse:…`, `hybrid:p:n` — positional and `key=value` argument
@@ -297,6 +315,37 @@ impl FedConfig {
             self.apply_kv(k.trim(), v.trim())?;
         }
         Ok(())
+    }
+
+    /// Serialise the full configuration as `key = value` lines that
+    /// [`FedConfig::apply_file`] parses back exactly: the inverse of the
+    /// config-file format. Floats round-trip through `Display`'s shortest
+    /// representation; the method uses its canonical [`Method::spec`]. The
+    /// net transport ships this in the `Welcome` frame so every remote
+    /// client rebuilds a bit-identical run configuration.
+    pub fn to_kv(&self) -> String {
+        format!(
+            "model = {}\nnum_clients = {}\nparticipation = {}\nclasses_per_client = {}\n\
+             batch_size = {}\ngamma = {}\nalpha = {}\nmethod = {}\nlr = {}\nmomentum = {}\n\
+             iterations = {}\neval_every = {}\nseed = {}\ntrain_examples = {}\n\
+             test_examples = {}\ncache_rounds = {}\n",
+            self.model,
+            self.num_clients,
+            self.participation,
+            self.classes_per_client,
+            self.batch_size,
+            self.gamma,
+            self.alpha,
+            self.method.spec(),
+            self.lr,
+            self.momentum,
+            self.iterations,
+            self.eval_every,
+            self.seed,
+            self.train_examples,
+            self.test_examples,
+            self.cache_rounds,
+        )
     }
 
     /// Human-readable one-liner used in logs and bench banners.

@@ -65,6 +65,13 @@
 //!   contention scheduler, shard failover to direct-to-root, and quorum
 //!   commit (failed rounds leave parameters untouched). A run without a
 //!   plan is bit-identical to one built before the fault layer existed.
+//! * [`net`] — the real socket transport: coordinator and clients as
+//!   separate processes (`repro serve` / `repro join` / `repro spawn N`)
+//!   speaking the checksummed message frames over length-prefixed TCP,
+//!   with the in-process [`net::LocalTransport`] as the deterministic
+//!   twin behind the [`net::RoundTransport`] seam — a recorded real run
+//!   is byte-identical to the same-seed simulated run — and the
+//!   coordinator serving the [`telemetry`] Prometheus snapshot over HTTP.
 //! * [`sim`] — the federated learning simulation engine driving complete
 //!   experiments, and the sign-congruence analysis of Fig. 3.
 //! * [`telemetry`] — structured JSONL run traces, a Prometheus-style
@@ -88,6 +95,7 @@ pub mod data;
 pub mod fault;
 pub mod metrics;
 pub mod models;
+pub mod net;
 pub mod protocol;
 pub mod runtime;
 pub mod session;

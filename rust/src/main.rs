@@ -6,6 +6,10 @@
 //!              membership: joins, dropouts, stragglers, churn)
 //!   replay     re-execute / verify a recorded transcript (no trainer),
 //!              or diff two transcripts (--against)
+//!   serve      run the coordinator over real TCP (clients are separate
+//!              `repro join` processes); same config keys as train
+//!   join       connect to a coordinator and train the assigned clients
+//!   spawn      serve + fork N local `repro join` client processes
 //!   alpha      gradient sign-congruence analysis (paper Fig. 3)
 //!   protocols  list the registered compression protocols (--method names)
 //!   executions list the registered execution strategies (--execution)
@@ -50,6 +54,9 @@ fn run() -> anyhow::Result<()> {
         "train" => cmd_train(&args),
         "cluster" => cmd_cluster(&args),
         "replay" => cmd_replay(&args),
+        "serve" => cmd_serve(&args),
+        "join" => cmd_join(&args),
+        "spawn" => cmd_spawn(&args),
         "alpha" => cmd_alpha(&args),
         "protocols" => cmd_protocols(&args),
         "executions" => cmd_executions(&args),
@@ -71,9 +78,12 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
         cfg.apply_file(&text)?;
     }
     let is_cluster = args.subcommand == "cluster";
-    // only train/cluster consume --record; elsewhere it falls through to
+    // serve/spawn are the net-transport drivers: train keys plus the
+    // socket knobs, no --execution (the coordinator mirrors the serial arm)
+    let is_net = matches!(args.subcommand.as_str(), "serve" | "spawn");
+    // only the run drivers consume --record; elsewhere it falls through to
     // apply_kv and is rejected instead of being silently ignored
-    let records = matches!(args.subcommand.as_str(), "train" | "cluster");
+    let records = matches!(args.subcommand.as_str(), "train" | "cluster") || is_net;
     for (k, v) in args.pairs() {
         match k.as_str() {
             // CLI-only keys that are not FedConfig fields
@@ -81,13 +91,15 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
             "record" if records => {}
             // the execution strategy (`execution::by_name` spec) is read
             // by cmd_train/cmd_cluster, not by FedConfig
-            "execution" if records => {}
+            "execution" if matches!(args.subcommand.as_str(), "train" | "cluster") => {}
             // the fault-injection plan (`fault::parse` spec) is likewise
-            // read by cmd_train/cmd_cluster
+            // read by the run drivers
             "faults" if records => {}
-            // telemetry flags (pure observers; cmd_train/cmd_cluster
-            // read them through telemetry_from_args)
+            // telemetry flags (pure observers; the run drivers read them
+            // through telemetry_from_args)
             "trace" | "metrics" | "progress" if records => {}
+            // net-transport knobs (cmd_serve/cmd_spawn read them)
+            "listen" | "peers" | "http" | "net-timeout" | "quiet" if is_net => {}
             // cluster-only keys (cmd_cluster reads them separately); on
             // any other subcommand they fall through to apply_kv and are
             // rejected as unknown instead of being silently ignored
@@ -232,6 +244,211 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         println!("# wrote metrics snapshot {path}");
     }
     Ok(())
+}
+
+/// `repro serve` — run the coordinator over real TCP. Accepts the same
+/// config/telemetry/fault/record keys as `train`, plus `--listen A:P`,
+/// `--peers K` (client processes to wait for), `--http A:P` (Prometheus
+/// snapshot endpoint served during the run) and `--net-timeout SECS`
+/// (per-read socket timeout; timeouts map onto the fault plan's
+/// retransmit schedule). A recorded serve run is byte-identical to the
+/// same-config `repro train --record` run — verify with
+/// `repro replay --against`.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let cfg = config_from_args(args)?;
+    let listen = args.get_or("listen", "127.0.0.1:7070");
+    let peers = args.get_parse::<usize>("peers")?.unwrap_or(1);
+    let http = args.get("http");
+    let timeout_s = args.get_parse::<f64>("net-timeout")?.unwrap_or(30.0);
+    let quiet = args.flag("quiet");
+    let out = args.get("out");
+    let record = args.get("record");
+    let faults = match args.get("faults") {
+        Some(spec) => Some(fault::parse(&spec)?),
+        None => None,
+    };
+    let tele = telemetry_from_args(args, cfg.rounds())?;
+    args.finish()?;
+    anyhow::ensure!(peers >= 1, "--peers must be >= 1");
+
+    let listener = std::net::TcpListener::bind(&listen)?;
+    println!("# {}", cfg.describe());
+    if let Some(plan) = faults.as_ref().filter(|p| p.is_active()) {
+        println!("# faults: {}", plan.spec());
+    }
+    println!(
+        "# listening on {} for {peers} peer{}",
+        listener.local_addr()?,
+        if peers == 1 { "" } else { "s" }
+    );
+    run_serve_on(cfg, &listener, peers, tele, record, faults, http, timeout_s, out, quiet)
+}
+
+/// Shared coordinator body behind `repro serve` and `repro spawn`.
+#[allow(clippy::too_many_arguments)]
+fn run_serve_on(
+    cfg: FedConfig,
+    listener: &std::net::TcpListener,
+    peers: usize,
+    mut tele: TelemetryHandles,
+    record: Option<String>,
+    faults: Option<fedstc::fault::FaultPlan>,
+    http: Option<String>,
+    timeout_s: f64,
+    out: Option<String>,
+    quiet: bool,
+) -> anyhow::Result<()> {
+    let timer = Timer::start();
+    // the HTTP endpoint serves the --metrics hub when present, otherwise
+    // an ephemeral one (still fed by the run's observer events)
+    let mut http_server = None;
+    if let Some(addr) = http {
+        let hub = match tele.metrics.clone() {
+            Some(h) => h,
+            None => {
+                let h = MetricsHub::new();
+                tele.observers.push(Box::new(h.clone()));
+                h
+            }
+        };
+        let srv = fedstc::net::MetricsServer::start(&addr, hub)?;
+        println!("# metrics endpoint: http://{}/metrics", srv.addr);
+        http_server = Some(srv);
+    }
+    if let Some(path) = &record {
+        // same transcript wiring as cmd_train: v4 fault frames only when
+        // a plan is actually armed, so unfaulted bytes stay identical
+        let fault_capable = faults.as_ref().is_some_and(|p| p.is_active());
+        tele.observers.push(Box::new(TranscriptWriter::create_with_faults(
+            std::path::Path::new(path),
+            true,
+            fault_capable,
+        )?));
+    }
+    let report = fedstc::net::serve(
+        cfg,
+        listener,
+        peers,
+        tele.observers,
+        faults,
+        std::time::Duration::from_secs_f64(timeout_s),
+        quiet,
+    )?;
+    if let Some(mut srv) = http_server {
+        srv.stop();
+    }
+
+    println!("iter  round  accuracy  loss     trainloss  upMB      downMB");
+    for p in &report.log.points {
+        println!(
+            "{:>5} {:>6}  {:.4}    {:.4}   {:.4}   {:>8.3}  {:>8.3}",
+            p.iteration,
+            p.round,
+            p.accuracy,
+            p.loss,
+            p.train_loss,
+            bits_to_mb(p.up_bits),
+            bits_to_mb(p.down_bits)
+        );
+    }
+    println!(
+        "# max_accuracy={:.4} wall={:.1}s transport=tcp",
+        report.log.max_accuracy(),
+        timer.secs()
+    );
+    let (t, s) = (report.transport, report.stats);
+    println!(
+        "# net: disconnects={} timeouts={} wire_resends={} dropped_uploads={} \
+         skipped_rounds={} injected_drops={}",
+        t.disconnects, t.timeouts, t.wire_resends, s.dropped_uploads, s.skipped_rounds,
+        s.injected_drops
+    );
+    if let Some(path) = out {
+        std::fs::write(&path, report.log.to_csv())?;
+        println!("# wrote {path}");
+    }
+    if let Some(path) = record {
+        println!("# recorded transcript {path} (verify/re-run with: repro replay {path})");
+    }
+    Ok(())
+}
+
+/// `repro join --connect HOST:PORT` — connect to a coordinator, receive
+/// the config and a client-id range, and train assigned clients until the
+/// coordinator finishes. All run configuration comes from the coordinator's
+/// `Welcome` frame, never from local flags.
+fn cmd_join(args: &Args) -> anyhow::Result<()> {
+    let connect = args.get_or("connect", "127.0.0.1:7070");
+    let quiet = args.flag("quiet");
+    args.finish()?;
+    let stream = std::net::TcpStream::connect(&connect)?;
+    if !quiet {
+        eprintln!("[join] connected to {connect}");
+    }
+    fedstc::net::run_join(stream, quiet)?;
+    Ok(())
+}
+
+/// `repro spawn N` — bind a listener, fork N local `repro join` client
+/// processes against it, and serve. The multi-process loopback
+/// convenience behind CI's net-smoke job.
+fn cmd_spawn(args: &Args) -> anyhow::Result<()> {
+    let n: usize = match args.positional(0) {
+        Some(s) => s
+            .parse()
+            .map_err(|e| anyhow::anyhow!("spawn count '{s}': {e}"))?,
+        None => anyhow::bail!("usage: repro spawn N [train keys] [--listen A:P] [--http A:P]"),
+    };
+    anyhow::ensure!(n >= 1, "spawn count must be >= 1");
+    let cfg = config_from_args(args)?;
+    // default to an ephemeral port: the children are told the real one
+    let listen = args.get_or("listen", "127.0.0.1:0");
+    let http = args.get("http");
+    let timeout_s = args.get_parse::<f64>("net-timeout")?.unwrap_or(30.0);
+    let quiet = args.flag("quiet");
+    let out = args.get("out");
+    let record = args.get("record");
+    let faults = match args.get("faults") {
+        Some(spec) => Some(fault::parse(&spec)?),
+        None => None,
+    };
+    let tele = telemetry_from_args(args, cfg.rounds())?;
+    args.finish()?;
+
+    let listener = std::net::TcpListener::bind(&listen)?;
+    let addr = listener.local_addr()?;
+    println!("# {}", cfg.describe());
+    if let Some(plan) = faults.as_ref().filter(|p| p.is_active()) {
+        println!("# faults: {}", plan.spec());
+    }
+    println!("# spawning {n} client process{} against {addr}", if n == 1 { "" } else { "es" });
+    let exe = std::env::current_exe()?;
+    let mut children = Vec::with_capacity(n);
+    for _ in 0..n {
+        children.push(
+            std::process::Command::new(&exe)
+                .arg("join")
+                .arg("--connect")
+                .arg(addr.to_string())
+                .arg("--quiet")
+                .spawn()?,
+        );
+    }
+    let result =
+        run_serve_on(cfg, &listener, n, tele, record, faults, http, timeout_s, out, quiet);
+    for child in &mut children {
+        if result.is_err() {
+            child.kill().ok();
+        }
+        match child.wait() {
+            Ok(status) if !status.success() => {
+                eprintln!("# warning: client process exited with {status}");
+            }
+            Err(e) => eprintln!("# warning: could not reap client process: {e}"),
+            _ => {}
+        }
+    }
+    result
 }
 
 /// `repro replay <file>` — re-execute a recorded transcript through a
@@ -761,7 +978,7 @@ fn print_help() {
     println!(
         "repro — fedstc launcher (Sparse Ternary Compression, Sattler et al. 2019)
 
-usage: repro <train|cluster|replay|alpha|protocols|executions|faults|info|sweep|help> [--key value]...
+usage: repro <train|cluster|serve|join|spawn|replay|alpha|protocols|executions|faults|info|sweep|help> [--key value]...
 
 examples:
   repro train --model logreg --method stc:0.0025 --classes 1 --iters 400
@@ -819,6 +1036,22 @@ cluster-only keys: --workers N  --dropout-rate F  --straggler-frac F
   --shards N  (aggregation tree: 0 = flat single server)
   --shard-up-bps BPS  --shard-down-bps BPS  (the shard→root link)
   --out FILE.csv|FILE.json  (curve + cluster stats export)
-  (plus any train config key)"
+  (plus any train config key)
+
+net transport (multi-process over real TCP):
+  repro serve --listen 127.0.0.1:7070 --peers 2 --method stc:0.01 \\
+      --iters 200 --http 127.0.0.1:9100 --record real.fstx
+  repro join --connect 127.0.0.1:7070        (in each client terminal)
+  repro spawn 3 --method stc:0.01 --iters 200 --faults loss=0.05 \\
+      --record real.fstx                     (serve + fork 3 local joins)
+  serve/spawn accept the train config/telemetry/fault/record keys, plus:
+  --listen A:P (default 127.0.0.1:7070; spawn defaults to an ephemeral
+  port)  --peers K  --http A:P (serve the MetricsHub Prometheus snapshot
+  over HTTP during the run: GET /metrics, /metrics.json)
+  --net-timeout SECS (per-read socket timeout; timeouts map onto the
+  fault plan's retransmit-with-backoff schedule)  --quiet
+  Clients need no config: it travels in the Welcome handshake. A healthy
+  recorded serve run is byte-identical to the same-config train run —
+  check with: repro replay real.fstx --against sim.fstx"
     );
 }

@@ -1,0 +1,347 @@
+//! Client-side runtime for the socket transport.
+//!
+//! A *peer* process owns a contiguous range of client ids. From the
+//! `Welcome` config it rebuilds the exact same world the coordinator's
+//! `Session` would have built locally — same synthetic dataset, same
+//! Algorithm-5 shard split, same `ClientState` construction — so the
+//! training math is bit-identical to the simulated twin: everything is
+//! derived from the shared `FedConfig` (seeded RNG streams keyed by client
+//! id), never from process-local state.
+//!
+//! The runtime itself is socket-free ([`ClientRuntime`]); [`run_join`]
+//! wraps it in the TCP control loop used by `repro join`, and the
+//! `LocalTransport` twin drives the same runtime in-process.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::TcpStream;
+
+use crate::compression::Message;
+use crate::config::FedConfig;
+use crate::coordinator::{ClientState, LocalScratch};
+use crate::data::synth::{SynthFlavor, SynthSpec};
+use crate::data::{split_by_class, Dataset, SplitSpec};
+use crate::models::{native::NativeLogreg, ModelSpec};
+use crate::net::frame::{FrameReader, ReadOutcome};
+use crate::net::protocol::NetMsg;
+use crate::protocol::Protocol;
+
+/// One trained upload, ready for the wire.
+#[derive(Debug, Clone)]
+pub struct UploadOut {
+    pub id: usize,
+    pub loss: f32,
+    pub payload_bits: u64,
+    /// `Message::to_checksummed_bytes` frame
+    pub frame: Vec<u8>,
+}
+
+struct CachedUpload {
+    msg: Message,
+    loss: f32,
+    payload_bits: u64,
+    frame: Vec<u8>,
+}
+
+/// Holds the local shards, protocol, and trainer for a peer's id range.
+pub struct ClientRuntime {
+    cfg: FedConfig,
+    first_id: usize,
+    train: Dataset,
+    clients: Vec<ClientState>,
+    trainer: NativeLogreg,
+    proto: Box<dyn Protocol>,
+    scratch: LocalScratch,
+    dim: usize,
+    /// uploads of the in-flight round, kept until `RoundEnd` so `Resend`
+    /// requests and residual re-banking can be served
+    cache: HashMap<usize, CachedUpload>,
+}
+
+impl ClientRuntime {
+    /// Build the runtime for clients `first_id .. first_id + count`.
+    ///
+    /// Mirrors `Experiment::new` + `Session::new` exactly: the dataset is
+    /// generated from the config seed and split with the same
+    /// [`SplitSpec`], so shard contents match the coordinator's simulated
+    /// twin bit-for-bit.
+    pub fn new(cfg: FedConfig, first_id: usize, count: usize) -> anyhow::Result<Self> {
+        cfg.validate()?;
+        anyhow::ensure!(
+            cfg.model == "logreg",
+            "net transport currently drives the native logreg backend only \
+             (model '{}' requested)",
+            cfg.model
+        );
+        anyhow::ensure!(
+            first_id + count <= cfg.num_clients,
+            "peer id range {first_id}..{} exceeds num_clients {}",
+            first_id + count,
+            cfg.num_clients
+        );
+        let spec = ModelSpec::by_name(&cfg.model)?;
+        let flavor = SynthFlavor::by_name(spec.task)?;
+        let (train, _test) =
+            SynthSpec::new(flavor, cfg.train_examples, cfg.test_examples, cfg.seed).generate();
+        let dim = spec.init_flat(cfg.seed).len();
+        let split = SplitSpec {
+            num_clients: cfg.num_clients,
+            classes_per_client: cfg.classes_per_client,
+            gamma: cfg.gamma,
+            alpha: cfg.alpha,
+            seed: cfg.seed,
+        };
+        let proto = cfg.method.protocol()?;
+        let uses_residual = proto.client_residual();
+        let mut shards: Vec<_> = split_by_class(&train, &split)
+            .into_iter()
+            .filter(|s| (first_id..first_id + count).contains(&s.client_id))
+            .collect();
+        shards.sort_by_key(|s| s.client_id);
+        anyhow::ensure!(
+            shards.len() == count,
+            "expected {count} shards for id range starting at {first_id}, got {}",
+            shards.len()
+        );
+        let clients: Vec<ClientState> = shards
+            .into_iter()
+            .map(|s| ClientState::new(s.client_id, s.indices, dim, &cfg, uses_residual))
+            .collect();
+        let trainer = NativeLogreg::new(cfg.batch_size);
+        Ok(ClientRuntime {
+            cfg,
+            first_id,
+            train,
+            clients,
+            trainer,
+            proto,
+            scratch: LocalScratch::default(),
+            dim,
+            cache: HashMap::new(),
+        })
+    }
+
+    pub fn first_id(&self) -> usize {
+        self.first_id
+    }
+
+    pub fn count(&self) -> usize {
+        self.clients.len()
+    }
+
+    fn client_mut(&mut self, id: usize) -> anyhow::Result<&mut ClientState> {
+        let idx = id
+            .checked_sub(self.first_id)
+            .filter(|&i| i < self.clients.len())
+            .ok_or_else(|| anyhow::anyhow!("client id {id} is not owned by this peer"))?;
+        Ok(&mut self.clients[idx])
+    }
+
+    /// Train every assigned client (in the given order — the coordinator
+    /// sends ids in global participant order) and produce the uploads.
+    /// Identical math to the serial `Session::run_round` training arm:
+    /// copy global params, run local SGD, form ΔW, compress with error
+    /// feedback.
+    pub fn handle_assign(
+        &mut self,
+        ids: &[u32],
+        params: &[f32],
+    ) -> anyhow::Result<Vec<UploadOut>> {
+        anyhow::ensure!(
+            params.len() == self.dim,
+            "round parameters have dim {}, model expects {}",
+            params.len(),
+            self.dim
+        );
+        let local_iters = self.cfg.method.local_iters();
+        let (lr, momentum) = (self.cfg.lr, self.cfg.momentum);
+        let mut out = Vec::with_capacity(ids.len());
+        for &id in ids {
+            let id = id as usize;
+            let mut work = params.to_vec();
+            let train = &self.train;
+            // split borrows: trainer/scratch/proto are disjoint fields
+            let loss = {
+                let trainer = &mut self.trainer;
+                let scratch = &mut self.scratch;
+                let idx = id
+                    .checked_sub(self.first_id)
+                    .filter(|&i| i < self.clients.len())
+                    .ok_or_else(|| anyhow::anyhow!("client id {id} is not owned by this peer"))?;
+                self.clients[idx].local_train(
+                    &mut work,
+                    trainer,
+                    train,
+                    local_iters,
+                    lr,
+                    momentum,
+                    scratch,
+                )
+            };
+            let mut delta = work;
+            for (d, w) in delta.iter_mut().zip(params) {
+                *d -= *w;
+            }
+            let msg = {
+                let proto = self.proto.as_mut();
+                let idx = id - self.first_id;
+                self.clients[idx].compress_update(delta, proto)
+            };
+            let wire = msg.to_wire();
+            let frame = msg.to_checksummed_bytes();
+            out.push(UploadOut {
+                id,
+                loss,
+                payload_bits: wire.payload_bits as u64,
+                frame: frame.clone(),
+            });
+            self.cache.insert(
+                id,
+                CachedUpload { msg, loss, payload_bits: wire.payload_bits as u64, frame },
+            );
+        }
+        Ok(out)
+    }
+
+    /// Serve a retransmit request from the round cache.
+    pub fn handle_resend(&self, id: usize) -> Option<UploadOut> {
+        self.cache.get(&id).map(|c| UploadOut {
+            id,
+            loss: c.loss,
+            payload_bits: c.payload_bits,
+            frame: c.frame.clone(),
+        })
+    }
+
+    /// Apply the round verdict: fold dropped/aborted updates back into
+    /// their residuals (§V-B dropout semantics, same as the serial
+    /// `abort_round` / failed-gauntlet paths) and drop the cache.
+    pub fn handle_round_end(&mut self, rebank_ids: &[u32]) -> anyhow::Result<()> {
+        for &id in rebank_ids {
+            let id = id as usize;
+            let Some(cached) = self.cache.remove(&id) else {
+                continue; // not ours (coordinator broadcasts the full list)
+            };
+            let client = self.client_mut(id)?;
+            if !client.residual.is_empty() {
+                cached.msg.add_to(&mut client.residual, 1.0);
+            }
+        }
+        self.cache.clear();
+        Ok(())
+    }
+}
+
+/// Summary statistics from one `repro join` session.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct JoinSummary {
+    pub rounds_trained: usize,
+    pub uploads_sent: usize,
+    pub resends_served: usize,
+}
+
+fn send(stream: &mut TcpStream, msg: &NetMsg) -> anyhow::Result<()> {
+    crate::net::frame::write_frame(stream, &msg.encode())?;
+    Ok(())
+}
+
+/// The `repro join` control loop: handshake, then serve rounds until the
+/// coordinator sends `Finish` (graceful) or closes the connection.
+pub fn run_join(stream: TcpStream, quiet: bool) -> anyhow::Result<JoinSummary> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let mut reader = FrameReader::new(stream);
+    send(&mut writer, &NetMsg::hello())?;
+
+    // handshake: the Welcome carries the id range and the full config
+    let welcome = match reader.read_frame()? {
+        ReadOutcome::Frame(f) => NetMsg::decode(&f)
+            .map_err(|e| anyhow::anyhow!("bad frame during handshake: {e}"))?,
+        other => anyhow::bail!("connection ended during handshake ({other:?})"),
+    };
+    let NetMsg::Welcome { first_id, count, peer_index, peers, config_text } = welcome else {
+        anyhow::bail!("expected Welcome, got a different frame");
+    };
+    let mut cfg = FedConfig::default();
+    cfg.apply_file(&config_text)?;
+    let mut runtime = ClientRuntime::new(cfg, first_id as usize, count as usize)?;
+    if !quiet {
+        eprintln!(
+            "[join] peer {}/{}: clients {}..{} ({} shards)",
+            peer_index + 1,
+            peers,
+            first_id,
+            first_id as usize + count as usize,
+            count
+        );
+    }
+
+    let mut summary = JoinSummary::default();
+    loop {
+        let frame = match reader.read_frame()? {
+            ReadOutcome::Frame(f) => f,
+            ReadOutcome::Closed => {
+                anyhow::bail!("coordinator closed the connection before Finish")
+            }
+            ReadOutcome::ClosedMidFrame => {
+                anyhow::bail!("coordinator connection broke mid-frame")
+            }
+            ReadOutcome::TimedOut => continue,
+        };
+        let msg =
+            NetMsg::decode(&frame).map_err(|e| anyhow::anyhow!("bad control frame: {e}"))?;
+        match msg {
+            NetMsg::Assign { round, ids, params } => {
+                let uploads = runtime.handle_assign(&ids, &params)?;
+                if !ids.is_empty() {
+                    summary.rounds_trained += 1;
+                }
+                for up in uploads {
+                    send(
+                        &mut writer,
+                        &NetMsg::Upload {
+                            round,
+                            client_id: up.id as u32,
+                            loss: up.loss,
+                            payload_bits: up.payload_bits,
+                            frame: up.frame,
+                        },
+                    )?;
+                    summary.uploads_sent += 1;
+                }
+            }
+            NetMsg::Resend { round, client_id } => {
+                let up = runtime.handle_resend(client_id as usize).ok_or_else(|| {
+                    anyhow::anyhow!("resend request for client {client_id} with empty cache")
+                })?;
+                send(
+                    &mut writer,
+                    &NetMsg::Upload {
+                        round,
+                        client_id,
+                        loss: up.loss,
+                        payload_bits: up.payload_bits,
+                        frame: up.frame,
+                    },
+                )?;
+                summary.resends_served += 1;
+            }
+            NetMsg::RoundEnd { rebank_ids, .. } => {
+                runtime.handle_round_end(&rebank_ids)?;
+            }
+            NetMsg::Finish => {
+                send(&mut writer, &NetMsg::Bye)?;
+                writer.flush().ok();
+                break;
+            }
+            other => anyhow::bail!("unexpected frame from coordinator: {other:?}"),
+        }
+    }
+    if !quiet {
+        eprintln!(
+            "[join] done: {} rounds, {} uploads, {} resends served",
+            summary.rounds_trained, summary.uploads_sent, summary.resends_served
+        );
+    }
+    Ok(summary)
+}

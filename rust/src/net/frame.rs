@@ -1,0 +1,205 @@
+//! Length-prefixed framing for the socket transport.
+//!
+//! Every message on a `fedstc` TCP connection is a *frame*: a little-endian
+//! `u32` byte length followed by exactly that many payload bytes. The payload
+//! is a control message ([`crate::net::protocol::NetMsg`]); uploads embed the
+//! checksummed `Message` wire frame (`Message::to_checksummed_bytes`) inside
+//! the control payload, so the application-level bytes on the wire are the
+//! exact frames the transcript layer records.
+//!
+//! The decoder is incremental and total: it accepts bytes in arbitrary
+//! chunks (partial reads), rejects oversized length prefixes without
+//! allocating, and reports mid-frame truncation explicitly. It never panics
+//! on any input — `property_net.rs` fuzzes this promise.
+
+use std::io::{self, Read, Write};
+
+/// Hard cap on a single frame's payload. Generous for model parameters
+/// (64 MiB ≫ any logreg flat vector) while bounding what a malformed or
+/// hostile peer can make us allocate.
+pub const MAX_FRAME: usize = 64 << 20;
+
+/// Byte length of the `u32` length prefix.
+pub const PREFIX_LEN: usize = 4;
+
+/// Errors from the incremental frame decoder.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// The length prefix announced a payload larger than [`MAX_FRAME`].
+    Oversized { announced: u64 },
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::Oversized { announced } => write!(
+                f,
+                "frame length prefix {announced} exceeds the {MAX_FRAME}-byte cap"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// Encode a payload as a length-prefixed frame.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(PREFIX_LEN + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+/// Write one frame to a stream (single `write_all`, so a frame is never
+/// interleaved with another writer on the same side).
+pub fn write_frame<W: Write>(w: &mut W, payload: &[u8]) -> io::Result<()> {
+    guard_len(payload.len())?;
+    w.write_all(&encode_frame(payload))?;
+    w.flush()
+}
+
+fn guard_len(len: usize) -> io::Result<()> {
+    if len > MAX_FRAME {
+        return Err(io::Error::new(
+            io::ErrorKind::InvalidInput,
+            FrameError::Oversized {
+                announced: len as u64,
+            },
+        ));
+    }
+    Ok(())
+}
+
+/// Incremental frame decoder: push bytes in as they arrive, pop complete
+/// frames out. Socket-free, so it is directly fuzzable.
+#[derive(Debug, Default)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    /// Read cursor into `buf`; consumed bytes are compacted lazily.
+    pos: usize,
+    poisoned: bool,
+}
+
+impl FrameDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed raw bytes from the wire.
+    pub fn push(&mut self, bytes: &[u8]) {
+        if self.poisoned {
+            return;
+        }
+        // Compact once the dead prefix dominates, to keep memory bounded.
+        if self.pos > 0 && self.pos >= self.buf.len() / 2 {
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, if one is buffered.
+    ///
+    /// `Ok(None)` means "need more bytes". An [`FrameError::Oversized`]
+    /// poisons the decoder: the stream is unrecoverable past a bad prefix,
+    /// so every later call keeps returning the error.
+    pub fn next_frame(&mut self) -> Result<Option<Vec<u8>>, FrameError> {
+        let avail = &self.buf[self.pos..];
+        if self.poisoned {
+            let announced = if avail.len() >= PREFIX_LEN {
+                u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]) as u64
+            } else {
+                u64::MAX
+            };
+            return Err(FrameError::Oversized { announced });
+        }
+        if avail.len() < PREFIX_LEN {
+            return Ok(None);
+        }
+        let len = u32::from_le_bytes([avail[0], avail[1], avail[2], avail[3]]) as usize;
+        if len > MAX_FRAME {
+            self.poisoned = true;
+            return Err(FrameError::Oversized {
+                announced: len as u64,
+            });
+        }
+        if avail.len() < PREFIX_LEN + len {
+            return Ok(None);
+        }
+        let frame = avail[PREFIX_LEN..PREFIX_LEN + len].to_vec();
+        self.pos += PREFIX_LEN + len;
+        Ok(Some(frame))
+    }
+
+    /// True if bytes of an incomplete frame are buffered — used to classify
+    /// a connection that closed mid-frame.
+    pub fn has_partial(&self) -> bool {
+        self.pos < self.buf.len()
+    }
+}
+
+/// Why a blocking frame read did not produce a frame.
+#[derive(Debug)]
+pub enum ReadOutcome {
+    /// A complete frame payload.
+    Frame(Vec<u8>),
+    /// The peer closed the connection cleanly at a frame boundary.
+    Closed,
+    /// The peer closed the connection in the middle of a frame.
+    ClosedMidFrame,
+    /// The read timed out (socket read timeout elapsed).
+    TimedOut,
+}
+
+/// A buffered frame reader over any byte stream.
+///
+/// Keeps partial bytes across calls, so a timeout mid-frame does not lose
+/// data: the next call resumes where the stream left off.
+pub struct FrameReader<R> {
+    inner: R,
+    dec: FrameDecoder,
+    scratch: [u8; 16 * 1024],
+}
+
+impl<R: Read> FrameReader<R> {
+    pub fn new(inner: R) -> Self {
+        FrameReader {
+            inner,
+            dec: FrameDecoder::new(),
+            scratch: [0u8; 16 * 1024],
+        }
+    }
+
+    pub fn get_ref(&self) -> &R {
+        &self.inner
+    }
+
+    /// Block until one frame, EOF, or a socket timeout.
+    pub fn read_frame(&mut self) -> io::Result<ReadOutcome> {
+        loop {
+            match self.dec.next_frame() {
+                Ok(Some(frame)) => return Ok(ReadOutcome::Frame(frame)),
+                Ok(None) => {}
+                Err(e) => return Err(io::Error::new(io::ErrorKind::InvalidData, e)),
+            }
+            match self.inner.read(&mut self.scratch) {
+                Ok(0) => {
+                    return Ok(if self.dec.has_partial() {
+                        ReadOutcome::ClosedMidFrame
+                    } else {
+                        ReadOutcome::Closed
+                    });
+                }
+                Ok(n) => self.dec.push(&self.scratch[..n]),
+                Err(e)
+                    if e.kind() == io::ErrorKind::WouldBlock
+                        || e.kind() == io::ErrorKind::TimedOut =>
+                {
+                    return Ok(ReadOutcome::TimedOut);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}

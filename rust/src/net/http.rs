@@ -1,0 +1,94 @@
+//! Minimal HTTP endpoint exposing the coordinator's [`MetricsHub`]
+//! Prometheus snapshot during a run — the ROADMAP carry-over "wire the
+//! MetricsHub Prometheus snapshot into an exporter once a real transport
+//! exists to scrape it over".
+//!
+//! `GET /metrics` returns the text exposition format
+//! (`MetricsHub::prometheus`), `GET /metrics.json` the JSON registry
+//! dump. Everything else is 404. The server is a single background
+//! thread over a non-blocking listener; it holds a cloned hub handle, so
+//! scrapes see live counters while the round loop runs.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::telemetry::metrics::MetricsHub;
+
+/// Handle to the background metrics server; stops on drop.
+pub struct MetricsServer {
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9100`) and serve `hub` snapshots
+    /// until stopped.
+    pub fn start(addr: &str, hub: MetricsHub) -> anyhow::Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = std::thread::Builder::new()
+            .name("fedstc-metrics-http".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            // one request per connection, best effort —
+                            // a scrape failure must never hurt the run
+                            let _ = respond(stream, &hub);
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(25)),
+                    }
+                }
+            })?;
+        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            h.join().ok();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn respond(mut stream: TcpStream, hub: &MetricsHub) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
+    // read just enough for the request line; ignore headers
+    let mut buf = [0u8; 2048];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    let request = String::from_utf8_lossy(&buf[..n]);
+    let path = request
+        .lines()
+        .next()
+        .and_then(|line| line.split_whitespace().nth(1))
+        .unwrap_or("/");
+    let (status, ctype, body) = match path {
+        "/metrics" => ("200 OK", "text/plain; version=0.0.4", hub.prometheus()),
+        "/metrics.json" => ("200 OK", "application/json", hub.json().dump()),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    };
+    let head = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body.as_bytes())?;
+    stream.flush()
+}

@@ -1,0 +1,73 @@
+//! Real socket transport: multi-process coordinator/client runtime with a
+//! deterministic simulated twin.
+//!
+//! Until this module, every byte of the paper's §V-B communication
+//! accounting travelled through the simulated contention scheduler — the
+//! wire *format* was real (`Message::to_checksummed_bytes` frames), the
+//! wire was not. Here the coordinator (`repro serve`) and clients
+//! (`repro join`, or `repro spawn N` to fork N local client processes)
+//! run as separate OS processes speaking those same frames over TCP:
+//!
+//! ```text
+//!                         ┌──────────────────────────┐
+//!                         │  repro serve             │
+//!                         │  Session (serial arm)    │──── GET /metrics
+//!                         │  ledger · transcript     │     (MetricsHub)
+//!                         └───┬──────────┬────────┬──┘
+//!              length-prefixed│          │        │ TCP
+//!                  NetMsg     │          │        │
+//!                   ┌─────────┴─┐  ┌─────┴─────┐  ┌┴──────────┐
+//!                   │ repro join│  │ repro join│  │ repro join│
+//!                   │ clients   │  │ clients   │  │ clients   │
+//!                   │ 0..33     │  │ 33..66    │  │ 66..100   │
+//!                   └───────────┘  └───────────┘  └───────────┘
+//! ```
+//!
+//! Layer map:
+//!
+//! * [`frame`] — `u32`-length-prefixed framing; incremental, panic-free
+//!   decoder (fuzzed in `property_net.rs`).
+//! * [`protocol`] — the eight-frame control protocol (Hello/Welcome/
+//!   Assign/Upload/Resend/RoundEnd/Finish/Bye), also panic-free.
+//! * [`client`] — [`client::ClientRuntime`]: a peer's world rebuilt from
+//!   the `Welcome` config (same dataset, same Algorithm-5 split, same
+//!   `ClientState`s), plus the `repro join` TCP loop.
+//! * [`transport`] — the seam: [`transport::RoundTransport`] with the
+//!   real [`transport::TcpCoordinator`] and the in-process
+//!   [`transport::LocalTransport`] twin.
+//! * [`serve`] — the coordinator driver mirroring the serial
+//!   `Session::run_round` contract call-for-call.
+//! * [`http`] — the Prometheus snapshot endpoint served during the run.
+//!
+//! # Twin-equivalence contract
+//!
+//! On a healthy network, a recorded `repro serve` run is **byte-identical**
+//! to a same-config, same-seed `repro train --record` run: same FSTX
+//! header, same round frames (participants, uploads, ledger totals,
+//! params checksum), same end frame. Everything deterministic is derived
+//! from the shared `FedConfig` (`FedConfig::to_kv` travels in `Welcome`);
+//! wall-clock only ever reaches the `.perf.jsonl` telemetry channel.
+//! `repro replay --against` between the two recordings must report zero
+//! diverging frames — CI's `net-smoke` job enforces exactly that, with
+//! `--faults loss=0.05` exercising the retransmit legs.
+//!
+//! Real-world events the simulation cannot express stay *out* of the
+//! deterministic state: an unplanned client disconnect is §V-B dropout
+//! (counted in [`serve::NetRunStats`], no fault frame — those belong to
+//! the injected plan only), and read timeouts map onto the fault plan's
+//! retransmit-with-backoff schedule as real `Resend` requests.
+
+pub mod client;
+pub mod frame;
+pub mod http;
+pub mod protocol;
+pub mod serve;
+pub mod transport;
+
+pub use client::{run_join, ClientRuntime, JoinSummary};
+pub use http::MetricsServer;
+pub use serve::{run_coordinator, serve, NetRunStats, ServeReport};
+pub use transport::{
+    partition, LocalTransport, NetUpload, RetryPolicy, RoundTransport, TcpCoordinator,
+    TransportStats,
+};

@@ -1,0 +1,371 @@
+//! Control protocol for the coordinator/client socket transport.
+//!
+//! Eight little-endian frame types carry the whole session lifecycle:
+//!
+//! | tag | frame      | direction        | purpose                                   |
+//! |-----|------------|------------------|-------------------------------------------|
+//! | 1   | `Hello`    | client → coord   | magic + protocol version handshake        |
+//! | 2   | `Welcome`  | coord → client   | id range, peer index, full run config     |
+//! | 3   | `Assign`   | coord → client   | round number, participant ids, parameters |
+//! | 4   | `Upload`   | client → coord   | loss, payload bits, checksummed frame     |
+//! | 5   | `Resend`   | coord → client   | retransmit request for one upload         |
+//! | 6   | `RoundEnd` | coord → client   | commit/abort verdict + residual re-banks  |
+//! | 7   | `Finish`   | coord → client   | session over, shut down                   |
+//! | 8   | `Bye`      | client → coord   | graceful goodbye (absence = dropout)      |
+//!
+//! The encoder/decoder is hand-rolled, bounds-checked, and total: `decode`
+//! returns a typed error on any malformed input and never panics — the
+//! second fuzz target in `property_net.rs`.
+
+/// Handshake magic ("FNET" little-endian).
+pub const NET_MAGIC: u32 = u32::from_le_bytes(*b"FNET");
+
+/// Control-protocol version. Bump on any frame-layout change.
+pub const NET_VERSION: u16 = 1;
+
+const TAG_HELLO: u8 = 1;
+const TAG_WELCOME: u8 = 2;
+const TAG_ASSIGN: u8 = 3;
+const TAG_UPLOAD: u8 = 4;
+const TAG_RESEND: u8 = 5;
+const TAG_ROUND_END: u8 = 6;
+const TAG_FINISH: u8 = 7;
+const TAG_BYE: u8 = 8;
+
+/// A decoded control frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum NetMsg {
+    /// Client introduces itself.
+    Hello { magic: u32, version: u16 },
+    /// Coordinator assigns the peer a contiguous client-id range and ships
+    /// the full run configuration as `key = value` lines (parseable by
+    /// `FedConfig::apply_file` semantics).
+    Welcome {
+        first_id: u32,
+        count: u32,
+        peer_index: u32,
+        peers: u32,
+        config_text: String,
+    },
+    /// Round assignment: which of the peer's clients participate this round,
+    /// plus the current global parameters.
+    Assign {
+        round: u32,
+        ids: Vec<u32>,
+        params: Vec<f32>,
+    },
+    /// One client's update for a round. `frame` is the checksummed message
+    /// wire frame (`Message::to_checksummed_bytes`); `payload_bits` is the
+    /// semantic §V-B upload cost (`WireFrame::payload_bits`) billed by the
+    /// coordinator's ledger.
+    Upload {
+        round: u32,
+        client_id: u32,
+        loss: f32,
+        payload_bits: u64,
+        frame: Vec<u8>,
+    },
+    /// Coordinator asks the peer to retransmit one cached upload.
+    Resend { round: u32, client_id: u32 },
+    /// Round verdict. `committed = false` means the round aborted (quorum /
+    /// flaky-server); `rebank_ids` lists clients that must fold their cached
+    /// update back into their residual per §V-B dropout semantics.
+    RoundEnd {
+        round: u32,
+        committed: bool,
+        rebank_ids: Vec<u32>,
+    },
+    /// Session complete.
+    Finish,
+    /// Graceful client goodbye.
+    Bye,
+}
+
+/// Typed decode failure — never a panic.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ProtoError {
+    Empty,
+    UnknownTag(u8),
+    Truncated { tag: u8 },
+    BadUtf8,
+    LengthMismatch { tag: u8 },
+}
+
+impl std::fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProtoError::Empty => write!(f, "empty control frame"),
+            ProtoError::UnknownTag(t) => write!(f, "unknown control tag {t}"),
+            ProtoError::Truncated { tag } => write!(f, "truncated control frame (tag {tag})"),
+            ProtoError::BadUtf8 => write!(f, "config text is not valid UTF-8"),
+            ProtoError::LengthMismatch { tag } => {
+                write!(f, "control frame (tag {tag}) has trailing or missing bytes")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    tag: u8,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.buf.len() - self.pos < n {
+            return Err(ProtoError::Truncated { tag: self.tag });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, ProtoError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, ProtoError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, ProtoError> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    fn f32(&mut self) -> Result<f32, ProtoError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    /// Read a `u32` element count whose elements occupy `elem_size` bytes
+    /// each, verifying the remainder of the buffer can actually hold them —
+    /// this is what stops a hostile length from driving a huge allocation.
+    fn count(&mut self, elem_size: usize) -> Result<usize, ProtoError> {
+        let n = self.u32()? as usize;
+        if elem_size != 0 && (self.buf.len() - self.pos) / elem_size < n {
+            return Err(ProtoError::Truncated { tag: self.tag });
+        }
+        Ok(n)
+    }
+
+    fn u32_vec(&mut self) -> Result<Vec<u32>, ProtoError> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+
+    fn f32_vec(&mut self) -> Result<Vec<f32>, ProtoError> {
+        let n = self.count(4)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f32()?);
+        }
+        Ok(v)
+    }
+
+    fn bytes(&mut self) -> Result<Vec<u8>, ProtoError> {
+        let n = self.count(1)?;
+        Ok(self.take(n)?.to_vec())
+    }
+
+    fn finish(&self) -> Result<(), ProtoError> {
+        if self.pos != self.buf.len() {
+            return Err(ProtoError::LengthMismatch { tag: self.tag });
+        }
+        Ok(())
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u32_slice(out: &mut Vec<u8>, v: &[u32]) {
+    put_u32(out, v.len() as u32);
+    for x in v {
+        put_u32(out, *x);
+    }
+}
+
+impl NetMsg {
+    /// Convenience constructor for the standard handshake.
+    pub fn hello() -> Self {
+        NetMsg::Hello {
+            magic: NET_MAGIC,
+            version: NET_VERSION,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            NetMsg::Hello { magic, version } => {
+                out.push(TAG_HELLO);
+                put_u32(&mut out, *magic);
+                out.extend_from_slice(&version.to_le_bytes());
+            }
+            NetMsg::Welcome {
+                first_id,
+                count,
+                peer_index,
+                peers,
+                config_text,
+            } => {
+                out.push(TAG_WELCOME);
+                put_u32(&mut out, *first_id);
+                put_u32(&mut out, *count);
+                put_u32(&mut out, *peer_index);
+                put_u32(&mut out, *peers);
+                put_u32(&mut out, config_text.len() as u32);
+                out.extend_from_slice(config_text.as_bytes());
+            }
+            NetMsg::Assign { round, ids, params } => {
+                out.push(TAG_ASSIGN);
+                put_u32(&mut out, *round);
+                put_u32_slice(&mut out, ids);
+                put_u32(&mut out, params.len() as u32);
+                for p in params {
+                    put_u32(&mut out, p.to_bits());
+                }
+            }
+            NetMsg::Upload {
+                round,
+                client_id,
+                loss,
+                payload_bits,
+                frame,
+            } => {
+                out.push(TAG_UPLOAD);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *client_id);
+                put_u32(&mut out, loss.to_bits());
+                put_u64(&mut out, *payload_bits);
+                put_u32(&mut out, frame.len() as u32);
+                out.extend_from_slice(frame);
+            }
+            NetMsg::Resend { round, client_id } => {
+                out.push(TAG_RESEND);
+                put_u32(&mut out, *round);
+                put_u32(&mut out, *client_id);
+            }
+            NetMsg::RoundEnd {
+                round,
+                committed,
+                rebank_ids,
+            } => {
+                out.push(TAG_ROUND_END);
+                put_u32(&mut out, *round);
+                out.push(u8::from(*committed));
+                put_u32_slice(&mut out, rebank_ids);
+            }
+            NetMsg::Finish => out.push(TAG_FINISH),
+            NetMsg::Bye => out.push(TAG_BYE),
+        }
+        out
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<NetMsg, ProtoError> {
+        let Some((&tag, rest)) = buf.split_first() else {
+            return Err(ProtoError::Empty);
+        };
+        let mut c = Cursor {
+            buf: rest,
+            pos: 0,
+            tag,
+        };
+        let msg = match tag {
+            TAG_HELLO => NetMsg::Hello {
+                magic: c.u32()?,
+                version: c.u16()?,
+            },
+            TAG_WELCOME => {
+                let first_id = c.u32()?;
+                let count = c.u32()?;
+                let peer_index = c.u32()?;
+                let peers = c.u32()?;
+                let text = c.bytes()?;
+                NetMsg::Welcome {
+                    first_id,
+                    count,
+                    peer_index,
+                    peers,
+                    config_text: String::from_utf8(text).map_err(|_| ProtoError::BadUtf8)?,
+                }
+            }
+            TAG_ASSIGN => NetMsg::Assign {
+                round: c.u32()?,
+                ids: c.u32_vec()?,
+                params: c.f32_vec()?,
+            },
+            TAG_UPLOAD => {
+                let round = c.u32()?;
+                let client_id = c.u32()?;
+                let loss = c.f32()?;
+                let payload_bits = c.u64()?;
+                let frame = c.bytes()?;
+                NetMsg::Upload {
+                    round,
+                    client_id,
+                    loss,
+                    payload_bits,
+                    frame,
+                }
+            }
+            TAG_RESEND => NetMsg::Resend {
+                round: c.u32()?,
+                client_id: c.u32()?,
+            },
+            TAG_ROUND_END => {
+                let round = c.u32()?;
+                let committed = c.u8()? != 0;
+                let rebank_ids = c.u32_vec()?;
+                NetMsg::RoundEnd {
+                    round,
+                    committed,
+                    rebank_ids,
+                }
+            }
+            TAG_FINISH => NetMsg::Finish,
+            TAG_BYE => NetMsg::Bye,
+            other => return Err(ProtoError::UnknownTag(other)),
+        };
+        c.finish()?;
+        Ok(msg)
+    }
+
+    /// Validate a `Hello` against our magic/version.
+    pub fn check_hello(&self) -> anyhow::Result<()> {
+        match self {
+            NetMsg::Hello { magic, version } => {
+                anyhow::ensure!(
+                    *magic == NET_MAGIC,
+                    "bad handshake magic {magic:#x} (expected {NET_MAGIC:#x}) — not a fedstc peer?"
+                );
+                anyhow::ensure!(
+                    *version == NET_VERSION,
+                    "peer speaks net protocol v{version}, this build speaks v{NET_VERSION}"
+                );
+                Ok(())
+            }
+            other => anyhow::bail!("expected Hello, got {other:?}"),
+        }
+    }
+}

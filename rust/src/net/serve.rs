@@ -1,0 +1,315 @@
+//! Coordinator round driver for the socket transport.
+//!
+//! [`run_coordinator`] replays the *exact* control flow of the serial
+//! `Session::run_round` arm — same §V-B sync billing, same ledger calls in
+//! the same order, same fault-RNG draw sequence through the
+//! loss/corruption/retransmit gauntlet, same quorum and flaky-server
+//! gates — with training relocated behind a [`RoundTransport`]. That is
+//! the twin-equivalence contract: on a healthy network, a recorded
+//! `repro serve` transcript is **byte-identical** to a same-config
+//! `repro train --record` transcript (pinned by `property_net.rs` and the
+//! CI `net-smoke` job via `repro replay --against`).
+//!
+//! Real-world events the simulation cannot express are kept out of the
+//! deterministic state: an unplanned peer disconnect is handled as §V-B
+//! dropout (the update is simply absent; the client re-banks it locally)
+//! and counted in [`NetRunStats`], never in the transcript's fault frames
+//! — those are reserved for the *injected* plan so replays stay exact.
+
+use std::net::TcpListener;
+use std::time::Duration;
+
+use crate::compression::Message;
+use crate::config::FedConfig;
+use crate::fault::FaultPlan;
+use crate::metrics::{EvalPoint, TrainingLog};
+use crate::models::{native::NativeLogreg, Trainer};
+use crate::net::transport::{
+    RetryPolicy, RoundTransport, TcpCoordinator, TransportStats,
+};
+use crate::session::{Execution, FaultRecord, Observer, RoundReport, Session};
+use crate::sim::{CurveBuilder, Experiment};
+
+/// Driver-level counters for events outside the deterministic twin.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NetRunStats {
+    /// uploads that never arrived (peer disconnect / retry exhaustion)
+    pub dropped_uploads: usize,
+    /// rounds skipped entirely because no upload arrived (faults off)
+    pub skipped_rounds: usize,
+    /// uploads dropped by the *injected* fault gauntlet (these are part
+    /// of the deterministic twin, mirrored in the transcript)
+    pub injected_drops: usize,
+}
+
+/// Everything a finished `repro serve` run reports.
+pub struct ServeReport {
+    pub log: TrainingLog,
+    pub stats: NetRunStats,
+    pub transport: TransportStats,
+}
+
+/// Accept peers on `listener`, then run the full coordinator loop.
+#[allow(clippy::too_many_arguments)]
+pub fn serve(
+    cfg: FedConfig,
+    listener: &TcpListener,
+    peers: usize,
+    observers: Vec<Box<dyn Observer>>,
+    faults: Option<FaultPlan>,
+    timeout: Duration,
+    quiet: bool,
+) -> anyhow::Result<ServeReport> {
+    let exp = Experiment::new(cfg)?;
+    let retry = RetryPolicy::from_plan(faults.as_ref().filter(|p| p.is_active()));
+    let mut transport = TcpCoordinator::accept_peers(
+        listener,
+        peers,
+        exp.cfg.num_clients,
+        &exp.cfg.to_kv(),
+        timeout,
+        retry,
+        quiet,
+    )?;
+    let (log, stats) = run_coordinator(&exp, &mut transport, observers, faults)?;
+    Ok(ServeReport { log, stats, transport: transport.stats() })
+}
+
+/// The transport-agnostic coordinator loop. Mirrors
+/// `Experiment::run_observed_faulted` (same `CurveBuilder` cadence, same
+/// eval points, same settle/finish order) with [`net_round`] in place of
+/// `Session::run_round`.
+pub fn run_coordinator(
+    exp: &Experiment,
+    transport: &mut dyn RoundTransport,
+    observers: Vec<Box<dyn Observer>>,
+    faults: Option<FaultPlan>,
+) -> anyhow::Result<(TrainingLog, NetRunStats)> {
+    anyhow::ensure!(
+        exp.cfg.model == "logreg",
+        "net transport currently drives the native logreg backend only"
+    );
+    let init = exp.spec.init_flat(exp.cfg.seed);
+    let mut session = Session::new(exp.cfg.clone(), &exp.train, init, Execution::Serial)?;
+    if let Some(plan) = faults {
+        session.set_fault_plan(plan)?;
+    }
+    for o in observers {
+        session.add_observer(o);
+    }
+    // the coordinator evaluates with its own trainer, like the simulated
+    // driver does
+    let mut eval_trainer = NativeLogreg::new(exp.cfg.batch_size);
+    let mut curve = CurveBuilder::new(&exp.cfg.describe(), &exp.cfg);
+    let total_rounds = exp.cfg.rounds();
+    let mut stats = NetRunStats::default();
+
+    for round in 1..=total_rounds {
+        let report = net_round(&mut session, transport, round as u32, &mut stats)?;
+        if curve.due(round, total_rounds) {
+            let m = eval_trainer.eval(&session.server.params, &exp.test);
+            let p = EvalPoint {
+                iteration: session.iterations_done(),
+                round,
+                accuracy: m.accuracy,
+                loss: m.loss,
+                train_loss: report.mean_loss as f64,
+                up_bits: session.ledger.up_bits_per_client(),
+                down_bits: session.ledger.down_bits_per_client(),
+            };
+            session.notify_eval(&p)?;
+            curve.push(p);
+        }
+    }
+    session.settle_final_downloads();
+    session.finish()?;
+    transport.finish()?;
+    Ok((curve.finalize(&session.ledger), stats))
+}
+
+/// One communication round over the transport. Byte-for-byte the serial
+/// `Session::run_round` contract; see the module docs for the mapping.
+/// `wire_round` is a monotone driver counter (the server's own round
+/// counter does not advance on aborts, so it cannot tag wire frames).
+fn net_round(
+    session: &mut Session,
+    transport: &mut dyn RoundTransport,
+    wire_round: u32,
+    stats: &mut NetRunStats,
+) -> anyhow::Result<RoundReport> {
+    let ids = session.draw_participants()?;
+
+    // 1. §V-B straggler sync: bill each participant's catch-up download
+    for &id in &ids {
+        let down_bits = session.server.straggler_download_bits(session.clients[id].last_sync_round);
+        if down_bits > 0 {
+            session.ledger.record_download(down_bits);
+        }
+        session.clients[id].last_sync_round = session.server.round;
+        session.notify_sync(id, down_bits as u64)?;
+    }
+
+    // 2. ship the round to the owning peers, then collect uploads in
+    //    global participant order (the order the fault RNG consumes)
+    transport.begin_round(wire_round, &ids, &session.server.params)?;
+
+    let faults_on = session.fault.as_ref().is_some_and(|p| p.is_active());
+    let mut fault_rec = FaultRecord::default();
+    let mut loss_sum = 0.0f64;
+    let mut msgs: Vec<Message> = Vec::new();
+    let mut valid_ids: Vec<usize> = Vec::new();
+    let mut rebank: Vec<usize> = Vec::new();
+    for &id in &ids {
+        let Some(up) = transport.recv_upload(wire_round, id)? else {
+            // unplanned §V-B dropout: the peer is gone or out of retries.
+            // Nothing was billed and no fault frame is written — the
+            // transcript records only deterministic state.
+            stats.dropped_uploads += 1;
+            continue;
+        };
+        loss_sum += up.loss as f64;
+        session.ledger.record_upload(up.payload_bits as usize);
+        if faults_on {
+            match gauntlet(session, &up.frame, up.payload_bits, &mut fault_rec) {
+                Some(decoded) => {
+                    session.notify_upload(id, &decoded, up.payload_bits)?;
+                    valid_ids.push(id);
+                    msgs.push(decoded);
+                }
+                None => {
+                    // every injected attempt failed: §V-B dropout — the
+                    // peer re-banks the update at RoundEnd
+                    fault_rec.extra_up_msgs += 1;
+                    fault_rec.extra_up_bits += up.payload_bits;
+                    rebank.push(id);
+                    stats.injected_drops += 1;
+                }
+            }
+        } else {
+            let decoded = Message::decode_frame(&up.frame).map_err(|e| {
+                anyhow::anyhow!("client {id} sent an undecodable frame: {e:?}")
+            })?;
+            session.notify_upload(id, &decoded, up.payload_bits)?;
+            valid_ids.push(id);
+            msgs.push(decoded);
+        }
+    }
+    let mean_loss = (loss_sum / ids.len() as f64) as f32;
+
+    // quorum gate, part one (matches run_round)
+    if faults_on {
+        let plan = session.fault.clone().expect("faults_on implies a plan");
+        let needed = plan.quorum_needed(ids.len()).max(1);
+        if valid_ids.len() < needed {
+            return net_abort(
+                session, transport, wire_round, fault_rec, &ids, needed, mean_loss, msgs,
+                valid_ids, rebank,
+            );
+        }
+    } else if msgs.is_empty() {
+        // every participant disconnected and no fault plan is armed:
+        // nothing to aggregate, nothing deterministic happened — skip the
+        // commit entirely (the transcript gets no round frame)
+        stats.skipped_rounds += 1;
+        transport.end_round(wire_round, false, &rebank)?;
+        return Ok(RoundReport { round: session.server.round, mean_loss, down_bits: 0 });
+    }
+
+    // no shard folding under Execution::Serial; quorum gate part two —
+    // the flaky-server draw (leg 3 of the fault draw order)
+    if faults_on {
+        let flaky = session.fault.as_ref().expect("faults_on").flaky_server;
+        if session.fault_rng.f64() < flaky {
+            let needed = ids.len() + 1;
+            return net_abort(
+                session, transport, wire_round, fault_rec, &ids, needed, mean_loss, msgs,
+                valid_ids, rebank,
+            );
+        }
+    }
+
+    // persist fault activity before the broadcast, as run_round does
+    if fault_rec.has_activity() {
+        let needed = {
+            let plan = session.fault.as_ref().expect("activity implies a plan");
+            plan.quorum_needed(ids.len()).max(1)
+        };
+        fault_rec.valid = valid_ids.len() as u32;
+        fault_rec.drawn = ids.len() as u32;
+        fault_rec.needed = needed as u32;
+        session.notify_fault(fault_rec)?;
+    }
+
+    let down_bits = session.commit_round(&msgs, mean_loss)?;
+    transport.end_round(wire_round, true, &rebank)?;
+    Ok(RoundReport { round: session.server.round, mean_loss, down_bits })
+}
+
+/// The serial `deliver_faulted` gauntlet replayed over a received frame.
+/// Identical RNG draw order: per attempt, loss draw, then corruption draw
+/// with one bit flip, then the checksummed decode. The retransmitted
+/// bytes are the peer's cached frame — the same bytes
+/// `Message::to_checksummed_bytes` would rebuild, so draw parity with the
+/// twin holds.
+fn gauntlet(
+    session: &mut Session,
+    frame: &[u8],
+    payload_bits: u64,
+    rec: &mut FaultRecord,
+) -> Option<Message> {
+    let plan = session.fault.clone().expect("gauntlet requires an armed plan");
+    for attempt in 1..=plan.max_attempts {
+        if attempt > 1 {
+            session.ledger.record_upload(payload_bits as usize);
+            rec.retransmits += 1;
+            rec.retransmit_bits += payload_bits;
+            rec.extra_up_msgs += 1;
+            rec.extra_up_bits += payload_bits;
+        }
+        if session.fault_rng.f64() < plan.loss {
+            rec.lost_transfers += 1;
+            continue;
+        }
+        let mut attempt_frame = frame.to_vec();
+        if session.fault_rng.f64() < plan.corrupt && !attempt_frame.is_empty() {
+            let bit = session.fault_rng.below(attempt_frame.len() * 8);
+            attempt_frame[bit / 8] ^= 1 << (bit % 8);
+        }
+        match Message::decode_frame(&attempt_frame) {
+            Ok(decoded) => return Some(decoded),
+            Err(_) => rec.corrupt_frames += 1,
+        }
+    }
+    None
+}
+
+/// The serial `abort_round` contract over the transport: discarded
+/// uploads become unaccounted extras, the round never commits, and every
+/// delivered-or-dropped participant re-banks client-side.
+#[allow(clippy::too_many_arguments)]
+fn net_abort(
+    session: &mut Session,
+    transport: &mut dyn RoundTransport,
+    wire_round: u32,
+    mut rec: FaultRecord,
+    drawn_ids: &[usize],
+    needed: usize,
+    mean_loss: f32,
+    msgs: Vec<Message>,
+    valid_ids: Vec<usize>,
+    mut rebank: Vec<usize>,
+) -> anyhow::Result<RoundReport> {
+    for (msg, &id) in msgs.iter().zip(&valid_ids) {
+        rec.extra_up_msgs += 1;
+        rec.extra_up_bits += msg.wire_bits() as u64;
+        rebank.push(id);
+    }
+    rec.aborted = true;
+    rec.valid = valid_ids.len() as u32;
+    rec.drawn = drawn_ids.len() as u32;
+    rec.needed = needed as u32;
+    rec.participants = drawn_ids.iter().map(|&id| id as u32).collect();
+    session.notify_fault(rec)?;
+    transport.end_round(wire_round, false, &rebank)?;
+    Ok(RoundReport { round: session.server.round, mean_loss, down_bits: 0 })
+}

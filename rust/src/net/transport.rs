@@ -1,0 +1,414 @@
+//! The `Transport`-level seam between the real socket runtime and its
+//! deterministic simulated twin.
+//!
+//! The coordinator round driver ([`crate::net::serve`]) is written against
+//! [`RoundTransport`] only. Two implementations exist:
+//!
+//! * [`TcpCoordinator`] — real TCP peers (`repro join` processes), with
+//!   read timeouts mapped onto the fault plan's retransmit-with-backoff
+//!   schedule and peer disconnects surfaced as §V-B dropout.
+//! * [`LocalTransport`] — the same [`ClientRuntime`]s driven in-process
+//!   with no sockets: the deterministic twin. A driver run over either
+//!   implementation must produce byte-identical transcripts (pinned by
+//!   `property_net.rs`).
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use crate::fault::FaultPlan;
+use crate::net::client::ClientRuntime;
+use crate::net::frame::{write_frame, FrameReader, ReadOutcome};
+use crate::net::protocol::NetMsg;
+
+/// One upload as received from a peer (not yet through the fault gauntlet).
+#[derive(Debug, Clone)]
+pub struct NetUpload {
+    pub loss: f32,
+    pub payload_bits: u64,
+    /// checksummed message frame (`Message::to_checksummed_bytes`)
+    pub frame: Vec<u8>,
+}
+
+/// Wire-level counters a transport accumulates; folded into the net run
+/// summary (they never touch the ledger, which must mirror the twin).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TransportStats {
+    /// peers that vanished (EOF / broken pipe) during the run
+    pub disconnects: usize,
+    /// real retransmit requests issued after read timeouts
+    pub wire_resends: usize,
+    /// read timeouts observed (each consumes one retransmit attempt)
+    pub timeouts: usize,
+}
+
+/// What the coordinator round driver needs from a transport.
+pub trait RoundTransport {
+    /// Announce a round: ship the global parameters and each peer's
+    /// participant ids (global participant order, filtered per peer).
+    fn begin_round(&mut self, round: u32, ids: &[usize], params: &[f32]) -> anyhow::Result<()>;
+
+    /// Fetch one participant's upload. `None` means the client dropped
+    /// out for real (disconnect / retry budget exhausted) — §V-B dropout.
+    fn recv_upload(&mut self, round: u32, id: usize) -> anyhow::Result<Option<NetUpload>>;
+
+    /// End a round: verdict + residual re-bank list (broadcast to peers).
+    fn end_round(&mut self, round: u32, committed: bool, rebank: &[usize]) -> anyhow::Result<()>;
+
+    /// Session over: tell peers to shut down.
+    fn finish(&mut self) -> anyhow::Result<()>;
+
+    fn stats(&self) -> TransportStats;
+}
+
+/// How many receive attempts a timeout-bound wait is allowed, and the
+/// backoff between them. Mirrors the fault plan's retransmit leg when one
+/// is armed; otherwise a fixed default schedule.
+#[derive(Debug, Clone, Copy)]
+pub struct RetryPolicy {
+    pub max_attempts: u32,
+    pub backoff_s: f64,
+}
+
+impl RetryPolicy {
+    pub fn from_plan(plan: Option<&FaultPlan>) -> Self {
+        match plan {
+            Some(p) => RetryPolicy { max_attempts: p.max_attempts.max(1), backoff_s: p.backoff_s },
+            None => RetryPolicy { max_attempts: 3, backoff_s: 0.05 },
+        }
+    }
+
+    /// Exponential backoff before retry `attempt` (1-based), matching
+    /// `FaultPlan::backoff_delay_s` shape: base · 2^(attempt-1).
+    fn delay(&self, attempt: u32) -> Duration {
+        Duration::from_secs_f64(self.backoff_s * f64::from(1u32 << (attempt - 1).min(16)))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// real TCP transport
+// ---------------------------------------------------------------------------
+
+struct Peer {
+    index: usize,
+    first_id: usize,
+    count: usize,
+    writer: TcpStream,
+    reader: FrameReader<TcpStream>,
+    alive: bool,
+    /// uploads that arrived ahead of their request (same socket, earlier
+    /// trained ids) — keyed by (round, client id)
+    pending: Vec<(u32, u32, NetUpload)>,
+}
+
+impl Peer {
+    fn owns(&self, id: usize) -> bool {
+        (self.first_id..self.first_id + self.count).contains(&id)
+    }
+}
+
+/// Coordinator side of the real socket transport.
+pub struct TcpCoordinator {
+    peers: Vec<Peer>,
+    retry: RetryPolicy,
+    stats: TransportStats,
+}
+
+/// Evenly partition `num_clients` ids over `peers` processes: peer `j`
+/// gets a contiguous range, the first `num_clients % peers` peers get one
+/// extra.
+pub fn partition(num_clients: usize, peers: usize) -> Vec<(usize, usize)> {
+    let base = num_clients / peers;
+    let rem = num_clients % peers;
+    (0..peers)
+        .map(|j| {
+            let count = base + usize::from(j < rem);
+            let first = j * base + j.min(rem);
+            (first, count)
+        })
+        .collect()
+}
+
+impl TcpCoordinator {
+    /// Accept `peers` connections, run the hello/welcome handshake on
+    /// each, and hand every peer its contiguous client-id range.
+    ///
+    /// `timeout` bounds each blocking read on an accepted socket (and
+    /// later every upload wait); `config_text` is the canonical
+    /// `FedConfig::to_kv` serialization the peers rebuild their world
+    /// from.
+    pub fn accept_peers(
+        listener: &TcpListener,
+        peers: usize,
+        num_clients: usize,
+        config_text: &str,
+        timeout: Duration,
+        retry: RetryPolicy,
+        quiet: bool,
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(peers >= 1, "need at least one peer");
+        let ranges = partition(num_clients, peers);
+        let mut accepted = Vec::with_capacity(peers);
+        for (index, &(first_id, count)) in ranges.iter().enumerate() {
+            let (stream, addr) = listener.accept()?;
+            stream.set_nodelay(true).ok();
+            stream.set_read_timeout(Some(timeout))?;
+            let mut writer = stream.try_clone()?;
+            let mut reader = FrameReader::new(stream);
+            // handshake: Hello in, Welcome out
+            match reader.read_frame()? {
+                ReadOutcome::Frame(f) => NetMsg::decode(&f)
+                    .map_err(|e| anyhow::anyhow!("bad handshake frame from {addr}: {e}"))?
+                    .check_hello()?,
+                other => anyhow::bail!("peer {addr} hung up during handshake ({other:?})"),
+            }
+            let welcome = NetMsg::Welcome {
+                first_id: first_id as u32,
+                count: count as u32,
+                peer_index: index as u32,
+                peers: peers as u32,
+                config_text: config_text.to_string(),
+            };
+            write_frame(&mut writer, &welcome.encode())?;
+            if !quiet {
+                eprintln!(
+                    "[serve] peer {}/{} joined from {addr}: clients {first_id}..{}",
+                    index + 1,
+                    peers,
+                    first_id + count
+                );
+            }
+            accepted.push(Peer {
+                index,
+                first_id,
+                count,
+                writer,
+                reader,
+                alive: true,
+                pending: Vec::new(),
+            });
+        }
+        Ok(TcpCoordinator { peers: accepted, retry, stats: TransportStats::default() })
+    }
+
+    fn peer_for(&mut self, id: usize) -> anyhow::Result<&mut Peer> {
+        self.peers
+            .iter_mut()
+            .find(|p| p.owns(id))
+            .ok_or_else(|| anyhow::anyhow!("no peer owns client id {id}"))
+    }
+
+    fn broadcast(&mut self, msg: &NetMsg) -> anyhow::Result<()> {
+        let bytes = msg.encode();
+        for p in self.peers.iter_mut().filter(|p| p.alive) {
+            if write_frame(&mut p.writer, &bytes).is_err() {
+                p.alive = false;
+                self.stats.disconnects += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// Pull frames from one peer's socket until an `Upload` for
+    /// `(round, id)` shows up, buffering other uploads from the same
+    /// socket. Returns `None` on timeout (caller decides about resends)
+    /// or on disconnect (peer marked dead).
+    fn read_upload(
+        peer: &mut Peer,
+        stats: &mut TransportStats,
+        round: u32,
+        id: u32,
+    ) -> anyhow::Result<Option<NetUpload>> {
+        if let Some(pos) = peer.pending.iter().position(|(r, c, _)| *r == round && *c == id) {
+            return Ok(Some(peer.pending.remove(pos).2));
+        }
+        loop {
+            match peer.reader.read_frame()? {
+                ReadOutcome::Frame(f) => {
+                    let msg = NetMsg::decode(&f)
+                        .map_err(|e| anyhow::anyhow!("bad frame from peer {}: {e}", peer.index))?;
+                    match msg {
+                        NetMsg::Upload { round: r, client_id, loss, payload_bits, frame } => {
+                            let up = NetUpload { loss, payload_bits, frame };
+                            if r == round && client_id == id {
+                                return Ok(Some(up));
+                            }
+                            // keep uploads for this round that we asked
+                            // for later; drop stale rounds
+                            if r == round {
+                                peer.pending.push((r, client_id, up));
+                            }
+                        }
+                        NetMsg::Bye => {
+                            peer.alive = false;
+                            stats.disconnects += 1;
+                            return Ok(None);
+                        }
+                        other => {
+                            anyhow::bail!("unexpected frame from peer {}: {other:?}", peer.index)
+                        }
+                    }
+                }
+                ReadOutcome::Closed | ReadOutcome::ClosedMidFrame => {
+                    peer.alive = false;
+                    stats.disconnects += 1;
+                    return Ok(None);
+                }
+                ReadOutcome::TimedOut => {
+                    stats.timeouts += 1;
+                    return Ok(None);
+                }
+            }
+        }
+    }
+}
+
+impl RoundTransport for TcpCoordinator {
+    fn begin_round(&mut self, round: u32, ids: &[usize], params: &[f32]) -> anyhow::Result<()> {
+        for p in &mut self.peers {
+            if !p.alive {
+                continue;
+            }
+            // duplicate uploads from resolved resends can linger; they are
+            // dead once their round is over
+            p.pending.retain(|(r, _, _)| *r >= round);
+            let mine: Vec<u32> =
+                ids.iter().filter(|&&id| p.owns(id)).map(|&id| id as u32).collect();
+            let assign = NetMsg::Assign { round, ids: mine, params: params.to_vec() };
+            if write_frame(&mut p.writer, &assign.encode()).is_err() {
+                p.alive = false;
+                self.stats.disconnects += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn recv_upload(&mut self, round: u32, id: usize) -> anyhow::Result<Option<NetUpload>> {
+        let retry = self.retry;
+        let mut stats = std::mem::take(&mut self.stats);
+        let result = (|| {
+            let peer = self.peer_for(id)?;
+            if !peer.alive {
+                return Ok(None);
+            }
+            // attempt 1 is the original upload; each timeout maps onto one
+            // retransmit attempt with the plan's backoff before the resend
+            for attempt in 1..=retry.max_attempts {
+                if attempt > 1 {
+                    std::thread::sleep(retry.delay(attempt - 1));
+                    let resend = NetMsg::Resend { round, client_id: id as u32 };
+                    if write_frame(&mut peer.writer, &resend.encode()).is_err() {
+                        peer.alive = false;
+                        stats.disconnects += 1;
+                        return Ok(None);
+                    }
+                    stats.wire_resends += 1;
+                }
+                match Self::read_upload(peer, &mut stats, round, id as u32)? {
+                    Some(up) => return Ok(Some(up)),
+                    None if !peer.alive => return Ok(None),
+                    None => continue, // timeout: next attempt resends
+                }
+            }
+            Ok(None)
+        })();
+        self.stats = stats;
+        result
+    }
+
+    fn end_round(&mut self, round: u32, committed: bool, rebank: &[usize]) -> anyhow::Result<()> {
+        let rebank_ids: Vec<u32> = rebank.iter().map(|&id| id as u32).collect();
+        self.broadcast(&NetMsg::RoundEnd { round, committed, rebank_ids })
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        self.broadcast(&NetMsg::Finish)?;
+        // drain the goodbye so the peers' sends cannot fail with a reset
+        for p in self.peers.iter_mut().filter(|p| p.alive) {
+            loop {
+                match p.reader.read_frame() {
+                    Ok(ReadOutcome::Frame(f)) => {
+                        if NetMsg::decode(&f) == Ok(NetMsg::Bye) {
+                            break;
+                        }
+                    }
+                    _ => break,
+                }
+            }
+            p.writer.flush().ok();
+        }
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+// ---------------------------------------------------------------------------
+// deterministic in-process twin
+// ---------------------------------------------------------------------------
+
+/// The simulated twin at the transport seam: the same [`ClientRuntime`]s
+/// the `repro join` processes run, driven in-process with no sockets and
+/// no clock. Byte-for-byte equivalent to [`TcpCoordinator`] on a healthy
+/// network.
+pub struct LocalTransport {
+    runtimes: Vec<ClientRuntime>,
+    inbox: Vec<(u32, u32, NetUpload)>,
+}
+
+impl LocalTransport {
+    /// Build `peers` runtimes over the same contiguous partition the TCP
+    /// coordinator hands out.
+    pub fn new(cfg: &crate::config::FedConfig, peers: usize) -> anyhow::Result<Self> {
+        anyhow::ensure!(peers >= 1, "need at least one peer");
+        let runtimes = partition(cfg.num_clients, peers)
+            .into_iter()
+            .map(|(first, count)| ClientRuntime::new(cfg.clone(), first, count))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(LocalTransport { runtimes, inbox: Vec::new() })
+    }
+}
+
+impl RoundTransport for LocalTransport {
+    fn begin_round(&mut self, round: u32, ids: &[usize], params: &[f32]) -> anyhow::Result<()> {
+        self.inbox.clear();
+        for rt in &mut self.runtimes {
+            let mine: Vec<u32> = ids
+                .iter()
+                .filter(|&&id| (rt.first_id()..rt.first_id() + rt.count()).contains(&id))
+                .map(|&id| id as u32)
+                .collect();
+            for up in rt.handle_assign(&mine, params)? {
+                self.inbox.push((
+                    round,
+                    up.id as u32,
+                    NetUpload { loss: up.loss, payload_bits: up.payload_bits, frame: up.frame },
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    fn recv_upload(&mut self, round: u32, id: usize) -> anyhow::Result<Option<NetUpload>> {
+        let pos = self.inbox.iter().position(|(r, c, _)| *r == round && *c == id as u32);
+        Ok(pos.map(|p| self.inbox.remove(p).2))
+    }
+
+    fn end_round(&mut self, _round: u32, _committed: bool, rebank: &[usize]) -> anyhow::Result<()> {
+        let ids: Vec<u32> = rebank.iter().map(|&id| id as u32).collect();
+        for rt in &mut self.runtimes {
+            rt.handle_round_end(&ids)?;
+        }
+        Ok(())
+    }
+
+    fn finish(&mut self) -> anyhow::Result<()> {
+        Ok(())
+    }
+
+    fn stats(&self) -> TransportStats {
+        TransportStats::default()
+    }
+}

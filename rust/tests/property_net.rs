@@ -1,0 +1,345 @@
+//! Net-layer properties: the socket transport's twin-equivalence
+//! contract and the panic-freedom of its decoders.
+//!
+//! 1. **Loopback twin equality** — a coordinator plus client tasks over
+//!    real 127.0.0.1 sockets records an FSTX transcript that (a) replays
+//!    exactly and (b) is byte-identical to the same-seed simulated run,
+//!    i.e. `repro replay --against` reports zero diverging frames. Both
+//!    the unfaulted and the faulted (loss/corrupt gauntlet) paths are
+//!    pinned, as is the in-process `LocalTransport` twin.
+//! 2. **Decoder fuzz** — the length-prefixed frame decoder and the
+//!    control-protocol decoder never panic on partial reads, oversized
+//!    length prefixes, truncations, mid-frame disconnects, or random
+//!    bytes.
+
+use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
+
+use fedstc::config::{FedConfig, Method};
+use fedstc::fault::FaultPlan;
+use fedstc::models::native::NativeLogreg;
+use fedstc::net::frame::{encode_frame, FrameDecoder, FrameError, FrameReader, ReadOutcome};
+use fedstc::net::protocol::NetMsg;
+use fedstc::net::{run_coordinator, run_join, serve, LocalTransport, RoundTransport};
+use fedstc::session::{diff_bytes, replay, Execution, Observer, Transcript, TranscriptWriter};
+use fedstc::sim::Experiment;
+use fedstc::util::rng::Pcg64;
+
+fn fed_cfg(method: Method, rounds: usize) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 8,
+        participation: 0.5,
+        classes_per_client: 5,
+        batch_size: 10,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: rounds * method.local_iters(),
+        method,
+        eval_every: 1_000_000,
+        seed: 29,
+        train_examples: 600,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+fn temp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir()
+        .join(format!("fedstc_prop_net_{}_{}.fstx", std::process::id(), tag))
+}
+
+fn recorder(path: &std::path::Path, fault_capable: bool) -> Vec<Box<dyn Observer>> {
+    vec![Box::new(
+        TranscriptWriter::create_with_faults(path, true, fault_capable).unwrap(),
+    )]
+}
+
+/// The simulated twin: `Experiment::run_observed_faulted` under serial
+/// execution, recording a transcript — exactly `repro train --record`.
+fn simulated_recording(cfg: &FedConfig, faults: Option<FaultPlan>) -> Vec<u8> {
+    let path = temp("sim");
+    let exp = Experiment::new(cfg.clone()).unwrap();
+    let mut trainer = NativeLogreg::new(cfg.batch_size);
+    let fault_capable = faults.as_ref().is_some_and(|p| p.is_active());
+    exp.run_observed_faulted(
+        &mut trainer,
+        recorder(&path, fault_capable),
+        Execution::Serial,
+        faults,
+    )
+    .unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+/// The real thing: a TCP coordinator plus `peers` in-process client
+/// tasks over 127.0.0.1, recording a transcript — exactly `repro serve`
+/// with `repro join` processes (threads stand in for processes; the
+/// sockets, frames and control protocol are identical).
+fn tcp_recording(cfg: &FedConfig, peers: usize, faults: Option<FaultPlan>, tag: &str) -> Vec<u8> {
+    let path = temp(tag);
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let clients: Vec<_> = (0..peers)
+        .map(|_| {
+            std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).unwrap();
+                run_join(stream, true).unwrap();
+            })
+        })
+        .collect();
+    let fault_capable = faults.as_ref().is_some_and(|p| p.is_active());
+    let report = serve(
+        cfg.clone(),
+        &listener,
+        peers,
+        recorder(&path, fault_capable),
+        faults,
+        Duration::from_secs(30),
+        true,
+    )
+    .unwrap();
+    for c in clients {
+        c.join().unwrap();
+    }
+    assert_eq!(report.transport.disconnects, 0, "no peer may drop on loopback");
+    assert_eq!(report.stats.dropped_uploads, 0, "no real dropout on loopback");
+    let bytes = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    bytes
+}
+
+#[test]
+fn tcp_loopback_matches_simulated_twin_and_replays() {
+    let cfg = fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6);
+    let sim = simulated_recording(&cfg, None);
+    let net = tcp_recording(&cfg, 2, None, "net_stc");
+
+    // `repro replay --against` contract: zero diverging frames
+    assert!(
+        diff_bytes(&sim, &net).unwrap().is_none(),
+        "real-transport transcript diverges from the simulated twin"
+    );
+    // and the recorded real run replays bit-for-bit
+    let t = Transcript::from_bytes(&net).unwrap();
+    replay(&t).unwrap();
+}
+
+#[test]
+fn tcp_loopback_faulted_gauntlet_matches_twin() {
+    // high enough rates to exercise loss, corruption and retransmits in
+    // 6 rounds; identical RNG stream on both sides
+    let plan = FaultPlan { loss: 0.2, corrupt: 0.15, ..Default::default() };
+    assert!(plan.is_active());
+    let cfg = fed_cfg(Method::Stc { p_up: 0.02, p_down: 0.02 }, 6);
+    let sim = simulated_recording(&cfg, Some(plan.clone()));
+    let net = tcp_recording(&cfg, 3, Some(plan), "net_faulted");
+    assert!(
+        diff_bytes(&sim, &net).unwrap().is_none(),
+        "faulted real-transport transcript diverges from the simulated twin"
+    );
+    let t = Transcript::from_bytes(&net).unwrap();
+    replay(&t).unwrap();
+}
+
+#[test]
+fn local_transport_twin_is_byte_identical_too() {
+    // the seam's other side: the same driver over the in-process twin
+    let cfg = fed_cfg(Method::TopK { p: 0.01 }, 5);
+    let sim = simulated_recording(&cfg, None);
+
+    let path = temp("local");
+    let exp = Experiment::new(cfg.clone()).unwrap();
+    let mut transport = LocalTransport::new(&cfg, 3).unwrap();
+    run_coordinator(&exp, &mut transport, recorder(&path, false), None).unwrap();
+    let local = std::fs::read(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+
+    assert_eq!(sim, local, "LocalTransport transcript diverges from run_round");
+}
+
+#[test]
+fn uneven_partition_and_baseline_method_still_match() {
+    // 8 clients over 3 peers → ranges 3/3/2; dense baseline (no residual)
+    let cfg = fed_cfg(Method::Baseline, 4);
+    let sim = simulated_recording(&cfg, None);
+    let net = tcp_recording(&cfg, 3, None, "net_baseline");
+    assert!(diff_bytes(&sim, &net).unwrap().is_none());
+}
+
+// ---------------------------------------------------------------------------
+// decoder fuzz: never panic
+// ---------------------------------------------------------------------------
+
+fn specimen_msgs() -> Vec<NetMsg> {
+    vec![
+        NetMsg::hello(),
+        NetMsg::Welcome {
+            first_id: 3,
+            count: 4,
+            peer_index: 1,
+            peers: 2,
+            config_text: "seed = 7\nmethod = stc:0.01:0.01\n".into(),
+        },
+        NetMsg::Assign { round: 9, ids: vec![3, 5], params: vec![0.5, -1.25, f32::MIN_POSITIVE] },
+        NetMsg::Upload {
+            round: 9,
+            client_id: 5,
+            loss: 1.5,
+            payload_bits: 4096,
+            frame: vec![0xC5, 1, 2, 3],
+        },
+        NetMsg::Resend { round: 9, client_id: 3 },
+        NetMsg::RoundEnd { round: 9, committed: false, rebank_ids: vec![5] },
+        NetMsg::Finish,
+        NetMsg::Bye,
+    ]
+}
+
+#[test]
+fn control_frames_roundtrip() {
+    for msg in specimen_msgs() {
+        let enc = msg.encode();
+        assert_eq!(NetMsg::decode(&enc).unwrap(), msg, "roundtrip failed for {msg:?}");
+    }
+}
+
+#[test]
+fn control_decoder_never_panics_on_truncation_or_trailing_bytes() {
+    for msg in specimen_msgs() {
+        let enc = msg.encode();
+        // every strict prefix must error, never panic
+        for cut in 0..enc.len() {
+            let _ = NetMsg::decode(&enc[..cut]);
+        }
+        // trailing garbage must be rejected
+        let mut padded = enc.clone();
+        padded.push(0xAA);
+        assert!(NetMsg::decode(&padded).is_err(), "trailing byte accepted for {msg:?}");
+    }
+}
+
+#[test]
+fn control_decoder_never_panics_on_random_bytes() {
+    let mut rng = Pcg64::new(1234, 77);
+    for _ in 0..5000 {
+        let len = rng.below(64);
+        let buf: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        let _ = NetMsg::decode(&buf); // must not panic
+    }
+}
+
+#[test]
+fn frame_decoder_handles_partial_reads() {
+    let payloads: Vec<Vec<u8>> =
+        vec![vec![], vec![1], vec![2; 300], (0..255).collect::<Vec<u8>>()];
+    let mut wire = Vec::new();
+    for p in &payloads {
+        wire.extend_from_slice(&encode_frame(p));
+    }
+    // feed one byte at a time: every frame must still come out intact
+    for chunk in [1usize, 3, 7] {
+        let mut dec = FrameDecoder::new();
+        let mut got = Vec::new();
+        for piece in wire.chunks(chunk) {
+            dec.push(piece);
+            while let Some(frame) = dec.next_frame().unwrap() {
+                got.push(frame);
+            }
+        }
+        assert_eq!(got, payloads, "chunk size {chunk}");
+        assert!(!dec.has_partial());
+    }
+}
+
+#[test]
+fn frame_decoder_rejects_oversized_prefix_without_allocating() {
+    let mut dec = FrameDecoder::new();
+    dec.push(&u32::MAX.to_le_bytes());
+    dec.push(&[1, 2, 3]);
+    match dec.next_frame() {
+        Err(FrameError::Oversized { announced }) => {
+            assert_eq!(announced, u64::from(u32::MAX));
+        }
+        other => panic!("expected Oversized, got {other:?}"),
+    }
+    // the decoder stays poisoned: the stream is unrecoverable
+    assert!(dec.next_frame().is_err());
+    dec.push(&[0; 64]);
+    assert!(dec.next_frame().is_err());
+}
+
+#[test]
+fn frame_decoder_never_panics_on_random_bytes() {
+    let mut rng = Pcg64::new(99, 5);
+    for _ in 0..500 {
+        let mut dec = FrameDecoder::new();
+        let len = rng.below(512);
+        let bytes: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        for piece in bytes.chunks(1 + rng.below(9)) {
+            dec.push(piece);
+            // drain until error or hungry; must not panic
+            loop {
+                match dec.next_frame() {
+                    Ok(Some(_)) => continue,
+                    Ok(None) | Err(_) => break,
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn frame_reader_classifies_mid_frame_disconnect() {
+    // a complete frame followed by a truncated one, then EOF
+    let mut wire = encode_frame(b"hello");
+    let second = encode_frame(&[7; 40]);
+    wire.extend_from_slice(&second[..second.len() / 2]);
+    let mut reader = FrameReader::new(std::io::Cursor::new(wire));
+    match reader.read_frame().unwrap() {
+        ReadOutcome::Frame(f) => assert_eq!(f, b"hello"),
+        other => panic!("expected frame, got {other:?}"),
+    }
+    match reader.read_frame().unwrap() {
+        ReadOutcome::ClosedMidFrame => {}
+        other => panic!("expected ClosedMidFrame, got {other:?}"),
+    }
+}
+
+#[test]
+fn frame_reader_clean_eof_is_closed() {
+    let wire = encode_frame(b"x");
+    let mut reader = FrameReader::new(std::io::Cursor::new(wire));
+    assert!(matches!(reader.read_frame().unwrap(), ReadOutcome::Frame(_)));
+    assert!(matches!(reader.read_frame().unwrap(), ReadOutcome::Closed));
+}
+
+#[test]
+fn partition_covers_all_clients_contiguously() {
+    for clients in [1usize, 2, 7, 8, 100] {
+        for peers in [1usize, 2, 3, 8, 11] {
+            let ranges = fedstc::net::partition(clients, peers);
+            assert_eq!(ranges.len(), peers);
+            let mut next = 0usize;
+            for &(first, count) in &ranges {
+                assert_eq!(first, next, "{clients} clients / {peers} peers");
+                next += count;
+            }
+            assert_eq!(next, clients, "{clients} clients / {peers} peers");
+        }
+    }
+}
+
+/// `RoundTransport` object safety + trait-object use compiles and runs.
+#[test]
+fn transport_trait_object_smoke() {
+    let cfg = fed_cfg(Method::Baseline, 1);
+    let mut local = LocalTransport::new(&cfg, 2).unwrap();
+    let t: &mut dyn RoundTransport = &mut local;
+    t.begin_round(1, &[], &vec![0.0; 4]).unwrap();
+    assert!(t.recv_upload(1, 0).unwrap().is_none());
+    t.end_round(1, false, &[]).unwrap();
+    t.finish().unwrap();
+}

@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Guard: every test/bench source file must be a declared Cargo target.
+
+Sources live under rust/ rather than the Cargo default layout, so Cargo's
+target autodiscovery is off and every integration test and bench needs an
+explicit [[test]] / [[bench]] entry in Cargo.toml. A file that is added
+without one silently never runs in CI — this script turns that silence
+into a hard failure.
+
+Exit codes: 0 all covered, 1 at least one orphan (or a declared path that
+does not exist, the inverse rot).
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+MANIFEST = REPO / "Cargo.toml"
+
+SECTION_RE = re.compile(r"^\[\[(test|bench)\]\]\s*$")
+KV_RE = re.compile(r'^(\w[\w-]*)\s*=\s*"([^"]*)"\s*$')
+
+
+def declared_paths(manifest_text: str) -> dict[str, str]:
+    """Map declared target path -> section kind ('test' or 'bench')."""
+    paths: dict[str, str] = {}
+    kind = None
+    for line in manifest_text.splitlines():
+        line = line.strip()
+        m = SECTION_RE.match(line)
+        if m:
+            kind = m.group(1)
+            continue
+        if line.startswith("["):  # any other section ends the target block
+            kind = None
+            continue
+        if kind:
+            kv = KV_RE.match(line)
+            if kv and kv.group(1) == "path":
+                paths[kv.group(2)] = kind
+    return paths
+
+
+def main() -> int:
+    declared = declared_paths(MANIFEST.read_text())
+    failures = []
+
+    for subdir, kind in (("rust/tests", "test"), ("rust/benches", "bench")):
+        for src in sorted((REPO / subdir).glob("*.rs")):
+            rel = src.relative_to(REPO).as_posix()
+            if rel not in declared:
+                failures.append(
+                    f"{rel}: no [[{kind}]] entry in Cargo.toml — this file never runs"
+                )
+            elif declared[rel] != kind:
+                failures.append(
+                    f"{rel}: declared as [[{declared[rel]}]] but lives in {subdir}/"
+                )
+
+    for rel, kind in sorted(declared.items()):
+        if not (REPO / rel).is_file():
+            failures.append(f"Cargo.toml declares [[{kind}]] path {rel}, which does not exist")
+
+    if failures:
+        print("test-target guard FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+
+    n_tests = sum(1 for k in declared.values() if k == "test")
+    n_benches = sum(1 for k in declared.values() if k == "bench")
+    print(f"test-target guard OK: {n_tests} tests, {n_benches} benches all declared")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,210 @@
+//! bench_async_rounds — what each commit policy does to a round's
+//! composition, sweeping policy × straggler rate on a contended link.
+//!
+//! The commit policy never moves the simulated round clock (the round
+//! still settles at the grace deadline); what it moves is *where each
+//! delivery lands*: fresh in the aggregate, re-banked as late, or
+//! carried into a later round's aggregate at a staleness weight. This
+//! bench sweeps that composition:
+//!
+//!   * `deadline`  — everything on time commits; stragglers re-bank.
+//!   * `quorum:k=2` — the round closes at the 2nd arrival; every later
+//!     on-time delivery is discarded like a late one (tail shedding).
+//!   * `buffered:k=2,max_staleness=2` — the same early close, but the
+//!     tail is carried and folds into the next round's aggregate.
+//!
+//! Acceptance shape (checked by the PASS/MISS lines):
+//!   * quorum sheds at least as many uploads as deadline at every
+//!     straggler rate (strictly more on a healthy cohort)
+//!   * buffered re-banks no more than quorum late does — the tail is
+//!     carried, not lost — and folds stragglers back in at every rate
+//!   * deadline's fresh-commit count matches quorum's + its extra lates
+//!     (the K-th-arrival rule relabels, it never invents uploads)
+//!
+//!     cargo bench --bench bench_async_rounds [-- --rounds N]
+//!
+//! Emits `BENCH_async_rounds.json` (see `benchkit::emit_json`).
+
+use fedstc::async_agg::CommitPolicy;
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::config::{FedConfig, Method};
+use fedstc::models::ModelSpec;
+use fedstc::sim::Experiment;
+use fedstc::util::benchkit::{banner, bench_args, emit_json, Table};
+use fedstc::util::json::Json;
+
+const CLIENTS: usize = 8;
+const STRAGGLER_FRACS: [f64; 3] = [0.0, 0.25, 0.5];
+
+fn cfg(rounds: usize) -> FedConfig {
+    let method = Method::Stc { p_up: 0.05, p_down: 0.05 };
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: CLIENTS,
+        participation: 1.0,
+        classes_per_client: 5,
+        batch_size: 10,
+        method,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: rounds,
+        eval_every: 1_000_000,
+        seed: 17,
+        train_examples: 40 * CLIENTS,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+/// Totals for one (policy, straggler rate) cell.
+struct Cell {
+    fresh: u64,
+    late: u64,
+    deferred: u64,
+    folded: u64,
+    early_commits: u64,
+    mean_round_secs: f64,
+}
+
+fn run_cell(commit: CommitPolicy, straggler_frac: f64, rounds: usize) -> anyhow::Result<Cell> {
+    let c = cfg(rounds);
+    let exp = Experiment::new(c.clone())?;
+    let mut ccfg = ClusterConfig::new(c.clone());
+    ccfg.workers = 2;
+    ccfg.straggler_frac = straggler_frac;
+    ccfg.server_up_bps = 1e6;
+    ccfg.server_down_bps = 1e6;
+    ccfg.commit = commit;
+    let spec = ModelSpec::by_name("logreg")?;
+    let mut run = ClusterRun::new(ccfg, &exp.train, spec.init_flat(c.seed))?;
+    let factory = NativeLogregFactory { batch_size: c.batch_size };
+    let (mut fresh, mut late, mut secs, mut n) = (0u64, 0u64, 0.0f64, 0usize);
+    while let Some(s) = run.next_round(&factory, &exp.train)? {
+        if s.aggregated > 0 {
+            fresh += s.aggregated as u64;
+            late += s.late as u64;
+            secs += s.round_secs;
+            n += 1;
+        }
+    }
+    anyhow::ensure!(n > 0, "no round ever aggregated");
+    Ok(Cell {
+        fresh,
+        late,
+        deferred: run.stats.stale_deferrals,
+        folded: run.stats.stale_folds,
+        early_commits: run.stats.early_commits,
+        mean_round_secs: secs / n as f64,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args()?;
+    let rounds: usize = args.get_parse("rounds")?.unwrap_or(6);
+    args.finish()?;
+
+    banner(
+        "async rounds",
+        "round composition (fresh/late/carried) vs commit policy × straggler rate",
+    );
+
+    let arms: Vec<(&str, fn() -> CommitPolicy)> = vec![
+        ("deadline", || CommitPolicy::Deadline),
+        ("quorum", || CommitPolicy::Quorum { k: 2 }),
+        ("buffered", || CommitPolicy::Buffered { k: 2, max_staleness: 2 }),
+    ];
+
+    let mut table = Table::new(&[
+        "stragglers", "policy", "fresh", "late", "carried", "folded", "early", "s/round",
+    ]);
+    let mut rows = Vec::new();
+    // cells[straggler index] = [deadline, quorum, buffered]
+    let mut cells: Vec<Vec<Cell>> = Vec::new();
+    for &frac in &STRAGGLER_FRACS {
+        let mut band = Vec::new();
+        for (name, mk) in &arms {
+            let cell = run_cell(mk(), frac, rounds)?;
+            table.row(&[
+                format!("{frac:.2}"),
+                name.to_string(),
+                cell.fresh.to_string(),
+                cell.late.to_string(),
+                cell.deferred.to_string(),
+                cell.folded.to_string(),
+                cell.early_commits.to_string(),
+                format!("{:.4}", cell.mean_round_secs),
+            ]);
+            let mut row = Json::obj();
+            row.set("straggler_frac", Json::Num(frac))
+                .set("policy", Json::Str(name.to_string()))
+                .set("fresh_uploads", Json::Num(cell.fresh as f64))
+                .set("late_uploads", Json::Num(cell.late as f64))
+                .set("stale_deferrals", Json::Num(cell.deferred as f64))
+                .set("stale_folds", Json::Num(cell.folded as f64))
+                .set("early_commits", Json::Num(cell.early_commits as f64))
+                .set("mean_round_secs", Json::Num(cell.mean_round_secs));
+            rows.push(row);
+            band.push(cell);
+        }
+        cells.push(band);
+    }
+    table.print();
+    println!();
+
+    // acceptance: quorum sheds at least as much as deadline everywhere,
+    // strictly more on the healthy cohort (its tail has nowhere to hide)
+    let mut shedding = true;
+    for (fi, &frac) in STRAGGLER_FRACS.iter().enumerate() {
+        let ok = cells[fi][1].late >= cells[fi][0].late
+            && (frac > 0.0 || cells[fi][1].late > cells[fi][0].late);
+        shedding &= ok;
+        println!(
+            "{} quorum sheds the tail at stragglers={frac:.2}: late {} vs deadline {}",
+            if ok { "PASS" } else { "MISS" },
+            cells[fi][1].late,
+            cells[fi][0].late
+        );
+    }
+    // acceptance: buffered carries what quorum sheds — no extra lates,
+    // and the carried tail folds back in at every rate
+    let mut carrying = true;
+    for (fi, &frac) in STRAGGLER_FRACS.iter().enumerate() {
+        let ok = cells[fi][2].late <= cells[fi][1].late
+            && cells[fi][2].deferred > 0
+            && cells[fi][2].folded > 0;
+        carrying &= ok;
+        println!(
+            "{} buffered carries the tail at stragglers={frac:.2}: late {}, carried {}, folded {}",
+            if ok { "PASS" } else { "MISS" },
+            cells[fi][2].late,
+            cells[fi][2].deferred,
+            cells[fi][2].folded
+        );
+    }
+    // acceptance: the K-th-arrival rule only relabels deliveries
+    let mut conserving = true;
+    for (fi, &frac) in STRAGGLER_FRACS.iter().enumerate() {
+        let ok = cells[fi][1].fresh + cells[fi][1].late == cells[fi][0].fresh + cells[fi][0].late;
+        conserving &= ok;
+        println!(
+            "{} quorum conserves deliveries at stragglers={frac:.2}: {}+{} vs {}+{}",
+            if ok { "PASS" } else { "MISS" },
+            cells[fi][1].fresh,
+            cells[fi][1].late,
+            cells[fi][0].fresh,
+            cells[fi][0].late
+        );
+    }
+
+    let mut out = Json::obj();
+    out.set("bench", Json::Str("async_rounds".into()))
+        .set("rounds", Json::Num(rounds as f64))
+        .set("clients", Json::Num(CLIENTS as f64))
+        .set("quorum_sheds_tail", Json::Bool(shedding))
+        .set("buffered_carries_tail", Json::Bool(carrying))
+        .set("quorum_conserves_deliveries", Json::Bool(conserving))
+        .set("cells", Json::Arr(rows));
+    let path = emit_json("async_rounds", &out)?;
+    println!("\nwrote {}", path.display());
+    Ok(())
+}

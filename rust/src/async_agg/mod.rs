@@ -1,0 +1,303 @@
+//! Asynchronous buffered aggregation: commit policies and stale-update
+//! bookkeeping.
+//!
+//! Every round of the baseline engine barriers on its deadline: the
+//! coordinator waits out the grace window even when the aggregate is
+//! already decided. This module makes *when a round commits* a policy:
+//!
+//! * [`CommitPolicy::Deadline`] — today's behaviour. The round closes at
+//!   the grace deadline; everything that arrived by then aggregates.
+//!   Bit-identical to a run built before this module existed.
+//! * [`CommitPolicy::Quorum`] — K-of-S commit. The round closes at the
+//!   K-th completed upload (or the deadline, whichever is earlier);
+//!   uploads that beat the deadline but not the commit are re-banked
+//!   into their client's residual per §V-B dropout semantics (delayed,
+//!   never lost). With `k >= S` the commit instant degenerates to the
+//!   deadline, so `quorum:k=S` is pinned bit-identical to `deadline`.
+//! * [`CommitPolicy::Buffered`] — FedBuff-style buffered commit. Like
+//!   `Quorum`, the round commits at the K-th completion, but overflow
+//!   uploads are *carried* into a stale buffer instead of re-banked,
+//!   and folded into a later round's aggregate at a protocol-priced
+//!   staleness weight ([`crate::protocol::Protocol::stale_weight`]).
+//!   The unweighted remainder `(1-w)·update` is re-banked into the
+//!   client residual so no mass is ever lost (§V-B preserved).
+//!
+//! ## Staleness
+//!
+//! A deferred upload's `origin_round` is the server round it was
+//! trained against; when it folds into the round the server is about
+//! to commit, its staleness is `current_round - origin_round` (≥ 1 by
+//! construction — a fold can only happen on a *later* round). Entries
+//! older than [`CommitPolicy::Buffered::max_staleness`] expire: the
+//! full update is re-banked at weight 1, exactly like a §V-B dropout.
+//! `max_staleness = 0` therefore expires every deferral and behaves
+//! like `quorum` with extra bookkeeping.
+//!
+//! ## Fault interplay (quorum-abort vs quorum-commit)
+//!
+//! `--faults quorum=..` counts only *fresh on-time* uploads — deferred
+//! stragglers and buffered fold-ins do not satisfy a fault-plan quorum.
+//! An aborted round re-banks every delivered upload (on-time and
+//! overflow alike), defers nothing new, and leaves previously buffered
+//! entries untouched; staleness still advances because abort does not
+//! advance the server round counter — origins are *round numbers*, not
+//! attempts.
+//!
+//! Specs parse with the same grammar as protocols and fault plans:
+//! `deadline`, `quorum:k=3` (or `quorum:3`), and
+//! `buffered:k=3,max_staleness=2` (or `buffered:3,2`).
+
+use crate::compression::Message;
+use crate::protocol::ProtocolArgs;
+
+/// When the coordinator commits a round's aggregate.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CommitPolicy {
+    /// Commit at the grace deadline (the pre-async behaviour).
+    Deadline,
+    /// Commit at the `k`-th completed upload; overflow re-banks (§V-B).
+    Quorum { k: usize },
+    /// Commit at the `k`-th completed upload; overflow defers into the
+    /// stale buffer and folds into a later round at a staleness weight.
+    Buffered { k: usize, max_staleness: usize },
+}
+
+impl Default for CommitPolicy {
+    fn default() -> Self {
+        CommitPolicy::Deadline
+    }
+}
+
+impl CommitPolicy {
+    /// Parse a CLI spec: `deadline` | `quorum:k=3` | `quorum:3` |
+    /// `buffered:k=3,max_staleness=2` | `buffered:3,2`.
+    pub fn parse(spec: &str) -> anyhow::Result<CommitPolicy> {
+        let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+        let args = ProtocolArgs::parse(rest);
+        let policy = match name {
+            "deadline" => {
+                args.expect_keys(&[], 0)
+                    .map_err(|e| anyhow::anyhow!("commit policy '{spec}': {e}"))?;
+                CommitPolicy::Deadline
+            }
+            "quorum" => {
+                args.expect_keys(&["k"], 1)
+                    .map_err(|e| anyhow::anyhow!("commit policy '{spec}': {e}"))?;
+                let k = args
+                    .parse_opt::<usize>("k", 0)
+                    .map_err(|e| anyhow::anyhow!("commit policy '{spec}': {e}"))?
+                    .ok_or_else(|| anyhow::anyhow!("commit policy '{spec}': missing k"))?;
+                CommitPolicy::Quorum { k }
+            }
+            "buffered" => {
+                args.expect_keys(&["k", "max_staleness"], 2)
+                    .map_err(|e| anyhow::anyhow!("commit policy '{spec}': {e}"))?;
+                let k = args
+                    .parse_opt::<usize>("k", 0)
+                    .map_err(|e| anyhow::anyhow!("commit policy '{spec}': {e}"))?
+                    .ok_or_else(|| anyhow::anyhow!("commit policy '{spec}': missing k"))?;
+                let max_staleness = args
+                    .parse_or::<usize>("max_staleness", 1, 1)
+                    .map_err(|e| anyhow::anyhow!("commit policy '{spec}': {e}"))?;
+                CommitPolicy::Buffered { k, max_staleness }
+            }
+            other => anyhow::bail!(
+                "unknown commit policy '{other}' (expected deadline|quorum:k=..|buffered:k=..,max_staleness=..)"
+            ),
+        };
+        policy.validate()?;
+        Ok(policy)
+    }
+
+    /// Canonical spec string (inverse of [`CommitPolicy::parse`]).
+    pub fn spec(&self) -> String {
+        match self {
+            CommitPolicy::Deadline => "deadline".to_string(),
+            CommitPolicy::Quorum { k } => format!("quorum:k={k}"),
+            CommitPolicy::Buffered { k, max_staleness } => {
+                format!("buffered:k={k},max_staleness={max_staleness}")
+            }
+        }
+    }
+
+    /// Validate the knobs (a commit quorum of zero makes no sense).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        match *self {
+            CommitPolicy::Deadline => {}
+            CommitPolicy::Quorum { k } | CommitPolicy::Buffered { k, .. } => {
+                anyhow::ensure!(k >= 1, "commit policy k={k} must be >= 1");
+            }
+        }
+        Ok(())
+    }
+
+    /// The K of K-of-S, if the policy commits early.
+    pub fn commit_k(&self) -> Option<usize> {
+        match *self {
+            CommitPolicy::Deadline => None,
+            CommitPolicy::Quorum { k } | CommitPolicy::Buffered { k, .. } => Some(k),
+        }
+    }
+
+    /// Whether overflow uploads defer into the stale buffer (rather
+    /// than re-banking immediately).
+    pub fn is_buffered(&self) -> bool {
+        matches!(self, CommitPolicy::Buffered { .. })
+    }
+
+    /// Whether this policy can ever change a run's outcome versus the
+    /// deadline barrier. `Quorum{k}` only commits early when fewer than
+    /// `k` uploads have landed by an arrival instant before the
+    /// deadline, so a policy is *potentially* early whenever it has a
+    /// finite K; bit-identity for `k >= S` is a property of the run
+    /// (pinned in `rust/tests/property_async.rs`), not of the policy.
+    pub fn is_deadline(&self) -> bool {
+        matches!(self, CommitPolicy::Deadline)
+    }
+
+    /// The simulated commit instant for one round: the earlier of the
+    /// grace `deadline_s` and the K-th smallest delivered arrival time.
+    /// With fewer than K deliveries (or no K at all) the round falls
+    /// back to the deadline — an async policy never commits *later*
+    /// than the barrier it replaces.
+    pub fn commit_instant(&self, arrivals: &[f64], deadline_s: f64) -> f64 {
+        let Some(k) = self.commit_k() else { return deadline_s };
+        let mut on_time: Vec<f64> =
+            arrivals.iter().copied().filter(|a| *a <= deadline_s).collect();
+        if on_time.len() < k {
+            return deadline_s;
+        }
+        on_time.sort_by(|a, b| a.partial_cmp(b).expect("arrival times are finite"));
+        on_time[k - 1].min(deadline_s)
+    }
+}
+
+/// One straggler update carried across rounds by a `Buffered` policy.
+#[derive(Clone, Debug)]
+pub struct StaleUpdate {
+    /// Client that trained the update.
+    pub client_id: usize,
+    /// Server round the update was trained against.
+    pub origin_round: usize,
+    /// Upstream payload bits the upload was billed at (already in the
+    /// ledger — recorded so transcripts can re-bill at the origin).
+    pub bits: u64,
+    /// The decoded wire message, held verbatim until fold or expiry.
+    pub msg: Message,
+}
+
+/// Stale-buffer lifecycle events, fanned to
+/// [`crate::session::Observer::on_async`].
+#[derive(Clone, Debug)]
+pub enum AsyncEvent {
+    /// An on-deadline upload missed the commit instant and entered the
+    /// stale buffer instead of the aggregate. Carries the decoded
+    /// message so transcript recorders can persist its exact bytes (the
+    /// round frame holds only fresh commits).
+    Defer { client_id: usize, origin_round: usize, bits: u64, msg: Message },
+    /// A buffered update folded into the current round's aggregate at
+    /// `weight = stale_weight(staleness)`.
+    Fold { client_id: usize, origin_round: usize, staleness: usize, weight: f32, bits: u64 },
+    /// A buffered update aged past `max_staleness` and was re-banked at
+    /// weight 1 (§V-B dropout semantics).
+    Expire { client_id: usize, origin_round: usize, staleness: usize },
+}
+
+/// What [`Session::fold_stale`](crate::session::Session::fold_stale)
+/// did with one buffered entry — returned to drivers (the cluster tick
+/// machine) that mirror the outcome into
+/// [`ClusterEvent`](crate::telemetry::ClusterEvent)s.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FoldOutcome {
+    pub client_id: usize,
+    pub origin_round: usize,
+    pub staleness: usize,
+    /// 1.0 for an expired entry (the whole update re-banked)
+    pub weight: f32,
+    pub expired: bool,
+}
+
+/// The default staleness discount shared by every Table-I method that
+/// does not override [`crate::protocol::Protocol::stale_weight`]:
+/// `1/sqrt(1+s)` (the FedBuff polynomial with α = ½), and exactly 1 for
+/// a fresh update.
+pub fn default_stale_weight(staleness: usize) -> f32 {
+    if staleness == 0 {
+        1.0
+    } else {
+        1.0 / (1.0 + staleness as f32).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_accepts_every_documented_form() {
+        assert_eq!(CommitPolicy::parse("deadline").unwrap(), CommitPolicy::Deadline);
+        assert_eq!(CommitPolicy::parse("quorum:k=3").unwrap(), CommitPolicy::Quorum { k: 3 });
+        assert_eq!(CommitPolicy::parse("quorum:3").unwrap(), CommitPolicy::Quorum { k: 3 });
+        assert_eq!(
+            CommitPolicy::parse("buffered:k=3,max_staleness=2").unwrap(),
+            CommitPolicy::Buffered { k: 3, max_staleness: 2 }
+        );
+        assert_eq!(
+            CommitPolicy::parse("buffered:3,2").unwrap(),
+            CommitPolicy::Buffered { k: 3, max_staleness: 2 }
+        );
+        // max_staleness defaults to 1
+        assert_eq!(
+            CommitPolicy::parse("buffered:k=4").unwrap(),
+            CommitPolicy::Buffered { k: 4, max_staleness: 1 }
+        );
+    }
+
+    #[test]
+    fn parse_rejects_nonsense() {
+        assert!(CommitPolicy::parse("barrier").is_err(), "unknown name");
+        assert!(CommitPolicy::parse("quorum").is_err(), "missing k");
+        assert!(CommitPolicy::parse("quorum:k=0").is_err(), "zero quorum");
+        assert!(CommitPolicy::parse("buffered:k=0,max_staleness=1").is_err(), "zero quorum");
+        assert!(CommitPolicy::parse("deadline:k=2").is_err(), "deadline takes no args");
+        assert!(CommitPolicy::parse("quorum:q=3").is_err(), "typo key");
+        assert!(CommitPolicy::parse("buffered:k=2,staleness=1").is_err(), "typo key");
+    }
+
+    #[test]
+    fn spec_roundtrips_through_parse() {
+        for spec in ["deadline", "quorum:k=5", "buffered:k=2,max_staleness=3"] {
+            let p = CommitPolicy::parse(spec).unwrap();
+            assert_eq!(p.spec(), spec);
+            assert_eq!(CommitPolicy::parse(&p.spec()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn commit_instant_is_kth_arrival_capped_at_deadline() {
+        let arrivals = [4.0, 1.0, 3.0, 2.0];
+        let dl = 10.0;
+        assert_eq!(CommitPolicy::Deadline.commit_instant(&arrivals, dl), dl);
+        assert_eq!(CommitPolicy::Quorum { k: 2 }.commit_instant(&arrivals, dl), 2.0);
+        assert_eq!(
+            CommitPolicy::Buffered { k: 3, max_staleness: 1 }.commit_instant(&arrivals, dl),
+            3.0
+        );
+        // k == S: commit at the last arrival, still before the deadline
+        assert_eq!(CommitPolicy::Quorum { k: 4 }.commit_instant(&arrivals, dl), 4.0);
+        // fewer than k on-time deliveries → fall back to the deadline
+        assert_eq!(CommitPolicy::Quorum { k: 5 }.commit_instant(&arrivals, dl), dl);
+        // arrivals past the deadline never count toward K
+        assert_eq!(CommitPolicy::Quorum { k: 2 }.commit_instant(&[1.0, 11.0, 12.0], dl), dl);
+    }
+
+    #[test]
+    fn default_weight_is_one_fresh_and_decays() {
+        assert_eq!(default_stale_weight(0), 1.0);
+        let w1 = default_stale_weight(1);
+        let w2 = default_stale_weight(2);
+        assert!((w1 - 1.0 / 2f32.sqrt()).abs() < 1e-7);
+        assert!(w2 < w1 && w1 < 1.0);
+        assert!(w2 > 0.0);
+    }
+}

@@ -52,6 +52,7 @@ pub use transport::{
     TransferReq, TransferTiming, Transport,
 };
 
+use crate::async_agg::CommitPolicy;
 use crate::config::FedConfig;
 use crate::fault::FaultPlan;
 
@@ -119,6 +120,13 @@ pub struct ClusterConfig {
     /// the quorum-commit gate. `None` (and inactive plans) leave the run
     /// bit-identical to a fault-free build.
     pub faults: Option<FaultPlan>,
+    /// when the aggregation round commits (`--commit`, see
+    /// [`crate::async_agg`]): at the grace deadline (the default —
+    /// bit-identical to older builds), at the K-th completed upload
+    /// with later on-deadline arrivals re-banked (`quorum`), or at the
+    /// K-th completed upload with later arrivals carried into the next
+    /// round's aggregate at a staleness weight (`buffered`).
+    pub commit: CommitPolicy,
 }
 
 impl ClusterConfig {
@@ -148,6 +156,7 @@ impl ClusterConfig {
             // empty rounds and churn stalls
             max_ticks: rounds * 8 + 1000,
             faults: None,
+            commit: CommitPolicy::Deadline,
         }
     }
 
@@ -188,6 +197,7 @@ impl ClusterConfig {
         if let Some(plan) = &self.faults {
             plan.validate()?;
         }
+        self.commit.validate()?;
         Ok(())
     }
 

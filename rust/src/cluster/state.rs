@@ -116,6 +116,20 @@ pub struct ClusterStats {
     pub shard_failovers: u64,
     /// rounds aborted by the quorum gate or a flaky coordinator
     pub round_aborts: u64,
+    /// rounds the commit policy closed at the K-th completed upload,
+    /// before the grace deadline (`--commit quorum:…|buffered:…`)
+    pub early_commits: u64,
+    /// on-deadline uploads that missed the commit instant and entered
+    /// the stale buffer (buffered policy)
+    pub stale_deferrals: u64,
+    /// bits billed to deferred uploads at their origin round
+    pub stale_defer_bits: u64,
+    /// buffered stragglers folded into a later aggregate at a staleness
+    /// weight
+    pub stale_folds: u64,
+    /// buffered stragglers that aged past `max_staleness` and were
+    /// re-banked at weight 1 instead
+    pub stale_expired: u64,
 }
 
 impl ClusterStats {
@@ -147,7 +161,12 @@ impl ClusterStats {
             .set("retransmit_bits", Json::Num(self.retransmit_bits as f64))
             .set("failed_uploads", Json::Num(self.failed_uploads as f64))
             .set("shard_failovers", Json::Num(self.shard_failovers as f64))
-            .set("round_aborts", Json::Num(self.round_aborts as f64));
+            .set("round_aborts", Json::Num(self.round_aborts as f64))
+            .set("early_commits", Json::Num(self.early_commits as f64))
+            .set("stale_deferrals", Json::Num(self.stale_deferrals as f64))
+            .set("stale_defer_bits", Json::Num(self.stale_defer_bits as f64))
+            .set("stale_folds", Json::Num(self.stale_folds as f64))
+            .set("stale_expired", Json::Num(self.stale_expired as f64));
         o
     }
 }
@@ -160,8 +179,16 @@ pub struct RoundSummary {
     pub selected: usize,
     pub dropped: usize,
     pub late: usize,
-    /// messages reduced into the global model
+    /// fresh on-time messages reduced into the global model (excludes
+    /// folded stragglers — see `folded`)
     pub aggregated: usize,
+    /// uploads that beat the deadline but missed the commit instant and
+    /// were carried into the stale buffer (buffered policy only;
+    /// quorum-policy misses count under `late` instead)
+    pub deferred: usize,
+    /// buffered stragglers from earlier rounds folded into this
+    /// aggregate at a staleness weight
+    pub folded: usize,
     /// mean local training loss over clients that trained
     pub mean_loss: f32,
     /// participants whose sync covered > 1 missed round
@@ -189,6 +216,17 @@ struct PendingUpload {
     /// (the transfer's event-completion time on the shared medium)
     arrival_s: f64,
     straggler_link: bool,
+}
+
+/// An upload whose valid frame reached the server (it survived the
+/// fault gauntlet); `arrival_s` is its final event-completion time —
+/// including retransmits — which the commit policy partitions into
+/// committed / deferred / late.
+struct Delivered {
+    client_id: usize,
+    msg: Message,
+    up_bits: u64,
+    arrival_s: f64,
 }
 
 /// One client's synchronisation outcome (a scheduled download through
@@ -276,6 +314,7 @@ impl ClusterRun {
         if let Some(plan) = &cfg.faults {
             session.set_fault_plan(plan.clone())?;
         }
+        session.set_commit_policy(cfg.commit.clone())?;
         let event_rng = Pcg64::new(cfg.fed.seed, 0xe7e7);
         let membership = Membership::new(cfg.fed.num_clients, cfg.fed.seed, cfg.initial_members());
         let transport = Transport::with_server(
@@ -685,6 +724,8 @@ impl ClusterRun {
                 dropped: self.pending_dropped,
                 late: 0,
                 aggregated: 0,
+                deferred: 0,
+                folded: 0,
                 mean_loss: f32::NAN,
                 catch_up_clients: self.pending_catchup_clients,
                 catch_up_bits: self.pending_catchup_bits,
@@ -717,12 +758,9 @@ impl ClusterRun {
         let plan = self.session.fault.clone().filter(|p| p.is_active());
         let mut fault_rec = FaultRecord::default();
 
-        let mut msgs: Vec<Message> = Vec::with_capacity(pending.len());
-        let mut agg_ids: Vec<usize> = Vec::with_capacity(pending.len());
-        let mut arrival_of = vec![0.0f64; self.cfg.fed.num_clients];
+        let mut delivered_ups: Vec<Delivered> = Vec::with_capacity(pending.len());
         let mut loss_sum = 0.0f64;
         let trained = pending.len();
-        let mut late = 0usize;
         for p in pending {
             // bits leave the client either way; bill the transfer
             self.session.ledger.record_upload_contended(
@@ -820,21 +858,58 @@ impl ClusterRun {
                 if !residual.is_empty() {
                     p.msg.add_to(residual, 1.0);
                 }
-            } else if arrival_s <= deadline {
+            } else {
+                delivered_ups.push(Delivered {
+                    client_id: p.client_id,
+                    msg: p.msg,
+                    up_bits: p.up_bits,
+                    arrival_s,
+                });
+            }
+        }
+
+        // Commit instant: the grace deadline under the default policy;
+        // min(deadline, K-th smallest on-time arrival) under `quorum` and
+        // `buffered` (see [`CommitPolicy::commit_instant`]). Every
+        // delivery is then partitioned against this single instant:
+        // committed (≤ commit_s), deferred (≤ deadline — their fate is
+        // decided only after the abort gates) or late (unchanged).
+        let commit_s = {
+            let arrivals: Vec<f64> = delivered_ups.iter().map(|d| d.arrival_s).collect();
+            self.session.commit_policy().commit_instant(&arrivals, deadline)
+        };
+        let policy_commit_k = self.session.commit_policy().commit_k().unwrap_or(0);
+        let policy_is_deadline = self.session.commit_policy().is_deadline();
+        let policy_is_buffered = self.session.commit_policy().is_buffered();
+
+        let mut msgs: Vec<Message> = Vec::with_capacity(delivered_ups.len());
+        let mut agg_ids: Vec<usize> = Vec::with_capacity(delivered_ups.len());
+        let mut arrival_of = vec![0.0f64; self.cfg.fed.num_clients];
+        let mut deferred: Vec<Delivered> = Vec::new();
+        let mut late = 0usize;
+        for d in delivered_ups {
+            if d.arrival_s <= commit_s {
                 // only messages the server actually aggregates reach the
                 // observers (transcripts replay exactly these)
-                self.session.notify_upload(p.client_id, &p.msg, p.up_bits)?;
-                agg_ids.push(p.client_id);
-                arrival_of[p.client_id] = arrival_s;
-                msgs.push(p.msg);
+                self.session.notify_upload(d.client_id, &d.msg, d.up_bits)?;
+                agg_ids.push(d.client_id);
+                arrival_of[d.client_id] = d.arrival_s;
+                msgs.push(d.msg);
+            } else if d.arrival_s <= deadline {
+                // beat the deadline but not the commit. No stale-buffer
+                // event fires here: if a later gate aborts the round
+                // these re-bank like every other discard, and a
+                // transcript must never carry stale frames for a round
+                // that aborted.
+                deferred.push(d);
             } else {
                 late += 1;
                 self.stats.late_uploads += 1;
                 self.emit(ClusterEvent::LateUpload {
                     tick: self.ticks,
                     sim_s: self.sim_clock_s,
-                    client_id: p.client_id,
-                    arrival_s,
+                    client_id: d.client_id,
+                    arrival_s: d.arrival_s,
                     deadline_s: deadline,
                 })?;
                 // The server never saw it. Error-feedback methods
@@ -844,9 +919,9 @@ impl ClusterRun {
                 // deferral mechanism in their protocol and genuinely
                 // lose the round — that asymmetry is part of what the
                 // straggler experiments measure.
-                let residual = &mut self.session.clients[p.client_id].residual;
+                let residual = &mut self.session.clients[d.client_id].residual;
                 if !residual.is_empty() {
-                    p.msg.add_to(residual, 1.0);
+                    d.msg.add_to(residual, 1.0);
                 }
             }
         }
@@ -861,7 +936,8 @@ impl ClusterRun {
             let needed = plan.quorum_needed(self.pending_drawn.len()).max(1);
             if msgs.len() < needed {
                 return self.abort_round(
-                    fault_rec, msgs, agg_ids, needed, mean_loss, late, deadline, queue_secs,
+                    fault_rec, msgs, agg_ids, deferred, needed, mean_loss, late, deadline,
+                    queue_secs,
                 );
             }
         }
@@ -972,6 +1048,7 @@ impl ClusterRun {
                     fault_rec,
                     msgs,
                     agg_ids,
+                    deferred,
                     needed,
                     mean_loss,
                     late,
@@ -985,6 +1062,84 @@ impl ClusterRun {
                 fault_rec.needed = plan.quorum_needed(self.pending_drawn.len()).max(1) as u32;
                 self.session.notify_fault(std::mem::take(&mut fault_rec))?;
             }
+        }
+
+        // The round is now certain to commit: record the early close and
+        // settle the deliveries the commit instant sidelined.
+        if !policy_is_deadline && commit_s < deadline {
+            self.stats.early_commits += 1;
+            self.emit(ClusterEvent::EarlyCommit {
+                tick: self.ticks,
+                sim_s: self.sim_clock_s,
+                round: self.session.server.round,
+                committed: msgs.len(),
+                deferred: deferred.len(),
+                k: policy_commit_k,
+                commit_s,
+                deadline_s: deadline,
+            })?;
+        }
+        let origin_round = self.session.server.round;
+        let mut stale_deferred = 0usize;
+        for d in deferred {
+            if policy_is_buffered {
+                // carried: it folds into a later round's aggregate at a
+                // staleness weight ([`Session::fold_stale`]). The bits
+                // were billed on arrival; the transcript's stale frame
+                // re-bills them at this origin round on replay.
+                stale_deferred += 1;
+                self.stats.stale_deferrals += 1;
+                self.stats.stale_defer_bits += d.up_bits;
+                self.emit(ClusterEvent::StaleDefer {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    client_id: d.client_id,
+                    origin_round,
+                    bits: d.up_bits,
+                })?;
+                self.session.defer_stale(d.client_id, d.msg, d.up_bits)?;
+            } else {
+                // quorum: the commit instant is the round's effective
+                // deadline — the update re-banks exactly like a late one
+                late += 1;
+                self.stats.late_uploads += 1;
+                self.emit(ClusterEvent::LateUpload {
+                    tick: self.ticks,
+                    sim_s: self.sim_clock_s,
+                    client_id: d.client_id,
+                    arrival_s: d.arrival_s,
+                    deadline_s: commit_s,
+                })?;
+                let residual = &mut self.session.clients[d.client_id].residual;
+                if !residual.is_empty() {
+                    d.msg.add_to(residual, 1.0);
+                }
+            }
+        }
+
+        // Fold-in: stragglers banked by *earlier* buffered rounds join
+        // this aggregate pre-scaled by their staleness weight. After
+        // shard planning (carried updates never ride shard hops) and
+        // before the commit, so the round frame stays a record of fresh
+        // uploads while the folds land in the stale frame.
+        let fold_outcomes = self.session.fold_stale(&mut msgs)?;
+        let mut folded = 0usize;
+        for f in &fold_outcomes {
+            if f.expired {
+                self.stats.stale_expired += 1;
+            } else {
+                self.stats.stale_folds += 1;
+                folded += 1;
+            }
+            self.emit(ClusterEvent::StaleFold {
+                tick: self.ticks,
+                sim_s: self.sim_clock_s,
+                client_id: f.client_id,
+                origin_round: f.origin_round,
+                staleness: f.staleness,
+                weight: f.weight,
+                expired: f.expired,
+            })?;
         }
 
         // the deadline always covers the slowest eligible participant
@@ -1055,6 +1210,8 @@ impl ClusterRun {
             dropped: self.pending_dropped,
             late,
             aggregated,
+            deferred: stale_deferred,
+            folded,
             mean_loss,
             catch_up_clients: self.pending_catchup_clients,
             catch_up_bits: self.pending_catchup_bits,
@@ -1075,6 +1232,7 @@ impl ClusterRun {
         mut rec: FaultRecord,
         msgs: Vec<Message>,
         agg_ids: Vec<usize>,
+        deferred: Vec<Delivered>,
         needed: usize,
         mean_loss: f32,
         late: usize,
@@ -1089,6 +1247,18 @@ impl ClusterRun {
             let residual = &mut self.session.clients[id].residual;
             if !residual.is_empty() {
                 msg.add_to(residual, 1.0);
+            }
+        }
+        for d in &deferred {
+            // delivered past the commit instant, and the round they would
+            // have carried into never committed: never counted toward the
+            // quorum, never buffered — the bits ride the extras and the
+            // update re-banks like an on-time discard
+            rec.extra_up_msgs += 1;
+            rec.extra_up_bits += d.msg.wire_bits() as u64;
+            let residual = &mut self.session.clients[d.client_id].residual;
+            if !residual.is_empty() {
+                d.msg.add_to(residual, 1.0);
             }
         }
         rec.aborted = true;
@@ -1113,6 +1283,8 @@ impl ClusterRun {
             dropped: self.pending_dropped,
             late,
             aggregated: 0,
+            deferred: 0,
+            folded: 0,
             mean_loss,
             catch_up_clients: self.pending_catchup_clients,
             catch_up_bits: self.pending_catchup_bits,
@@ -1436,6 +1608,9 @@ mod tests {
                     | ClusterEvent::Retransmit { .. }
                     | ClusterEvent::ShardFailover { .. }
                     | ClusterEvent::RoundAbort { .. } => c.faults += 1,
+                    ClusterEvent::EarlyCommit { .. }
+                    | ClusterEvent::StaleDefer { .. }
+                    | ClusterEvent::StaleFold { .. } => {}
                 }
                 Ok(())
             }

@@ -57,6 +57,16 @@
 //!   ever constructing a trainer, and transcript diffing
 //!   ([`session::diff_bytes`], `repro replay --against`) that reports
 //!   the first diverging frame.
+//! * [`async_agg`] — asynchronous buffered aggregation: a
+//!   [`async_agg::CommitPolicy`] (`deadline` — the barrier baseline,
+//!   `quorum:k=..` — K-of-S commit at the K-th completed upload,
+//!   `buffered:k=..,max_staleness=..` — FedBuff-style stale buffer)
+//!   decides *when* a round commits; stragglers that beat the deadline
+//!   but miss the commit re-bank per §V-B or carry into a later round
+//!   at a protocol-priced staleness weight
+//!   ([`protocol::Protocol::stale_weight`]), with `(1-w)` of the update
+//!   re-banked so no mass is lost. `--commit deadline` and
+//!   `--commit quorum:k=S` are bit-identical to the barrier run.
 //! * [`fault`] — deterministic fault injection and recovery: a
 //!   [`fault::FaultPlan`] (own string-keyed registry, `--faults
 //!   corrupt=0.01,loss=0.02,…`, extended via [`fault::register`]) drawing
@@ -86,6 +96,7 @@
 //!   bench harness, property-test runner) — the offline environment has
 //!   no access to crates.io beyond the vendored `xla` closure.
 
+pub mod async_agg;
 pub mod cli;
 pub mod cluster;
 pub mod compression;

@@ -24,6 +24,7 @@
 //!   --classes c --batch b --gamma γ --lr --momentum --iters --seed
 //!   --backend native|hlo (native only for logreg)
 
+use fedstc::async_agg::CommitPolicy;
 use fedstc::cli::Args;
 use fedstc::cluster::{ClusterConfig, ClusterRun, ContentionPolicy, NativeLogregFactory};
 use fedstc::config::FedConfig;
@@ -95,6 +96,8 @@ fn config_from_args(args: &Args) -> anyhow::Result<FedConfig> {
             // the fault-injection plan (`fault::parse` spec) is likewise
             // read by the run drivers
             "faults" if records => {}
+            // the commit policy (`CommitPolicy::parse` spec) too
+            "commit" if records => {}
             // telemetry flags (pure observers; the run drivers read them
             // through telemetry_from_args)
             "trace" | "metrics" | "progress" if records => {}
@@ -187,6 +190,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         Some(spec) => Some(fault::parse(&spec)?),
         None => None,
     };
+    let commit = match args.get("commit") {
+        Some(spec) => CommitPolicy::parse(&spec)?,
+        None => CommitPolicy::Deadline,
+    };
     let mut tele = telemetry_from_args(args, cfg.rounds())?;
     args.finish()?;
 
@@ -197,20 +204,26 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     if let Some(plan) = faults.as_ref().filter(|p| p.is_active()) {
         println!("# faults: {}", plan.spec());
     }
+    if !commit.is_deadline() {
+        println!("# commit: {}", commit.spec());
+    }
     let timer = Timer::start();
     let exp = Experiment::new(cfg)?;
     let mut trainer = make_trainer(&exp.cfg, &backend)?;
     if let Some(path) = &record {
-        // faulted recordings carry v4 fault frames; unfaulted ones keep
-        // the base format so their bytes stay identical across builds
+        // faulted recordings carry v4 fault frames, buffered-commit ones
+        // v5 stale frames; plain runs keep the base format so their
+        // bytes stay identical across builds
         let fault_capable = faults.as_ref().is_some_and(|p| p.is_active());
-        tele.observers.push(Box::new(TranscriptWriter::create_with_faults(
+        tele.observers.push(Box::new(TranscriptWriter::create_with_caps(
             std::path::Path::new(path),
             true,
             fault_capable,
+            commit.is_buffered(),
         )?));
     }
-    let log = exp.run_observed_faulted(trainer.as_mut(), tele.observers, exec, faults)?;
+    let log =
+        exp.run_observed_async(trainer.as_mut(), tele.observers, exec, faults, commit)?;
 
     println!("iter  round  accuracy  loss     trainloss  upMB      downMB");
     for p in &log.points {
@@ -267,6 +280,10 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         Some(spec) => Some(fault::parse(&spec)?),
         None => None,
     };
+    let commit = match args.get("commit") {
+        Some(spec) => CommitPolicy::parse(&spec)?,
+        None => CommitPolicy::Deadline,
+    };
     let tele = telemetry_from_args(args, cfg.rounds())?;
     args.finish()?;
     anyhow::ensure!(peers >= 1, "--peers must be >= 1");
@@ -276,12 +293,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     if let Some(plan) = faults.as_ref().filter(|p| p.is_active()) {
         println!("# faults: {}", plan.spec());
     }
+    if !commit.is_deadline() {
+        println!("# commit: {}", commit.spec());
+    }
     println!(
         "# listening on {} for {peers} peer{}",
         listener.local_addr()?,
         if peers == 1 { "" } else { "s" }
     );
-    run_serve_on(cfg, &listener, peers, tele, record, faults, http, timeout_s, out, quiet)
+    run_serve_on(
+        cfg, &listener, peers, tele, record, faults, commit, http, timeout_s, out, quiet,
+    )
 }
 
 /// Shared coordinator body behind `repro serve` and `repro spawn`.
@@ -293,6 +315,7 @@ fn run_serve_on(
     mut tele: TelemetryHandles,
     record: Option<String>,
     faults: Option<fedstc::fault::FaultPlan>,
+    commit: CommitPolicy,
     http: Option<String>,
     timeout_s: f64,
     out: Option<String>,
@@ -311,18 +334,23 @@ fn run_serve_on(
                 h
             }
         };
-        let srv = fedstc::net::MetricsServer::start(&addr, hub)?;
+        let srv = fedstc::net::MetricsServer::start(&addr, hub.clone())?;
         println!("# metrics endpoint: http://{}/metrics", srv.addr);
+        // per-round snapshot refresh: pushed after the hub's own observer
+        // handle, so every render sees the freshly committed round
+        tele.observers.push(Box::new(srv.round_refresher(hub)));
         http_server = Some(srv);
     }
     if let Some(path) = &record {
         // same transcript wiring as cmd_train: v4 fault frames only when
-        // a plan is actually armed, so unfaulted bytes stay identical
+        // a plan is actually armed (v5 when a buffered commit is), so
+        // plain bytes stay identical
         let fault_capable = faults.as_ref().is_some_and(|p| p.is_active());
-        tele.observers.push(Box::new(TranscriptWriter::create_with_faults(
+        tele.observers.push(Box::new(TranscriptWriter::create_with_caps(
             std::path::Path::new(path),
             true,
             fault_capable,
+            commit.is_buffered(),
         )?));
     }
     let report = fedstc::net::serve(
@@ -331,6 +359,7 @@ fn run_serve_on(
         peers,
         tele.observers,
         faults,
+        commit,
         std::time::Duration::from_secs_f64(timeout_s),
         quiet,
     )?;
@@ -412,6 +441,10 @@ fn cmd_spawn(args: &Args) -> anyhow::Result<()> {
         Some(spec) => Some(fault::parse(&spec)?),
         None => None,
     };
+    let commit = match args.get("commit") {
+        Some(spec) => CommitPolicy::parse(&spec)?,
+        None => CommitPolicy::Deadline,
+    };
     let tele = telemetry_from_args(args, cfg.rounds())?;
     args.finish()?;
 
@@ -420,6 +453,9 @@ fn cmd_spawn(args: &Args) -> anyhow::Result<()> {
     println!("# {}", cfg.describe());
     if let Some(plan) = faults.as_ref().filter(|p| p.is_active()) {
         println!("# faults: {}", plan.spec());
+    }
+    if !commit.is_deadline() {
+        println!("# commit: {}", commit.spec());
     }
     println!("# spawning {n} client process{} against {addr}", if n == 1 { "" } else { "es" });
     let exe = std::env::current_exe()?;
@@ -434,8 +470,9 @@ fn cmd_spawn(args: &Args) -> anyhow::Result<()> {
                 .spawn()?,
         );
     }
-    let result =
-        run_serve_on(cfg, &listener, n, tele, record, faults, http, timeout_s, out, quiet);
+    let result = run_serve_on(
+        cfg, &listener, n, tele, record, faults, commit, http, timeout_s, out, quiet,
+    );
     for child in &mut children {
         if result.is_err() {
             child.kill().ok();
@@ -633,6 +670,11 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     if let Some(spec) = args.get("faults") {
         ccfg.faults = Some(fault::parse(&spec)?);
     }
+    // when the aggregation round commits: deadline (default) |
+    // quorum:k=K | buffered:k=K,max_staleness=S
+    if let Some(spec) = args.get("commit") {
+        ccfg.commit = CommitPolicy::parse(&spec)?;
+    }
     let out = args.get("out");
     let record = args.get("record");
     let trace_path = args.get("trace");
@@ -661,8 +703,12 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
     if let Some(plan) = ccfg.faults.as_ref().filter(|p| p.is_active()) {
         println!("# faults: {}", plan.spec());
     }
+    if !ccfg.commit.is_deadline() {
+        println!("# commit: {}", ccfg.commit.spec());
+    }
     let exp = Experiment::new(ccfg.fed.clone())?;
     let init = exp.spec.init_flat(exp.cfg.seed);
+    let commit = ccfg.commit.clone();
     let mut cluster = ClusterRun::new(ccfg, &exp.train, init)?;
     if let Some(path) = &record {
         cluster.record_to(std::path::Path::new(path))?;
@@ -768,6 +814,17 @@ fn cmd_cluster(args: &Args) -> anyhow::Result<()> {
         "# contention: queued {:.1}s up / {:.1}s down; peak wire concurrency {} up / {} down",
         st.up_queue_seconds, st.down_queue_seconds, st.peak_up_concurrency, st.peak_down_concurrency
     );
+    if !commit.is_deadline() {
+        println!(
+            "# commit {}: early_commits={} deferred={} ({:.3} MB carried) folded={} expired={}",
+            commit.spec(),
+            st.early_commits,
+            st.stale_deferrals,
+            bits_to_mb(st.stale_defer_bits),
+            st.stale_folds,
+            st.stale_expired
+        );
+    }
     if cluster.fault_plan().is_some_and(|p| p.is_active()) {
         println!(
             "# faults: corrupt={} lost={} retransmits={} ({:.3} MB re-billed) \
@@ -994,6 +1051,9 @@ examples:
   repro cluster --iters 100 --record cluster.fstx
   repro cluster --faults corrupt=0.01,loss=0.02,shard_crash=0.005 --iters 200
   repro train --method stc:0.01 --iters 200 --faults loss=0.05,quorum=0.6
+  repro cluster --straggler-frac 0.3 --commit quorum:k=7 --iters 200
+  repro cluster --straggler-frac 0.3 --commit buffered:k=7,max_staleness=2 \\
+      --iters 200 --record async.fstx
   repro alpha --ks 1,8,64 --trials 100
   repro protocols
   repro executions
@@ -1021,6 +1081,18 @@ faults (train + cluster): --faults <spec> arms deterministic fault
   with direct-to-root failover, flaky-coordinator aborts and a
   quorum-commit gate (quorum=F of drawn participants). Faulted --record
   runs write v4 fault frames so replay re-verifies recovery billing.
+
+commit (train + cluster + serve): --commit <spec> picks when the
+  aggregation round commits: deadline (default — bit-identical to older
+  builds) | quorum:k=K (commit at the K-th completed upload; later
+  on-deadline arrivals re-bank like late uploads) |
+  buffered:k=K,max_staleness=S (commit at the K-th upload; later
+  arrivals carry into the next round's aggregate at a staleness weight,
+  1/sqrt(1+s) by default). The policies only diverge where uploads have
+  distinct completion times — the cluster driver's simulated transport;
+  serial/net rounds deliver everything at one instant and stay
+  bit-identical across policies. Buffered --record runs write v5 stale
+  frames so replay re-verifies the fold-in billing.
 
 telemetry (train + cluster, pure observers — never change the run):
   --trace FILE.jsonl   deterministic JSONL event stream (simulated time;

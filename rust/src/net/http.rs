@@ -8,14 +8,23 @@
 //! dump. Everything else is 404. The server is a single background
 //! thread over a non-blocking listener; it holds a cloned hub handle, so
 //! scrapes see live counters while the round loop runs.
+//!
+//! Scrapes prefer the *per-round snapshot*: attach the observer from
+//! [`MetricsServer::round_refresher`] to the run and every round commit
+//! re-renders the exposition text into a shared cell, so a scrape serves
+//! a round-consistent snapshot (never a mid-round render) and a scrape
+//! arriving mid-run sees the latest committed round, not whatever was
+//! current at process start. Before the first commit — or without the
+//! refresher — scrapes fall back to a live render.
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::session::{Observer, RoundRecord, RunEnd};
 use crate::telemetry::metrics::MetricsHub;
 
 /// Handle to the background metrics server; stops on drop.
@@ -23,6 +32,36 @@ pub struct MetricsServer {
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
+    snapshot: Arc<Mutex<Option<String>>>,
+}
+
+/// Session observer that re-renders the hub's Prometheus exposition into
+/// the server's snapshot cell after every round commit (and once more at
+/// finish, so the final scrape reflects settlement).
+pub struct SnapshotRefresher {
+    hub: MetricsHub,
+    cell: Arc<Mutex<Option<String>>>,
+}
+
+impl SnapshotRefresher {
+    fn refresh(&self) {
+        let text = self.hub.prometheus();
+        if let Ok(mut cell) = self.cell.lock() {
+            *cell = Some(text);
+        }
+    }
+}
+
+impl Observer for SnapshotRefresher {
+    fn on_broadcast(&mut self, _rec: &RoundRecord) -> anyhow::Result<()> {
+        self.refresh();
+        Ok(())
+    }
+
+    fn on_finish(&mut self, _fin: &RunEnd) -> anyhow::Result<()> {
+        self.refresh();
+        Ok(())
+    }
 }
 
 impl MetricsServer {
@@ -34,6 +73,8 @@ impl MetricsServer {
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
+        let snapshot: Arc<Mutex<Option<String>>> = Arc::new(Mutex::new(None));
+        let snapshot2 = Arc::clone(&snapshot);
         let handle = std::thread::Builder::new()
             .name("fedstc-metrics-http".into())
             .spawn(move || {
@@ -42,7 +83,7 @@ impl MetricsServer {
                         Ok((stream, _)) => {
                             // one request per connection, best effort —
                             // a scrape failure must never hurt the run
-                            let _ = respond(stream, &hub);
+                            let _ = respond(stream, &hub, &snapshot2);
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(25));
@@ -51,7 +92,14 @@ impl MetricsServer {
                     }
                 }
             })?;
-        Ok(MetricsServer { addr, stop, handle: Some(handle) })
+        Ok(MetricsServer { addr, stop, handle: Some(handle), snapshot })
+    }
+
+    /// The observer that keeps `/metrics` serving per-round snapshots;
+    /// attach it to the run *after* the hub's own observer handle so each
+    /// render sees the freshly committed round.
+    pub fn round_refresher(&self, hub: MetricsHub) -> SnapshotRefresher {
+        SnapshotRefresher { hub, cell: Arc::clone(&self.snapshot) }
     }
 
     pub fn stop(&mut self) {
@@ -68,7 +116,11 @@ impl Drop for MetricsServer {
     }
 }
 
-fn respond(mut stream: TcpStream, hub: &MetricsHub) -> std::io::Result<()> {
+fn respond(
+    mut stream: TcpStream,
+    hub: &MetricsHub,
+    snapshot: &Mutex<Option<String>>,
+) -> std::io::Result<()> {
     stream.set_read_timeout(Some(Duration::from_millis(500))).ok();
     // read just enough for the request line; ignore headers
     let mut buf = [0u8; 2048];
@@ -80,7 +132,17 @@ fn respond(mut stream: TcpStream, hub: &MetricsHub) -> std::io::Result<()> {
         .and_then(|line| line.split_whitespace().nth(1))
         .unwrap_or("/");
     let (status, ctype, body) = match path {
-        "/metrics" => ("200 OK", "text/plain; version=0.0.4", hub.prometheus()),
+        // prefer the per-round snapshot; live render before the first
+        // commit (or when no refresher is attached)
+        "/metrics" => (
+            "200 OK",
+            "text/plain; version=0.0.4",
+            snapshot
+                .lock()
+                .ok()
+                .and_then(|cell| cell.clone())
+                .unwrap_or_else(|| hub.prometheus()),
+        ),
         "/metrics.json" => ("200 OK", "application/json", hub.json().dump()),
         _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
     };

@@ -65,7 +65,7 @@ pub mod serve;
 pub mod transport;
 
 pub use client::{run_join, ClientRuntime, JoinSummary};
-pub use http::MetricsServer;
+pub use http::{MetricsServer, SnapshotRefresher};
 pub use serve::{run_coordinator, serve, NetRunStats, ServeReport};
 pub use transport::{
     partition, LocalTransport, NetUpload, RetryPolicy, RoundTransport, TcpCoordinator,

@@ -19,6 +19,7 @@
 use std::net::TcpListener;
 use std::time::Duration;
 
+use crate::async_agg::CommitPolicy;
 use crate::compression::Message;
 use crate::config::FedConfig;
 use crate::fault::FaultPlan;
@@ -57,6 +58,7 @@ pub fn serve(
     peers: usize,
     observers: Vec<Box<dyn Observer>>,
     faults: Option<FaultPlan>,
+    commit: CommitPolicy,
     timeout: Duration,
     quiet: bool,
 ) -> anyhow::Result<ServeReport> {
@@ -71,7 +73,7 @@ pub fn serve(
         retry,
         quiet,
     )?;
-    let (log, stats) = run_coordinator(&exp, &mut transport, observers, faults)?;
+    let (log, stats) = run_coordinator(&exp, &mut transport, observers, faults, commit)?;
     Ok(ServeReport { log, stats, transport: transport.stats() })
 }
 
@@ -84,6 +86,7 @@ pub fn run_coordinator(
     transport: &mut dyn RoundTransport,
     observers: Vec<Box<dyn Observer>>,
     faults: Option<FaultPlan>,
+    commit: CommitPolicy,
 ) -> anyhow::Result<(TrainingLog, NetRunStats)> {
     anyhow::ensure!(
         exp.cfg.model == "logreg",
@@ -94,6 +97,11 @@ pub fn run_coordinator(
     if let Some(plan) = faults {
         session.set_fault_plan(plan)?;
     }
+    // like the serial driver, the coordinator collects every upload at
+    // the same logical instant, so quorum/buffered partition identically
+    // to deadline here — the policy is armed so the session seam (and a
+    // recorded transcript's version/capabilities) match the twin run
+    session.set_commit_policy(commit)?;
     for o in observers {
         session.add_observer(o);
     }

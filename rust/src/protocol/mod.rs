@@ -267,6 +267,19 @@ pub trait Protocol: Send {
         (cache.sum_last(s) as usize).min(dense)
     }
 
+    /// Async aggregation: the weight a `s`-rounds-stale buffered upload
+    /// contributes at when a [`crate::async_agg::CommitPolicy::Buffered`]
+    /// run folds it in (`s ≥ 1`; a fresh upload is weight 1). The
+    /// default is the shared FedBuff-style polynomial discount
+    /// `1/sqrt(1+s)` ([`crate::async_agg::default_stale_weight`]);
+    /// methods whose updates age differently (e.g. sign-based votes,
+    /// which stay valid longer than magnitudes) may override. The
+    /// unweighted remainder `(1-w)` of the update is re-banked into the
+    /// client's residual by the engine, preserving §V-B semantics.
+    fn stale_weight(&self, staleness: usize) -> f32 {
+        crate::async_agg::default_stale_weight(staleness)
+    }
+
     /// Server-side error-feedback residual R, if this protocol keeps one
     /// (diagnostics + conformance tests). None before the first round.
     fn server_residual(&self) -> Option<&[f32]> {

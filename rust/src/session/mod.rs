@@ -54,6 +54,7 @@ pub use transcript::{
     TranscriptEnd, TranscriptRound, TranscriptWriter,
 };
 
+use crate::async_agg::{AsyncEvent, CommitPolicy, FoldOutcome, StaleUpdate};
 use crate::cluster::executor::{ClientResult, RoundPlan, TrainerFactory, WorkerPool};
 use crate::cluster::transport::Transport;
 use crate::compression::Message;
@@ -249,6 +250,17 @@ pub trait Observer {
         Ok(())
     }
 
+    /// Async-aggregation activity under a non-deadline
+    /// [`CommitPolicy`](crate::async_agg::CommitPolicy): an upload was
+    /// deferred into the stale buffer, or a buffered entry folded into
+    /// the upcoming aggregate / expired. Defers fire after the round's
+    /// on-time uploads; folds and expiries fire just before the
+    /// broadcast they land in. Deadline runs fire nothing, so observer
+    /// streams stay byte-identical to pre-async builds.
+    fn on_async(&mut self, _ev: &AsyncEvent) -> anyhow::Result<()> {
+        Ok(())
+    }
+
     /// The round closed: broadcast computed, applied and billed.
     fn on_broadcast(&mut self, _rec: &RoundRecord) -> anyhow::Result<()> {
         Ok(())
@@ -307,6 +319,12 @@ pub struct Session {
     /// only advanced when an active plan is armed, so runs without
     /// `--faults` stay bit-identical to pre-fault-layer builds
     pub(crate) fault_rng: Pcg64,
+    /// when rounds commit (see [`crate::async_agg`]); the default
+    /// `Deadline` leaves every driver bit-identical to pre-async builds
+    pub(crate) commit: CommitPolicy,
+    /// stragglers carried across rounds by a `Buffered` policy, in
+    /// defer order (drained by [`Session::fold_stale`])
+    pub(crate) stale_buf: Vec<StaleUpdate>,
     observers: Vec<Box<dyn Observer>>,
     started: bool,
     settled: bool,
@@ -356,6 +374,8 @@ impl Session {
             round_ids: Vec::new(),
             fault: None,
             fault_rng,
+            commit: CommitPolicy::Deadline,
+            stale_buf: Vec::new(),
             observers: Vec::new(),
             started: false,
             settled: false,
@@ -389,6 +409,32 @@ impl Session {
         self.fault.as_ref()
     }
 
+    /// Choose when rounds commit (see [`crate::async_agg`]). Must be
+    /// called before the first round; validates the policy. The default
+    /// [`CommitPolicy::Deadline`] — and any policy whose commit instant
+    /// never beats the deadline, e.g. `quorum:k=S` — leaves the run
+    /// bit-identical to a pre-async build (pinned by
+    /// `tests/property_async.rs`).
+    pub fn set_commit_policy(&mut self, policy: CommitPolicy) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.server.round == 0 && !self.started,
+            "choose the commit policy before the first round"
+        );
+        policy.validate()?;
+        self.commit = policy;
+        Ok(())
+    }
+
+    /// The active commit policy.
+    pub fn commit_policy(&self) -> &CommitPolicy {
+        &self.commit
+    }
+
+    /// Number of stragglers currently carried in the stale buffer.
+    pub fn stale_buffered(&self) -> usize {
+        self.stale_buf.len()
+    }
+
     /// Attach a transcript recorder writing to `path`. Must be called
     /// before the first round so the header captures W^(0).
     /// `sync_derivable` marks recordings whose download accounting can
@@ -406,9 +452,13 @@ impl Session {
         );
         // fault frames need the v4 format; unfaulted (and inactive-plan)
         // recordings keep writing v3 so their bytes stay identical to
-        // pre-fault-layer builds
+        // pre-fault-layer builds. Stale frames need v5, and only a
+        // Buffered policy can ever write one, so deadline/quorum
+        // recordings keep their pre-async bytes.
         let fault_capable = self.fault.as_ref().is_some_and(|p| p.is_active());
-        let writer = TranscriptWriter::create_with_faults(path, sync_derivable, fault_capable)?;
+        let stale_capable = self.commit.is_buffered();
+        let writer =
+            TranscriptWriter::create_with_caps(path, sync_derivable, fault_capable, stale_capable)?;
         self.add_observer(Box::new(writer));
         Ok(())
     }
@@ -581,6 +631,113 @@ impl Session {
             o.on_fault(&rec)?;
         }
         Ok(())
+    }
+
+    /// Notify observers of async-aggregation activity (see
+    /// [`Observer::on_async`]).
+    pub fn notify_async(&mut self, ev: &AsyncEvent) -> anyhow::Result<()> {
+        for o in &mut self.observers {
+            o.on_async(ev)?;
+        }
+        Ok(())
+    }
+
+    /// Defer one delivered-but-past-commit upload into the stale buffer
+    /// (Buffered policy): it will fold into a later round's aggregate
+    /// at a staleness weight. `bits` is the upload's billed frame
+    /// payload — already in the ledger; carried so transcripts re-bill
+    /// it at the origin round on replay. The origin round is the
+    /// server's pre-commit round counter.
+    pub fn defer_stale(
+        &mut self,
+        client_id: usize,
+        msg: Message,
+        bits: u64,
+    ) -> anyhow::Result<()> {
+        let origin_round = self.server.round;
+        let ev = AsyncEvent::Defer { client_id, origin_round, bits, msg: msg.clone() };
+        self.stale_buf.push(StaleUpdate { client_id, origin_round, bits, msg });
+        self.notify_async(&ev)
+    }
+
+    /// Fold buffered stragglers from earlier rounds into the aggregate
+    /// the caller is about to commit (see [`crate::async_agg`]). Each
+    /// entry with `origin_round < server.round` leaves the buffer:
+    /// within the policy's `max_staleness` it is appended to `msgs` as
+    /// a dense message pre-scaled by the protocol's
+    /// [`Protocol::stale_weight`], with the unapplied remainder `(1-w)`
+    /// re-banked into the client residual; past it the entry expires
+    /// and re-banks whole (§V-B dropout semantics — delayed, never
+    /// lost). Entries deferred against the current round stay buffered.
+    /// Returns the outcomes so drivers can mirror them into
+    /// [`ClusterEvent`](crate::telemetry::ClusterEvent)s;
+    /// [`Observer::on_async`] fires either way.
+    pub fn fold_stale(&mut self, msgs: &mut Vec<Message>) -> anyhow::Result<Vec<FoldOutcome>> {
+        let mut outcomes = Vec::new();
+        if self.stale_buf.is_empty() {
+            return Ok(outcomes);
+        }
+        let round = self.server.round;
+        let max_staleness = match self.commit {
+            CommitPolicy::Buffered { max_staleness, .. } => max_staleness,
+            _ => 0,
+        };
+        let dim = self.server.dim();
+        let mut kept = Vec::new();
+        for entry in std::mem::take(&mut self.stale_buf) {
+            if entry.origin_round >= round {
+                kept.push(entry);
+                continue;
+            }
+            let staleness = round - entry.origin_round;
+            if staleness > max_staleness {
+                let residual = &mut self.clients[entry.client_id].residual;
+                if !residual.is_empty() {
+                    entry.msg.add_to(residual, 1.0);
+                }
+                let outcome = FoldOutcome {
+                    client_id: entry.client_id,
+                    origin_round: entry.origin_round,
+                    staleness,
+                    weight: 1.0,
+                    expired: true,
+                };
+                self.notify_async(&AsyncEvent::Expire {
+                    client_id: entry.client_id,
+                    origin_round: entry.origin_round,
+                    staleness,
+                })?;
+                outcomes.push(outcome);
+                continue;
+            }
+            let weight = self.up_proto.stale_weight(staleness);
+            // pre-scale into a dense message so the aggregation rule
+            // treats the fold like any other member of the round slice
+            let mut scaled = vec![0.0f32; dim];
+            entry.msg.add_to(&mut scaled, weight);
+            msgs.push(Message::Dense { values: scaled });
+            let residual = &mut self.clients[entry.client_id].residual;
+            if !residual.is_empty() {
+                entry.msg.add_to(residual, 1.0 - weight);
+            }
+            let outcome = FoldOutcome {
+                client_id: entry.client_id,
+                origin_round: entry.origin_round,
+                staleness,
+                weight,
+                expired: false,
+            };
+            self.notify_async(&AsyncEvent::Fold {
+                client_id: entry.client_id,
+                origin_round: entry.origin_round,
+                staleness,
+                weight,
+                bits: entry.bits,
+            })?;
+            outcomes.push(outcome);
+        }
+        self.stale_buf = kept;
+        Ok(outcomes)
     }
 
     /// Notify observers of an evaluation the driver performed.
@@ -801,9 +958,15 @@ impl Session {
 
         // 4. server aggregates, applies, and enqueues the broadcast; the
         //    broadcast's download cost is charged to clients when they
-        //    next synchronise (straggler_download_bits).
-        let msgs = std::mem::take(&mut self.round_msgs);
+        //    next synchronise (straggler_download_bits). Async seam:
+        //    buffered stragglers from earlier rounds fold in first — a
+        //    no-op in this driver (with no transport clock every upload
+        //    completes at the same instant, so none is ever past the
+        //    commit; K-of-S policies bite in the cluster tick machine).
+        let mut msgs = std::mem::take(&mut self.round_msgs);
+        self.fold_stale(&mut msgs)?;
         let down_bits = self.commit_round(&msgs, mean_loss)?;
+        msgs.truncate(self.round_ids.len());
         self.round_msgs = msgs;
 
         // 5. root→shard return hop: every non-empty shard relays the
@@ -930,6 +1093,15 @@ impl Session {
             return Ok(());
         }
         self.finish_notified = true;
+        // a run can end with stragglers still buffered: their updates
+        // re-bank whole so no §V-B mass is lost (residuals are client
+        // state — the final model, ledger and transcript are unaffected)
+        for entry in std::mem::take(&mut self.stale_buf) {
+            let residual = &mut self.clients[entry.client_id].residual;
+            if !residual.is_empty() {
+                entry.msg.add_to(residual, 1.0);
+            }
+        }
         let fin = RunEnd {
             params: &self.server.params,
             ledger: &self.ledger,

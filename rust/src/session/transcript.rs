@@ -43,6 +43,28 @@
 //!          re-derive the aborted round's §V-B sync pricing. Unfaulted
 //!          recordings keep writing [`TRANSCRIPT_BASE_VERSION`], so
 //!          their bytes stay identical to pre-fault builds.)
+//! stale:   u8 tag=6
+//!          u32 n · n × { u32 client · u32 origin_round · u64 bits
+//!                        u32 len · Message::to_bytes }   (deferred)
+//!          u32 m · m × { u32 client · u32 origin_round
+//!                        u32 staleness · f32 weight }     (folded)
+//!          u32 k · k × { u32 client · u32 origin_round
+//!                        u32 staleness }                  (expired)
+//!          (version ≥ 5 only, written by stale-capable recordings —
+//!          sessions with a
+//!          [`CommitPolicy::Buffered`](crate::async_agg::CommitPolicy)
+//!          armed — immediately before the round frame it annotates,
+//!          for rounds with stale-buffer activity. *Deferred* entries
+//!          are uploads that beat the grace deadline but missed the
+//!          commit instant: their wire bits were billed this round but
+//!          the payload is **excluded** from the round frame's upload
+//!          list — it was not aggregated yet. *Folded* entries record a
+//!          deferred upload from an earlier round entering this round's
+//!          aggregate at the protocol's staleness weight
+//!          ([`Protocol::stale_weight`](crate::protocol::Protocol));
+//!          *expired* entries aged past `max_staleness` and were
+//!          re-banked into the client residual at weight 1. Non-buffered
+//!          recordings keep their previous version bytes.)
 //! round:   u8 tag=1 · u32 round · f32 mean_loss
 //!          u32 n · n × u32 participant ids
 //!          u32 m · m × { u32 client · u32 len · Message::to_bytes }
@@ -53,9 +75,18 @@
 //!          u64 uploads · u64 downloads · u64 final_checksum
 //! ```
 //!
-//! Version 1 files (no sync frames, no [`FLAG_SYNC_EVENTS`]) and
-//! version 2 files (no shard frames) remain fully readable; the
+//! Version 1 files (no sync frames, no [`FLAG_SYNC_EVENTS`]),
+//! version 2 files (no shard frames), version 3 files (no fault frames)
+//! and version 4 files (no stale frames) remain fully readable; the
 //! checked-in golden fixture pins that.
+//!
+//! Replay of a version 5 recording bills each deferred upload's bits at
+//! its origin round (matching the live run, which pays for the wire
+//! transfer on delivery), stashes the payload, and at the fold round
+//! re-derives the staleness weight from the protocol, reconstructs the
+//! scaled fold message, and appends it after the fresh uploads — so the
+//! recorded per-round checksums verify the staleness-weighted fold-in
+//! exactly.
 //!
 //! Upload payloads are exactly [`Message::to_bytes`] frames — the same
 //! bytes that crossed the simulated wire — so the transcript reuses (and
@@ -81,6 +112,7 @@
 //! aggregated, so the transcript does not carry them).
 
 use super::{FaultRecord, Observer, RoundRecord, RunEnd, RunMeta, ShardRound};
+use crate::async_agg::AsyncEvent;
 use crate::compression::Message;
 use crate::config::Method;
 use crate::coordinator::Server;
@@ -90,11 +122,17 @@ use std::path::Path;
 
 /// First four bytes of every transcript.
 pub const TRANSCRIPT_MAGIC: [u8; 4] = *b"FSTX";
-/// Current format version (readers accept 1..=this). Only fault-capable
-/// recordings (an *active* fault plan was armed) write it; everything
-/// else writes [`TRANSCRIPT_BASE_VERSION`] so unfaulted transcripts stay
+/// Version written by fault-capable recordings (an *active* fault plan
+/// was armed) that are not stale-capable; everything below writes
+/// [`TRANSCRIPT_BASE_VERSION`] so unfaulted transcripts stay
 /// byte-identical to pre-fault builds.
 pub const TRANSCRIPT_VERSION: u16 = 4;
+/// Current format version (readers accept 1..=this), written only by
+/// stale-capable recordings — sessions with a
+/// [`CommitPolicy::Buffered`](crate::async_agg::CommitPolicy) armed —
+/// which may carry `FRAME_STALE` straggler frames. Deadline/quorum
+/// recordings keep their previous version bytes.
+pub const TRANSCRIPT_ASYNC_VERSION: u16 = 5;
 /// Version written by recordings with no active fault plan.
 pub const TRANSCRIPT_BASE_VERSION: u16 = 3;
 /// Oldest version this build still reads.
@@ -112,6 +150,7 @@ const FRAME_END: u8 = 2;
 const FRAME_SYNC: u8 = 3;
 const FRAME_SHARD: u8 = 4;
 const FRAME_FAULT: u8 = 5;
+const FRAME_STALE: u8 = 6;
 
 /// FNV-1a 64 over the little-endian f32 bit patterns — the model
 /// fingerprint recorded per round and re-checked at replay.
@@ -158,6 +197,10 @@ pub struct TranscriptWriter {
     /// [`FaultPlan`](crate::fault) was armed); plain recordings stay on
     /// [`TRANSCRIPT_BASE_VERSION`] and byte-identical to older builds
     fault_capable: bool,
+    /// write the version-5 format with stale frames (a buffered
+    /// [`CommitPolicy`](crate::async_agg::CommitPolicy) was armed) and
+    /// accept [`Observer::on_async`] events
+    stale_capable: bool,
     header_written: bool,
     /// current round buffer, flushed as one frame at `on_broadcast`
     participants: Vec<u32>,
@@ -173,6 +216,14 @@ pub struct TranscriptWriter {
     /// `FRAME_FAULT` ahead of its round frame (aborted records are
     /// written immediately — no round frame ever follows them)
     pending_fault: Option<FaultRecord>,
+    /// stale-buffer activity of the round being buffered (buffered
+    /// commit policy only), flushed as one `FRAME_STALE` ahead of its
+    /// round frame: (client, origin_round, billed bits, payload)
+    pending_deferred: Vec<(u32, u32, u64, Vec<u8>)>,
+    /// (client, origin_round, staleness, fold weight)
+    pending_folds: Vec<(u32, u32, u32, f32)>,
+    /// (client, origin_round, staleness)
+    pending_expired: Vec<(u32, u32, u32)>,
 }
 
 impl TranscriptWriter {
@@ -189,10 +240,26 @@ impl TranscriptWriter {
         sync_derivable: bool,
         fault_capable: bool,
     ) -> anyhow::Result<Self> {
+        Self::create_with_caps(path, sync_derivable, fault_capable, false)
+    }
+
+    /// [`TranscriptWriter::create`] with both capability switches:
+    /// `fault_capable` recordings accept [`Observer::on_fault`] events
+    /// and write version ≥ 4; `stale_capable` recordings (a buffered
+    /// [`CommitPolicy`](crate::async_agg::CommitPolicy) is armed) accept
+    /// [`Observer::on_async`] events and write
+    /// [`TRANSCRIPT_ASYNC_VERSION`].
+    pub fn create_with_caps(
+        path: &Path,
+        sync_derivable: bool,
+        fault_capable: bool,
+        stale_capable: bool,
+    ) -> anyhow::Result<Self> {
         let file = std::fs::File::create(path)
             .map_err(|e| anyhow::anyhow!("creating transcript {}: {e}", path.display()))?;
         let mut w = Self::new(Box::new(std::io::BufWriter::new(file)), sync_derivable);
         w.fault_capable = fault_capable;
+        w.stale_capable = stale_capable;
         Ok(w)
     }
 
@@ -202,18 +269,27 @@ impl TranscriptWriter {
             sink,
             sync_derivable,
             fault_capable: false,
+            stale_capable: false,
             header_written: false,
             participants: Vec::new(),
             uploads: Vec::new(),
             pending_syncs: Vec::new(),
             pending_shards: Vec::new(),
             pending_fault: None,
+            pending_deferred: Vec::new(),
+            pending_folds: Vec::new(),
+            pending_expired: Vec::new(),
         }
     }
 
     /// Enable fault frames on a sink-backed writer (tests/drivers).
     pub fn set_fault_capable(&mut self, on: bool) {
         self.fault_capable = on;
+    }
+
+    /// Enable stale frames on a sink-backed writer (tests/drivers).
+    pub fn set_stale_capable(&mut self, on: bool) {
+        self.stale_capable = on;
     }
 
     /// Write any buffered sync events as one `FRAME_SYNC` ahead of the
@@ -291,6 +367,51 @@ impl TranscriptWriter {
         }
         Ok(())
     }
+
+    /// Write the round's buffered stale-buffer activity as one
+    /// `FRAME_STALE` ahead of the round frame it annotates.
+    fn flush_stale(&mut self) -> anyhow::Result<()> {
+        if self.pending_deferred.is_empty()
+            && self.pending_folds.is_empty()
+            && self.pending_expired.is_empty()
+        {
+            return Ok(());
+        }
+        let mut buf = Vec::new();
+        buf.push(FRAME_STALE);
+        put_u32(&mut buf, self.pending_deferred.len());
+        for (client, origin, bits, frame) in &self.pending_deferred {
+            put_u32(&mut buf, *client as usize);
+            put_u32(&mut buf, *origin as usize);
+            put_u64(&mut buf, *bits);
+            put_u32(&mut buf, frame.len());
+            buf.extend_from_slice(frame);
+        }
+        put_u32(&mut buf, self.pending_folds.len());
+        for (client, origin, staleness, weight) in &self.pending_folds {
+            put_u32(&mut buf, *client as usize);
+            put_u32(&mut buf, *origin as usize);
+            put_u32(&mut buf, *staleness as usize);
+            put_f32(&mut buf, *weight);
+        }
+        put_u32(&mut buf, self.pending_expired.len());
+        for (client, origin, staleness) in &self.pending_expired {
+            put_u32(&mut buf, *client as usize);
+            put_u32(&mut buf, *origin as usize);
+            put_u32(&mut buf, *staleness as usize);
+        }
+        self.sink.write_all(&buf)?;
+        self.pending_deferred.clear();
+        self.pending_folds.clear();
+        self.pending_expired.clear();
+        Ok(())
+    }
+
+    fn stale_pending(&self) -> bool {
+        !self.pending_deferred.is_empty()
+            || !self.pending_folds.is_empty()
+            || !self.pending_expired.is_empty()
+    }
 }
 
 impl Observer for TranscriptWriter {
@@ -299,7 +420,13 @@ impl Observer for TranscriptWriter {
         buf.extend_from_slice(&TRANSCRIPT_MAGIC);
         put_u16(
             &mut buf,
-            if self.fault_capable { TRANSCRIPT_VERSION } else { TRANSCRIPT_BASE_VERSION },
+            if self.stale_capable {
+                TRANSCRIPT_ASYNC_VERSION
+            } else if self.fault_capable {
+                TRANSCRIPT_VERSION
+            } else {
+                TRANSCRIPT_BASE_VERSION
+            },
         );
         buf.push(if self.sync_derivable { FLAG_SYNC_DERIVABLE } else { FLAG_SYNC_EVENTS });
         let spec = meta.method_spec.as_bytes();
@@ -364,7 +491,12 @@ impl Observer for TranscriptWriter {
             // the aborted round's §V-B syncs precede its fault frame so
             // the reader can attach them to the aborted entry; uploads
             // and shard hops never persist — their billing lives in the
-            // record's extras
+            // record's extras. An abort re-banks every delivered upload
+            // and defers/folds nothing, so stale sections cannot exist.
+            anyhow::ensure!(
+                !self.stale_pending(),
+                "stale-buffer activity buffered for a round that aborted"
+            );
             self.flush_syncs()?;
             self.uploads.clear();
             self.pending_shards.clear();
@@ -376,9 +508,34 @@ impl Observer for TranscriptWriter {
         Ok(())
     }
 
+    fn on_async(&mut self, ev: &AsyncEvent) -> anyhow::Result<()> {
+        anyhow::ensure!(
+            self.stale_capable,
+            "stale-buffer activity reached a non-stale-capable transcript recorder \
+             (arm the buffered commit policy before attaching the recorder)"
+        );
+        let id = |c: usize| u32::try_from(c).expect("client id exceeds u32");
+        let rd = |r: usize| u32::try_from(r).expect("round exceeds u32");
+        match ev {
+            AsyncEvent::Defer { client_id, origin_round, bits, msg } => {
+                self.pending_deferred
+                    .push((id(*client_id), rd(*origin_round), *bits, msg.to_bytes()));
+            }
+            AsyncEvent::Fold { client_id, origin_round, staleness, weight, .. } => {
+                self.pending_folds
+                    .push((id(*client_id), rd(*origin_round), rd(*staleness), *weight));
+            }
+            AsyncEvent::Expire { client_id, origin_round, staleness } => {
+                self.pending_expired.push((id(*client_id), rd(*origin_round), rd(*staleness)));
+            }
+        }
+        Ok(())
+    }
+
     fn on_broadcast(&mut self, rec: &RoundRecord) -> anyhow::Result<()> {
         self.flush_syncs()?;
         self.flush_fault()?;
+        self.flush_stale()?;
         self.flush_shards()?;
         let mut buf = Vec::new();
         buf.push(FRAME_ROUND);
@@ -416,6 +573,12 @@ impl Observer for TranscriptWriter {
             self.pending_fault.is_none(),
             "a buffered fault record never saw its round frame"
         );
+        // a finishing session drains leftover stale entries straight
+        // into client residuals without events, so nothing may dangle
+        anyhow::ensure!(
+            !self.stale_pending(),
+            "buffered stale-frame sections never saw their round frame"
+        );
         self.flush_syncs()?; // settlement sweep syncs belong to the end frame
         let mut buf = Vec::new();
         buf.push(FRAME_END);
@@ -434,6 +597,41 @@ impl Observer for TranscriptWriter {
 // ---------------------------------------------------------------------
 // Reader
 // ---------------------------------------------------------------------
+
+/// A deferred straggler upload recorded in a `FRAME_STALE` (version ≥ 5
+/// buffered recordings): it beat the grace deadline but missed the
+/// commit instant, so its bits were billed at `origin_round` while the
+/// payload waits in the stale buffer for a later fold.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StaleDeferRec {
+    pub client: usize,
+    /// pre-commit server round counter when the upload was deferred
+    pub origin_round: usize,
+    /// wire bits billed for the deferred upload at its origin round
+    pub bits: u64,
+    /// the deferred payload — excluded from its round frame's uploads
+    pub msg: Message,
+}
+
+/// A stale-buffer entry folded into a later round's aggregate.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StaleFoldRec {
+    pub client: usize,
+    pub origin_round: usize,
+    /// rounds the entry waited (fold round − origin round)
+    pub staleness: usize,
+    /// the protocol's staleness weight the update was scaled by
+    pub weight: f32,
+}
+
+/// A stale-buffer entry that aged past `max_staleness` and was re-banked
+/// into the client residual at weight 1 instead of folded.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct StaleExpireRec {
+    pub client: usize,
+    pub origin_round: usize,
+    pub staleness: usize,
+}
 
 /// One recorded communication round — committed, or (version ≥ 4)
 /// aborted at the fault layer's quorum gate.
@@ -465,6 +663,14 @@ pub struct TranscriptRound {
     /// the round's fault activity (version ≥ 4 recordings with an
     /// active fault plan; `None` on quiet rounds and older files)
     pub fault: Option<FaultRecord>,
+    /// uploads deferred into the stale buffer during this round
+    /// (version ≥ 5 buffered recordings; empty otherwise)
+    pub stale_deferred: Vec<StaleDeferRec>,
+    /// earlier deferrals folded into this round's aggregate, in fold
+    /// order — appended after the fresh uploads
+    pub stale_folds: Vec<StaleFoldRec>,
+    /// earlier deferrals that expired at this round's fold sweep
+    pub stale_expired: Vec<StaleExpireRec>,
     /// true for aborted entries: no uploads/checksums were recorded
     /// (the round never committed — `mean_loss` is NaN, billing lives
     /// in `fault`'s extras, syncs in `pre_syncs` or `fault.participants`)
@@ -526,9 +732,9 @@ impl Transcript {
         anyhow::ensure!(magic == TRANSCRIPT_MAGIC, "not a transcript (bad magic {magic:02x?})");
         let version = r.u16()?;
         anyhow::ensure!(
-            (TRANSCRIPT_MIN_VERSION..=TRANSCRIPT_VERSION).contains(&version),
+            (TRANSCRIPT_MIN_VERSION..=TRANSCRIPT_ASYNC_VERSION).contains(&version),
             "unsupported transcript version {version} \
-             (this build reads {TRANSCRIPT_MIN_VERSION}..={TRANSCRIPT_VERSION})"
+             (this build reads {TRANSCRIPT_MIN_VERSION}..={TRANSCRIPT_ASYNC_VERSION})"
         );
         let flags = r.u8()?;
         let spec_len = r.u16()? as usize;
@@ -547,6 +753,9 @@ impl Transcript {
         let mut pending_syncs: Vec<(usize, u64)> = Vec::new();
         let mut pending_shards: Vec<ShardRound> = Vec::new();
         let mut pending_fault: Option<FaultRecord> = None;
+        let mut pending_deferred: Vec<StaleDeferRec> = Vec::new();
+        let mut pending_folds: Vec<StaleFoldRec> = Vec::new();
+        let mut pending_expired: Vec<StaleExpireRec> = Vec::new();
         let mut end_syncs: Vec<(usize, u64)> = Vec::new();
         let end = loop {
             match r.u8().map_err(|_| anyhow::anyhow!("transcript truncated: no end frame"))? {
@@ -631,6 +840,12 @@ impl Transcript {
                             pending_shards.is_empty(),
                             "shard frame precedes an aborted fault frame"
                         );
+                        anyhow::ensure!(
+                            pending_deferred.is_empty()
+                                && pending_folds.is_empty()
+                                && pending_expired.is_empty(),
+                            "stale frame precedes an aborted fault frame"
+                        );
                         rounds.push(TranscriptRound {
                             round,
                             mean_loss: f32::NAN,
@@ -643,10 +858,60 @@ impl Transcript {
                             pre_syncs: std::mem::take(&mut pending_syncs),
                             shards: Vec::new(),
                             fault: Some(f),
+                            stale_deferred: Vec::new(),
+                            stale_folds: Vec::new(),
+                            stale_expired: Vec::new(),
                             aborted: true,
                         });
                     } else {
                         pending_fault = Some(f);
+                    }
+                }
+                FRAME_STALE => {
+                    anyhow::ensure!(
+                        version >= TRANSCRIPT_ASYNC_VERSION,
+                        "stale frame in a version {version} transcript \
+                         (introduced in version {TRANSCRIPT_ASYNC_VERSION})"
+                    );
+                    anyhow::ensure!(
+                        pending_deferred.is_empty()
+                            && pending_folds.is_empty()
+                            && pending_expired.is_empty(),
+                        "two stale frames before a round frame"
+                    );
+                    let n = r.u32()? as usize;
+                    pending_deferred.reserve(n.min(1 << 20));
+                    for _ in 0..n {
+                        let client = r.u32()? as usize;
+                        let origin_round = r.u32()? as usize;
+                        let bits = r.u64()?;
+                        let len = r.u32()? as usize;
+                        let frame = r.take(len, "deferred upload frame")?;
+                        pending_deferred.push(StaleDeferRec {
+                            client,
+                            origin_round,
+                            bits,
+                            msg: Message::from_bytes(frame)?,
+                        });
+                    }
+                    let m = r.u32()? as usize;
+                    pending_folds.reserve(m.min(1 << 20));
+                    for _ in 0..m {
+                        pending_folds.push(StaleFoldRec {
+                            client: r.u32()? as usize,
+                            origin_round: r.u32()? as usize,
+                            staleness: r.u32()? as usize,
+                            weight: r.f32()?,
+                        });
+                    }
+                    let k = r.u32()? as usize;
+                    pending_expired.reserve(k.min(1 << 20));
+                    for _ in 0..k {
+                        pending_expired.push(StaleExpireRec {
+                            client: r.u32()? as usize,
+                            origin_round: r.u32()? as usize,
+                            staleness: r.u32()? as usize,
+                        });
                     }
                 }
                 FRAME_ROUND => {
@@ -677,6 +942,9 @@ impl Transcript {
                         pre_syncs: std::mem::take(&mut pending_syncs),
                         shards: std::mem::take(&mut pending_shards),
                         fault: pending_fault.take(),
+                        stale_deferred: std::mem::take(&mut pending_deferred),
+                        stale_folds: std::mem::take(&mut pending_folds),
+                        stale_expired: std::mem::take(&mut pending_expired),
                         aborted: false,
                     });
                 }
@@ -688,6 +956,12 @@ impl Transcript {
                     anyhow::ensure!(
                         pending_fault.is_none(),
                         "fault frame not followed by a round frame"
+                    );
+                    anyhow::ensure!(
+                        pending_deferred.is_empty()
+                            && pending_folds.is_empty()
+                            && pending_expired.is_empty(),
+                        "stale frame not followed by a round frame"
                     );
                     end_syncs = std::mem::take(&mut pending_syncs);
                     break TranscriptEnd {
@@ -795,6 +1069,11 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
     let mut server = Server::new(t.init_params.clone(), method, t.cache_rounds)?;
     let mut ledger = CommLedger::new(t.num_clients);
     let mut last_sync = vec![0usize; t.num_clients];
+    // deferred straggler uploads awaiting their fold round, keyed by
+    // (client, origin round); entries still here at the end correspond
+    // to the finishing session's silent drain into client residuals
+    let mut stale_stash: std::collections::HashMap<(usize, usize), Message> =
+        std::collections::HashMap::new();
     let derivable = t.sync_derivable();
     let verify_syncs = !derivable && t.has_sync_events();
 
@@ -897,7 +1176,7 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
                 )?;
             }
         }
-        let msgs: Vec<Message> = r.uploads.iter().map(|(_, m)| m.clone()).collect();
+        let mut msgs: Vec<Message> = r.uploads.iter().map(|(_, m)| m.clone()).collect();
         for m in &msgs {
             ledger.record_upload(m.wire_bits());
         }
@@ -908,6 +1187,81 @@ pub fn replay(t: &Transcript) -> anyhow::Result<ReplayOutcome> {
         if let Some(f) = &r.fault {
             ledger.total_up_bits += f.extra_up_bits;
             ledger.uploads += f.extra_up_msgs as u64;
+        }
+        // deferred straggler uploads were billed on delivery — inside
+        // this round's snapshot — but aggregate only at a later fold
+        for d in &r.stale_deferred {
+            anyhow::ensure!(
+                d.client < t.num_clients,
+                "round {}: deferred client {} out of range 0..{}",
+                r.round,
+                d.client,
+                t.num_clients
+            );
+            anyhow::ensure!(
+                d.origin_round + 1 == r.round,
+                "round {}: deferred upload claims origin round {}",
+                r.round,
+                d.origin_round
+            );
+            ledger.record_upload(d.bits as usize);
+            anyhow::ensure!(
+                stale_stash.insert((d.client, d.origin_round), d.msg.clone()).is_none(),
+                "round {}: client {} deferred twice from round {}",
+                r.round,
+                d.client,
+                d.origin_round
+            );
+        }
+        // folds re-enter the aggregate after the fresh uploads, scaled
+        // by the protocol's staleness weight — re-derive the weight and
+        // reject a recording that billed a different one
+        for f in &r.stale_folds {
+            let msg = stale_stash.remove(&(f.client, f.origin_round)).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "round {}: fold of client {} round {} has no matching deferral",
+                    r.round,
+                    f.client,
+                    f.origin_round
+                )
+            })?;
+            anyhow::ensure!(
+                f.staleness >= 1 && f.origin_round + f.staleness + 1 == r.round,
+                "round {}: fold of client {} claims staleness {} from round {}",
+                r.round,
+                f.client,
+                f.staleness,
+                f.origin_round
+            );
+            let expect = server.protocol().stale_weight(f.staleness);
+            anyhow::ensure!(
+                expect.to_bits() == f.weight.to_bits(),
+                "round {}: recorded fold weight {} for staleness {}, \
+                 the protocol prices {expect}",
+                r.round,
+                f.weight,
+                f.staleness
+            );
+            let mut scaled = vec![0.0f32; server.dim()];
+            msg.add_to(&mut scaled, f.weight);
+            msgs.push(Message::Dense { values: scaled });
+        }
+        for e in &r.stale_expired {
+            anyhow::ensure!(
+                stale_stash.remove(&(e.client, e.origin_round)).is_some(),
+                "round {}: expiry of client {} round {} has no matching deferral",
+                r.round,
+                e.client,
+                e.origin_round
+            );
+            anyhow::ensure!(
+                e.origin_round + e.staleness + 1 == r.round,
+                "round {}: expiry of client {} claims staleness {} from round {}",
+                r.round,
+                e.client,
+                e.staleness,
+                e.origin_round
+            );
         }
         // shard→root hops were billed before the recorded ledger
         // snapshot, so replay mirrors that order exactly
@@ -1110,6 +1464,37 @@ fn semantic_diff(a: &Transcript, b: &Transcript, byte_offset: usize) -> Transcri
         }
         if ra.fault != rb.fault {
             return hit(round, "round.fault", two(&ra.fault, &rb.fault));
+        }
+        if ra.stale_deferred != rb.stale_deferred {
+            let i = (0..ra.stale_deferred.len().min(rb.stale_deferred.len()))
+                .find(|&i| ra.stale_deferred[i] != rb.stale_deferred[i]);
+            let detail = match i {
+                Some(i) => format!(
+                    "deferral {i}: client {} round {} ({} bits) vs client {} round {} ({} bits), \
+                     payloads {}",
+                    ra.stale_deferred[i].client,
+                    ra.stale_deferred[i].origin_round,
+                    ra.stale_deferred[i].bits,
+                    rb.stale_deferred[i].client,
+                    rb.stale_deferred[i].origin_round,
+                    rb.stale_deferred[i].bits,
+                    if ra.stale_deferred[i].msg == rb.stale_deferred[i].msg {
+                        "equal"
+                    } else {
+                        "differ"
+                    },
+                ),
+                None => {
+                    format!("{} vs {} deferrals", ra.stale_deferred.len(), rb.stale_deferred.len())
+                }
+            };
+            return hit(round, "round.stale_deferred", detail);
+        }
+        if ra.stale_folds != rb.stale_folds {
+            return hit(round, "round.stale_folds", two(&ra.stale_folds, &rb.stale_folds));
+        }
+        if ra.stale_expired != rb.stale_expired {
+            return hit(round, "round.stale_expired", two(&ra.stale_expired, &rb.stale_expired));
         }
         if ra.shards != rb.shards {
             return hit(round, "round.shards", two(&ra.shards, &rb.shards));
@@ -1759,6 +2144,206 @@ mod tests {
         let err = w.on_fault(&FaultRecord::default()).unwrap_err().to_string();
         assert!(err.contains("non-fault-capable"), "{err}");
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Stale-capable recording: round 1 delivers client 0 fresh and
+    /// defers client 1 past the commit instant; round 2 folds (or, with
+    /// `expire`, expires) the buffered update. Round mathematics run
+    /// through a real [`Server`] so the recorded checksums are the
+    /// production aggregation's. `weight_nudge` mis-prices the fold so
+    /// replay must reject it (the scaled payload stays consistent with
+    /// the recorded weight — only the §V-B pricing is wrong).
+    fn record_buffered(path: &Path, weight_nudge: f32, expire: bool) {
+        use crate::async_agg::default_stale_weight;
+        use crate::config::Method;
+        use crate::coordinator::Server;
+
+        let mut w = TranscriptWriter::create_with_caps(path, true, false, true).unwrap();
+        let init = vec![0.0f32; 4];
+        w.on_run_start(&RunMeta {
+            method_spec: "baseline",
+            num_clients: 2,
+            cache_rounds: 10,
+            seed: 1,
+            init_params: &init,
+        })
+        .unwrap();
+
+        let mut ledger = CommLedger::new(2);
+        let mut srv = Server::new(init, Method::Baseline, 10).unwrap();
+
+        // round 1: client 0 commits, client 1 beats the deadline but
+        // misses the commit instant — billed on delivery, deferred,
+        // excluded from the round frame's upload list
+        let m0 = dense(&[1.0, 0.0, 2.0, -2.0]);
+        let m1 = dense(&[3.0, 0.0, 0.0, 2.0]);
+        w.on_round_start(0, &[0, 1]).unwrap();
+        ledger.record_upload(m0.wire_bits());
+        w.on_upload(0, &m0, m0.wire_bits() as u64).unwrap();
+        ledger.record_upload(m1.wire_bits());
+        w.on_async(&AsyncEvent::Defer {
+            client_id: 1,
+            origin_round: 0,
+            bits: m1.wire_bits() as u64,
+            msg: m1.clone(),
+        })
+        .unwrap();
+        let down1 = srv.aggregate_and_apply(std::slice::from_ref(&m0)).unwrap();
+        w.on_broadcast(&RoundRecord {
+            round: 1,
+            participants: &[0, 1],
+            mean_loss: 0.25,
+            down_bits: down1,
+            params: &srv.params,
+            ledger: &ledger,
+            mean_residual_norm: 0.0,
+        })
+        .unwrap();
+
+        // round 2: both clients fresh again (one broadcast behind); the
+        // buffered update folds in at the protocol's staleness weight
+        w.on_round_start(1, &[0, 1]).unwrap();
+        ledger.record_download(down1);
+        ledger.record_download(down1);
+        let f0 = dense(&[1.0; 4]);
+        let f1 = dense(&[1.0; 4]);
+        let mut msgs = Vec::new();
+        for (c, m) in [(0usize, &f0), (1usize, &f1)] {
+            ledger.record_upload(m.wire_bits());
+            w.on_upload(c, m, m.wire_bits() as u64).unwrap();
+            msgs.push(m.clone());
+        }
+        if expire {
+            w.on_async(&AsyncEvent::Expire { client_id: 1, origin_round: 0, staleness: 1 })
+                .unwrap();
+        } else {
+            let weight = default_stale_weight(1) + weight_nudge;
+            w.on_async(&AsyncEvent::Fold {
+                client_id: 1,
+                origin_round: 0,
+                staleness: 1,
+                weight,
+                bits: m1.wire_bits() as u64,
+            })
+            .unwrap();
+            let mut scaled = vec![0.0f32; 4];
+            m1.add_to(&mut scaled, weight);
+            msgs.push(Message::Dense { values: scaled });
+        }
+        let down2 = srv.aggregate_and_apply(&msgs).unwrap();
+        w.on_broadcast(&RoundRecord {
+            round: 2,
+            participants: &[0, 1],
+            mean_loss: 0.125,
+            down_bits: down2,
+            params: &srv.params,
+            ledger: &ledger,
+            mean_residual_norm: 0.0,
+        })
+        .unwrap();
+
+        // settlement: both one round behind
+        ledger.record_download(down2);
+        ledger.record_download(down2);
+        w.on_finish(&RunEnd { params: &srv.params, ledger: &ledger, settled: true }).unwrap();
+    }
+
+    #[test]
+    fn buffered_v5_roundtrip_replays_stale_fold_billing() {
+        let path = temp_path("buffered");
+        record_buffered(&path, 0.0, false);
+        let t = Transcript::read_file(&path).unwrap();
+        assert_eq!(t.version, TRANSCRIPT_ASYNC_VERSION);
+        assert!(t.sync_derivable());
+        assert_eq!(t.rounds.len(), 2);
+        let d = &t.rounds[0].stale_deferred;
+        assert_eq!(d.len(), 1);
+        assert_eq!((d[0].client, d[0].origin_round), (1, 0));
+        assert_eq!(d[0].msg, dense(&[3.0, 0.0, 0.0, 2.0]));
+        assert_eq!(
+            t.rounds[0].uploads.len(),
+            1,
+            "the deferred upload stays out of its round frame"
+        );
+        assert_eq!(
+            t.rounds[1].stale_folds,
+            vec![StaleFoldRec {
+                client: 1,
+                origin_round: 0,
+                staleness: 1,
+                weight: crate::async_agg::default_stale_weight(1),
+            }]
+        );
+        assert!(t.rounds[1].stale_expired.is_empty());
+
+        let out = replay(&t).unwrap();
+        assert_eq!(out.rounds, 2);
+        assert!(out.uploads_verified && out.downloads_verified);
+        // 3 fresh uploads + 1 deferred billed, the fold itself is free
+        assert_eq!(out.ledger.uploads, 4);
+        assert_eq!(out.ledger.total_up_bits, t.end.total_up_bits);
+        assert_eq!(out.ledger.total_down_bits, t.end.total_down_bits);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn replay_rejects_mispriced_fold_weights() {
+        let path = temp_path("badweight");
+        record_buffered(&path, 0.125, false);
+        let t = Transcript::read_file(&path).unwrap();
+        let err = replay(&t).unwrap_err().to_string();
+        assert!(err.contains("the protocol prices"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn expired_stale_entries_replay_without_folding() {
+        let path = temp_path("expired");
+        record_buffered(&path, 0.0, true);
+        let t = Transcript::read_file(&path).unwrap();
+        assert_eq!(t.rounds[0].stale_deferred.len(), 1);
+        assert!(t.rounds[1].stale_folds.is_empty());
+        assert_eq!(
+            t.rounds[1].stale_expired,
+            vec![StaleExpireRec { client: 1, origin_round: 0, staleness: 1 }]
+        );
+        let out = replay(&t).unwrap();
+        // the expired update was billed at its origin round but never
+        // aggregated (re-banked into the client residual at weight 1)
+        assert_eq!(out.ledger.uploads, 4);
+        assert!(out.uploads_verified && out.downloads_verified);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn plain_recorders_reject_async_events() {
+        let path = temp_path("nostalecap");
+        let mut w = TranscriptWriter::create_with_faults(&path, true, true).unwrap();
+        let err = w
+            .on_async(&AsyncEvent::Expire { client_id: 0, origin_round: 0, staleness: 1 })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("non-stale-capable"), "{err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn diff_pinpoints_diverging_stale_frames() {
+        let p1 = temp_path("staldiff1");
+        let p2 = temp_path("staldiff2");
+        record_buffered(&p1, 0.0, false);
+        record_buffered(&p2, 0.0, false);
+        let a = std::fs::read(&p1).unwrap();
+        let b = std::fs::read(&p2).unwrap();
+        assert!(diff_bytes(&a, &b).unwrap().is_none());
+
+        record_buffered(&p2, 0.0, true); // fold became an expiry
+        let b = std::fs::read(&p2).unwrap();
+        let d = diff_bytes(&a, &b).unwrap().expect("recordings differ");
+        assert_eq!(d.round, Some(2));
+        assert_eq!(d.field, "round.stale_folds");
+        let _ = std::fs::remove_file(&p1);
+        let _ = std::fs::remove_file(&p2);
     }
 
     #[test]

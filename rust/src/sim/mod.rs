@@ -4,6 +4,7 @@
 
 pub mod alpha;
 
+use crate::async_agg::CommitPolicy;
 use crate::cluster::{ClusterConfig, ClusterRun, ClusterStats, TrainerFactory};
 use crate::config::FedConfig;
 use crate::data::synth::{SynthFlavor, SynthSpec};
@@ -128,6 +129,25 @@ impl Experiment {
         exec: Execution,
         faults: Option<FaultPlan>,
     ) -> anyhow::Result<TrainingLog> {
+        self.run_observed_async(trainer, observers, exec, faults, CommitPolicy::Deadline)
+    }
+
+    /// [`Experiment::run_observed_faulted`] with a commit policy armed
+    /// on the session (`repro train --commit`). In the serial driver
+    /// every delivered upload completes at the same logical instant, so
+    /// `deadline`, `quorum` and `buffered` partition identically and
+    /// the curve is bit-identical across policies — the knob exists
+    /// here so the session seam is exercised (and recorded) end-to-end;
+    /// the policies only diverge under the cluster driver's simulated
+    /// transport time.
+    pub fn run_observed_async(
+        &self,
+        trainer: &mut dyn Trainer,
+        observers: Vec<Box<dyn Observer>>,
+        exec: Execution,
+        faults: Option<FaultPlan>,
+        commit: CommitPolicy,
+    ) -> anyhow::Result<TrainingLog> {
         anyhow::ensure!(
             trainer.batch_size() == self.cfg.batch_size,
             "trainer batch size {} != config batch size {}",
@@ -139,6 +159,7 @@ impl Experiment {
         if let Some(plan) = faults {
             session.set_fault_plan(plan)?;
         }
+        session.set_commit_policy(commit)?;
         for o in observers {
             session.add_observer(o);
         }

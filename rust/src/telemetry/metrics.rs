@@ -478,6 +478,21 @@ impl TickProbe for MetricsHub {
             ClusterEvent::RoundAbort { .. } => {
                 g.reg.counter_add("fedstc_fault_round_aborts_total", &[], 1);
             }
+            ClusterEvent::EarlyCommit { deferred, .. } => {
+                g.reg.counter_add("fedstc_async_commits_total", &[], 1);
+                g.reg.counter_add("fedstc_async_deferred_total", &[], deferred as u64);
+            }
+            ClusterEvent::StaleDefer { bits, .. } => {
+                g.reg.counter_add("fedstc_async_stale_defer_bits_total", &[], bits);
+            }
+            ClusterEvent::StaleFold { weight, expired, .. } => {
+                if expired {
+                    g.reg.counter_add("fedstc_async_stale_expired_total", &[], 1);
+                } else {
+                    g.reg.counter_add("fedstc_async_stale_folds_total", &[], 1);
+                    g.reg.observe("fedstc_async_stale_weight", &[], weight as f64);
+                }
+            }
         }
         Ok(())
     }

@@ -134,6 +134,36 @@ pub enum ClusterEvent {
         drawn: usize,
         needed: usize,
     },
+    /// A [`CommitPolicy`](crate::async_agg::CommitPolicy) closed the
+    /// round at the K-th completed upload, before the grace deadline.
+    /// `committed` uploads made the aggregate; `deferred` beat the
+    /// deadline but not the commit (re-banked under `quorum`, carried
+    /// into the stale buffer under `buffered`).
+    EarlyCommit {
+        tick: usize,
+        sim_s: f64,
+        round: usize,
+        committed: usize,
+        deferred: usize,
+        k: usize,
+        commit_s: f64,
+        deadline_s: f64,
+    },
+    /// An on-deadline upload missed the commit instant and entered the
+    /// stale buffer (buffered policy only).
+    StaleDefer { tick: usize, sim_s: f64, client_id: usize, origin_round: usize, bits: u64 },
+    /// A buffered straggler left the stale buffer: folded into the
+    /// current aggregate at `weight` (`expired: false`), or aged past
+    /// `max_staleness` and re-banked at weight 1 (`expired: true`).
+    StaleFold {
+        tick: usize,
+        sim_s: f64,
+        client_id: usize,
+        origin_round: usize,
+        staleness: usize,
+        weight: f32,
+        expired: bool,
+    },
 }
 
 /// How a drawn participant left the round without uploading.

@@ -7,8 +7,10 @@
 //! `finish` — and, when the writer is also registered as a
 //! [`TickProbe`], the cluster tick machine: `phase`, `membership`,
 //! `no_show` / `dropout`, `transfer`, `shard_hop`, `late_upload`,
-//! `round_close`, and — under a fault plan — `corrupt_frame`,
-//! `retransmit`, `shard_failover`, `round_abort`.
+//! `round_close`, under a fault plan `corrupt_frame`, `retransmit`,
+//! `shard_failover`, `round_abort`, and — under an async
+//! [`CommitPolicy`](crate::async_agg::CommitPolicy) — `early_commit`,
+//! `stale_defer`, `stale_fold`.
 //!
 //! # Two channels
 //!
@@ -348,6 +350,49 @@ impl TickProbe for TraceWriter {
                     .set("valid", Json::Num(valid as f64))
                     .set("drawn", Json::Num(drawn as f64))
                     .set("needed", Json::Num(needed as f64));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::EarlyCommit {
+                tick,
+                sim_s,
+                round,
+                committed,
+                deferred,
+                k,
+                commit_s,
+                deadline_s,
+            } => {
+                let mut j = ev("early_commit");
+                j.set("round", Json::Num(round as f64))
+                    .set("committed", Json::Num(committed as f64))
+                    .set("deferred", Json::Num(deferred as f64))
+                    .set("k", Json::Num(k as f64))
+                    .set("commit_s", Json::Num(commit_s))
+                    .set("deadline_s", Json::Num(deadline_s));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::StaleDefer { tick, sim_s, client_id, origin_round, bits } => {
+                let mut j = ev("stale_defer");
+                j.set("client", Json::Num(client_id as f64))
+                    .set("origin_round", Json::Num(origin_round as f64))
+                    .set("bits", Json::Num(bits as f64));
+                at(j, tick, sim_s)
+            }
+            ClusterEvent::StaleFold {
+                tick,
+                sim_s,
+                client_id,
+                origin_round,
+                staleness,
+                weight,
+                expired,
+            } => {
+                let mut j = ev("stale_fold");
+                j.set("client", Json::Num(client_id as f64))
+                    .set("origin_round", Json::Num(origin_round as f64))
+                    .set("staleness", Json::Num(staleness as f64))
+                    .set("weight", Json::Num(weight as f64))
+                    .set("expired", Json::Bool(expired));
                 at(j, tick, sim_s)
             }
         };

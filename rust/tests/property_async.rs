@@ -1,0 +1,399 @@
+//! Property tests for the asynchronous buffered-aggregation layer.
+//!
+//! Four guarantees:
+//!
+//! 1. **`quorum:k=S` is the deadline rule in disguise** — with K set to
+//!    the full cohort size the commit instant can only move *earlier*
+//!    when every drawn participant has already delivered, so the
+//!    committed set never changes: params, ledger and transcript bytes
+//!    are identical to the default `deadline` policy for every
+//!    registered protocol, on the flat cluster, the sharded cluster and
+//!    the serial session under every execution strategy.
+//! 2. **Serial drivers are policy-inert** — every upload in a serial
+//!    round completes at the same logical instant, so `quorum` and
+//!    `buffered` commit exactly what `deadline` commits; a buffered
+//!    serial recording moves to the v5 container but carries no stale
+//!    frames.
+//! 3. **Staleness billing reconciles everywhere it is recorded** — a
+//!    buffered cluster run's `ClusterStats`, `fedstc_async_*` counters
+//!    and v5 stale frames all agree, every fold weight is the
+//!    protocol's `stale_weight` bit-for-bit, and the recording replays
+//!    to the recorded params and upload bill.
+//! 4. **Aborted rounds defer nothing** — under `buffered` × an armed
+//!    fault-plan quorum gate, a round that aborts re-banks its
+//!    sidelined deliveries like any other discard: no stale frame, no
+//!    fold, and the recording still replays exactly.
+
+use fedstc::async_agg::CommitPolicy;
+use fedstc::cluster::{ClusterConfig, ClusterRun, NativeLogregFactory};
+use fedstc::config::{FedConfig, Method};
+use fedstc::data::synth::task_dataset;
+use fedstc::data::Dataset;
+use fedstc::fault::FaultPlan;
+use fedstc::session::transcript::{TRANSCRIPT_ASYNC_VERSION, TRANSCRIPT_BASE_VERSION};
+use fedstc::session::{execution, replay, Oracle, Session, Transcript};
+use fedstc::telemetry::MetricsHub;
+
+fn fed_cfg(method: Method, rounds: usize) -> FedConfig {
+    FedConfig {
+        model: "logreg".into(),
+        num_clients: 8,
+        participation: 1.0,
+        classes_per_client: 5,
+        batch_size: 10,
+        lr: 0.05,
+        momentum: 0.0,
+        iterations: rounds * method.local_iters(),
+        method,
+        eval_every: 1_000_000,
+        seed: 47,
+        train_examples: 600,
+        test_examples: 100,
+        ..Default::default()
+    }
+}
+
+fn stc() -> Method {
+    Method::Stc { p_up: 0.05, p_down: 0.05 }
+}
+
+fn dataset() -> Dataset {
+    let (train, _) = task_dataset("mnist", 47).unwrap();
+    train.subset(&(0..600).collect::<Vec<_>>())
+}
+
+fn init_params(cfg: &FedConfig) -> Vec<f32> {
+    fedstc::models::ModelSpec::by_name("logreg").unwrap().init_flat(cfg.seed)
+}
+
+fn temp(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("fedstc_prop_async_{}_{tag}.fstx", std::process::id()))
+}
+
+fn bits(params: &[f32]) -> Vec<u32> {
+    params.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Drive a recorded cluster run to completion and return it along with
+/// the transcript bytes.
+fn cluster_run(ccfg: ClusterConfig, train: &Dataset, tag: &str) -> (ClusterRun, Vec<u8>) {
+    let rec = temp(tag);
+    let factory = NativeLogregFactory { batch_size: ccfg.fed.batch_size };
+    let init = init_params(&ccfg.fed);
+    let mut run = ClusterRun::new(ccfg, train, init).unwrap();
+    run.record_to(&rec).unwrap();
+    while !run.finished() {
+        run.tick(&factory, train).unwrap();
+    }
+    let bytes = std::fs::read(&rec).unwrap();
+    let _ = std::fs::remove_file(&rec);
+    (run, bytes)
+}
+
+fn assert_runs_identical(a: &(ClusterRun, Vec<u8>), b: &(ClusterRun, Vec<u8>), tag: &str) {
+    assert_eq!(bits(&a.0.server.params), bits(&b.0.server.params), "{tag}: params");
+    assert_eq!(a.0.rounds_done, b.0.rounds_done, "{tag}: rounds");
+    assert_eq!(a.0.ledger.uploads, b.0.ledger.uploads, "{tag}: upload count");
+    assert_eq!(a.0.ledger.total_up_bits, b.0.ledger.total_up_bits, "{tag}: up bits");
+    assert_eq!(a.0.ledger.total_down_bits, b.0.ledger.total_down_bits, "{tag}: down bits");
+    assert_eq!(a.1, b.1, "{tag}: transcript bytes");
+}
+
+// ---------------------------------------------------------------------
+// 1. quorum:k=S ≡ deadline, bit for bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn quorum_at_cohort_size_is_bit_identical_to_deadline_for_every_protocol() {
+    let train = dataset();
+    // the messy scenario: stragglers, dropouts, churn, finite links —
+    // the K-th-arrival rule must stay invisible through all of it
+    // because K = the cohort ceiling can only fire once everyone who
+    // would have committed anyway has already arrived
+    let methods: Vec<(&str, Method)> = vec![
+        ("baseline", Method::Baseline),
+        ("fedavg", Method::FedAvg { n: 2 }),
+        ("signsgd", Method::SignSgd { delta: 0.0002 }),
+        ("topk", Method::TopK { p: 0.05 }),
+        ("sparse", Method::SparseUpDown { p_up: 0.05, p_down: 0.05 }),
+        ("stc", stc()),
+        ("hybrid", Method::Hybrid { p: 0.05, n: 2 }),
+    ];
+    for (name, method) in methods {
+        let mk = |commit: CommitPolicy| {
+            let mut ccfg = ClusterConfig::new(fed_cfg(method.clone(), 3));
+            ccfg.workers = 2;
+            ccfg.straggler_frac = 0.25;
+            ccfg.dropout_rate = 0.15;
+            ccfg.churn = 0.1;
+            ccfg.server_up_bps = 1e6;
+            ccfg.server_down_bps = 1e6;
+            ccfg.commit = commit;
+            ccfg
+        };
+        let k = 8; // num_clients: no round can deliver more on time
+        let deadline = cluster_run(mk(CommitPolicy::Deadline), &train, &format!("{name}_dl"));
+        let quorum = cluster_run(mk(CommitPolicy::Quorum { k }), &train, &format!("{name}_q"));
+        assert_runs_identical(&deadline, &quorum, name);
+        assert_eq!(quorum.0.stats.stale_deferrals, 0, "{name}: quorum policy buffered a straggler");
+    }
+}
+
+#[test]
+fn quorum_identity_holds_on_the_sharded_cluster_and_commits_early_when_healthy() {
+    let train = dataset();
+    let mk = |shards: usize, commit: CommitPolicy| {
+        let mut ccfg = ClusterConfig::new(fed_cfg(stc(), 3));
+        ccfg.workers = 2;
+        ccfg.server_up_bps = 1e6;
+        ccfg.server_down_bps = 1e6;
+        ccfg.shards = shards;
+        if shards > 0 {
+            ccfg.shard_up_bps = 1e6;
+            ccfg.shard_down_bps = 1e6;
+        }
+        ccfg.commit = commit;
+        ccfg
+    };
+    for shards in [0usize, 3] {
+        let tag = format!("shards={shards}");
+        let dl_tag = format!("sh{shards}_dl");
+        let q_tag = format!("sh{shards}_q");
+        let deadline = cluster_run(mk(shards, CommitPolicy::Deadline), &train, &dl_tag);
+        let quorum = cluster_run(mk(shards, CommitPolicy::Quorum { k: 8 }), &train, &q_tag);
+        assert_runs_identical(&deadline, &quorum, &tag);
+        // healthy cohort, contended link: every round's 8th arrival beats
+        // the grace deadline, so the quorum run closes each round early —
+        // observably so in the stats, invisibly so in the committed bytes
+        assert_eq!(deadline.0.stats.early_commits, 0, "{tag}: deadline run closed early");
+        assert_eq!(
+            quorum.0.stats.early_commits,
+            quorum.0.rounds_done as u64,
+            "{tag}: full-cohort quorum should close every healthy round early"
+        );
+        assert_eq!(quorum.0.stats.stale_deferrals, 0, "{tag}: k=cohort deferred an upload");
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Serial drivers are policy-inert
+// ---------------------------------------------------------------------
+
+/// Drive a recorded serial session under `commit` and return (params,
+/// up bits, down bits, transcript bytes).
+fn serial_run(
+    cfg: &FedConfig,
+    train: &Dataset,
+    exec_spec: &str,
+    commit: CommitPolicy,
+    tag: &str,
+) -> (Vec<u32>, u64, u64, Vec<u8>) {
+    let rec = temp(tag);
+    let factory = NativeLogregFactory { batch_size: cfg.batch_size };
+    let exec = execution::by_name(exec_spec).unwrap();
+    let mut session = Session::new(cfg.clone(), train, init_params(cfg), exec).unwrap();
+    session.set_commit_policy(commit).unwrap();
+    session.record_transcript(&rec, true).unwrap();
+    for _ in 0..cfg.rounds() {
+        session.run_round(Oracle::Factory(&factory), train).unwrap();
+    }
+    session.settle_final_downloads();
+    session.finish().unwrap();
+    assert_eq!(session.stale_buffered(), 0, "{tag}: a serial round left a buffered straggler");
+    let bytes = std::fs::read(&rec).unwrap();
+    let _ = std::fs::remove_file(&rec);
+    (
+        bits(&session.server.params),
+        session.ledger.total_up_bits,
+        session.ledger.total_down_bits,
+        bytes,
+    )
+}
+
+#[test]
+fn serial_sessions_treat_every_commit_policy_alike() {
+    let train = dataset();
+    let cfg = fed_cfg(stc(), 3);
+    for exec_spec in ["serial", "pool:2", "sharded:4x2"] {
+        let e = exec_spec.replace(':', "_").replace('x', "_");
+        let dl = serial_run(&cfg, &train, exec_spec, CommitPolicy::Deadline, &format!("{e}_dl"));
+        let q = serial_run(
+            &cfg,
+            &train,
+            exec_spec,
+            CommitPolicy::Quorum { k: 4 },
+            &format!("{e}_q"),
+        );
+        // quorum: same bytes, same container version
+        assert_eq!(dl, q, "{exec_spec}: quorum diverged from deadline");
+        assert_eq!(
+            Transcript::from_bytes(&dl.3).unwrap().version,
+            TRANSCRIPT_BASE_VERSION,
+            "{exec_spec}: unfaulted deadline recording left the base format"
+        );
+
+        // buffered: same model and bill, v5 container, zero stale frames
+        let b = serial_run(
+            &cfg,
+            &train,
+            exec_spec,
+            CommitPolicy::Buffered { k: 1, max_staleness: 1 },
+            &format!("{e}_b"),
+        );
+        assert_eq!(dl.0, b.0, "{exec_spec}: buffered moved the model");
+        assert_eq!(dl.1, b.1, "{exec_spec}: buffered changed the upload bill");
+        assert_eq!(dl.2, b.2, "{exec_spec}: buffered changed the download bill");
+        let t = Transcript::from_bytes(&b.3).unwrap();
+        assert_eq!(t.version, TRANSCRIPT_ASYNC_VERSION, "{exec_spec}: buffered recording version");
+        for r in &t.rounds {
+            assert!(r.stale_deferred.is_empty(), "{exec_spec}: serial round deferred an upload");
+            assert!(r.stale_folds.is_empty(), "{exec_spec}: serial round folded a straggler");
+            assert!(r.stale_expired.is_empty(), "{exec_spec}: serial round expired a straggler");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. Staleness billing reconciles everywhere it is recorded
+// ---------------------------------------------------------------------
+
+#[test]
+fn buffered_cluster_ledger_metrics_and_transcript_reconcile_and_replay() {
+    let train = dataset();
+    // healthy contended cluster, K far below the cohort: every round
+    // commits at the 2nd arrival and banks the rest for the next one
+    let method = stc();
+    let proto = method.protocol().unwrap();
+    let mut ccfg = ClusterConfig::new(fed_cfg(method, 6));
+    ccfg.workers = 2;
+    ccfg.straggler_frac = 0.25;
+    ccfg.server_up_bps = 1e6;
+    ccfg.server_down_bps = 1e6;
+    ccfg.commit = CommitPolicy::Buffered { k: 2, max_staleness: 2 };
+    let drawn_per_round = ccfg.fed.num_clients as u64;
+
+    let rec = temp("reconcile");
+    let factory = NativeLogregFactory { batch_size: ccfg.fed.batch_size };
+    let init = init_params(&ccfg.fed);
+    let metrics = MetricsHub::new();
+    let mut run = ClusterRun::new(ccfg, &train, init).unwrap();
+    run.record_to(&rec).unwrap();
+    run.add_observer(Box::new(metrics.clone()));
+    run.add_probe(Box::new(metrics.clone()));
+    while !run.finished() {
+        run.tick(&factory, &train).unwrap();
+    }
+    assert!(run.stats.early_commits > 0, "scenario never closed a round early");
+    assert!(run.stats.stale_deferrals > 0, "scenario never buffered a straggler");
+    assert!(run.stats.stale_folds > 0, "scenario never folded a straggler back in");
+
+    // ledger: one billed upload per drawn participant per round and
+    // nothing else — a fold re-uses bits billed at its origin round
+    assert_eq!(
+        run.ledger.uploads,
+        drawn_per_round * run.rounds_done as u64,
+        "folds must not re-bill the wire"
+    );
+    // the books must balance: every deferral either folded, expired, or
+    // was still buffered when the run finished (drained to residuals)
+    assert!(
+        run.stats.stale_folds + run.stats.stale_expired <= run.stats.stale_deferrals,
+        "more folds than deferrals"
+    );
+
+    // metrics: the probe-side async counters mirror the run's own books
+    let c = |n: &str| metrics.counter(n, &[]).unwrap_or(0);
+    assert_eq!(c("fedstc_async_commits_total"), run.stats.early_commits);
+    assert_eq!(c("fedstc_async_deferred_total"), run.stats.stale_deferrals);
+    assert_eq!(c("fedstc_async_stale_defer_bits_total"), run.stats.stale_defer_bits);
+    assert_eq!(c("fedstc_async_stale_folds_total"), run.stats.stale_folds);
+    assert_eq!(c("fedstc_async_stale_expired_total"), run.stats.stale_expired);
+
+    // transcript: a v5 recording whose stale frames re-state the same
+    // counters, with every fold weight the protocol's own
+    let t = Transcript::read_file(&rec).unwrap();
+    assert_eq!(t.version, TRANSCRIPT_ASYNC_VERSION);
+    let deferred: u64 = t.rounds.iter().map(|r| r.stale_deferred.len() as u64).sum();
+    let defer_bits: u64 =
+        t.rounds.iter().flat_map(|r| r.stale_deferred.iter()).map(|d| d.bits).sum();
+    let folds: u64 = t.rounds.iter().map(|r| r.stale_folds.len() as u64).sum();
+    let expired: u64 = t.rounds.iter().map(|r| r.stale_expired.len() as u64).sum();
+    assert_eq!(deferred, run.stats.stale_deferrals, "recorded deferrals");
+    assert_eq!(defer_bits, run.stats.stale_defer_bits, "recorded deferred bits");
+    assert_eq!(folds, run.stats.stale_folds, "recorded folds");
+    assert_eq!(expired, run.stats.stale_expired, "recorded expirations");
+    for r in &t.rounds {
+        for f in &r.stale_folds {
+            assert!(f.staleness >= 1, "a fold in the round it was deferred");
+            assert!(f.staleness <= 2, "a fold past max_staleness");
+            assert_eq!(
+                f.weight.to_bits(),
+                proto.stale_weight(f.staleness).to_bits(),
+                "round {} client {}: fold weight is not the protocol's",
+                r.round,
+                f.client
+            );
+        }
+    }
+
+    // and the recording replays to the recorded model and upload bill,
+    // stale fold-in included
+    let outcome = replay(&t).unwrap();
+    assert_eq!(bits(&outcome.final_params), bits(&run.server.params), "replayed params");
+    assert_eq!(outcome.ledger.total_up_bits, run.ledger.total_up_bits, "replayed up bits");
+    let _ = std::fs::remove_file(&rec);
+}
+
+// ---------------------------------------------------------------------
+// 4. Aborted rounds defer nothing
+// ---------------------------------------------------------------------
+
+#[test]
+fn buffered_rounds_that_abort_at_the_quorum_gate_defer_nothing() {
+    let train = dataset();
+    // K = the fault plan's quorum need (5 of 8): a round commits exactly
+    // when the gate is satisfiable, defers only past-K arrivals, and
+    // aborts (re-banking everything) when the losses win
+    let mut ccfg = ClusterConfig::new(fed_cfg(stc(), 10));
+    ccfg.workers = 2;
+    ccfg.server_up_bps = 1e6;
+    ccfg.server_down_bps = 1e6;
+    ccfg.commit = CommitPolicy::Buffered { k: 5, max_staleness: 3 };
+    ccfg.faults = Some(FaultPlan {
+        loss: 0.45,
+        quorum: 0.55,
+        max_attempts: 1,
+        backoff_s: 0.5,
+        ..FaultPlan::default()
+    });
+
+    let rec = temp("abort_interplay");
+    let factory = NativeLogregFactory { batch_size: ccfg.fed.batch_size };
+    let init = init_params(&ccfg.fed);
+    let mut run = ClusterRun::new(ccfg, &train, init).unwrap();
+    run.record_to(&rec).unwrap();
+    while !run.finished() {
+        run.tick(&factory, &train).unwrap();
+    }
+    assert!(run.stats.round_aborts > 0, "scenario never tripped the quorum gate");
+    assert!(run.stats.stale_deferrals > 0, "scenario never buffered a straggler");
+
+    let t = Transcript::read_file(&rec).unwrap();
+    assert_eq!(t.version, TRANSCRIPT_ASYNC_VERSION);
+    let mut aborted = 0u64;
+    for r in &t.rounds {
+        if r.aborted {
+            aborted += 1;
+            assert!(r.stale_deferred.is_empty(), "aborted round {} deferred an upload", r.round);
+            assert!(r.stale_folds.is_empty(), "aborted round {} folded a straggler", r.round);
+            assert!(r.stale_expired.is_empty(), "aborted round {} expired a straggler", r.round);
+        }
+    }
+    assert_eq!(aborted, run.stats.round_aborts, "recorded aborts");
+
+    // the faulted, buffered recording still replays bit-for-bit
+    let outcome = replay(&t).unwrap();
+    assert_eq!(bits(&outcome.final_params), bits(&run.server.params), "replayed params");
+    assert_eq!(outcome.ledger.total_up_bits, run.ledger.total_up_bits, "replayed up bits");
+    let _ = std::fs::remove_file(&rec);
+}

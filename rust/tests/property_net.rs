@@ -15,6 +15,7 @@
 use std::net::{TcpListener, TcpStream};
 use std::time::Duration;
 
+use fedstc::async_agg::CommitPolicy;
 use fedstc::config::{FedConfig, Method};
 use fedstc::fault::FaultPlan;
 use fedstc::models::native::NativeLogreg;
@@ -97,6 +98,7 @@ fn tcp_recording(cfg: &FedConfig, peers: usize, faults: Option<FaultPlan>, tag: 
         peers,
         recorder(&path, fault_capable),
         faults,
+        CommitPolicy::Deadline,
         Duration::from_secs(30),
         true,
     )
@@ -153,7 +155,8 @@ fn local_transport_twin_is_byte_identical_too() {
     let path = temp("local");
     let exp = Experiment::new(cfg.clone()).unwrap();
     let mut transport = LocalTransport::new(&cfg, 3).unwrap();
-    run_coordinator(&exp, &mut transport, recorder(&path, false), None).unwrap();
+    run_coordinator(&exp, &mut transport, recorder(&path, false), None, CommitPolicy::Deadline)
+        .unwrap();
     let local = std::fs::read(&path).unwrap();
     std::fs::remove_file(&path).ok();
 
